@@ -1,0 +1,48 @@
+//! Table 5: instantiate CudaForge with different base models for the Coder
+//! and the Judge (fixing the other side to o3) — the framework is not tied
+//! to a specific model.
+//!
+//!     cargo run --release --example model_matrix
+
+use cudaforge::agents::profiles::{self, O3};
+use cudaforge::coordinator::{default_threads, run_suite};
+use cudaforge::gpu::RTX6000_ADA;
+use cudaforge::tasks;
+use cudaforge::workflow::{NoOracle, WorkflowConfig};
+
+fn main() {
+    let dstar = tasks::dstar();
+    let combos = [
+        ("O3 / O3", O3, O3),
+        ("O3 / GPT-5", O3, profiles::GPT5),
+        ("O3 / Claude-Sonnet-4", O3, profiles::CLAUDE_SONNET_4),
+        ("O3 / GPT-OSS-120B", O3, profiles::GPT_OSS_120B),
+        ("GPT-5 / O3", profiles::GPT5, O3),
+        ("Claude-Sonnet-4 / O3", profiles::CLAUDE_SONNET_4, O3),
+        ("GPT-OSS-120B / O3", profiles::GPT_OSS_120B, O3),
+        ("QwQ / O3", profiles::QWQ_32B, O3),
+    ];
+    println!("== Table 5: base-model combinations (Coder/Judge) on D* ==\n");
+    println!(
+        "{:24} {:>8} {:>8} {:>8} {:>8} {:>8}",
+        "Models (Coder/Judge)", "Correct", "Median", "75%", "Perf", "Fast1"
+    );
+    for (label, coder, judge) in combos {
+        let mut wf = WorkflowConfig::cudaforge(&RTX6000_ADA, 2024);
+        wf.coder = coder;
+        wf.judge = judge;
+        let out = run_suite(&wf, &dstar, &NoOracle, default_threads());
+        let s = &out.overall;
+        println!(
+            "{:24} {:>7.1}% {:>8.3} {:>8.3} {:>8.3} {:>7.1}%",
+            label,
+            s.correct * 100.0,
+            s.median,
+            s.p75,
+            s.perf,
+            s.fast1 * 100.0
+        );
+    }
+    println!("\nexpected shape (paper): every combo strong; judge-side GPT-5 peaks Perf;");
+    println!("QwQ as Coder is the weakest (84% correct, 0.79x in the paper).");
+}

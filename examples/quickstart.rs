@@ -1,0 +1,56 @@
+//! Quickstart: optimize one KernelBench task with the full CudaForge loop
+//! and print each round's Judge verdict and measured speedup.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses the real-numerics PJRT oracle when `artifacts/` exists (run
+//! `make artifacts` first), otherwise the modelled correctness check.
+
+use cudaforge::gpu::RTX6000_ADA;
+use cudaforge::runtime::oracle::{RealOracle, VerificationMatrix};
+use cudaforge::runtime::Engine;
+use cudaforge::tasks;
+use cudaforge::workflow::{run_task, CorrectnessOracle, NoOracle, WorkflowConfig};
+
+fn main() {
+    let task = tasks::by_id("L2-51").expect("the Appendix-B.1 anchor task");
+    println!("task: {} — {} (level {})", task.id(), task.name, task.level);
+
+    // Real numerics when the AOT artifacts are present.
+    let oracle: Box<dyn CorrectnessOracle> =
+        match Engine::new("artifacts").and_then(|mut e| VerificationMatrix::build(&mut e, 42)) {
+            Ok(m) => {
+                println!("real-numerics oracle: {} artifacts verified on PJRT\n", m.verdicts.len());
+                Box::new(RealOracle::new(m))
+            }
+            Err(_) => {
+                println!("(artifacts missing; modelled correctness — run `make artifacts`)\n");
+                Box::new(NoOracle)
+            }
+        };
+
+    let wf = WorkflowConfig::cudaforge(&RTX6000_ADA, 7);
+    let result = run_task(&wf, &task, oracle.as_ref());
+
+    for r in &result.rounds {
+        println!(
+            "round {:>2} [{:12}] correct={:5} speedup={}",
+            r.round,
+            r.mode,
+            r.correct,
+            r.speedup.map(|s| format!("{s:.3}x")).unwrap_or_else(|| "   -  ".into()),
+        );
+        if !r.feedback_json.is_empty() {
+            println!("   judge -> {}", r.feedback_json);
+        }
+    }
+    println!(
+        "\nbest speedup {:.3}x over the PyTorch reference | ${:.2} API | {:.1} min wall",
+        result.best_speedup,
+        result.ledger.api_usd,
+        result.ledger.wall_min()
+    );
+    if let Some(cfg) = &result.best_config {
+        println!("final kernel configuration:\n  {}", cfg.describe());
+    }
+}

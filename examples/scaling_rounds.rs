@@ -1,0 +1,37 @@
+//! Figure 7: test-time scaling — raise the maximum iteration rounds N from
+//! 1 to 30 and watch the speedup climb steeply to N=10, then saturate
+//! (the paper reaches 2.27x at N=30 on D*).
+//!
+//!     cargo run --release --example scaling_rounds
+
+use cudaforge::coordinator::{default_threads, run_suite};
+use cudaforge::gpu::RTX6000_ADA;
+use cudaforge::tasks;
+use cudaforge::workflow::{NoOracle, WorkflowConfig};
+
+fn main() {
+    let dstar = tasks::dstar();
+    println!("== Figure 7: scaling max rounds N on D* ==\n");
+    println!("{:>4} {:>9} {:>9} {:>9} {:>8}  bar", "N", "Correct", "Median", "Perf", "Fast1");
+    let mut prev = 0.0;
+    for n in [1usize, 2, 4, 6, 8, 10, 15, 20, 25, 30] {
+        let wf = WorkflowConfig::cudaforge(&RTX6000_ADA, 2024).with_rounds(n);
+        let out = run_suite(&wf, &dstar, &NoOracle, default_threads());
+        let s = &out.overall;
+        let bar = "#".repeat((s.perf * 20.0) as usize);
+        println!(
+            "{n:>4} {:>8.1}% {:>9.3} {:>9.3} {:>7.1}%  {bar}",
+            s.correct * 100.0,
+            s.median,
+            s.perf,
+            s.fast1 * 100.0
+        );
+        assert!(
+            s.perf >= prev - 0.25,
+            "scaling curve should not collapse: N={n} perf {} after {prev}",
+            s.perf
+        );
+        prev = s.perf;
+    }
+    println!("\nexpected shape: steep gains 1->10, diminishing 10->30 (paper: 2.27x at 30).");
+}

@@ -1,0 +1,113 @@
+"""AOT lowering (build-time only — Python is never on the Rust request path).
+
+Lowers every CATALOG entry to **HLO text** and writes `manifest.json`.
+
+HLO *text* (not `lowered.compile()` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids which
+the Rust side's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the XLA
+text parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+from jax._src.lib import xla_client as xc
+
+from .model import CATALOG
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sources_fingerprint() -> str:
+    """Hash of every python source in compile/ — drives the no-op rebuild."""
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, _, files in sorted(os.walk(root)):
+        for fname in sorted(files):
+            if fname.endswith(".py"):
+                with open(os.path.join(dirpath, fname), "rb") as f:
+                    h.update(fname.encode())
+                    h.update(f.read())
+    return h.hexdigest()
+
+
+def build(out_dir: str, only: str | None = None, force: bool = False) -> int:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    fingerprint = _sources_fingerprint()
+
+    if not force and not only and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            if old.get("fingerprint") == fingerprint and all(
+                os.path.exists(os.path.join(out_dir, e["file"]))
+                for e in old.get("entries", [])
+            ):
+                print(f"artifacts up to date ({len(old['entries'])} entries)")
+                return 0
+        except (json.JSONDecodeError, KeyError):
+            pass  # corrupt manifest -> rebuild
+
+    entries = []
+    t0 = time.time()
+    for e in CATALOG:
+        if only and e.name != only:
+            continue
+        t1 = time.time()
+        text = to_hlo_text(e.lower())
+        fname = f"{e.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": e.name,
+                "family": e.family,
+                "variant": e.variant,
+                "file": fname,
+                "ref": e.ref_name,
+                "buggy": e.buggy,
+                "tol": e.tol,
+                "inputs": [s.to_json() for s in e.inputs],
+            }
+        )
+        print(f"  lowered {e.name:32s} {len(text):>9d} chars {time.time()-t1:5.1f}s")
+
+    manifest = {
+        "version": 1,
+        "fingerprint": fingerprint,
+        "entries": entries,
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest in {time.time()-t0:.1f}s")
+    return 0
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--only", default=None, help="lower a single catalog entry")
+    p.add_argument("--force", action="store_true")
+    args = p.parse_args()
+    return build(args.out, args.only, args.force)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

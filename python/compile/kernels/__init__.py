@@ -1,0 +1,14 @@
+"""Pallas kernel library (L1): one module per op family, `ref` is the oracle."""
+
+from . import (  # noqa: F401
+    common,
+    cross_entropy,
+    diag_matmul,
+    elementwise,
+    fused_epilogue,
+    layernorm,
+    matmul,
+    reduction,
+    ref,
+    softmax,
+)

@@ -1,0 +1,51 @@
+"""Shared helpers for the Pallas kernel library (L1).
+
+Every kernel in this package is lowered with ``interpret=True``: the CPU PJRT
+plugin that the Rust runtime embeds cannot execute Mosaic custom-calls, so the
+interpret path is the correctness substrate while TPU performance is estimated
+structurally (DESIGN.md §8).
+
+Hardware-adaptation convention (DESIGN.md §Hardware-Adaptation):
+  CUDA shared-memory staging  -> VMEM tiles expressed via BlockSpec
+  threadblock tiling          -> grid + index_map
+  warp-shuffle reductions     -> in-block lane-dimension jnp reductions
+  tensor-core WMMA            -> MXU-shaped jnp.dot on (8,128)-aligned tiles
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Single switch so tests can flip it if a future backend supports compiled mode.
+INTERPRET = True
+
+SQRT_2_OVER_PI = 0.7978845608028654
+
+
+def pallas_call(kernel, **kwargs):
+    """`pl.pallas_call` with the repo-wide interpret default applied."""
+    kwargs.setdefault("interpret", INTERPRET)
+    return pl.pallas_call(kernel, **kwargs)
+
+
+def gelu_tanh(x, *, c=SQRT_2_OVER_PI):
+    """Tanh-approximated GELU (the approximation KernelBench tasks use)."""
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def row_one_hot(targets, num_classes):
+    """One-hot via broadcasted iota (2D iota keeps the TPU lowering legal)."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, (targets.shape[0], num_classes), 1)
+    return (iota == targets[:, None]).astype(jnp.float32)
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)

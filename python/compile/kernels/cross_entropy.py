@@ -1,0 +1,112 @@
+"""Cross-entropy family (L1) — the paper's Fig. 8 case-study operator
+(KernelBench Level-1 task 95).
+
+  block_reduce  two kernels: (max, exp-sum) pass then a loss pass that re-reads
+                the logits from HBM — the "second global read of logits" the
+                Judge flags in round 7 of the case study.
+  lane_reduce   one fused kernel; reductions stay in the lane dimension (the
+                warp-shuffle analogue from round 2) and the logits are read
+                exactly once.
+
+Buggy:
+  bug_uninit_target  the target logit of row 0 is never written (thread-0
+                     uninitialized `target_logit`, the exact round-5 bug of
+                     Fig. 8); modelled as reading logit column 0 instead.
+
+Per-row losses are returned (not the mean) so mismatches localize.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import f32, pallas_call, row_one_hot
+
+
+def _maxsum_kernel(l_ref, m_ref, s_ref):
+    l = l_ref[...]
+    m = jnp.max(l, axis=1, keepdims=True)
+    m_ref[...] = m
+    s_ref[...] = jnp.sum(jnp.exp(l - m), axis=1, keepdims=True)
+
+
+def _loss_kernel(l_ref, t_ref, m_ref, s_ref, o_ref, *, c):
+    l = l_ref[...]  # second full read of the logits (the round-7 bottleneck)
+    tl = jnp.sum(l * row_one_hot(t_ref[...], c), axis=1, keepdims=True)
+    o_ref[...] = jnp.log(s_ref[...]) + m_ref[...] - tl
+
+
+def cross_entropy_block_reduce(logits, targets, br=32):
+    """Two-pass cross entropy: logits are read twice from HBM."""
+    b, c = logits.shape
+    assert b % br == 0
+    grid = (b // br,)
+    row_spec = pl.BlockSpec((br, c), lambda i: (i, 0))
+    one_spec = pl.BlockSpec((br, 1), lambda i: (i, 0))
+    t_spec = pl.BlockSpec((br,), lambda i: (i,))
+    m, s = pallas_call(
+        _maxsum_kernel, grid=grid, in_specs=[row_spec],
+        out_specs=[one_spec, one_spec], out_shape=[f32((b, 1)), f32((b, 1))],
+    )(logits)
+    out = pallas_call(
+        functools.partial(_loss_kernel, c=c),
+        grid=grid,
+        in_specs=[row_spec, t_spec, one_spec, one_spec],
+        out_specs=one_spec,
+        out_shape=f32((b, 1)),
+    )(logits, targets, m, s)
+    return out[:, 0]
+
+
+def _fused_kernel(l_ref, t_ref, o_ref, *, c, bug_row0):
+    l = l_ref[...]
+    m = jnp.max(l, axis=1, keepdims=True)
+    s = jnp.sum(jnp.exp(l - m), axis=1, keepdims=True)
+    oh = row_one_hot(t_ref[...], c)
+    if bug_row0:
+        # BUGGY: block-row 0 "reads" an uninitialized target logit; the stale
+        # value resolves to column 0's logit.
+        first = pl.program_id(0) == 0
+        row = jax.lax.broadcasted_iota(jnp.int32, oh.shape, 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, oh.shape, 1)
+        oh = jnp.where(first & (row == 0), (col == 0).astype(oh.dtype), oh)
+    tl = jnp.sum(l * oh, axis=1, keepdims=True)
+    o_ref[...] = jnp.log(s) + m - tl
+
+
+def cross_entropy_lane_reduce(logits, targets, br=32):
+    """Fused single-pass cross entropy (lane-dimension reductions)."""
+    b, c = logits.shape
+    assert b % br == 0
+    out = pallas_call(
+        functools.partial(_fused_kernel, c=c, bug_row0=False),
+        grid=(b // br,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        out_shape=f32((b, 1)),
+    )(logits, targets)
+    return out[:, 0]
+
+
+def cross_entropy_bug_uninit_target(logits, targets, br=32):
+    """BUGGY: row 0's target_logit is uninitialized (Fig. 8 round-5 bug)."""
+    b, c = logits.shape
+    assert b % br == 0
+    out = pallas_call(
+        functools.partial(_fused_kernel, c=c, bug_row0=True),
+        grid=(b // br,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        out_shape=f32((b, 1)),
+    )(logits, targets)
+    return out[:, 0]

@@ -1,0 +1,87 @@
+"""diag(A) @ B family (L1) — KernelBench Level-1 task 12, the example the paper
+uses in Appendix C to expose CUDA-L1's "fake kernels".
+
+  full_diag  materializes diag(A) and runs the tiled matmul — the literal
+             PyTorch reference (O(N^2) extra traffic + O(N^3) FLOPs).
+  broadcast  out = B * A[:, None] — the real optimization, one pass, no GEMM.
+
+Buggy:
+  bug_transposed  broadcasts A along the wrong axis (A[None, :]); numerically
+                  wrong for any non-symmetric input even on square shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import f32, pallas_call
+from .matmul import matmul_tiled
+
+
+def _diag_kernel(a_ref, o_ref, *, bn):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    a = a_ref[...]  # (bn,)
+    row = jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 1)
+    block = jnp.where((row == col) & (i == j), a[:, None] * jnp.ones((1, bn)), 0.0)
+    o_ref[...] = block
+
+
+def diag_matmul_full(a, b, bn=64):
+    """Materialize diag(a) (tile by tile), then tiled GEMM."""
+    n = a.shape[0]
+    assert n % bn == 0 and b.shape[0] == n
+    d = pallas_call(
+        functools.partial(_diag_kernel, bn=bn),
+        grid=(n // bn, n // bn),
+        in_specs=[pl.BlockSpec((bn,), lambda i, j: (i,))],
+        out_specs=pl.BlockSpec((bn, bn), lambda i, j: (i, j)),
+        out_shape=f32((n, n)),
+    )(a)
+    m = b.shape[1]
+    return matmul_tiled(d, b, bm=min(64, n), bn=min(64, m), bk=min(64, n))
+
+
+def _broadcast_kernel(a_ref, b_ref, o_ref, *, axis):
+    a = a_ref[...]
+    if axis == 0:
+        o_ref[...] = b_ref[...] * a[:, None]
+    else:
+        o_ref[...] = b_ref[...] * a[None, :]
+
+
+def _broadcast_call(a, b, br, axis):
+    n, m = b.shape
+    assert n % br == 0
+    # The buggy (axis=1) variant multiplies each row by the whole vector, so
+    # it must see all of `a`; the correct variant only needs its row slice.
+    a_spec = (
+        pl.BlockSpec((br,), lambda i: (i,))
+        if axis == 0
+        else pl.BlockSpec((n,), lambda i: (0,))
+    )
+    return pallas_call(
+        functools.partial(_broadcast_kernel, axis=axis),
+        grid=(n // br,),
+        in_specs=[
+            a_spec,
+            pl.BlockSpec((br, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, m), lambda i: (i, 0)),
+        out_shape=f32((n, m)),
+    )(a, b)
+
+
+def diag_matmul_broadcast(a, b, br=32):
+    return _broadcast_call(a, b, br, 0)
+
+
+def diag_matmul_bug_transposed(a, b, br=32):
+    """BUGGY: broadcast along columns instead of rows (needs square B)."""
+    assert b.shape[0] == b.shape[1], "bug variant defined on square B"
+    return _broadcast_call(a, b, br, 1)

@@ -1,0 +1,74 @@
+"""Elementwise-chain family (L1): out = relu(a * x + y) * x.
+
+  unfused  three kernels (axpy, relu, mul) — x re-read twice from HBM.
+  fused    one kernel, one pass.
+
+Buggy:
+  bug_wrong_const  the scale `a` is perturbed by +0.01 inside the kernel
+                   (a transcription bug the correctness stage must catch).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import f32, pallas_call
+
+
+def _axpy_kernel(x_ref, y_ref, a_ref, o_ref):
+    o_ref[...] = a_ref[0, 0] * x_ref[...] + y_ref[...]
+
+
+def _relu_kernel(z_ref, o_ref):
+    o_ref[...] = jnp.maximum(z_ref[...], 0.0)
+
+
+def _mul_kernel(z_ref, x_ref, o_ref):
+    o_ref[...] = z_ref[...] * x_ref[...]
+
+
+def ew_chain_unfused(x, y, a, br=32):
+    r, c = x.shape
+    assert r % br == 0
+    grid = (r // br,)
+    row = pl.BlockSpec((br, c), lambda i: (i, 0))
+    scal = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    z = pallas_call(_axpy_kernel, grid=grid, in_specs=[row, row, scal],
+                    out_specs=row, out_shape=f32((r, c)))(x, y, a.reshape(1, 1))
+    z = pallas_call(_relu_kernel, grid=grid, in_specs=[row], out_specs=row,
+                    out_shape=f32((r, c)))(z)
+    return pallas_call(_mul_kernel, grid=grid, in_specs=[row, row],
+                       out_specs=row, out_shape=f32((r, c)))(z, x)
+
+
+def _fused_kernel(x_ref, y_ref, a_ref, o_ref, *, da):
+    x = x_ref[...]
+    o_ref[...] = jnp.maximum((a_ref[0, 0] + da) * x + y_ref[...], 0.0) * x
+
+
+def _fused_call(x, y, a, br, da):
+    r, c = x.shape
+    assert r % br == 0
+    return pallas_call(
+        functools.partial(_fused_kernel, da=da),
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=f32((r, c)),
+    )(x, y, a.reshape(1, 1))
+
+
+def ew_chain_fused(x, y, a, br=32):
+    return _fused_call(x, y, a, br, 0.0)
+
+
+def ew_chain_bug_wrong_const(x, y, a, br=32):
+    """BUGGY: scale off by +0.01."""
+    return _fused_call(x, y, a, br, 0.01)

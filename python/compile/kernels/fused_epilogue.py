@@ -1,0 +1,99 @@
+"""Linear + epilogue family (L1) — the Appendix-B.1 workload (KernelBench
+Level-2 task 51 shape): y = x @ W + b; z = y - rowmean(y); g = GELU(z);
+out = g + x  (residual over the original activations).
+
+  unfused  matmul kernel, then three separate elementwise/reduction kernels;
+           the original activations `x` are re-read from HBM in the final pass
+           (the "second pass reading original_x" bottleneck the 24-metric Judge
+           correctly identifies in Appendix B.1).
+  fused    single kernel per row-block: the GEMM result, the row-mean, the GELU
+           and the residual all stay in VMEM; `x` is read exactly once.
+
+Buggy:
+  bug_wrong_gelu  tanh-GELU constant 0.70 instead of 0.7978845608 — compiles,
+                  runs, and is numerically wrong beyond 1e-4.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import f32, gelu_tanh, pallas_call
+from .matmul import matmul_tiled
+
+
+def _sub_rowmean_kernel(y_ref, o_ref):
+    y = y_ref[...]
+    o_ref[...] = y - jnp.mean(y, axis=1, keepdims=True)
+
+
+def _gelu_kernel(z_ref, o_ref, *, c):
+    o_ref[...] = gelu_tanh(z_ref[...], c=c)
+
+
+def _residual_kernel(g_ref, x_ref, o_ref):
+    o_ref[...] = g_ref[...] + x_ref[...]  # re-reads original_x from HBM
+
+
+def linear_epilogue_unfused(x, w, b, br=32):
+    """Four kernels, four HBM round-trips (the Coder's first correct attempt)."""
+    m, f = x.shape
+    assert m % br == 0 and w.shape == (f, f)
+    y = matmul_tiled(x, w, bm=min(64, m), bn=min(64, f), bk=min(64, f)) + b[None, :]
+    grid = (m // br,)
+    spec = pl.BlockSpec((br, f), lambda i: (i, 0))
+    z = pallas_call(_sub_rowmean_kernel, grid=grid, in_specs=[spec],
+                    out_specs=spec, out_shape=f32((m, f)))(y)
+    g = pallas_call(functools.partial(_gelu_kernel, c=None or 0.7978845608028654),
+                    grid=grid, in_specs=[spec], out_specs=spec,
+                    out_shape=f32((m, f)))(z)
+    return pallas_call(_residual_kernel, grid=grid, in_specs=[spec, spec],
+                       out_specs=spec, out_shape=f32((m, f)))(g, x)
+
+
+def gelu_rows(x, br=32):
+    """Standalone elementwise GELU kernel (used by the L2 mini-model)."""
+    m, f = x.shape
+    assert m % br == 0
+    spec = pl.BlockSpec((br, f), lambda i: (i, 0))
+    return pallas_call(
+        functools.partial(_gelu_kernel, c=0.7978845608028654),
+        grid=(m // br,), in_specs=[spec], out_specs=spec, out_shape=f32((m, f)),
+    )(x)
+
+
+def _fused_kernel(x_ref, w_ref, b_ref, o_ref, *, c):
+    x = x_ref[...]
+    y = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32) + b_ref[...]
+    z = y - jnp.mean(y, axis=1, keepdims=True)
+    o_ref[...] = gelu_tanh(z, c=c) + x  # x stays in VMEM; single HBM read
+
+
+def _fused_call(x, w, b, br, c):
+    m, f = x.shape
+    assert m % br == 0 and w.shape == (f, f)
+    return pallas_call(
+        functools.partial(_fused_kernel, c=c),
+        grid=(m // br,),
+        in_specs=[
+            pl.BlockSpec((br, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, f), lambda i: (0, 0)),
+            pl.BlockSpec((1, f), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, f), lambda i: (i, 0)),
+        out_shape=f32((m, f)),
+    )(x, w, b.reshape(1, -1))
+
+
+def linear_epilogue_fused(x, w, b, br=32):
+    """One kernel, one pass: GEMM + rowmean + GELU + residual in VMEM."""
+    return _fused_call(x, w, b, br, 0.7978845608028654)
+
+
+def linear_epilogue_bug_wrong_gelu(x, w, b, br=32):
+    """BUGGY: wrong tanh-GELU constant (0.70)."""
+    return _fused_call(x, w, b, br, 0.70)

@@ -1,0 +1,86 @@
+"""LayerNorm family (L1): out = (x - mean) / sqrt(var + eps) * gamma + beta.
+
+  naive  three kernels (mean, variance, normalize) — x read three times.
+  fused  one kernel per row-block, statistics kept in VMEM.
+
+Buggy:
+  bug_biased_var  variance divides by C-1 (sample variance) instead of C;
+                  wrong by ~1/C on every output, beyond 1e-4 for C=256.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import f32, pallas_call
+
+EPS = 1e-5
+
+
+def _mean_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.mean(x_ref[...], axis=1, keepdims=True)
+
+
+def _var_kernel(x_ref, m_ref, o_ref):
+    d = x_ref[...] - m_ref[...]
+    o_ref[...] = jnp.mean(d * d, axis=1, keepdims=True)
+
+
+def _norm_kernel(x_ref, m_ref, v_ref, g_ref, b_ref, o_ref):
+    o_ref[...] = (x_ref[...] - m_ref[...]) / jnp.sqrt(v_ref[...] + EPS) * g_ref[
+        ...
+    ] + b_ref[...]
+
+
+def layernorm_naive(x, gamma, beta, br=32):
+    r, c = x.shape
+    assert r % br == 0
+    grid = (r // br,)
+    row = pl.BlockSpec((br, c), lambda i: (i, 0))
+    one = pl.BlockSpec((br, 1), lambda i: (i, 0))
+    par = pl.BlockSpec((1, c), lambda i: (0, 0))
+    m = pallas_call(_mean_kernel, grid=grid, in_specs=[row], out_specs=one,
+                    out_shape=f32((r, 1)))(x)
+    v = pallas_call(_var_kernel, grid=grid, in_specs=[row, one], out_specs=one,
+                    out_shape=f32((r, 1)))(x, m)
+    return pallas_call(
+        _norm_kernel, grid=grid, in_specs=[row, one, one, par, par],
+        out_specs=row, out_shape=f32((r, c)),
+    )(x, m, v, gamma.reshape(1, -1), beta.reshape(1, -1))
+
+
+def _fused_kernel(x_ref, g_ref, b_ref, o_ref, *, denom_off):
+    x = x_ref[...]
+    c = x.shape[1]
+    m = jnp.mean(x, axis=1, keepdims=True)
+    d = x - m
+    v = jnp.sum(d * d, axis=1, keepdims=True) / (c - denom_off)
+    o_ref[...] = d / jnp.sqrt(v + EPS) * g_ref[...] + b_ref[...]
+
+
+def _fused_call(x, gamma, beta, br, denom_off):
+    r, c = x.shape
+    assert r % br == 0
+    return pallas_call(
+        functools.partial(_fused_kernel, denom_off=denom_off),
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=f32((r, c)),
+    )(x, gamma.reshape(1, -1), beta.reshape(1, -1))
+
+
+def layernorm_fused(x, gamma, beta, br=32):
+    return _fused_call(x, gamma, beta, br, 0)
+
+
+def layernorm_bug_biased_var(x, gamma, beta, br=32):
+    """BUGGY: sample variance (C-1 denominator)."""
+    return _fused_call(x, gamma, beta, br, 1)

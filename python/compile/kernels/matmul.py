@@ -1,0 +1,115 @@
+"""Tiled Pallas matmul family (L1).
+
+Variants mirror the optimization ladder a CudaForge Coder walks on a GEMM task:
+
+  naive      one grid cell, whole operands resident — the "first correct kernel".
+  tiled      (bm, bn, bk) block decomposition; K is the innermost sequential grid
+             dimension and the output block is revisited (accumulator-in-VMEM).
+  fused_bias_relu
+             tiled matmul whose final K step applies the bias + ReLU epilogue in
+             registers — the paper's canonical "operator fusion" suggestion.
+
+Buggy variants (exercise the correction loop with REAL wrong numerics):
+
+  bug_oob    drops the last K tile — the classic boundary off-by-one.
+  bug_uninit accumulator "starts from garbage" (modelled as a nonzero init),
+             the uninitialized-accumulator bug class from the paper's Fig. 8.
+
+TPU estimate (DESIGN.md §8): 128x128 f32 tiles -> 3*64KiB VMEM per step,
+MXU-aligned; expected >=70% MXU utilization at M=N=K>=1024.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import f32, pallas_call
+
+
+def _naive_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], y_ref[...], preferred_element_type=jnp.float32)
+
+
+def matmul_naive(x, y):
+    m, _ = x.shape
+    _, n = y.shape
+    return pallas_call(_naive_kernel, out_shape=f32((m, n)))(x, y)
+
+
+def _tiled_kernel(x_ref, y_ref, o_ref, *, init):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.full_like(o_ref, init)
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...], preferred_element_type=jnp.float32)
+
+
+def _tiled_call(x, y, bm, bn, bk, *, init=0.0, drop_last_k=False):
+    m, k = x.shape
+    _, n = y.shape
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    nk = k // bk - (1 if drop_last_k else 0)
+    grid = (m // bm, n // bn, nk)
+    return pallas_call(
+        functools.partial(_tiled_kernel, init=init),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=f32((m, n)),
+    )(x, y)
+
+
+def matmul_tiled(x, y, bm=64, bn=64, bk=64):
+    return _tiled_call(x, y, bm, bn, bk)
+
+
+def matmul_tiled_bug_oob(x, y, bm=64, bn=64, bk=64):
+    """BUGGY: K loop stops one tile early (out-of-bounds guard overcorrected)."""
+    return _tiled_call(x, y, bm, bn, bk, drop_last_k=True)
+
+
+def matmul_tiled_bug_uninit(x, y, bm=64, bn=64, bk=64):
+    """BUGGY: accumulator not zero-initialized (garbage modelled as 0.05)."""
+    return _tiled_call(x, y, bm, bn, bk, init=0.05)
+
+
+def _fused_bias_relu_kernel(x_ref, y_ref, b_ref, o_ref, *, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _():
+        o_ref[...] = jnp.maximum(o_ref[...] + b_ref[...], 0.0)
+
+
+def matmul_fused_bias_relu(x, y, b, bm=64, bn=64, bk=64):
+    """Tiled matmul with a fused bias+ReLU epilogue applied on the last K step."""
+    m, k = x.shape
+    _, n = y.shape
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    nk = k // bk
+    return pallas_call(
+        functools.partial(_fused_bias_relu_kernel, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=f32((m, n)),
+    )(x, y, b.reshape(1, -1))

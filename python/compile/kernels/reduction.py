@@ -1,0 +1,81 @@
+"""Row-reduction family (L1): out[r] = sum_c x[r, c].
+
+  twopass  kernel 1 writes per-column-tile partial sums to an HBM intermediate;
+           kernel 2 folds the partials — the CUDA "grid-wide tree reduction
+           through global memory" shape.
+  onepass  single kernel per row-block; the column walk is a sequential grid
+           dimension revisiting the output block (accumulator stays in VMEM).
+
+Buggy:
+  bug_off_by_one  the column walk stops one tile early.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import f32, pallas_call
+
+
+def _partial_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.sum(x_ref[...], axis=1, keepdims=True)
+
+
+def _fold_kernel(p_ref, o_ref):
+    o_ref[...] = jnp.sum(p_ref[...], axis=1, keepdims=True)
+
+
+def reduce_rows_twopass(x, br=32, bc=64):
+    r, c = x.shape
+    assert r % br == 0 and c % bc == 0
+    nc = c // bc
+    partials = pallas_call(
+        _partial_kernel,
+        grid=(r // br, nc),
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, 1), lambda i, j: (i, j)),
+        out_shape=f32((r, nc)),
+    )(x)
+    out = pallas_call(
+        _fold_kernel,
+        grid=(r // br,),
+        in_specs=[pl.BlockSpec((br, nc), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        out_shape=f32((r, 1)),
+    )(partials)
+    return out[:, 0]
+
+
+def _onepass_kernel(x_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...], axis=1, keepdims=True)
+
+
+def _onepass_call(x, br, bc, *, drop_last=False):
+    r, c = x.shape
+    assert r % br == 0 and c % bc == 0
+    nc = c // bc - (1 if drop_last else 0)
+    out = pallas_call(
+        _onepass_kernel,
+        grid=(r // br, nc),
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+        out_shape=f32((r, 1)),
+    )(x)
+    return out[:, 0]
+
+
+def reduce_rows_onepass(x, br=32, bc=64):
+    return _onepass_call(x, br, bc)
+
+
+def reduce_rows_bug_off_by_one(x, br=32, bc=64):
+    """BUGGY: last column tile never accumulated."""
+    return _onepass_call(x, br, bc, drop_last=True)

@@ -1,0 +1,69 @@
+"""Pure-jnp correctness oracles for every kernel family (L1 reference).
+
+These never touch Pallas; pytest compares each kernel variant against the
+matching oracle, and aot.py lowers each oracle to its own `*_ref` HLO artifact
+so the Rust runtime can compare real executions at tolerance 1e-4 (the paper's
+correctness criterion, §2.2 "Design of Correctness Tests").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import SQRT_2_OVER_PI
+
+
+def matmul(x, y):
+    return jnp.matmul(x, y)
+
+
+def matmul_bias_relu(x, y, b):
+    return jnp.maximum(jnp.matmul(x, y) + b[None, :], 0.0)
+
+
+def softmax(x):
+    return jax.nn.softmax(x, axis=-1)
+
+
+def cross_entropy(logits, targets):
+    """Per-row CE losses (not the mean, so mismatches localize)."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tl = jnp.take_along_axis(logits, targets[:, None].astype(jnp.int32), axis=1)[:, 0]
+    return lse - tl
+
+
+def gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(SQRT_2_OVER_PI * (x + 0.044715 * x**3)))
+
+
+def linear_epilogue(x, w, b):
+    y = jnp.matmul(x, w) + b[None, :]
+    z = y - jnp.mean(y, axis=1, keepdims=True)
+    return gelu(z) + x
+
+
+def reduce_rows(x):
+    return jnp.sum(x, axis=1)
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    m = jnp.mean(x, axis=1, keepdims=True)
+    v = jnp.mean((x - m) ** 2, axis=1, keepdims=True)
+    return (x - m) / jnp.sqrt(v + eps) * gamma[None, :] + beta[None, :]
+
+
+def ew_chain(x, y, a):
+    return jnp.maximum(a * x + y, 0.0) * x
+
+
+def diag_matmul(a, b):
+    return b * a[:, None]
+
+
+def mini_model_loss(x, w1, b1, w2, b2, gamma, beta, targets):
+    """Reference for the L2 mini-model: LN -> Linear+GELU -> Linear -> CE."""
+    h = layernorm(x, gamma, beta)
+    h = gelu(jnp.matmul(h, w1) + b1[None, :])
+    logits = jnp.matmul(h, w2) + b2[None, :]
+    return cross_entropy(logits, targets)

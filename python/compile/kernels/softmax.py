@@ -1,0 +1,125 @@
+"""Row-softmax family (L1).
+
+  naive    three separate Pallas kernels (max / exp-sum / normalize): each pass
+           re-reads the logits from HBM — the memory-bound "first version".
+  fused    one kernel per row-block: max, exp, sum, divide in a single pass.
+  online   single kernel, column-chunked online softmax (running max + rescaled
+           running sum) — the "algorithmic change" move from the Coder prompt.
+
+Buggy:
+  bug_wrong_axis   reduces over rows instead of columns (classic indexing bug).
+
+TPU estimate: single-pass variants are DRAM-bound; expected >=80% of HBM
+roofline for C >= 1024 (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import f32, pallas_call
+
+
+def _rowmax_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.max(x_ref[...], axis=1, keepdims=True)
+
+
+def _expsum_kernel(x_ref, m_ref, e_ref, s_ref):
+    e = jnp.exp(x_ref[...] - m_ref[...])
+    e_ref[...] = e
+    s_ref[...] = jnp.sum(e, axis=1, keepdims=True)
+
+
+def _normalize_kernel(e_ref, s_ref, o_ref):
+    o_ref[...] = e_ref[...] / s_ref[...]
+
+
+def softmax_naive(x, br=32):
+    """Three kernels, three full passes over the logits."""
+    r, c = x.shape
+    assert r % br == 0
+    grid = (r // br,)
+    row_spec = pl.BlockSpec((br, c), lambda i: (i, 0))
+    one_spec = pl.BlockSpec((br, 1), lambda i: (i, 0))
+    m = pallas_call(
+        _rowmax_kernel, grid=grid, in_specs=[row_spec], out_specs=one_spec,
+        out_shape=f32((r, 1)),
+    )(x)
+    e, s = pallas_call(
+        _expsum_kernel, grid=grid, in_specs=[row_spec, one_spec],
+        out_specs=[row_spec, one_spec], out_shape=[f32((r, c)), f32((r, 1))],
+    )(x, m)
+    return pallas_call(
+        _normalize_kernel, grid=grid, in_specs=[row_spec, one_spec],
+        out_specs=row_spec, out_shape=f32((r, c)),
+    )(e, s)
+
+
+def _fused_kernel(x_ref, o_ref, *, axis):
+    x = x_ref[...]
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def softmax_fused(x, br=32):
+    r, c = x.shape
+    assert r % br == 0
+    return pallas_call(
+        functools.partial(_fused_kernel, axis=1),
+        grid=(r // br,),
+        in_specs=[pl.BlockSpec((br, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=f32((r, c)),
+    )(x)
+
+
+def softmax_fused_bug_wrong_axis(x, br=32):
+    """BUGGY: the reductions run over the row (block) axis, not the lanes."""
+    r, c = x.shape
+    assert r % br == 0
+    return pallas_call(
+        functools.partial(_fused_kernel, axis=0),
+        grid=(r // br,),
+        in_specs=[pl.BlockSpec((br, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=f32((r, c)),
+    )(x)
+
+
+def _online_kernel(x_ref, o_ref, *, c, bc):
+    nchunk = c // bc
+    x = x_ref[...]
+
+    def body(i, carry):
+        m, s = carry
+        chunk = jax.lax.dynamic_slice_in_dim(x, i * bc, bc, axis=1)
+        m_new = jnp.maximum(m, jnp.max(chunk, axis=1, keepdims=True))
+        s = s * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(chunk - m_new), axis=1, keepdims=True
+        )
+        return m_new, s
+
+    init = (
+        jnp.full((x.shape[0], 1), -jnp.inf, jnp.float32),
+        jnp.zeros((x.shape[0], 1), jnp.float32),
+    )
+    m, s = jax.lax.fori_loop(0, nchunk, body, init)
+    o_ref[...] = jnp.exp(x - m) / s
+
+
+def softmax_online(x, br=32, bc=64):
+    """Single-pass online softmax over column chunks (running max + sum)."""
+    r, c = x.shape
+    assert r % br == 0 and c % bc == 0
+    return pallas_call(
+        functools.partial(_online_kernel, c=c, bc=bc),
+        grid=(r // br,),
+        in_specs=[pl.BlockSpec((br, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=f32((r, c)),
+    )(x)

@@ -1,0 +1,238 @@
+"""L2: compute graphs + the AOT catalog.
+
+Every entry in :data:`CATALOG` is one HLO artifact the Rust runtime can load:
+a kernel-variant function (calling the L1 Pallas kernels) or its pure-jnp
+reference oracle. The Rust correctness stage executes the variant and the
+matching ``*_ref`` artifact on identical inputs and compares at tol 1e-4,
+exactly like the paper's compile+execute correctness test (§2.2).
+
+The ``mini_model`` entries are the end-to-end L2 graph (LayerNorm -> Linear +
+GELU -> Linear -> CrossEntropy), the real-numerics anchor for KernelBench
+Level-3-style tasks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    cross_entropy as ce,
+    diag_matmul as dm,
+    elementwise as ew,
+    fused_epilogue as fe,
+    layernorm as ln,
+    matmul as mm,
+    reduction as rd,
+    ref,
+    softmax as sm,
+)
+from .kernels.common import f32, i32
+
+# ---------------------------------------------------------------------------
+# Input specs. `gen` tells the Rust side how to synthesize inputs; both the
+# variant and its ref artifact receive the *same* literals at runtime.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InputSpec:
+    shape: tuple
+    dtype: str = "f32"       # "f32" | "i32"
+    gen: str = "uniform"     # "uniform" | "randint"
+    lo: float = -2.0
+    hi: float = 2.0
+    mod: int = 0             # randint modulus (number of classes)
+
+    def sds(self):
+        return i32(self.shape) if self.dtype == "i32" else f32(self.shape)
+
+    def to_json(self):
+        d = {"shape": list(self.shape), "dtype": self.dtype, "gen": self.gen}
+        if self.gen == "uniform":
+            d["lo"], d["hi"] = self.lo, self.hi
+        else:
+            d["mod"] = self.mod
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class Entry:
+    name: str                # artifact file stem
+    family: str              # op family (matches the Rust OpClass binding)
+    variant: str             # "naive" | "tiled" | ... | "ref"
+    fn: Callable
+    inputs: Sequence[InputSpec]
+    ref_name: str            # artifact to compare against ("" for refs)
+    buggy: bool = False
+    tol: float = 1e-4        # the paper's correctness tolerance
+
+    def lower(self):
+        """jax.jit(fn).lower over ShapeDtypeStructs (AOT, no concrete data)."""
+        args = [s.sds() for s in self.inputs]
+        wrapped = lambda *a: (self.fn(*a),)  # noqa: E731 — tuple out (see aot)
+        return jax.jit(wrapped).lower(*args)
+
+
+# ---------------------------------------------------------------------------
+# Shapes: modest so interpret-mode stays fast; all tile-divisible.
+# ---------------------------------------------------------------------------
+
+MM = (128, 128, 128)      # matmul M, K, N
+SM = (64, 256)            # softmax rows, cols
+CE_SHAPE = (64, 128)      # batch, classes
+EP = (64, 128)            # epilogue batch, features
+RD = (64, 256)            # reduction rows, cols
+LN_SHAPE = (64, 256)      # layernorm rows, cols
+EWS = (64, 256)           # elementwise rows, cols
+DM = (128, 128)           # diag-matmul N, M (square for the bug variant)
+MINI = (32, 128, 256, 64)  # mini-model B, D, H, C
+
+
+def _mk(shape):
+    return InputSpec(shape)
+
+
+def mini_model_pallas(x, w1, b1, w2, b2, gamma, beta, targets):
+    """L2 mini-model forward loss, composed from L1 Pallas kernels."""
+    b, d = x.shape
+    h = ln.layernorm_fused(x, gamma, beta, br=32)
+    a1 = mm.matmul_tiled(h, w1, bm=32, bn=64, bk=64) + b1[None, :]
+    a1 = fe.gelu_rows(a1, br=32)
+    logits = mm.matmul_tiled(a1, w2, bm=32, bn=64, bk=64) + b2[None, :]
+    return ce.cross_entropy_lane_reduce(logits, targets, br=32)
+
+
+def _catalog():
+    entries = []
+
+    def fam(family, ref_fn, ref_inputs, variants):
+        """One family: a `<family>_ref` oracle + each (variant, fn, buggy)."""
+        ref_name = f"{family}_ref"
+        entries.append(
+            Entry(ref_name, family, "ref", ref_fn, ref_inputs, "")
+        )
+        for variant, fn, buggy in variants:
+            entries.append(
+                Entry(
+                    f"{family}_{variant}", family, variant, fn, ref_inputs,
+                    ref_name, buggy=buggy,
+                )
+            )
+
+    m, k, n = MM
+    mm_in = [_mk((m, k)), _mk((k, n))]
+    fam(
+        "matmul", ref.matmul, mm_in,
+        [
+            ("naive", mm.matmul_naive, False),
+            ("tiled", mm.matmul_tiled, False),
+            ("bug_oob", mm.matmul_tiled_bug_oob, True),
+            ("bug_uninit", mm.matmul_tiled_bug_uninit, True),
+        ],
+    )
+
+    fam(
+        "matmul_bias_relu", ref.matmul_bias_relu,
+        [_mk((m, k)), _mk((k, n)), _mk((n,))],
+        [("fused", mm.matmul_fused_bias_relu, False)],
+    )
+
+    r, c = SM
+    fam(
+        "softmax", ref.softmax, [_mk((r, c))],
+        [
+            ("naive", sm.softmax_naive, False),
+            ("fused", sm.softmax_fused, False),
+            ("online", sm.softmax_online, False),
+            ("bug_wrong_axis", sm.softmax_fused_bug_wrong_axis, True),
+        ],
+    )
+
+    b_, c_ = CE_SHAPE
+    ce_in = [_mk((b_, c_)), InputSpec((b_,), "i32", "randint", mod=c_)]
+    fam(
+        "cross_entropy", ref.cross_entropy, ce_in,
+        [
+            ("block_reduce", ce.cross_entropy_block_reduce, False),
+            ("lane_reduce", ce.cross_entropy_lane_reduce, False),
+            ("bug_uninit_target", ce.cross_entropy_bug_uninit_target, True),
+        ],
+    )
+
+    eb, ef = EP
+    ep_in = [_mk((eb, ef)), InputSpec((ef, ef), lo=-0.3, hi=0.3), _mk((ef,))]
+    fam(
+        "linear_epilogue", ref.linear_epilogue, ep_in,
+        [
+            ("unfused", fe.linear_epilogue_unfused, False),
+            ("fused", fe.linear_epilogue_fused, False),
+            ("bug_wrong_gelu", fe.linear_epilogue_bug_wrong_gelu, True),
+        ],
+    )
+
+    rr, rc = RD
+    fam(
+        "reduce_rows", ref.reduce_rows, [_mk((rr, rc))],
+        [
+            ("twopass", rd.reduce_rows_twopass, False),
+            ("onepass", rd.reduce_rows_onepass, False),
+            ("bug_off_by_one", rd.reduce_rows_bug_off_by_one, True),
+        ],
+    )
+
+    lr, lc = LN_SHAPE
+    ln_in = [_mk((lr, lc)), InputSpec((lc,), lo=0.5, hi=1.5), _mk((lc,))]
+    fam(
+        "layernorm", ref.layernorm, ln_in,
+        [
+            ("naive", ln.layernorm_naive, False),
+            ("fused", ln.layernorm_fused, False),
+            ("bug_biased_var", ln.layernorm_bug_biased_var, True),
+        ],
+    )
+
+    er, ec = EWS
+    ew_in = [_mk((er, ec)), _mk((er, ec)), InputSpec((), lo=0.5, hi=1.5)]
+    fam(
+        "ew_chain", ref.ew_chain, ew_in,
+        [
+            ("unfused", ew.ew_chain_unfused, False),
+            ("fused", ew.ew_chain_fused, False),
+            ("bug_wrong_const", ew.ew_chain_bug_wrong_const, True),
+        ],
+    )
+
+    dn, dmm = DM
+    fam(
+        "diag_matmul", ref.diag_matmul, [_mk((dn,)), _mk((dn, dmm))],
+        [
+            ("full_diag", dm.diag_matmul_full, False),
+            ("broadcast", dm.diag_matmul_broadcast, False),
+            ("bug_transposed", dm.diag_matmul_bug_transposed, True),
+        ],
+    )
+
+    mb, md, mh, mc = MINI
+    mini_in = [
+        _mk((mb, md)),
+        InputSpec((md, mh), lo=-0.2, hi=0.2),
+        _mk((mh,)),
+        InputSpec((mh, mc), lo=-0.2, hi=0.2),
+        _mk((mc,)),
+        InputSpec((md,), lo=0.5, hi=1.5),
+        _mk((md,)),
+        InputSpec((mb,), "i32", "randint", mod=mc),
+    ]
+    fam(
+        "mini_model", ref.mini_model_loss, mini_in,
+        [("pallas", mini_model_pallas, False)],
+    )
+
+    return entries
+
+
+CATALOG = _catalog()

@@ -1,0 +1,25 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+def gen_input(rng, spec):
+    """Materialize one InputSpec exactly like the Rust runtime does."""
+    import jax.numpy as jnp
+
+    if spec.dtype == "i32":
+        return jnp.asarray(rng.integers(0, spec.mod, spec.shape), jnp.int32)
+    return jnp.asarray(rng.uniform(spec.lo, spec.hi, spec.shape), jnp.float32)

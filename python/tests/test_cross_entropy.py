@@ -1,0 +1,57 @@
+"""L1 cross-entropy family (the Fig. 8 case-study operator) vs oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cross_entropy as ce, ref
+
+
+def _inputs(rng, b, c, scale=2.0):
+    logits = jnp.asarray(rng.uniform(-scale, scale, (b, c)), jnp.float32)
+    targets = jnp.asarray(rng.integers(0, c, (b,)), jnp.int32)
+    return logits, targets
+
+
+@settings(max_examples=10, deadline=None)
+@given(bi=st.integers(1, 4), c=st.sampled_from([32, 64, 128, 256]))
+def test_lane_reduce_matches_ref(bi, c):
+    rng = np.random.default_rng(bi * 1000 + c)
+    logits, targets = _inputs(rng, bi * 32, c)
+    np.testing.assert_allclose(
+        ce.cross_entropy_lane_reduce(logits, targets),
+        ref.cross_entropy(logits, targets),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(bi=st.integers(1, 4), c=st.sampled_from([32, 128]))
+def test_block_reduce_matches_ref(bi, c):
+    rng = np.random.default_rng(bi * 100 + c)
+    logits, targets = _inputs(rng, bi * 32, c)
+    np.testing.assert_allclose(
+        ce.cross_entropy_block_reduce(logits, targets),
+        ref.cross_entropy(logits, targets),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+def test_losses_nonnegative_lower_bound():
+    # CE loss >= -log(1) = 0 only for perfect one-hot; general bound: >= 0
+    # when compared against log-sum-exp >= target logit.
+    rng = np.random.default_rng(3)
+    logits, targets = _inputs(rng, 64, 128)
+    losses = np.asarray(ce.cross_entropy_lane_reduce(logits, targets))
+    assert (losses >= -1e-5).all()
+
+
+def test_bug_uninit_target_detected_and_localized():
+    rng = np.random.default_rng(5)
+    logits, targets = _inputs(rng, 64, 128)
+    got = np.asarray(ce.cross_entropy_bug_uninit_target(logits, targets))
+    want = np.asarray(ref.cross_entropy(logits, targets))
+    # Row 0 wrong (unless target happens to be 0), every other row correct —
+    # the exact "thread-0 uninitialized target_logit" signature from Fig. 8.
+    np.testing.assert_allclose(got[1:], want[1:], atol=1e-4, rtol=1e-4)
+    assert int(targets[0]) == 0 or abs(got[0] - want[0]) > 1e-4

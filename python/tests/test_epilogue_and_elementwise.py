@@ -1,0 +1,69 @@
+"""L1 linear-epilogue (Appendix B.1 workload) + elementwise chain vs oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import elementwise as ew, fused_epilogue as fe, ref
+
+
+def _ep_inputs(rng, m, f):
+    x = jnp.asarray(rng.uniform(-2, 2, (m, f)), jnp.float32)
+    w = jnp.asarray(rng.uniform(-0.3, 0.3, (f, f)), jnp.float32)
+    b = jnp.asarray(rng.uniform(-1, 1, (f,)), jnp.float32)
+    return x, w, b
+
+
+@settings(max_examples=8, deadline=None)
+@given(mi=st.integers(1, 3), f=st.sampled_from([64, 128]))
+def test_epilogue_fused_matches_ref(mi, f):
+    rng = np.random.default_rng(mi * 10 + f)
+    x, w, b = _ep_inputs(rng, mi * 32, f)
+    np.testing.assert_allclose(
+        fe.linear_epilogue_fused(x, w, b),
+        ref.linear_epilogue(x, w, b),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+@settings(max_examples=4, deadline=None)
+@given(mi=st.integers(1, 2))
+def test_epilogue_unfused_matches_fused(mi):
+    rng = np.random.default_rng(mi)
+    x, w, b = _ep_inputs(rng, 64, 128)
+    np.testing.assert_allclose(
+        fe.linear_epilogue_unfused(x, w, b),
+        fe.linear_epilogue_fused(x, w, b),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+def test_epilogue_bug_wrong_gelu_detected():
+    rng = np.random.default_rng(11)
+    x, w, b = _ep_inputs(rng, 64, 128)
+    got = fe.linear_epilogue_bug_wrong_gelu(x, w, b)
+    assert not np.allclose(got, ref.linear_epilogue(x, w, b), atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(ri=st.integers(1, 4), c=st.sampled_from([64, 256]))
+def test_ew_chain_fused_matches_ref(ri, c):
+    rng = np.random.default_rng(ri * 100 + c)
+    x = jnp.asarray(rng.uniform(-2, 2, (ri * 32, c)), jnp.float32)
+    y = jnp.asarray(rng.uniform(-2, 2, (ri * 32, c)), jnp.float32)
+    a = jnp.float32(1.3)
+    np.testing.assert_allclose(
+        ew.ew_chain_fused(x, y, a), ref.ew_chain(x, y, a), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_ew_chain_unfused_and_bug():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.uniform(-2, 2, (64, 256)), jnp.float32)
+    y = jnp.asarray(rng.uniform(-2, 2, (64, 256)), jnp.float32)
+    a = jnp.float32(0.9)
+    np.testing.assert_allclose(
+        ew.ew_chain_unfused(x, y, a), ref.ew_chain(x, y, a), atol=1e-4, rtol=1e-4
+    )
+    bad = ew.ew_chain_bug_wrong_const(x, y, a)
+    assert not np.allclose(bad, ref.ew_chain(x, y, a), atol=1e-4, rtol=1e-4)

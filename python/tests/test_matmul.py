@@ -1,0 +1,59 @@
+"""L1 matmul family vs the pure-jnp oracle (hypothesis shape sweep)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as mm, ref
+
+TILES = st.sampled_from([32, 64])
+DIMS = st.integers(min_value=1, max_value=3)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.uniform(-1, 1, shape), jnp.float32)
+
+
+@settings(max_examples=12, deadline=None)
+@given(mi=DIMS, ni=DIMS, ki=DIMS, bt=TILES)
+def test_tiled_matches_ref(mi, ni, ki, bt):
+    rng = np.random.default_rng(mi * 100 + ni * 10 + ki + bt)
+    m, n, k = mi * bt, ni * bt, ki * bt
+    x, y = _rand(rng, m, k), _rand(rng, k, n)
+    got = mm.matmul_tiled(x, y, bm=bt, bn=bt, bk=bt)
+    np.testing.assert_allclose(got, ref.matmul(x, y), atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(mi=DIMS, ni=DIMS)
+def test_naive_matches_ref(mi, ni):
+    rng = np.random.default_rng(mi * 10 + ni)
+    m, n, k = mi * 32, ni * 32, 64
+    x, y = _rand(rng, m, k), _rand(rng, k, n)
+    got = mm.matmul_naive(x, y)
+    np.testing.assert_allclose(got, ref.matmul(x, y), atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(ni=DIMS)
+def test_fused_bias_relu(ni):
+    rng = np.random.default_rng(ni)
+    m, n, k = 64, ni * 64, 128
+    x, y, b = _rand(rng, m, k), _rand(rng, k, n), _rand(rng, n)
+    got = mm.matmul_fused_bias_relu(x, y, b)
+    np.testing.assert_allclose(
+        got, ref.matmul_bias_relu(x, y, b), atol=1e-4, rtol=1e-4
+    )
+    assert float(jnp.min(got)) >= 0.0  # ReLU postcondition
+
+
+def test_bug_oob_detected(rng):
+    x, y = _rand(rng, 128, 128), _rand(rng, 128, 128)
+    got = mm.matmul_tiled_bug_oob(x, y)
+    assert not np.allclose(got, ref.matmul(x, y), atol=1e-4, rtol=1e-4)
+
+
+def test_bug_uninit_detected(rng):
+    x, y = _rand(rng, 128, 128), _rand(rng, 128, 128)
+    got = mm.matmul_tiled_bug_uninit(x, y)
+    assert not np.allclose(got, ref.matmul(x, y), atol=1e-4, rtol=1e-4)

@@ -1,0 +1,88 @@
+"""L2 catalog integrity + AOT lowering round-trip."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import CATALOG, mini_model_pallas
+from compile.kernels import ref
+
+from conftest import gen_input
+
+
+def test_catalog_shape():
+    names = [e.name for e in CATALOG]
+    assert len(names) == len(set(names)), "artifact names must be unique"
+    families = {e.family for e in CATALOG}
+    assert {
+        "matmul", "softmax", "cross_entropy", "linear_epilogue",
+        "reduce_rows", "layernorm", "ew_chain", "diag_matmul", "mini_model",
+    } <= families
+    for e in CATALOG:
+        if e.variant != "ref":
+            assert e.ref_name in names, f"{e.name}: missing ref {e.ref_name}"
+        assert e.tol == pytest.approx(1e-4)
+    buggy = [e for e in CATALOG if e.buggy]
+    assert len(buggy) >= 7, "need buggy variants to exercise the correction loop"
+
+
+def test_mini_model_matches_ref(rng):
+    entry = next(e for e in CATALOG if e.name == "mini_model_pallas")
+    inputs = [gen_input(rng, s) for s in entry.inputs]
+    got = mini_model_pallas(*inputs)
+    want = ref.mini_model_loss(*inputs)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-3)
+
+
+def test_lowering_produces_parseable_hlo(tmp_path):
+    # Lower a cheap entry end-to-end and sanity-check the HLO text.
+    rc = aot.build(str(tmp_path), only="ew_chain_fused")
+    assert rc == 0
+    text = (tmp_path / "ew_chain_fused.hlo.txt").read_text()
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    # jax >= 0.5 64-bit-id proto issue is avoided by using text — make sure we
+    # did not accidentally serialize a proto.
+    assert "\x00" not in text
+
+
+def test_manifest_written_and_fingerprint_noop(tmp_path, capsys):
+    aot.build(str(tmp_path), only="ew_chain_fused")
+    # `only` builds don't write a usable full manifest -> simulate a full one
+    manifest = {
+        "version": 1,
+        "fingerprint": aot._sources_fingerprint(),
+        "entries": [
+            {
+                "name": "ew_chain_fused",
+                "file": "ew_chain_fused.hlo.txt",
+                "family": "ew_chain",
+                "variant": "fused",
+                "ref": "ew_chain_ref",
+                "buggy": False,
+                "tol": 1e-4,
+                "inputs": [],
+            }
+        ],
+    }
+    with open(os.path.join(tmp_path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    rc = aot.build(str(tmp_path))  # should no-op: fingerprint matches
+    assert rc == 0
+    assert "up to date" in capsys.readouterr().out
+
+
+def test_input_specs_are_rust_consumable():
+    for e in CATALOG:
+        for s in e.inputs:
+            d = s.to_json()
+            assert d["dtype"] in ("f32", "i32")
+            assert d["gen"] in ("uniform", "randint")
+            if d["gen"] == "randint":
+                assert d["mod"] > 0
+            assert all(isinstance(x, int) and x > 0 for x in d["shape"]) or d[
+                "shape"
+            ] == []

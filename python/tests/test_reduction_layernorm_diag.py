@@ -1,0 +1,95 @@
+"""L1 reduction, layernorm, diag-matmul families vs oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import diag_matmul as dm, layernorm as ln, reduction as rd, ref
+
+
+@settings(max_examples=10, deadline=None)
+@given(ri=st.integers(1, 4), ci=st.integers(1, 4))
+def test_reduce_onepass(ri, ci):
+    rng = np.random.default_rng(ri * 10 + ci)
+    x = jnp.asarray(rng.uniform(-2, 2, (ri * 32, ci * 64)), jnp.float32)
+    np.testing.assert_allclose(
+        rd.reduce_rows_onepass(x), ref.reduce_rows(x), atol=1e-4, rtol=1e-4
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(ci=st.integers(1, 4))
+def test_reduce_twopass(ci):
+    rng = np.random.default_rng(ci)
+    x = jnp.asarray(rng.uniform(-2, 2, (64, ci * 64)), jnp.float32)
+    np.testing.assert_allclose(
+        rd.reduce_rows_twopass(x), ref.reduce_rows(x), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_reduce_bug_off_by_one():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.uniform(1, 2, (64, 256)), jnp.float32)  # positive -> bias
+    got = rd.reduce_rows_bug_off_by_one(x)
+    assert not np.allclose(got, ref.reduce_rows(x), atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(ri=st.integers(1, 3), c=st.sampled_from([128, 256]))
+def test_layernorm_fused(ri, c):
+    rng = np.random.default_rng(ri * 100 + c)
+    x = jnp.asarray(rng.uniform(-3, 3, (ri * 32, c)), jnp.float32)
+    g = jnp.asarray(rng.uniform(0.5, 1.5, (c,)), jnp.float32)
+    b = jnp.asarray(rng.uniform(-1, 1, (c,)), jnp.float32)
+    np.testing.assert_allclose(
+        ln.layernorm_fused(x, g, b), ref.layernorm(x, g, b), atol=1e-4, rtol=1e-3
+    )
+
+
+def test_layernorm_naive_and_bug():
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.uniform(-3, 3, (64, 256)), jnp.float32)
+    g = jnp.asarray(rng.uniform(0.5, 1.5, (256,)), jnp.float32)
+    b = jnp.asarray(rng.uniform(-1, 1, (256,)), jnp.float32)
+    np.testing.assert_allclose(
+        ln.layernorm_naive(x, g, b), ref.layernorm(x, g, b), atol=1e-4, rtol=1e-3
+    )
+    bad = ln.layernorm_bug_biased_var(x, g, b)
+    assert not np.allclose(bad, ref.layernorm(x, g, b), atol=1e-4, rtol=1e-4)
+
+
+def test_layernorm_output_stats():
+    # gamma=1, beta=0 -> rows ~ zero mean, unit variance.
+    rng = np.random.default_rng(12)
+    x = jnp.asarray(rng.uniform(-3, 3, (32, 256)), jnp.float32)
+    out = np.asarray(ln.layernorm_fused(x, jnp.ones(256), jnp.zeros(256)))
+    np.testing.assert_allclose(out.mean(axis=1), np.zeros(32), atol=1e-4)
+    np.testing.assert_allclose(out.var(axis=1), np.ones(32), atol=1e-2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(ni=st.integers(1, 4), mi=st.integers(1, 4))
+def test_diag_broadcast(ni, mi):
+    rng = np.random.default_rng(ni * 10 + mi)
+    a = jnp.asarray(rng.uniform(-2, 2, (ni * 32,)), jnp.float32)
+    b = jnp.asarray(rng.uniform(-2, 2, (ni * 32, mi * 32)), jnp.float32)
+    np.testing.assert_allclose(
+        dm.diag_matmul_broadcast(a, b), ref.diag_matmul(a, b), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_diag_full_matches_broadcast():
+    rng = np.random.default_rng(6)
+    a = jnp.asarray(rng.uniform(-2, 2, (128,)), jnp.float32)
+    b = jnp.asarray(rng.uniform(-2, 2, (128, 128)), jnp.float32)
+    np.testing.assert_allclose(
+        dm.diag_matmul_full(a, b), ref.diag_matmul(a, b), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_diag_bug_transposed_detected():
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.uniform(-2, 2, (128,)), jnp.float32)
+    b = jnp.asarray(rng.uniform(-2, 2, (128, 128)), jnp.float32)
+    got = dm.diag_matmul_bug_transposed(a, b)
+    assert not np.allclose(got, ref.diag_matmul(a, b), atol=1e-4, rtol=1e-4)

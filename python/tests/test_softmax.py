@@ -1,0 +1,57 @@
+"""L1 softmax family vs oracle, including the online single-pass variant."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import softmax as sm, ref
+
+
+def _rand(rng, r, c, scale=1.0):
+    return jnp.asarray(rng.uniform(-scale, scale, (r, c)), jnp.float32)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    ri=st.integers(1, 4),
+    c=st.sampled_from([64, 128, 192, 256]),
+    scale=st.sampled_from([1.0, 10.0, 50.0]),
+)
+def test_fused_matches_ref(ri, c, scale):
+    rng = np.random.default_rng(ri * 1000 + c)
+    x = _rand(rng, ri * 32, c, scale)
+    np.testing.assert_allclose(
+        sm.softmax_fused(x), ref.softmax(x), atol=1e-4, rtol=1e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(ri=st.integers(1, 4), ci=st.integers(1, 4), scale=st.sampled_from([1.0, 30.0]))
+def test_online_matches_ref(ri, ci, scale):
+    rng = np.random.default_rng(ri * 10 + ci)
+    x = _rand(rng, ri * 32, ci * 64, scale)
+    np.testing.assert_allclose(
+        sm.softmax_online(x), ref.softmax(x), atol=1e-4, rtol=1e-4
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(ri=st.integers(1, 3))
+def test_naive_matches_ref(ri):
+    rng = np.random.default_rng(ri)
+    x = _rand(rng, ri * 32, 128)
+    np.testing.assert_allclose(
+        sm.softmax_naive(x), ref.softmax(x), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_rows_sum_to_one(rng):
+    x = _rand(np.random.default_rng(7), 64, 256, 20.0)
+    s = jnp.sum(sm.softmax_online(x), axis=1)
+    np.testing.assert_allclose(s, np.ones(64), atol=1e-5)
+
+
+def test_bug_wrong_axis_detected(rng):
+    x = _rand(np.random.default_rng(9), 64, 256)
+    got = sm.softmax_fused_bug_wrong_axis(x)
+    assert not np.allclose(got, ref.softmax(x), atol=1e-4, rtol=1e-4)

@@ -1,0 +1,41 @@
+//! Bench: the offline metric-selection pipeline (Algorithms 1-2) and its
+//! statistical primitives.
+
+use cudaforge::gpu::RTX6000_ADA;
+use cudaforge::metrics::{remove_aliases, sample_kernels, select_metrics, top20};
+use cudaforge::sim::SimParams;
+use cudaforge::tasks::by_id;
+use cudaforge::util::bench::{bench, black_box};
+use cudaforge::util::rng::Rng;
+use cudaforge::util::stats::pearson;
+
+fn main() {
+    let params = SimParams::default();
+    let task = by_id("L1-1").unwrap();
+    let mut rng = Rng::new(5);
+
+    let kernels = sample_kernels(&RTX6000_ADA, &task, &params, 100, &mut rng);
+
+    bench("metrics::sample_kernels (100 iters)", 10_000, || {
+        let mut r = Rng::new(5);
+        black_box(sample_kernels(&RTX6000_ADA, &task, &params, 100, &mut r));
+    });
+
+    bench("metrics::remove_aliases (64x64 pearson)", 100_000, || {
+        black_box(remove_aliases(&kernels));
+    });
+
+    bench("metrics::top20 (one task)", 100_000, || {
+        black_box(top20(&task, &kernels));
+    });
+
+    bench("metrics::select_metrics (8 tasks, 100 iters)", 1_000, || {
+        black_box(select_metrics(&RTX6000_ADA, &params, 100, 2025));
+    });
+
+    let xs: Vec<f64> = (0..10_000).map(|i| (i as f64).sin()).collect();
+    let ys: Vec<f64> = (0..10_000).map(|i| (i as f64).cos()).collect();
+    bench("stats::pearson (10k points)", 1_000_000, || {
+        black_box(pearson(&xs, &ys));
+    });
+}

@@ -1,0 +1,24 @@
+//! Bench-style end-to-end timing of the paper-table generators: how long
+//! each experiment takes to regenerate (meso-benchmarks backing `make paper`).
+//! These run each experiment ONCE in quick mode and report wall time — the
+//! full-suite versions run via `cudaforge bench --exp all` (`make paper`).
+
+use std::time::Instant;
+
+use cudaforge::report::{self, Ctx};
+use cudaforge::workflow::NoOracle;
+
+fn main() {
+    let ctx = Ctx {
+        results_dir: "results/bench".into(),
+        ..Ctx::default()
+    };
+    for exp in [
+        "table1", "table2", "table3", "table4", "table5", "fig4", "fig5", "fig6",
+        "fig7", "fig8", "fig9", "table6", "table8",
+    ] {
+        let t = Instant::now();
+        report::run_experiment(&ctx, exp, &NoOracle, true);
+        println!(">> experiment {exp}: {:.2}s\n", t.elapsed().as_secs_f64());
+    }
+}

@@ -1,0 +1,36 @@
+//! Bench: the PJRT runtime path — artifact compile (cold) and execute (hot),
+//! the real-numerics cost the oracle amortizes by verifying once.
+//!
+//! Skips (prints a notice) when `artifacts/` is missing.
+
+use cudaforge::runtime::Engine;
+use cudaforge::util::bench::{bench, black_box};
+
+fn main() {
+    let mut engine = match Engine::new("artifacts") {
+        Ok(e) => e,
+        Err(_) => {
+            println!("runtime_pjrt: artifacts missing — run `make artifacts` first; skipping");
+            return;
+        }
+    };
+
+    for name in ["ew_chain_fused", "softmax_online", "matmul_tiled", "mini_model_pallas"] {
+        let entry = engine.manifest().by_name(name).unwrap().clone();
+        let inputs = engine.gen_inputs(&entry, 42).unwrap();
+        // cold compile happens on first execute; measure the hot path after.
+        engine.execute(name, &inputs).unwrap();
+        bench(&format!("pjrt::execute {name}"), 50_000, || {
+            black_box(engine.execute(name, &inputs).unwrap());
+        });
+    }
+
+    let entry = engine.manifest().by_name("cross_entropy_lane_reduce").unwrap().clone();
+    bench("pjrt::gen_inputs (cross_entropy)", 500_000, || {
+        black_box(engine.gen_inputs(&entry, 7).unwrap());
+    });
+
+    bench("pjrt::check_against_ref (cross_entropy)", 20_000, || {
+        black_box(engine.check_against_ref("cross_entropy_lane_reduce", 7).unwrap());
+    });
+}

@@ -1,0 +1,48 @@
+//! Bench: the GPU simulator + NCU emission hot path (called ~10^4-10^5 times
+//! per suite run — the L3 §Perf target).
+
+use cudaforge::gpu::RTX6000_ADA;
+use cudaforge::kernel::KernelConfig;
+use cudaforge::sim::{baseline_time, ncu, simulate, SimParams};
+use cudaforge::tasks::kernelbench;
+use cudaforge::util::bench::{bench, black_box};
+use cudaforge::util::rng::Rng;
+
+fn main() {
+    let tasks = kernelbench();
+    let params = SimParams::default();
+    let gpu = &RTX6000_ADA;
+    let mut cfg = KernelConfig::naive();
+    cfg.use_smem = true;
+    cfg.coalesced = true;
+    cfg.tile_m = 64;
+    cfg.tile_n = 64;
+    cfg.tile_k = 32;
+    cfg.syncs_per_tile = 2;
+    cfg.legalize(gpu);
+    let task = &tasks[0];
+
+    bench("sim::simulate (single eval)", 2_000_000, || {
+        black_box(simulate(gpu, task, &cfg, &params, 1.0));
+    });
+
+    let out = simulate(gpu, task, &cfg, &params, 1.0);
+    let mut rng = Rng::new(1);
+    bench("sim::ncu::profile (64 metrics)", 1_000_000, || {
+        black_box(ncu::profile(gpu, task, &cfg, &out, &mut rng));
+    });
+
+    bench("sim::baseline_time", 1_000_000, || {
+        black_box(baseline_time(gpu, task, &params));
+    });
+
+    bench("sim::simulate x250 tasks", 20_000, || {
+        for t in &tasks {
+            black_box(simulate(gpu, t, &cfg, &params, 1.0));
+        }
+    });
+
+    bench("tasks::kernelbench (suite gen)", 20_000, || {
+        black_box(kernelbench());
+    });
+}

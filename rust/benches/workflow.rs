@@ -1,0 +1,49 @@
+//! Bench: full workflow throughput — one task through N rounds (the unit the
+//! coordinator parallelizes), plus the agent calls individually.
+
+use cudaforge::agents::profiles::O3;
+use cudaforge::agents::{Coder, Judge, MetricMode};
+use cudaforge::gpu::RTX6000_ADA;
+use cudaforge::kernel::KernelConfig;
+use cudaforge::sim::{ncu, simulate, SimParams};
+use cudaforge::tasks::{by_id, dstar};
+use cudaforge::util::bench::{bench, black_box};
+use cudaforge::util::rng::Rng;
+use cudaforge::workflow::{run_task, NoOracle, Strategy, WorkflowConfig};
+
+fn main() {
+    let task = by_id("L2-51").unwrap();
+    let gpu = &RTX6000_ADA;
+    let wf = WorkflowConfig::cudaforge(gpu, 7);
+
+    bench("workflow::run_task (CudaForge, N=10)", 200_000, || {
+        black_box(run_task(&wf, &task, &NoOracle));
+    });
+
+    let wf1 = wf.clone().with_strategy(Strategy::OneShot);
+    bench("workflow::run_task (one-shot)", 500_000, || {
+        black_box(run_task(&wf1, &task, &NoOracle));
+    });
+
+    let coder = Coder::new(O3);
+    let mut rng = Rng::new(3);
+    bench("agents::coder.initial", 1_000_000, || {
+        black_box(coder.initial(&task, gpu, &mut rng));
+    });
+
+    let judge = Judge::new(O3, MetricMode::Subset);
+    let mut cfg = KernelConfig::naive();
+    cfg.legalize(gpu);
+    let out = simulate(gpu, &task, &cfg, &SimParams::default(), 1.0);
+    let metrics = ncu::profile(gpu, &task, &cfg, &out, &mut rng);
+    bench("agents::judge.optimization", 500_000, || {
+        black_box(judge.optimization(&task, gpu, &cfg, &metrics, &mut rng));
+    });
+
+    let set = dstar();
+    bench("coordinator: D* suite serial (25 tasks)", 5_000, || {
+        for t in &set {
+            black_box(run_task(&wf, t, &NoOracle));
+        }
+    });
+}

@@ -1,0 +1,383 @@
+//! The Coder agent — the generative half of the two-agent workflow (§2.2).
+//!
+//! Behavioural model: the Coder owns an explicit kernel configuration and
+//! rewrites it under feedback. Its capability profile controls (i) how many
+//! good structural choices the *initial* kernel already makes, (ii) how
+//! reliably it fixes a *named* bug, (iii) how faithfully it applies a *named*
+//! optimization, and (iv) how often a rewrite introduces a fresh defect —
+//! the four failure axes the paper's ablations isolate (§3.6).
+//!
+//! Lightweight memory (§2.2 "memory scope"): `revise_*` receives only the
+//! previous candidate and the latest Judge feedback — never the dialogue
+//! history — mirroring the paper's round-by-round prompting.
+
+use crate::agents::prompts;
+use crate::agents::{estimate_tokens, CallStats, Feedback, ModelProfile};
+use crate::gpu::GpuSpec;
+use crate::kernel::{Bug, KernelConfig, Opt, OPT_CATALOG};
+use crate::tasks::TaskSpec;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Coder {
+    pub profile: ModelProfile,
+}
+
+/// Bug classes weighted by how often fresh generations exhibit them
+/// (compile errors dominate first attempts; KernelBench §5.1 of [13]).
+const BUG_WEIGHTS: [(Bug, f64); 9] = [
+    (Bug::CompileMissingHeader, 0.14),
+    (Bug::CompileSyntax, 0.12),
+    (Bug::CompileWrongApi, 0.12),
+    (Bug::LaunchMisconfig, 0.07),
+    (Bug::RaceCondition, 0.10),
+    (Bug::OobIndex, 0.18),
+    (Bug::UninitValue, 0.12),
+    (Bug::WrongConstant, 0.08),
+    (Bug::WrongAxis, 0.07),
+];
+
+fn random_bug(rng: &mut Rng) -> Bug {
+    let weights: Vec<f64> = BUG_WEIGHTS.iter().map(|(_, w)| *w).collect();
+    BUG_WEIGHTS[rng.weighted_choice(&weights)].0
+}
+
+/// Rewrite-risk bug (runtime-leaning — rewrites rarely fail to compile).
+fn rewrite_bug(rng: &mut Rng) -> Bug {
+    let tail = &BUG_WEIGHTS[3..];
+    let weights: Vec<f64> = tail.iter().map(|(_, w)| *w).collect();
+    tail[rng.weighted_choice(&weights)].0
+}
+
+impl Coder {
+    pub fn new(profile: ModelProfile) -> Coder {
+        Coder { profile }
+    }
+
+    fn stats_for(&self, prompt: &str) -> CallStats {
+        CallStats {
+            tokens_in: estimate_tokens(prompt),
+            tokens_out: self.profile.gen_out_tokens,
+        }
+    }
+
+    /// Probability the current generation introduces a defect.
+    fn p_bug(&self, task: &TaskSpec) -> f64 {
+        (self.profile.bug_rate + 0.26 * task.difficulty).clamp(0.03, 0.92)
+    }
+
+    /// Round 1: one-shot generation from the task card (Appendix A.1 prompt).
+    pub fn initial(
+        &self,
+        task: &TaskSpec,
+        gpu: &GpuSpec,
+        rng: &mut Rng,
+    ) -> (KernelConfig, CallStats) {
+        let s = self.profile.gen_skill;
+        let mut cfg = KernelConfig::naive();
+
+        // Structural quality of the first shot scales with generation skill.
+        if rng.chance(0.45 + 0.50 * s) {
+            cfg.coalesced = true;
+        }
+        if task.op_class.has_data_reuse() && rng.chance(0.35 + 0.55 * s) {
+            cfg.use_smem = true;
+            cfg.tile_m = *rng.choice(&[32, 32, 64]);
+            cfg.tile_n = cfg.tile_m;
+            cfg.tile_k = *rng.choice(&[8, 16, 32]);
+            // Weak coders over-synchronize (the Fig. 8 starting point: 16
+            // __syncthreads per block).
+            cfg.syncs_per_tile = if rng.chance(s) { 2 } else { *rng.choice(&[8, 16]) };
+        }
+        if rng.chance(0.35 * s) {
+            cfg.vector_width = 4;
+        }
+        if task.op_class.online_eligible() {
+            // Naive reduction kernels make extra passes over the input.
+            cfg.extra_global_passes = if rng.chance(0.35 + 0.45 * s) { 1 } else { 2 };
+            if rng.chance(0.30 * s) {
+                cfg.online_algorithm = true;
+                cfg.extra_global_passes = 0;
+            }
+            cfg.syncs_per_tile = cfg.syncs_per_tile.max(if rng.chance(s) { 2 } else { 12 });
+        }
+        if task.baseline_waste > 1.0 && rng.chance(0.30 * s) {
+            // The "algorithmic changes" insight from the one-shot prompt.
+            cfg.algo_optimal = true;
+        }
+        if task.tc_eligible && rng.chance(0.30 * s) {
+            Opt::UseTensorCores.apply(&mut cfg, task, gpu);
+        }
+        // Partial epilogue fusion in the first shot.
+        let mut extra_fuse = 0;
+        for _ in 0..(task.stages.saturating_sub(1)).min(3) {
+            if rng.chance(0.15 + 0.35 * s) {
+                extra_fuse += 1;
+            }
+        }
+        cfg.fused_stages = 1 + extra_fuse;
+        cfg.unroll = *rng.choice(&[1, 1, 2, 4]);
+        cfg.block_threads = *rng.choice(&[128, 256, 256, 512]);
+        cfg.regs_per_thread = rng.range_usize(40, 128) as u32;
+
+        // Defect injection.
+        let p = self.p_bug(task);
+        if rng.chance(p) {
+            cfg.bugs.push(random_bug(rng));
+        }
+        if rng.chance(p * 0.30) {
+            cfg.bugs.push(random_bug(rng));
+        }
+        cfg.legalize(gpu);
+        let stats = self.stats_for(&prompts::coder_initial(task));
+        (cfg, stats)
+    }
+
+    /// Rounds 2..N, correction mode: fix the named problem.
+    pub fn revise_correction(
+        &self,
+        task: &TaskSpec,
+        gpu: &GpuSpec,
+        prev: &KernelConfig,
+        feedback: &Feedback,
+        error_log: &str,
+        rng: &mut Rng,
+    ) -> (KernelConfig, CallStats) {
+        let mut cfg = prev.clone();
+        // Hard tasks are harder to debug even with the defect named.
+        let fix = self.profile.fix_skill * (1.0 - 0.35 * task.difficulty);
+        match feedback {
+            Feedback::Correction { bug: Some(b), .. } => {
+                if cfg.bugs.contains(b) {
+                    if rng.chance(fix) {
+                        cfg.remove_bug(*b);
+                    }
+                } else if !cfg.bugs.is_empty() && rng.chance(0.30 * fix) {
+                    // Judge misnamed the defect; while rewriting, the Coder
+                    // sometimes stumbles onto the real one anyway.
+                    let b0 = cfg.bugs[0];
+                    cfg.remove_bug(b0);
+                }
+            }
+            _ => {
+                // Vague feedback: unguided debugging, much less reliable.
+                if !cfg.bugs.is_empty() && rng.chance(0.30 * fix) {
+                    let b0 = cfg.bugs[0];
+                    cfg.remove_bug(b0);
+                }
+            }
+        }
+        // Any rewrite can regress.
+        if rng.chance(0.05 + 0.12 * (1.0 - fix) + 0.05 * task.difficulty) {
+            cfg.bugs.push(rewrite_bug(rng));
+        }
+        cfg.legalize(gpu);
+        let fb_json = feedback.to_json().to_string();
+        let stats = self.stats_for(&prompts::coder_correction(prev, error_log, &fb_json));
+        let _ = task;
+        (cfg, stats)
+    }
+
+    /// Rounds 2..N, optimization mode: apply the suggested strategy.
+    pub fn revise_optimization(
+        &self,
+        task: &TaskSpec,
+        gpu: &GpuSpec,
+        prev: &KernelConfig,
+        feedback: &Feedback,
+        rng: &mut Rng,
+    ) -> (KernelConfig, CallStats) {
+        let mut cfg = prev.clone();
+        let s = self.profile.gen_skill;
+        let mut applied: Option<Opt> = None;
+        match feedback {
+            Feedback::Optimization { opt: Some(o), .. } if o.applicable(task, &cfg) => {
+                if rng.chance(self.profile.follow) {
+                    o.apply(&mut cfg, task, gpu);
+                    applied = Some(*o);
+                } else {
+                    // Unfaithful application: the Coder does *something*, just
+                    // not what was asked (a hallucinated variant).
+                    if let Some(alt) = random_applicable(task, &cfg, rng) {
+                        alt.apply(&mut cfg, task, gpu);
+                        applied = Some(alt);
+                    }
+                }
+            }
+            _ => {
+                // Vague / absent guidance: unguided exploration. This is the
+                // blind-search regime the paper contrasts with hardware-
+                // guided iteration (§1 C3): it sometimes lands a useful move,
+                // often thrashes the kernel sideways or backwards ("higher
+                // hallucination", §2.2).
+                if !cfg.coalesced && rng.chance(0.30 * s) {
+                    // Coalescing is the first thing any unguided pass checks.
+                    Opt::CoalesceAccesses.apply(&mut cfg, task, gpu);
+                    applied = Some(Opt::CoalesceAccesses);
+                } else if rng.chance(0.55 * s) {
+                    if let Some(alt) = random_applicable(task, &cfg, rng) {
+                        alt.apply(&mut cfg, task, gpu);
+                        applied = Some(alt);
+                    }
+                } else if rng.chance(0.35) {
+                    perturb(&mut cfg, rng);
+                    cfg.legalize(gpu);
+                    applied = None;
+                }
+            }
+        }
+        // Rewrite risk scales with how invasive the change is.
+        let complexity = match applied {
+            Some(
+                Opt::UseTensorCores
+                | Opt::UseSharedMemoryTiling
+                | Opt::OnlineAlgorithm
+                | Opt::AlgorithmicRewrite
+                | Opt::WarpShuffleReduction,
+            ) => 1.7,
+            Some(_) => 1.0,
+            None => 0.4,
+        };
+        let p = (0.04 + 0.16 * (1.0 - s)) * complexity * (0.5 + task.difficulty);
+        if rng.chance(p) {
+            cfg.bugs.push(rewrite_bug(rng));
+        }
+        cfg.legalize(gpu);
+        let fb_json = feedback.to_json().to_string();
+        let stats = self.stats_for(&prompts::coder_optimization(gpu, prev, &fb_json));
+        (cfg, stats)
+    }
+}
+
+/// An unguided sideways rewrite: randomize one configuration axis. Unlike a
+/// catalog transform this has no reason to help — it models speculative
+/// rewrites that churn the kernel without addressing the real limiter.
+pub fn perturb(cfg: &mut KernelConfig, rng: &mut Rng) {
+    match rng.below(7) {
+        0 => cfg.block_threads = *rng.choice(&[128, 256, 512, 1024]),
+        1 => {
+            cfg.tile_m = *rng.choice(&[16, 32, 64, 128]);
+            cfg.tile_n = cfg.tile_m;
+        }
+        2 => cfg.vector_width = *rng.choice(&[1, 2, 4]),
+        3 => cfg.unroll = *rng.choice(&[1, 2, 4, 8]),
+        4 => cfg.regs_per_thread = rng.range_usize(32, 160) as u32,
+        5 => cfg.syncs_per_tile = rng.range_usize(0, 8) as u32,
+        _ => cfg.extra_global_passes = rng.range_usize(0, 2) as u32,
+    }
+}
+
+/// A uniformly random still-applicable transform (the unguided move).
+pub fn random_applicable(
+    task: &TaskSpec,
+    cfg: &KernelConfig,
+    rng: &mut Rng,
+) -> Option<Opt> {
+    let options: Vec<Opt> = OPT_CATALOG
+        .iter()
+        .copied()
+        .filter(|o| o.applicable(task, cfg))
+        .collect();
+    if options.is_empty() {
+        None
+    } else {
+        Some(*rng.choice(&options))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::profiles::{O3, QWQ_32B};
+    use crate::gpu::RTX6000_ADA;
+    use crate::tasks::{by_id, kernelbench};
+
+    #[test]
+    fn initial_correctness_rate_tracks_skill() {
+        // o3 one-shot correctness should land near Table 1's 57.6%; QwQ far
+        // below it.
+        let tasks = kernelbench();
+        let mut rng = Rng::new(7);
+        let count_ok = |p, rng: &mut Rng| {
+            let coder = Coder::new(p);
+            tasks
+                .iter()
+                .filter(|t| {
+                    let (cfg, _) = coder.initial(t, &RTX6000_ADA, rng);
+                    !cfg.is_buggy()
+                })
+                .count() as f64
+                / tasks.len() as f64
+        };
+        let o3 = count_ok(O3, &mut rng);
+        let qwq = count_ok(QWQ_32B, &mut rng);
+        assert!((0.40..=0.70).contains(&o3), "o3 one-shot correct {o3}");
+        assert!(qwq < o3 - 0.15, "qwq {qwq} vs o3 {o3}");
+    }
+
+    #[test]
+    fn correction_with_named_bug_usually_fixes() {
+        let t = by_id("L1-95").unwrap();
+        let coder = Coder::new(O3);
+        let mut fixed = 0;
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let mut cfg = KernelConfig::naive();
+            cfg.bugs.push(Bug::UninitValue);
+            let fb = Feedback::Correction {
+                critical_issue: "uninitialized value".into(),
+                why_it_matters: "".into(),
+                minimal_fix_hint: "".into(),
+                bug: Some(Bug::UninitValue),
+            };
+            let (new, _) =
+                coder.revise_correction(&t, &RTX6000_ADA, &cfg, &fb, "log", &mut rng);
+            if !new.bugs.contains(&Bug::UninitValue) {
+                fixed += 1;
+            }
+        }
+        let rate = fixed as f64 / 200.0;
+        assert!(rate > 0.7, "named-bug fix rate {rate}");
+    }
+
+    #[test]
+    fn optimization_applies_named_opt_mostly_faithfully() {
+        let t = by_id("L1-24").unwrap();
+        let coder = Coder::new(O3);
+        let mut faithful = 0;
+        let mut rng = Rng::new(4);
+        for _ in 0..200 {
+            let cfg = KernelConfig::naive();
+            let fb = Feedback::Optimization {
+                bottleneck: "uncoalesced".into(),
+                method: Opt::CoalesceAccesses.suggestion().into(),
+                plan: "".into(),
+                opt: Some(Opt::CoalesceAccesses),
+                critical_metrics: vec![],
+            };
+            let (new, _) = coder.revise_optimization(&t, &RTX6000_ADA, &cfg, &fb, &mut rng);
+            if new.coalesced {
+                faithful += 1;
+            }
+        }
+        assert!(faithful > 140, "faithful {faithful}/200");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let t = by_id("L2-51").unwrap();
+        let coder = Coder::new(O3);
+        let (a, _) = coder.initial(&t, &RTX6000_ADA, &mut Rng::new(99));
+        let (b, _) = coder.initial(&t, &RTX6000_ADA, &mut Rng::new(99));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stats_count_prompt_tokens() {
+        let t = by_id("L1-1").unwrap();
+        let coder = Coder::new(O3);
+        let (_, st) = coder.initial(&t, &RTX6000_ADA, &mut Rng::new(1));
+        assert!(st.tokens_in > 100.0);
+        assert_eq!(st.tokens_out, O3.gen_out_tokens);
+    }
+}

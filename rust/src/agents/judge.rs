@@ -1,0 +1,450 @@
+//! The Judge agent — the evaluation half of the two-agent workflow (§2.2–2.3).
+//!
+//! Correction mode reads the error log and names the single most critical
+//! defect; optimization mode reads GPU specs + the NCU metric vector, keys on
+//! 3–4 critical metrics, diagnoses the dominant bottleneck and returns
+//! exactly one optimization (the Appendix-A JSON schema).
+//!
+//! Metric scope is the paper's central ablation: in `Subset` mode the Judge
+//! sees the curated 24 metrics and reads them with expert rules; in `Full`
+//! mode the extra ~40 redundant/collinear signals substantially raise the
+//! probability of keying on a red herring (§3.6, Appendix B.1) and triple
+//! the token bill.
+
+use crate::agents::prompts;
+use crate::agents::{estimate_tokens, CallStats, Feedback, ModelProfile};
+use crate::gpu::GpuSpec;
+use crate::kernel::transform::Bottleneck;
+use crate::kernel::{Bug, KernelConfig, Opt};
+use crate::sim::ncu::{self, id};
+use crate::tasks::TaskSpec;
+use crate::util::rng::Rng;
+
+/// Which slice of NCU metrics the Judge is shown.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricMode {
+    /// The offline-selected 24-metric key subset (CudaForge default).
+    Subset,
+    /// The entire metric set (the "CudaForge (full metrics)" ablation).
+    Full,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Judge {
+    pub profile: ModelProfile,
+    pub mode: MetricMode,
+    /// Multiplier on diagnosis skill; the self-refine baseline uses < 1 to
+    /// model the un-split cognitive load (§3.6 "Comparison with o3-self-refine").
+    pub skill_scale: f64,
+}
+
+impl Judge {
+    pub fn new(profile: ModelProfile, mode: MetricMode) -> Judge {
+        Judge { profile, mode, skill_scale: 1.0 }
+    }
+
+    /// Degraded judge used inside self-refine (same model plays both roles —
+    /// the un-split "cognitive load" of §2.1; calibrated so the self-refine
+    /// ablation lands near Table 1's 1.11x).
+    pub fn self_refine(profile: ModelProfile) -> Judge {
+        Judge { profile, mode: MetricMode::Subset, skill_scale: 0.30 }
+    }
+
+    fn diag(&self) -> f64 {
+        (self.profile.diag_skill * self.skill_scale).clamp(0.0, 1.0)
+    }
+
+    /// Correction mode (kernel failed compile or mismatch).
+    pub fn correction(
+        &self,
+        task: &TaskSpec,
+        cfg: &KernelConfig,
+        error_log: &str,
+        rng: &mut Rng,
+    ) -> (Feedback, CallStats) {
+        let stats = CallStats {
+            tokens_in: estimate_tokens(&prompts::judge_correction(task, cfg, error_log)),
+            tokens_out: self.profile.judge_out_tokens,
+        };
+        // The most observable defect is the one the log points at.
+        let target = cfg
+            .bugs
+            .iter()
+            .copied()
+            .max_by(|a, b| a.observability().partial_cmp(&b.observability()).unwrap());
+        let Some(bug) = target else {
+            return (Feedback::NothingFound, stats);
+        };
+        let p_found = self.diag() * bug.observability();
+        let fb = if rng.chance(p_found) {
+            Feedback::Correction {
+                critical_issue: format!("{} detected in kernel body", bug.name()),
+                why_it_matters: format!(
+                    "causes behavioral mismatch vs PyTorch reference: {}",
+                    bug.error_log()
+                ),
+                minimal_fix_hint: fix_hint(bug).to_string(),
+                bug: Some(bug),
+            }
+        } else if rng.chance(0.5) {
+            // Confidently wrong: names a defect that is not there.
+            let wrong = *rng.choice(&crate::kernel::ALL_BUGS);
+            Feedback::Correction {
+                critical_issue: format!("suspected {}", wrong.name()),
+                why_it_matters: "may explain the observed mismatch".into(),
+                minimal_fix_hint: fix_hint(wrong).to_string(),
+                bug: if wrong == bug { Some(bug) } else { Some(wrong) },
+            }
+        } else {
+            Feedback::Correction {
+                critical_issue: "output mismatch of unclear origin".into(),
+                why_it_matters: "kernel output deviates beyond 1e-4".into(),
+                minimal_fix_hint: "re-derive the indexing and reduction logic".into(),
+                bug: None,
+            }
+        };
+        (fb, stats)
+    }
+
+    /// Optimization mode (kernel is correct; NCU metrics available).
+    pub fn optimization(
+        &self,
+        task: &TaskSpec,
+        gpu: &GpuSpec,
+        cfg: &KernelConfig,
+        metrics: &[f64],
+        rng: &mut Rng,
+    ) -> (Feedback, CallStats) {
+        let indices: Vec<usize> = match self.mode {
+            MetricMode::Subset => ncu::key_subset_indices(),
+            MetricMode::Full => (0..ncu::N_METRICS).collect(),
+        };
+        let block = ncu::render_block(&indices, metrics);
+        let mut tokens_in =
+            estimate_tokens(&prompts::judge_optimization(task, gpu, cfg, &block));
+        if self.mode == MetricMode::Full {
+            // The real full NCU dump is ~2000 metrics; our catalog carries the
+            // informative core. Account the remaining bulk as tokens (sized so
+            // ten full-metrics rounds land near the paper's ~$1/kernel).
+            tokens_in += 35_000.0;
+        }
+        let stats = CallStats { tokens_in, tokens_out: self.profile.judge_out_tokens };
+
+        // Distraction: with the full dump the Judge keys on redundant or
+        // misleading signals far more often (Appendix B.1 case study).
+        let mut p_distract = match self.mode {
+            MetricMode::Subset => 0.06 + (1.0 - self.diag()) * 0.55,
+            MetricMode::Full => 0.55 + (1.0 - self.diag()) * 0.40,
+        };
+        if self.skill_scale < 1.0 {
+            // Self-refinement: the generator grading its own work anchors on
+            // its generation rationale instead of the metrics (§3.6).
+            p_distract += 0.30;
+        }
+        if rng.chance(p_distract) {
+            return (self.distracted_feedback(task, cfg, metrics, rng), stats);
+        }
+
+        let (bneck, critical) = diagnose(task, cfg, metrics, self.diag(), rng);
+        let Some(bneck) = bneck else {
+            return (Feedback::NothingFound, stats);
+        };
+        let candidates: Vec<Opt> = Opt::for_bottleneck(bneck)
+            .into_iter()
+            .filter(|o| o.applicable(task, cfg))
+            .collect();
+        let Some(&opt) = candidates.first() else {
+            // Diagnosis has no applicable move left; fall back to any move.
+            return match crate::agents::coder::random_applicable(task, cfg, rng) {
+                Some(o) => (self.opt_feedback(o, bneck, metrics, critical), stats),
+                None => (Feedback::NothingFound, stats),
+            };
+        };
+        // Mild exploration across equivalent moves.
+        let opt = if candidates.len() > 1 && rng.chance(0.25) {
+            candidates[rng.below(candidates.len())]
+        } else {
+            opt
+        };
+        (self.opt_feedback(opt, bneck, metrics, critical), stats)
+    }
+
+    fn opt_feedback(
+        &self,
+        opt: Opt,
+        bneck: Bottleneck,
+        metrics: &[f64],
+        critical: Vec<usize>,
+    ) -> Feedback {
+        let lead = critical.first().copied().unwrap_or(id::DRAM_THROUGHPUT_PCT);
+        Feedback::Optimization {
+            bottleneck: format!(
+                "{} ({} = {:.1})",
+                bneck.name(),
+                ncu::CATALOG[lead],
+                metrics[lead]
+            ),
+            method: opt.suggestion().to_string(),
+            plan: format!("apply {} and re-profile", opt.name()),
+            opt: Some(opt),
+            critical_metrics: critical
+                .iter()
+                .take(4)
+                .map(|&i| ncu::CATALOG[i].to_string())
+                .collect(),
+        }
+    }
+
+    /// A distracted Judge keys on a random metric and proposes a move that
+    /// does not address the real limiter (often monolithic rewrites — the
+    /// Appendix-B.1 failure signature).
+    fn distracted_feedback(
+        &self,
+        task: &TaskSpec,
+        cfg: &KernelConfig,
+        metrics: &[f64],
+        rng: &mut Rng,
+    ) -> Feedback {
+        let i = rng.below(ncu::N_METRICS);
+        // Half the time the distracted Judge gives vague monolithic-rewrite
+        // advice with no actionable move at all (the misaligned CUTLASS-
+        // epilogue suggestion of Appendix B.1); otherwise it names a move
+        // unrelated to the real limiter.
+        let opt = if rng.chance(0.5) {
+            None
+        } else {
+            crate::agents::coder::random_applicable(task, cfg, rng)
+        };
+        Feedback::Optimization {
+            bottleneck: format!(
+                "{} = {:.1} looks anomalous; suspect it dominates cycles",
+                ncu::CATALOG[i],
+                metrics[i]
+            ),
+            method: opt
+                .map(|o| o.suggestion().to_string())
+                .unwrap_or_else(|| "restructure the kernel around a monolithic \
+                     CUTLASS epilogue".to_string()),
+            plan: "rewrite and re-profile".into(),
+            opt,
+            critical_metrics: vec![ncu::CATALOG[i].to_string()],
+        }
+    }
+}
+
+/// Expert metric reading: map the (noisy) NCU vector to a bottleneck.
+/// This is the Judge's own inference from observables — intentionally a
+/// different code path from the simulator's internal attribution, so the
+/// Judge can be wrong the way a human can.
+fn diagnose(
+    task: &TaskSpec,
+    cfg: &KernelConfig,
+    m: &[f64],
+    diag_skill: f64,
+    rng: &mut Rng,
+) -> (Option<Bottleneck>, Vec<usize>) {
+    let occ = m[id::WARPS_ACTIVE_PCT];
+    let dram = m[id::DRAM_THROUGHPUT_PCT];
+    let barrier = m[id::STALL_BARRIER_PCT];
+    let long_sb = m[id::STALL_LONG_SB_PCT];
+    let short_sb = m[id::STALL_SHORT_SB_PCT];
+    let l1 = m[id::L1_HIT_PCT];
+    let fp32 = m[id::PIPE_FP32_PCT];
+    let tensor = m[id::PIPE_TENSOR_PCT];
+    let lim_regs = m[id::OCC_LIMIT_REGISTERS];
+    let lim_smem = m[id::OCC_LIMIT_SHARED_MEM];
+    let regs = m[id::REGISTERS_PER_THREAD];
+
+    let mut scored: Vec<(Bottleneck, f64, Vec<usize>)> = Vec::with_capacity(8);
+    if barrier > 10.0 {
+        scored.push((
+            Bottleneck::BarrierStall,
+            barrier / 100.0 + 0.15,
+            vec![id::STALL_BARRIER_PCT, id::WARPS_ACTIVE_PCT, id::CYCLES_ACTIVE],
+        ));
+    }
+    if dram > 55.0 && l1 < 48.0 {
+        scored.push((
+            Bottleneck::Uncoalesced,
+            dram / 110.0 + (48.0 - l1) / 100.0,
+            vec![id::DRAM_THROUGHPUT_PCT, id::L1_HIT_PCT, id::DRAM_BYTES_PER_SEC],
+        ));
+    }
+    if long_sb > 25.0 {
+        scored.push((
+            Bottleneck::MemLatency,
+            long_sb / 100.0,
+            vec![id::STALL_LONG_SB_PCT, id::WARPS_ACTIVE_PCT, id::DRAM_BYTES_READ],
+        ));
+    }
+    if occ < 45.0 && lim_regs <= 3.0 && regs > 64.0 {
+        scored.push((
+            Bottleneck::OccupancyRegisters,
+            (45.0 - occ) / 60.0 + 0.2,
+            vec![id::OCC_LIMIT_REGISTERS, id::REGISTERS_PER_THREAD, id::WARPS_ACTIVE_PCT],
+        ));
+    }
+    if occ < 45.0 && lim_smem <= 3.0 {
+        scored.push((
+            Bottleneck::OccupancySmem,
+            (45.0 - occ) / 60.0 + 0.15,
+            vec![id::OCC_LIMIT_SHARED_MEM, id::WARPS_ACTIVE_PCT],
+        ));
+    }
+    if dram > 72.0 {
+        scored.push((
+            Bottleneck::MemBandwidth,
+            dram / 120.0,
+            vec![id::DRAM_THROUGHPUT_PCT, id::DRAM_BYTES_PER_SEC, id::GPU_DRAM_THROUGHPUT_PCT],
+        ));
+    }
+    if short_sb > 5.0 {
+        scored.push((
+            Bottleneck::ShortScoreboard,
+            short_sb / 60.0 + 0.05,
+            vec![id::STALL_SHORT_SB_PCT, id::L1_THROUGHPUT_PCT],
+        ));
+    }
+    if task.tc_eligible && tensor < 5.0 && fp32 > 35.0 && dram < 70.0 {
+        scored.push((
+            Bottleneck::ComputeBound,
+            fp32 / 110.0 + 0.1,
+            vec![id::PIPE_FP32_PCT, id::PIPE_TENSOR_PCT, id::DRAM_THROUGHPUT_PCT],
+        ));
+    }
+    // Structural reads of the candidate code (not NCU): unfused stages and
+    // algorithmic waste. These are "insight" diagnoses — harder, gated on
+    // skill.
+    if cfg.fused_stages < task.stages && rng.chance(0.35 + 0.45 * diag_skill) {
+        let unfused = (task.stages - cfg.fused_stages) as f64 / task.stages as f64;
+        scored.push((
+            Bottleneck::LaunchOverhead,
+            0.25 + 0.35 * unfused,
+            vec![id::CYCLES_ACTIVE, id::DRAM_BYTES_WRITE],
+        ));
+    }
+    if task.baseline_waste > 1.0 && !cfg.algo_optimal && rng.chance(0.22 * diag_skill) {
+        scored.push((
+            Bottleneck::AlgorithmicWaste,
+            0.9,
+            vec![id::INST_EXECUTED, id::DRAM_BYTES_READ],
+        ));
+    }
+
+    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    match scored.into_iter().next() {
+        Some((b, _, crit)) => (Some(b), crit),
+        None => (None, vec![id::DRAM_THROUGHPUT_PCT]),
+    }
+}
+
+fn fix_hint(bug: Bug) -> &'static str {
+    match bug {
+        Bug::CompileMissingHeader => "add the missing #include / intrinsic header",
+        Bug::CompileSyntax => "fix the syntax error near the kernel body",
+        Bug::CompileWrongApi => "match the extension signature to the call site",
+        Bug::LaunchMisconfig => "recompute grid/block dims from the output shape",
+        Bug::RaceCondition => "add __syncthreads() between smem write and read",
+        Bug::OobIndex => "guard the tail tile with a bounds check",
+        Bug::UninitValue => "broadcast the initialized value to all lanes",
+        Bug::WrongConstant => "restore the reference constant (check literature value)",
+        Bug::WrongAxis => "reduce over the feature axis, not the batch axis",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::profiles::O3;
+    use crate::gpu::RTX6000_ADA;
+    use crate::sim::{simulate, SimParams};
+    use crate::tasks::by_id;
+
+    fn profile_for(cfg: &KernelConfig, task: &TaskSpec, rng: &mut Rng) -> Vec<f64> {
+        let out = simulate(&RTX6000_ADA, task, cfg, &SimParams::default(), 1.0);
+        ncu::profile(&RTX6000_ADA, task, cfg, &out, rng)
+    }
+
+    #[test]
+    fn correction_names_the_planted_bug_mostly() {
+        let t = by_id("L1-95").unwrap();
+        let judge = Judge::new(O3, MetricMode::Subset);
+        let mut rng = Rng::new(11);
+        let mut named = 0;
+        for _ in 0..300 {
+            let mut cfg = KernelConfig::naive();
+            cfg.bugs.push(Bug::CompileSyntax);
+            let (fb, _) = judge.correction(&t, &cfg, Bug::CompileSyntax.error_log(), &mut rng);
+            if matches!(fb, Feedback::Correction { bug: Some(Bug::CompileSyntax), .. }) {
+                named += 1;
+            }
+        }
+        let rate = named as f64 / 300.0;
+        assert!(rate > 0.70, "named rate {rate}"); // diag 0.84 * obs 0.98
+    }
+
+    #[test]
+    fn barrier_heavy_kernel_gets_shuffle_suggestion() {
+        // The Fig. 8 round-2 situation: 16 syncs per block.
+        let t = by_id("L1-95").unwrap();
+        let judge = Judge::new(O3, MetricMode::Subset);
+        let mut cfg = KernelConfig::naive();
+        cfg.coalesced = true;
+        cfg.syncs_per_tile = 16;
+        cfg.legalize(&RTX6000_ADA);
+        let mut rng = Rng::new(5);
+        let mut shuffle = 0;
+        for _ in 0..100 {
+            let m = profile_for(&cfg, &t, &mut rng);
+            let (fb, _) = judge.optimization(&t, &RTX6000_ADA, &cfg, &m, &mut rng);
+            if let Feedback::Optimization { opt: Some(o), critical_metrics, .. } = fb {
+                if o == Opt::WarpShuffleReduction || o == Opt::ReduceSyncs {
+                    shuffle += 1;
+                    assert!(!critical_metrics.is_empty());
+                }
+            }
+        }
+        assert!(shuffle > 55, "barrier move suggested {shuffle}/100");
+    }
+
+    #[test]
+    fn full_metrics_mode_distracts_more_and_costs_more() {
+        let t = by_id("L2-51").unwrap();
+        let mut cfg = KernelConfig::naive();
+        cfg.coalesced = true;
+        cfg.legalize(&RTX6000_ADA);
+        let subset = Judge::new(O3, MetricMode::Subset);
+        let full = Judge::new(O3, MetricMode::Full);
+        let mut rng = Rng::new(9);
+        let aligned = |j: &Judge, rng: &mut Rng| {
+            let mut hits = 0;
+            let mut cost_in = 0.0;
+            for _ in 0..200 {
+                let m = profile_for(&cfg, &t, rng);
+                let (fb, st) = j.optimization(&t, &RTX6000_ADA, &cfg, &m, rng);
+                cost_in += st.tokens_in;
+                if let Feedback::Optimization { opt: Some(o), .. } = fb {
+                    // "aligned" = the move addresses the sim's own attribution
+                    let out = simulate(&RTX6000_ADA, &t, &cfg, &SimParams::default(), 1.0);
+                    if o.target() == out.internals.bottleneck {
+                        hits += 1;
+                    }
+                }
+            }
+            (hits, cost_in / 200.0)
+        };
+        let (hit_sub, tok_sub) = aligned(&subset, &mut rng);
+        let (hit_full, tok_full) = aligned(&full, &mut rng);
+        assert!(
+            hit_sub > hit_full + 20,
+            "subset {hit_sub} vs full {hit_full} aligned diagnoses"
+        );
+        assert!(tok_full > tok_sub * 2.0, "{tok_full} vs {tok_sub}");
+    }
+
+    #[test]
+    fn self_refine_judge_is_weaker() {
+        let j = Judge::self_refine(O3);
+        assert!(j.diag() < Judge::new(O3, MetricMode::Subset).diag());
+    }
+}

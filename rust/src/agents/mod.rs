@@ -1,0 +1,203 @@
+//! The two-agent layer: behavioural models of the Coder and the Judge.
+//!
+//! The paper's agents are frontier LLMs; here they are deterministic, seeded
+//! behavioural models with the *same interface* — prompt text in, structured
+//! JSON feedback out — whose free parameters (capability profiles) are
+//! calibrated once against Table 1 and then frozen (DESIGN.md §6). The
+//! workflow, prompts, feedback protocol, memory policy and cost accounting
+//! are exactly the paper's; only the "reasoning engine" inside each agent is
+//! substituted.
+
+pub mod coder;
+pub mod judge;
+pub mod profiles;
+pub mod prompts;
+
+pub use coder::Coder;
+pub use judge::{Judge, MetricMode};
+pub use profiles::ModelProfile;
+
+use crate::kernel::{Bug, Opt};
+use crate::util::json::Json;
+
+/// Structured Judge feedback — the Appendix-A JSON schemas.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Feedback {
+    /// Correction mode: "exactly one most critical correctness issue".
+    Correction {
+        critical_issue: String,
+        why_it_matters: String,
+        minimal_fix_hint: String,
+        /// The bug the Judge believes it found (None = misdiagnosis /
+        /// generic advice; the Coder then has nothing precise to act on).
+        bug: Option<Bug>,
+    },
+    /// Optimization mode: "exactly one highest-impact bottleneck".
+    Optimization {
+        bottleneck: String,
+        method: String,
+        plan: String,
+        /// The transformation the Judge is asking for (None = vague /
+        /// distracted advice).
+        opt: Option<Opt>,
+        /// The 3-4 metric names the Judge keyed on this round.
+        critical_metrics: Vec<String>,
+    },
+    /// "If nothing clearly wrong is found, say it explicitly."
+    NothingFound,
+}
+
+impl Feedback {
+    /// Serialize to the paper's JSON wire format (what the Judge "prints"
+    /// and the Coder receives — the protocol surface).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Feedback::Correction { critical_issue, why_it_matters, minimal_fix_hint, bug } => {
+                Json::obj(vec![
+                    ("critical_issue", Json::str(critical_issue.clone())),
+                    ("why_it_matters", Json::str(why_it_matters.clone())),
+                    ("minimal_fix_hint", Json::str(minimal_fix_hint.clone())),
+                    (
+                        "bug_tag",
+                        bug.map(|b| Json::str(b.name())).unwrap_or(Json::Null),
+                    ),
+                ])
+            }
+            Feedback::Optimization { bottleneck, method, plan, opt, critical_metrics } => {
+                Json::obj(vec![
+                    ("bottleneck", Json::str(bottleneck.clone())),
+                    ("optimisation method", Json::str(method.clone())),
+                    ("modification plan", Json::str(plan.clone())),
+                    (
+                        "opt_tag",
+                        opt.map(|o| Json::str(o.name())).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "critical_metrics",
+                        Json::Arr(
+                            critical_metrics.iter().map(|m| Json::str(m.clone())).collect(),
+                        ),
+                    ),
+                ])
+            }
+            Feedback::NothingFound => Json::obj(vec![
+                ("critical_issue", Json::str("none found")),
+                ("why_it_matters", Json::str("kernel appears correct and near roofline")),
+                ("minimal_fix_hint", Json::str("no change recommended")),
+            ]),
+        }
+    }
+
+    /// Parse the wire format back (the Coder side of the protocol).
+    pub fn from_json(v: &Json) -> Option<Feedback> {
+        if let Some(b) = v.get("bottleneck") {
+            let opt = v
+                .get("opt_tag")
+                .and_then(|t| t.as_str())
+                .and_then(Opt::by_name);
+            return Some(Feedback::Optimization {
+                bottleneck: b.as_str()?.to_string(),
+                method: v.get("optimisation method")?.as_str()?.to_string(),
+                plan: v.get("modification plan")?.as_str()?.to_string(),
+                opt,
+                critical_metrics: v
+                    .get("critical_metrics")
+                    .and_then(|m| m.as_arr())
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(|x| x.as_str().map(|s| s.to_string()))
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+            });
+        }
+        let issue = v.get("critical_issue")?.as_str()?.to_string();
+        if issue == "none found" {
+            return Some(Feedback::NothingFound);
+        }
+        let bug = v.get("bug_tag").and_then(|t| t.as_str()).and_then(|name| {
+            crate::kernel::ALL_BUGS.iter().copied().find(|b| b.name() == name)
+        });
+        Some(Feedback::Correction {
+            critical_issue: issue,
+            why_it_matters: v
+                .get("why_it_matters")
+                .and_then(|x| x.as_str())
+                .unwrap_or("")
+                .to_string(),
+            minimal_fix_hint: v
+                .get("minimal_fix_hint")
+                .and_then(|x| x.as_str())
+                .unwrap_or("")
+                .to_string(),
+            bug,
+        })
+    }
+}
+
+/// Token accounting for one agent call (drives the cost model, Table 3).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CallStats {
+    pub tokens_in: f64,
+    pub tokens_out: f64,
+}
+
+impl CallStats {
+    pub fn add(&mut self, other: CallStats) {
+        self.tokens_in += other.tokens_in;
+        self.tokens_out += other.tokens_out;
+    }
+}
+
+/// Crude-but-stable token estimate (~4 chars/token, the industry heuristic).
+pub fn estimate_tokens(text: &str) -> f64 {
+    text.len() as f64 / 4.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Bug;
+
+    #[test]
+    fn feedback_json_round_trip_correction() {
+        let f = Feedback::Correction {
+            critical_issue: "Thread-0 uses uninitialized target_logit".into(),
+            why_it_matters: "row 0 of the loss is wrong".into(),
+            minimal_fix_hint: "broadcast target_logit via __shfl_sync to thread 0".into(),
+            bug: Some(Bug::UninitValue),
+        };
+        let wire = f.to_json().to_string();
+        let back = Feedback::from_json(&crate::util::json::Json::parse(&wire).unwrap());
+        assert_eq!(back, Some(f));
+    }
+
+    #[test]
+    fn feedback_json_round_trip_optimization() {
+        let f = Feedback::Optimization {
+            bottleneck: "23.7% of active warps stalled on barriers".into(),
+            method: Opt::WarpShuffleReduction.suggestion().into(),
+            plan: "use warp-level shuffles in the max and sum phases".into(),
+            opt: Some(Opt::WarpShuffleReduction),
+            critical_metrics: vec![
+                "smsp__warp_issue_stalled_barrier_per_warp_active.pct".into(),
+            ],
+        };
+        let wire = f.to_json().to_string();
+        let back = Feedback::from_json(&crate::util::json::Json::parse(&wire).unwrap());
+        assert_eq!(back, Some(f));
+    }
+
+    #[test]
+    fn nothing_found_round_trips() {
+        let wire = Feedback::NothingFound.to_json().to_string();
+        let back = Feedback::from_json(&crate::util::json::Json::parse(&wire).unwrap());
+        assert_eq!(back, Some(Feedback::NothingFound));
+    }
+
+    #[test]
+    fn token_estimate_scales() {
+        assert!(estimate_tokens("abcd") == 1.0);
+        assert!(estimate_tokens(&"x".repeat(4000)) == 1000.0);
+    }
+}

@@ -1,0 +1,275 @@
+//! Prompt templates — the paper's Appendix A, verbatim structure.
+//!
+//! Rendering real prompt text serves two purposes: (i) the cost model counts
+//! tokens off the actual strings (Table 3 / Fig 6), and (ii) the case-study
+//! outputs (Fig 8) display the same artifacts a user of the original system
+//! would see. The behavioural agents *parse nothing from these strings* —
+//! they receive structured state — but every call renders and accounts them,
+//! exactly like the original system pays for them.
+
+use crate::gpu::GpuSpec;
+use crate::kernel::KernelConfig;
+use crate::tasks::TaskSpec;
+
+/// The one-shot demonstration pair (KernelBench's few-shot example: a
+/// PyTorch module and its custom-CUDA rewrite). Abbreviated but realistic
+/// in size so token accounting stays honest.
+const FEW_BASE: &str = "\
+import torch\nimport torch.nn as nn\n\nclass Model(nn.Module):\n    \
+def __init__(self):\n        super().__init__()\n\n    \
+def forward(self, a, b):\n        return a + b\n";
+
+const FEW_NEW: &str = "\
+import torch\nimport torch.nn as nn\nfrom torch.utils.cpp_extension import \
+load_inline\n\nsource = '''\n__global__ void add_kernel(const float* a, const \
+float* b, float* out, int n) {\n  int i = blockIdx.x * blockDim.x + \
+threadIdx.x;\n  if (i < n) out[i] = a[i] + b[i];\n}\ntorch::Tensor add_cuda(\
+torch::Tensor a, torch::Tensor b) {\n  auto out = torch::empty_like(a);\n  \
+int n = a.numel();\n  add_kernel<<<(n+255)/256, 256>>>(a.data_ptr<float>(), \
+b.data_ptr<float>(), out.data_ptr<float>(), n);\n  return out;\n}\n'''\n\n\
+cpp_src = 'torch::Tensor add_cuda(torch::Tensor a, torch::Tensor b);'\n\
+add_mod = load_inline(name='add', cpp_sources=cpp_src, cuda_sources=source,\n\
+                      functions=['add_cuda'])\n\nclass ModelNew(nn.Module):\n    \
+def forward(self, a, b):\n        return add_mod.add_cuda(a, b)\n";
+
+/// One-shot baseline prompt for the first generation (KernelBench's
+/// one-shot prompt, per Appendix A.1).
+pub fn coder_initial(task: &TaskSpec) -> String {
+    format!(
+        "You write custom CUDA kernels to replace the PyTorch operators in the \
+         given architecture to get speedups. You have complete freedom to choose \
+         the set of operators you want to replace. Consider operator fusion \
+         opportunities (combining multiple operators into a single kernel, for \
+         example, combining matmul+relu), or algorithmic changes (such as online \
+         softmax). You are only limited by your imagination.\n\n\
+         The example given architecture is:\n{FEW_BASE}\n\n\
+         The example new architecture with custom CUDA kernels looks like \
+         this:\n{FEW_NEW}\n\n\
+         You are given the following architecture:\n{arch}\n\n\
+         Optimize the architecture named Model with custom CUDA operators! Name \
+         your optimized output architecture ModelNew. Output the new code in \
+         code blocks. Please generate real code, NOT pseudocode. Make sure the \
+         code compiles and is fully functional. Just output the new model code, \
+         no other text, and NO testing code!",
+        arch = arch_src(task),
+    )
+}
+
+/// Judge prompt, correction mode (Appendix A.2, "CUDA Kernel Correction").
+pub fn judge_correction(task: &TaskSpec, cfg: &KernelConfig, error_log: &str) -> String {
+    format!(
+        "You are a senior CUDA + PyTorch correctness auditor. Your job is to \
+         read a PyTorch reference and a CUDA candidate and report exactly one \
+         most critical correctness issue in the CUDA code that would cause a \
+         behavioral mismatch vs. the PyTorch reference. Be terse and precise.\n\n\
+         Rules:\n\
+         - Return one and only one issue - the single highest-impact problem.\n\
+         - Prefer semantic/correctness issues over micro-optimizations or style.\n\
+         - If multiple issues exist, pick the one that most changes outputs or \
+         gradients.\n\
+         - If nothing clearly wrong is found, say it explicitly.\n\n\
+         Output format (JSON):\n\
+         {{\n \"critical_issue\": \"<max 20 words>\",\n \"why_it_matters\": \
+         \"<max 35 words>\",\n \"minimal_fix_hint\": \"<max 20 words>\"\n}}\n\n\
+         You are given:\n\nERROR_LOG:\n{error_log}\n\n\
+         PyTorch reference (ground truth):\n{arch}\n\n\
+         CUDA candidate (to audit):\n{cuda}\n\n\
+         Follow the Rules and produce the JSON exactly in the specified format.",
+        arch = arch_src(task),
+        cuda = cuda_src(cfg),
+    )
+}
+
+/// Judge prompt, optimization mode (Appendix A.2, "CUDA Kernel Optimization").
+pub fn judge_optimization(
+    task: &TaskSpec,
+    gpu: &GpuSpec,
+    cfg: &KernelConfig,
+    metric_block: &str,
+) -> String {
+    format!(
+        "You are a senior CUDA performance engineer. Read the target GPU spec, \
+         the PyTorch reference code, the current CUDA candidate, and the Nsight \
+         Compute metrics. Then identify exactly one highest-impact speed \
+         bottleneck by 3-4 most important metrics, propose exactly one \
+         optimisation method and propose a modification plan. Be surgical and \
+         metrics-driven.\n\n\
+         Rules:\n\
+         - Return one and only one optimisation method - the largest expected \
+         speedup.\n\
+         - Prefer changes that directly address measured bottlenecks (occupancy \
+         limits, memory coalescing, smem bank conflicts, register pressure, \
+         long/short scoreboard stalls, tensor-core underutilisation, etc.).\n\
+         - Keep fields brief; avoid lists of alternatives, disclaimers, or \
+         generic advice.\n\n\
+         Output format (JSON):\n\
+         {{\n \"bottleneck\": \"<max 30 words>\",\n \"optimisation method\": \
+         \"<max 35 words>\",\n \"modification plan\": \"<max 35 words>\"\n}}\n\n\
+         Target GPU\n{spec}\n\n\
+         PyTorch Reference\n{arch}\n\n\
+         CUDA Candidate\n{cuda}\n\n\
+         Nsight Compute metrics (verbatim)\n{metrics}\n\n\
+         Read everything and follow the Rules exactly. Return the JSON in the \
+         specified format.",
+        spec = gpu.spec_sheet_cached(),
+        arch = arch_src(task),
+        cuda = cuda_src(cfg),
+        metrics = metric_block,
+    )
+}
+
+/// Coder prompt, rounds 2..N, correction (Appendix A.3).
+pub fn coder_correction(cfg: &KernelConfig, error_log: &str, problem_json: &str) -> String {
+    format!(
+        "You are a senior CUDA-extension developer. Your job is to FIX the \
+         compilation or runtime errors in the Python script shown below.\n\n\
+         OUTPUT RULES (STRICT)\n\
+         1. Inside the block, follow exactly this order: imports, source \
+         (triple-quoted CUDA string), cpp_src prototypes, one load_inline call \
+         per kernel group, class ModelNew(nn.Module).\n\
+         2. Do NOT include testing code, if __name__ == \"__main__\", or extra \
+         prose.\n\n\
+         ERROR LOG\n{error_log}\n\n\
+         OLD CODE (read-only)\n{cuda}\n\n\
+         Main Critical Problem\n{problem_json}\n\n\
+         Output Section (to be generated):\n# <your corrected code>",
+        cuda = cuda_src(cfg),
+    )
+}
+
+/// Coder prompt, rounds 2..N, optimization (Appendix A.3).
+pub fn coder_optimization(
+    gpu: &GpuSpec,
+    cfg: &KernelConfig,
+    suggestion_json: &str,
+) -> String {
+    format!(
+        "Target GPU\n{spec}\n\n\
+         You are a CUDA-kernel optimization specialist.\n\
+         Analyze the provided architecture and strictly apply the following \
+         STRATEGY to produce an improved CUDA kernel.\n\n{cuda}\n\n\
+         Optimization instructions:\n{suggestion_json}\n\n\
+         GOAL\n\
+         - Improve latency and throughput on the target GPU.\n\
+         - Maintain correctness within atol=1e-4 or rtol=1e-4.\n\
+         - Preserve the public Python API (same inputs/outputs, shapes, \
+         dtypes).\n\n\
+         OUTPUT RULES (STRICT)\n\
+         1. Imports, source, cpp_src, one load_inline call, class \
+         ModelNew(nn.Module).\n\
+         2. Do NOT include testing code or extra prose.\n\n\
+         Output Section (to be generated):\n# <your corrected code>",
+        spec = gpu.spec_sheet_cached(),
+        cuda = cuda_src(cfg),
+    )
+}
+
+/// Synthetic PyTorch "reference source" for a task — sized realistically so
+/// token accounting is honest (task cards in KernelBench are 0.5-3 KB).
+pub fn arch_src(task: &TaskSpec) -> String {
+    let mut body = String::with_capacity(64 * task.stages.min(12) as usize);
+    for s in 0..task.stages.min(12) {
+        body.push_str(&format!(
+            "        x = self.stage_{s}(x)  # {} op, stage {s}\n",
+            task.op_class.name()
+        ));
+    }
+    format!(
+        "# KernelBench task {} ({}), level {}\n\
+         # flops={:.3e} bytes={:.3e} stages={} tc_eligible={}\n\
+         import torch\nimport torch.nn as nn\n\n\
+         class Model(nn.Module):\n    def __init__(self):\n        \
+         super().__init__()\n        # {} reference pipeline\n\n    \
+         def forward(self, x):\n{body}        return x\n",
+        task.id(),
+        task.name,
+        task.level,
+        task.flops,
+        task.ideal_bytes,
+        task.stages,
+        task.tc_eligible,
+        task.name,
+    )
+}
+
+/// Synthetic "CUDA candidate source" for a config — again sized realistically
+/// (a candidate kernel is 2-6 KB); content mirrors the config so the Judge
+/// prompt genuinely encodes the kernel state.
+pub fn cuda_src(cfg: &KernelConfig) -> String {
+    format!(
+        "// candidate kernel (configuration fingerprint)\n\
+         // {desc}\n\
+         __global__ void kernel(const float* __restrict__ in, float* out) {{\n\
+         {body}}}\n",
+        desc = cfg.describe(),
+        body = {
+            let mut b = String::with_capacity(256 + 24 * cfg.syncs_per_tile as usize);
+            b.push_str(&format!(
+                "  // launch: {} threads/block, tile {}x{}x{}\n",
+                cfg.block_threads, cfg.tile_m, cfg.tile_n, cfg.tile_k
+            ));
+            if cfg.use_smem {
+                b.push_str("  __shared__ float a_tile[TM][TK]; __shared__ float b_tile[TK][TN];\n");
+            }
+            for _ in 0..cfg.syncs_per_tile.min(16) {
+                b.push_str("  __syncthreads();\n");
+            }
+            if cfg.warp_shuffle {
+                b.push_str("  v += __shfl_down_sync(0xffffffff, v, offset);\n");
+            }
+            if cfg.use_tensor_cores {
+                b.push_str("  wmma::mma_sync(acc, a_frag, b_frag, acc);\n");
+            }
+            for p in 0..cfg.extra_global_passes {
+                b.push_str(&format!("  // pass {} re-reads input from global\n", p + 2));
+            }
+            b
+        }
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::RTX6000_ADA;
+    use crate::tasks::by_id;
+
+    #[test]
+    fn prompts_contain_the_paper_sections() {
+        let t = by_id("L1-95").unwrap();
+        let cfg = KernelConfig::naive();
+        let p = coder_initial(&t);
+        assert!(p.contains("online softmax"));
+        assert!(p.contains("ModelNew"));
+        let p = judge_correction(&t, &cfg, "Outputs are not close");
+        assert!(p.contains("critical_issue"));
+        assert!(p.contains("ERROR_LOG"));
+        let p = judge_optimization(&t, &RTX6000_ADA, &cfg, "dram__bytes.sum: 1\n");
+        assert!(p.contains("Nsight Compute metrics (verbatim)"));
+        assert!(p.contains("Target GPU"));
+        assert!(p.contains("RTX 6000"));
+        let p = coder_optimization(&RTX6000_ADA, &cfg, "{\"bottleneck\":\"x\"}");
+        assert!(p.contains("atol=1e-4"));
+    }
+
+    #[test]
+    fn cuda_src_reflects_config() {
+        let mut cfg = KernelConfig::naive();
+        cfg.use_smem = true;
+        cfg.warp_shuffle = true;
+        cfg.syncs_per_tile = 3;
+        let s = cuda_src(&cfg);
+        assert!(s.contains("__shared__"));
+        assert!(s.contains("__shfl_down_sync"));
+        assert_eq!(s.matches("__syncthreads()").count(), 3);
+    }
+
+    #[test]
+    fn prompt_sizes_realistic_for_token_accounting() {
+        let t = by_id("L3-5").unwrap();
+        let cfg = KernelConfig::naive();
+        let p = judge_optimization(&t, &RTX6000_ADA, &cfg, &"m: 1.0\n".repeat(24));
+        let tokens = crate::agents::estimate_tokens(&p);
+        assert!(tokens > 500.0 && tokens < 5000.0, "{tokens}");
+    }
+}

@@ -1,0 +1,158 @@
+//! Suite coordinator: runs a workflow over a task set on a thread pool and
+//! aggregates the paper's evaluation metrics (§3.1): Correct, Median, 75%,
+//! Perf (mean), Fast_1 — overall and per level — plus cost averages.
+//!
+//! tokio is unavailable offline (DESIGN.md §2), so the pool is std::thread
+//! with an atomic work queue. Results are deterministic regardless of
+//! scheduling because every task derives its own seed stream.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::tasks::TaskSpec;
+use crate::util::stats::{frac_above, mean, median, percentile};
+use crate::workflow::{run_task, CorrectnessOracle, TaskResult, WorkflowConfig};
+
+/// Aggregated evaluation metrics for one method over one task set.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub method: String,
+    pub n_tasks: usize,
+    pub correct: f64,
+    pub median: f64,
+    pub p75: f64,
+    pub perf: f64,
+    pub fast1: f64,
+    pub avg_cost_usd: f64,
+    pub avg_time_min: f64,
+}
+
+/// Full suite outcome: per-task results + the overall and per-level rollups.
+#[derive(Clone, Debug)]
+pub struct SuiteOutcome {
+    pub overall: Summary,
+    pub per_level: Vec<(u8, Summary)>,
+    pub results: Vec<TaskResult>,
+}
+
+/// Compute the paper's metrics over a slice of task results.
+/// Perf/median/75% use the KernelBench convention: an incorrect task scores 0.
+pub fn summarize(method: &str, results: &[TaskResult]) -> Summary {
+    let perf_values: Vec<f64> = results.iter().map(|r| r.best_speedup).collect();
+    let correct_frac = if results.is_empty() {
+        0.0
+    } else {
+        results.iter().filter(|r| r.correct).count() as f64 / results.len() as f64
+    };
+    Summary {
+        method: method.to_string(),
+        n_tasks: results.len(),
+        correct: correct_frac,
+        median: median(&perf_values),
+        p75: percentile(&perf_values, 75.0),
+        perf: mean(&perf_values),
+        fast1: frac_above(&perf_values, 1.0),
+        avg_cost_usd: mean(&results.iter().map(|r| r.ledger.api_usd).collect::<Vec<_>>()),
+        avg_time_min: mean(&results.iter().map(|r| r.ledger.wall_min()).collect::<Vec<_>>()),
+    }
+}
+
+/// Run the workflow over `tasks` on `threads` workers.
+pub fn run_suite(
+    wf: &WorkflowConfig,
+    tasks: &[TaskSpec],
+    oracle: &dyn CorrectnessOracle,
+    threads: usize,
+) -> SuiteOutcome {
+    let threads = threads.max(1).min(tasks.len().max(1));
+    let slots: Vec<Mutex<Option<TaskResult>>> =
+        (0..tasks.len()).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= tasks.len() {
+                    break;
+                }
+                let result = run_task(wf, &tasks[i], oracle);
+                *slots[i].lock().unwrap() = Some(result);
+            });
+        }
+    });
+
+    let results: Vec<TaskResult> = slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("task completed"))
+        .collect();
+
+    let method = wf.strategy.name();
+    let overall = summarize(method, &results);
+    let mut per_level = Vec::new();
+    for level in [1u8, 2, 3] {
+        let lvl: Vec<TaskResult> =
+            results.iter().filter(|r| r.level == level).cloned().collect();
+        if !lvl.is_empty() {
+            per_level.push((level, summarize(method, &lvl)));
+        }
+    }
+    SuiteOutcome { overall, per_level, results }
+}
+
+/// Default worker count: physical parallelism minus headroom.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::RTX6000_ADA;
+    use crate::tasks::dstar;
+    use crate::workflow::{NoOracle, Strategy};
+
+    #[test]
+    fn suite_run_deterministic_across_thread_counts() {
+        let tasks = dstar();
+        let wf = WorkflowConfig::cudaforge(&RTX6000_ADA, 99);
+        let a = run_suite(&wf, &tasks, &NoOracle, 1);
+        let b = run_suite(&wf, &tasks, &NoOracle, 4);
+        assert_eq!(a.overall.n_tasks, 25);
+        assert!((a.overall.perf - b.overall.perf).abs() < 1e-12);
+        assert!((a.overall.correct - b.overall.correct).abs() < 1e-12);
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.task_id, y.task_id);
+            assert_eq!(x.best_speedup, y.best_speedup);
+        }
+    }
+
+    #[test]
+    fn summary_invariants() {
+        let tasks = dstar();
+        let wf = WorkflowConfig::cudaforge(&RTX6000_ADA, 1);
+        let out = run_suite(&wf, &tasks, &NoOracle, 4);
+        let s = &out.overall;
+        assert!(s.median <= s.p75 + 1e-12);
+        assert!((0.0..=1.0).contains(&s.correct));
+        assert!((0.0..=1.0).contains(&s.fast1));
+        assert!(s.fast1 <= s.correct + 1e-12, "fast1 subset of correct");
+        assert_eq!(out.per_level.iter().map(|(_, s)| s.n_tasks).sum::<usize>(), 25);
+    }
+
+    #[test]
+    fn one_shot_weaker_than_cudaforge() {
+        let tasks = dstar();
+        let one = run_suite(
+            &WorkflowConfig::cudaforge(&RTX6000_ADA, 4).with_strategy(Strategy::OneShot),
+            &tasks,
+            &NoOracle,
+            4,
+        );
+        let full = run_suite(&WorkflowConfig::cudaforge(&RTX6000_ADA, 4), &tasks, &NoOracle, 4);
+        assert!(full.overall.correct > one.overall.correct);
+        assert!(full.overall.perf > one.overall.perf);
+    }
+}

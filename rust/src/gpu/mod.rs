@@ -1,0 +1,269 @@
+//! GPU specification database.
+//!
+//! These are the *static GPU specifications* half of the paper's hardware
+//! feedback (§2.3): architecture, peak bandwidth/compute, per-SM register and
+//! shared-memory capacities, occupancy ceilings. The Judge receives them as
+//! text alongside the NCU metrics; the simulator uses them as the physical
+//! constants of its roofline + occupancy + stall model.
+//!
+//! Values are the public datasheet numbers for each part (dense, no
+//! sparsity); they only need to be *relatively* right for the paper's
+//! cross-GPU claims (Table 4) to be meaningful.
+
+/// Vendor architecture generation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arch {
+    Ampere,
+    Ada,
+    Hopper,
+}
+
+impl Arch {
+    pub fn name(self) -> &'static str {
+        match self {
+            Arch::Ampere => "Ampere",
+            Arch::Ada => "Ada Lovelace",
+            Arch::Hopper => "Hopper",
+        }
+    }
+}
+
+/// Market tier (the paper distinguishes data-center vs desktop parts).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    DataCenter,
+    Desktop,
+}
+
+/// Static spec sheet for one GPU model.
+#[derive(Clone, Debug)]
+pub struct GpuSpec {
+    pub key: &'static str,
+    pub name: &'static str,
+    pub arch: Arch,
+    pub tier: Tier,
+    pub sms: u32,
+    pub clock_ghz: f64,
+    pub fp32_tflops: f64,
+    /// Dense fp16/bf16 tensor-pipe TFLOPS.
+    pub tensor_tflops: f64,
+    pub dram_gbps: f64,
+    pub l2_mb: f64,
+    /// Max shared memory per SM (KiB).
+    pub smem_per_sm_kb: f64,
+    /// Max shared memory per block (KiB).
+    pub smem_per_block_kb: f64,
+    pub regs_per_sm: u32,
+    pub max_warps_per_sm: u32,
+    pub max_blocks_per_sm: u32,
+    pub max_threads_per_block: u32,
+    pub warp_size: u32,
+}
+
+impl GpuSpec {
+    pub fn max_threads_per_sm(&self) -> u32 {
+        self.max_warps_per_sm * self.warp_size
+    }
+
+    /// Peak DRAM bytes/cycle-second used by the metric emitter.
+    pub fn dram_bytes_per_sec(&self) -> f64 {
+        self.dram_gbps * 1e9
+    }
+
+    /// Cached spec sheet (perf: the Judge/Coder render this block on every
+    /// optimization call — twice per round; see EXPERIMENTS.md §Perf).
+    pub fn spec_sheet_cached(&self) -> &'static str {
+        use std::sync::OnceLock;
+        static CACHE: OnceLock<std::sync::Mutex<std::collections::HashMap<&'static str, &'static str>>> =
+            OnceLock::new();
+        let cache = CACHE.get_or_init(Default::default);
+        let mut map = cache.lock().unwrap();
+        map.entry(self.key)
+            .or_insert_with(|| Box::leak(self.spec_sheet().into_boxed_str()))
+    }
+
+    /// Render the "Target GPU" block of the Judge prompt (Appendix A).
+    pub fn spec_sheet(&self) -> String {
+        format!(
+            "GPU Name: {}\nArchitecture: {}\nDetails:\n\
+             - SMs: {}\n- Boost clock: {:.2} GHz\n- FP32 peak: {:.1} TFLOPS\n\
+             - Tensor peak (dense bf16): {:.1} TFLOPS\n- DRAM bandwidth: {:.0} GB/s\n\
+             - L2 cache: {:.0} MiB\n- Shared memory per SM: {:.0} KiB\n\
+             - Shared memory per block: {:.0} KiB\n- Registers per SM: {}\n\
+             - Max warps per SM: {}\n- Max threads per block: {}",
+            self.name,
+            self.arch.name(),
+            self.sms,
+            self.clock_ghz,
+            self.fp32_tflops,
+            self.tensor_tflops,
+            self.dram_gbps,
+            self.l2_mb,
+            self.smem_per_sm_kb,
+            self.smem_per_block_kb,
+            self.regs_per_sm,
+            self.max_warps_per_sm,
+            self.max_threads_per_block,
+        )
+    }
+}
+
+/// RTX 6000 Ada Generation — the paper's default evaluation GPU (Table 1).
+pub const RTX6000_ADA: GpuSpec = GpuSpec {
+    key: "rtx6000",
+    name: "NVIDIA RTX 6000 Ada Generation",
+    arch: Arch::Ada,
+    tier: Tier::DataCenter,
+    sms: 142,
+    clock_ghz: 2.505,
+    fp32_tflops: 91.1,
+    tensor_tflops: 182.1,
+    dram_gbps: 960.0,
+    l2_mb: 96.0,
+    smem_per_sm_kb: 100.0,
+    smem_per_block_kb: 99.0,
+    regs_per_sm: 65536,
+    max_warps_per_sm: 48,
+    max_blocks_per_sm: 24,
+    max_threads_per_block: 1024,
+    warp_size: 32,
+};
+
+pub const RTX4090: GpuSpec = GpuSpec {
+    key: "rtx4090",
+    name: "NVIDIA GeForce RTX 4090",
+    arch: Arch::Ada,
+    tier: Tier::Desktop,
+    sms: 128,
+    clock_ghz: 2.52,
+    fp32_tflops: 82.6,
+    tensor_tflops: 165.2,
+    dram_gbps: 1008.0,
+    l2_mb: 72.0,
+    smem_per_sm_kb: 100.0,
+    smem_per_block_kb: 99.0,
+    regs_per_sm: 65536,
+    max_warps_per_sm: 48,
+    max_blocks_per_sm: 24,
+    max_threads_per_block: 1024,
+    warp_size: 32,
+};
+
+pub const RTX3090: GpuSpec = GpuSpec {
+    key: "rtx3090",
+    name: "NVIDIA GeForce RTX 3090",
+    arch: Arch::Ampere,
+    tier: Tier::Desktop,
+    sms: 82,
+    clock_ghz: 1.695,
+    fp32_tflops: 35.6,
+    tensor_tflops: 71.0,
+    dram_gbps: 936.0,
+    l2_mb: 6.0,
+    smem_per_sm_kb: 100.0,
+    smem_per_block_kb: 99.0,
+    regs_per_sm: 65536,
+    max_warps_per_sm: 48,
+    max_blocks_per_sm: 16,
+    max_threads_per_block: 1024,
+    warp_size: 32,
+};
+
+pub const A100: GpuSpec = GpuSpec {
+    key: "a100",
+    name: "NVIDIA A100-SXM4-80GB",
+    arch: Arch::Ampere,
+    tier: Tier::DataCenter,
+    sms: 108,
+    clock_ghz: 1.41,
+    fp32_tflops: 19.5,
+    tensor_tflops: 312.0,
+    dram_gbps: 2039.0,
+    l2_mb: 40.0,
+    smem_per_sm_kb: 164.0,
+    smem_per_block_kb: 163.0,
+    regs_per_sm: 65536,
+    max_warps_per_sm: 64,
+    max_blocks_per_sm: 32,
+    max_threads_per_block: 1024,
+    warp_size: 32,
+};
+
+pub const H100: GpuSpec = GpuSpec {
+    key: "h100",
+    name: "NVIDIA H100-SXM5-80GB",
+    arch: Arch::Hopper,
+    tier: Tier::DataCenter,
+    sms: 132,
+    clock_ghz: 1.98,
+    fp32_tflops: 66.9,
+    tensor_tflops: 989.4,
+    dram_gbps: 3352.0,
+    l2_mb: 50.0,
+    smem_per_sm_kb: 228.0,
+    smem_per_block_kb: 227.0,
+    regs_per_sm: 65536,
+    max_warps_per_sm: 64,
+    max_blocks_per_sm: 32,
+    max_threads_per_block: 1024,
+    warp_size: 32,
+};
+
+/// H200 — the Kevin-32B comparison hardware (Fig. 5).
+pub const H200: GpuSpec = GpuSpec {
+    key: "h200",
+    name: "NVIDIA H200-SXM-141GB",
+    arch: Arch::Hopper,
+    tier: Tier::DataCenter,
+    sms: 132,
+    clock_ghz: 1.98,
+    fp32_tflops: 66.9,
+    tensor_tflops: 989.4,
+    dram_gbps: 4800.0,
+    l2_mb: 50.0,
+    smem_per_sm_kb: 228.0,
+    smem_per_block_kb: 227.0,
+    regs_per_sm: 65536,
+    max_warps_per_sm: 64,
+    max_blocks_per_sm: 32,
+    max_threads_per_block: 1024,
+    warp_size: 32,
+};
+
+pub const ALL: [&GpuSpec; 6] = [&RTX6000_ADA, &RTX4090, &RTX3090, &A100, &H100, &H200];
+
+/// Lookup by CLI key ("rtx6000", "a100", ...).
+pub fn by_key(key: &str) -> Option<&'static GpuSpec> {
+    ALL.iter().copied().find(|g| g.key == key)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_covers_paper_gpus() {
+        for key in ["rtx6000", "rtx4090", "rtx3090", "a100", "h200"] {
+            assert!(by_key(key).is_some(), "missing {key}");
+        }
+        assert!(by_key("tpu-v4").is_none());
+    }
+
+    #[test]
+    fn spec_sheet_mentions_key_fields() {
+        let s = RTX6000_ADA.spec_sheet();
+        assert!(s.contains("Ada"));
+        assert!(s.contains("DRAM bandwidth: 960"));
+        assert!(s.contains("Registers per SM: 65536"));
+    }
+
+    #[test]
+    fn relative_ordering_sane() {
+        // Datasheet sanity: H200 has the most bandwidth, A100 beats 3090 in
+        // bandwidth but not fp32, Ada parts lead fp32.
+        assert!(H200.dram_gbps > A100.dram_gbps);
+        assert!(A100.dram_gbps > RTX3090.dram_gbps);
+        assert!(A100.fp32_tflops < RTX3090.fp32_tflops);
+        assert!(RTX6000_ADA.fp32_tflops > RTX4090.fp32_tflops);
+    }
+}

@@ -1,0 +1,341 @@
+//! Kernel-configuration IR — the state a CUDA expert (or the paper's Coder
+//! agent) actually manipulates when optimizing a kernel.
+//!
+//! A `KernelConfig` is the substitute for literal CUDA C++ (DESIGN.md §2): it
+//! captures launch geometry, tiling, staging, fusion, and the *latent bugs* a
+//! generation may carry. The GPU simulator prices a config on a given task and
+//! GPU; the transformation catalog (`transform`) is the optimization action
+//! space the Judge suggests moves from.
+
+pub mod transform;
+
+pub use transform::{Opt, OPT_CATALOG};
+
+use crate::gpu::GpuSpec;
+
+/// Latent defect classes. `Compile*` fail the compilation stage; the rest
+/// produce wrong outputs at the execution stage (the two-stage correctness
+/// test of §2.2). Where a family is bound to real Pallas artifacts, each
+/// runtime bug maps onto a genuinely-wrong artifact variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Bug {
+    CompileMissingHeader,
+    CompileSyntax,
+    CompileWrongApi,
+    LaunchMisconfig,
+    RaceCondition,
+    OobIndex,
+    UninitValue,
+    WrongConstant,
+    WrongAxis,
+}
+
+pub const ALL_BUGS: [Bug; 9] = [
+    Bug::CompileMissingHeader,
+    Bug::CompileSyntax,
+    Bug::CompileWrongApi,
+    Bug::LaunchMisconfig,
+    Bug::RaceCondition,
+    Bug::OobIndex,
+    Bug::UninitValue,
+    Bug::WrongConstant,
+    Bug::WrongAxis,
+];
+
+impl Bug {
+    pub fn is_compile_error(self) -> bool {
+        matches!(
+            self,
+            Bug::CompileMissingHeader | Bug::CompileSyntax | Bug::CompileWrongApi
+        )
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Bug::CompileMissingHeader => "missing_header",
+            Bug::CompileSyntax => "syntax_error",
+            Bug::CompileWrongApi => "wrong_api_usage",
+            Bug::LaunchMisconfig => "launch_misconfig",
+            Bug::RaceCondition => "race_condition",
+            Bug::OobIndex => "out_of_bounds_index",
+            Bug::UninitValue => "uninitialized_value",
+            Bug::WrongConstant => "wrong_constant",
+            Bug::WrongAxis => "wrong_axis_reduction",
+        }
+    }
+
+    /// Short error-log line the correctness stage surfaces for this bug —
+    /// what the Judge's correction mode gets to read (Appendix A, ERROR_LOG).
+    pub fn error_log(self) -> &'static str {
+        match self {
+            Bug::CompileMissingHeader => {
+                "error: identifier \"__shfl_down_sync\" is undefined (missing #include?)"
+            }
+            Bug::CompileSyntax => "error: expected a \";\" near kernel body",
+            Bug::CompileWrongApi => {
+                "error: no instance of overloaded function matches the argument list"
+            }
+            Bug::LaunchMisconfig => {
+                "CUDA error: invalid configuration argument (grid/block mismatch)"
+            }
+            Bug::RaceCondition => {
+                "Outputs are not close: nondeterministic mismatch across runs"
+            }
+            Bug::OobIndex => "Outputs are not close: tail elements differ from reference",
+            Bug::UninitValue => {
+                "Outputs are not close, indicating a result mismatch (row 0 differs)"
+            }
+            Bug::WrongConstant => "Outputs are not close: uniform small bias vs reference",
+            Bug::WrongAxis => "Outputs are not close: rows/columns appear permuted",
+        }
+    }
+
+    /// How legible the failure is from the error log alone, in [0, 1] — the
+    /// Judge's diagnosis probability scales with this. Compile errors carry
+    /// the exact line; races are famously hard to see.
+    pub fn observability(self) -> f64 {
+        match self {
+            Bug::CompileMissingHeader | Bug::CompileSyntax | Bug::CompileWrongApi => 0.98,
+            Bug::LaunchMisconfig => 0.95,
+            Bug::OobIndex => 0.80,
+            Bug::UninitValue => 0.75,
+            Bug::WrongAxis => 0.80,
+            Bug::WrongConstant => 0.65,
+            Bug::RaceCondition => 0.55,
+        }
+    }
+}
+
+/// One CUDA-kernel candidate, as configuration state.
+///
+/// Fields are what NCU + the source reveal to an expert; the simulator prices
+/// them, the transforms mutate them, the bugs ride along until a correction
+/// round removes them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KernelConfig {
+    /// Threads per block (multiple of warp size, <= 1024).
+    pub block_threads: u32,
+    /// Output tile computed per block.
+    pub tile_m: u32,
+    pub tile_n: u32,
+    /// K-chunk staged per iteration (reuse classes only).
+    pub tile_k: u32,
+    /// Elements per 32-bit lane access (1, 2, 4 — float/float2/float4).
+    pub vector_width: u32,
+    /// Inner-loop unroll factor.
+    pub unroll: u32,
+    /// Stage operands through shared memory (VMEM in the Pallas mapping).
+    pub use_smem: bool,
+    /// Shared-memory tiles are padded to dodge bank conflicts.
+    pub smem_padded: bool,
+    /// Double-buffered global->shared pipeline.
+    pub double_buffer: bool,
+    /// Registers per thread the compiler settles on.
+    pub regs_per_thread: u32,
+    /// `__syncthreads()` per tile iteration.
+    pub syncs_per_tile: u32,
+    /// Reductions use warp shuffles instead of shared memory + barriers.
+    pub warp_shuffle: bool,
+    /// Global accesses are coalesced.
+    pub coalesced: bool,
+    /// Tensor cores (MXU in the Pallas mapping) engaged.
+    pub use_tensor_cores: bool,
+    /// How many of the task's fusable stages this kernel covers (>= 1).
+    pub fused_stages: u32,
+    /// Redundant full passes over the inputs (e.g. re-reading logits).
+    pub extra_global_passes: u32,
+    /// Single-pass online algorithm (e.g. online softmax).
+    pub online_algorithm: bool,
+    /// Grid-stride loop lets one block cover multiple tiles (tail smoothing).
+    pub grid_stride: bool,
+    /// Kernel avoids the reference's algorithmic waste (e.g. computes
+    /// `B * A[:, None]` instead of materializing `diag(A) @ B`).
+    pub algo_optimal: bool,
+    /// Latent defects.
+    pub bugs: Vec<Bug>,
+}
+
+impl KernelConfig {
+    /// The configuration equivalent of a first naive-but-honest kernel: one
+    /// thread per element, no staging, no fusion beyond the first stage.
+    pub fn naive() -> KernelConfig {
+        KernelConfig {
+            block_threads: 256,
+            tile_m: 16,
+            tile_n: 16,
+            tile_k: 8,
+            vector_width: 1,
+            unroll: 1,
+            use_smem: false,
+            smem_padded: false,
+            double_buffer: false,
+            regs_per_thread: 40,
+            syncs_per_tile: 0,
+            warp_shuffle: false,
+            coalesced: false,
+            use_tensor_cores: false,
+            fused_stages: 1,
+            extra_global_passes: 1,
+            online_algorithm: false,
+            grid_stride: false,
+            algo_optimal: false,
+            bugs: Vec::new(),
+        }
+    }
+
+    /// Shared memory bytes per block implied by the staging choices.
+    pub fn smem_bytes(&self) -> f64 {
+        if !self.use_smem {
+            return 0.0;
+        }
+        let pad = if self.smem_padded { 1.03 } else { 1.0 };
+        let buf = if self.double_buffer { 2.0 } else { 1.0 };
+        let a = (self.tile_m * self.tile_k) as f64;
+        let b = (self.tile_k * self.tile_n) as f64;
+        (a + b) * 4.0 * pad * buf
+    }
+
+    pub fn has_compile_error(&self) -> bool {
+        self.bugs.iter().any(|b| b.is_compile_error())
+    }
+
+    pub fn is_buggy(&self) -> bool {
+        !self.bugs.is_empty()
+    }
+
+    pub fn remove_bug(&mut self, bug: Bug) -> bool {
+        let before = self.bugs.len();
+        self.bugs.retain(|&b| b != bug);
+        self.bugs.len() != before
+    }
+
+    /// Clamp every field into the legal envelope for `gpu`. Transform
+    /// applications call this so *any* sequence of transforms stays valid
+    /// (property-tested in `transform::tests`).
+    pub fn legalize(&mut self, gpu: &GpuSpec) {
+        let ws = gpu.warp_size;
+        self.block_threads = self
+            .block_threads
+            .clamp(ws, gpu.max_threads_per_block)
+            .next_multiple_of(ws);
+        self.tile_m = self.tile_m.clamp(1, 256);
+        self.tile_n = self.tile_n.clamp(1, 256);
+        self.tile_k = self.tile_k.clamp(1, 128);
+        self.vector_width = match self.vector_width {
+            0 | 1 => 1,
+            2 | 3 => 2,
+            _ => 4,
+        };
+        self.unroll = self.unroll.clamp(1, 16).next_power_of_two();
+        self.regs_per_thread = self.regs_per_thread.clamp(24, 255);
+        self.syncs_per_tile = self.syncs_per_tile.min(32);
+        self.fused_stages = self.fused_stages.max(1);
+        self.extra_global_passes = self.extra_global_passes.min(4);
+        // Shared-memory footprint must fit the per-block cap; shrink tile_k
+        // (the staging depth) until it does.
+        while self.use_smem
+            && self.smem_bytes() > gpu.smem_per_block_kb * 1024.0
+            && self.tile_k > 1
+        {
+            self.tile_k /= 2;
+        }
+        // Register file: a block must be schedulable at all.
+        let max_regs = gpu.regs_per_sm / self.block_threads;
+        self.regs_per_thread = self.regs_per_thread.min(max_regs.max(24));
+        self.bugs.dedup();
+    }
+
+    /// True when the config violates hard launch limits (used as the
+    /// `LaunchMisconfig` trigger and in property tests).
+    pub fn is_legal(&self, gpu: &GpuSpec) -> bool {
+        self.block_threads >= gpu.warp_size
+            && self.block_threads <= gpu.max_threads_per_block
+            && self.block_threads % gpu.warp_size == 0
+            && self.smem_bytes() <= gpu.smem_per_block_kb * 1024.0
+            && self.regs_per_thread >= 24
+            && self.regs_per_thread <= 255
+            && self.fused_stages >= 1
+    }
+
+    /// Compact source-like fingerprint used in prompts and logs.
+    pub fn describe(&self) -> String {
+        format!(
+            "block={} tile={}x{}x{} vec={} unroll={} smem={}{}{} regs={} syncs={} \
+             shuffle={} coalesced={} tc={} fused={} extra_passes={} online={} bugs=[{}]",
+            self.block_threads,
+            self.tile_m,
+            self.tile_n,
+            self.tile_k,
+            self.vector_width,
+            self.unroll,
+            self.use_smem,
+            if self.smem_padded { "+pad" } else { "" },
+            if self.double_buffer { "+dbuf" } else { "" },
+            self.regs_per_thread,
+            self.syncs_per_tile,
+            self.warp_shuffle,
+            self.coalesced,
+            self.use_tensor_cores,
+            self.fused_stages,
+            self.extra_global_passes,
+            self.online_algorithm,
+            self.bugs
+                .iter()
+                .map(|b| b.name())
+                .collect::<Vec<_>>()
+                .join(","),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::RTX6000_ADA;
+
+    #[test]
+    fn naive_is_legal() {
+        let c = KernelConfig::naive();
+        assert!(c.is_legal(&RTX6000_ADA));
+        assert!(!c.is_buggy());
+        assert_eq!(c.smem_bytes(), 0.0);
+    }
+
+    #[test]
+    fn legalize_fixes_block_threads_and_smem() {
+        let mut c = KernelConfig::naive();
+        c.block_threads = 1000; // not a multiple of 32
+        c.use_smem = true;
+        c.tile_m = 256;
+        c.tile_n = 256;
+        c.tile_k = 128;
+        c.double_buffer = true;
+        c.legalize(&RTX6000_ADA);
+        assert!(c.is_legal(&RTX6000_ADA), "{}", c.describe());
+    }
+
+    #[test]
+    fn compile_bug_classification() {
+        let mut c = KernelConfig::naive();
+        c.bugs.push(Bug::CompileSyntax);
+        assert!(c.has_compile_error());
+        c.bugs.clear();
+        c.bugs.push(Bug::OobIndex);
+        assert!(!c.has_compile_error());
+        assert!(c.is_buggy());
+        assert!(c.remove_bug(Bug::OobIndex));
+        assert!(!c.is_buggy());
+        assert!(!c.remove_bug(Bug::OobIndex));
+    }
+
+    #[test]
+    fn bug_observability_ordering() {
+        // Compile errors are the most legible, races the least.
+        assert!(Bug::CompileSyntax.observability() > Bug::OobIndex.observability());
+        assert!(Bug::OobIndex.observability() > Bug::RaceCondition.observability());
+        for b in ALL_BUGS {
+            assert!(!b.error_log().is_empty());
+            assert!((0.0..=1.0).contains(&b.observability()));
+        }
+    }
+}

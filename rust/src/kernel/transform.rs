@@ -1,0 +1,418 @@
+//! Transformation catalog — the optimization action space.
+//!
+//! Every optimization the paper's Judge ever suggests (Fig. 3, Fig. 8,
+//! Appendix B.1: shared-memory staging, warp-shuffle reductions, register
+//! reduction, redundant-pass elimination, fusion, tensor cores, online
+//! algorithms, ...) is one `Opt`. Each knows which `Bottleneck` it addresses,
+//! whether it applies to a (task, config) pair, and how it rewrites the
+//! config. The Judge's optimization mode diagnoses a bottleneck from hardware
+//! feedback and picks an `Opt` targeting it; the Coder applies it with
+//! skill-dependent fidelity.
+
+use crate::gpu::GpuSpec;
+use crate::kernel::KernelConfig;
+use crate::tasks::TaskSpec;
+
+/// Dominant performance limiter, as the Judge names it (Fig. 3: "register- or
+/// memory-limited", "compute-bound or memory-bound", ...).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Bottleneck {
+    /// DRAM-bound: traffic is the wall (useful + wasted bytes).
+    MemBandwidth,
+    /// Long-scoreboard stalls: global latency not hidden (low occupancy or
+    /// redundant passes).
+    MemLatency,
+    /// Wasted sectors from uncoalesced access patterns.
+    Uncoalesced,
+    /// Barrier-type warp stalls from `__syncthreads()`.
+    BarrierStall,
+    /// Occupancy capped by registers per thread.
+    OccupancyRegisters,
+    /// Occupancy capped by shared memory per block.
+    OccupancySmem,
+    /// FP32 pipe saturated while tensor pipes idle (or just compute-bound).
+    ComputeBound,
+    /// Short-scoreboard stalls (shared-memory bank conflicts).
+    ShortScoreboard,
+    /// Kernel-launch / unfused-stage overhead dominates.
+    LaunchOverhead,
+    /// The algorithm itself does redundant work vs the optimal one.
+    AlgorithmicWaste,
+    /// Near roofline; nothing actionable.
+    None,
+}
+
+impl Bottleneck {
+    pub fn name(self) -> &'static str {
+        match self {
+            Bottleneck::MemBandwidth => "memory-bandwidth-bound",
+            Bottleneck::MemLatency => "memory-latency-bound",
+            Bottleneck::Uncoalesced => "uncoalesced-global-access",
+            Bottleneck::BarrierStall => "barrier-stall-bound",
+            Bottleneck::OccupancyRegisters => "occupancy-limited-by-registers",
+            Bottleneck::OccupancySmem => "occupancy-limited-by-shared-memory",
+            Bottleneck::ComputeBound => "compute-bound",
+            Bottleneck::ShortScoreboard => "shared-memory-bank-conflicts",
+            Bottleneck::LaunchOverhead => "launch-overhead-bound",
+            Bottleneck::AlgorithmicWaste => "algorithmically-redundant-work",
+            Bottleneck::None => "near-roofline",
+        }
+    }
+}
+
+/// One optimization move.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Opt {
+    CoalesceAccesses,
+    VectorizeLoads,
+    UseSharedMemoryTiling,
+    IncreaseTileSize,
+    WarpShuffleReduction,
+    ReduceSyncs,
+    ReduceRegisterPressure,
+    ShrinkBlock,
+    PadSharedMemory,
+    DoubleBuffer,
+    CacheInRegisters,
+    FuseStages,
+    UseTensorCores,
+    IncreaseUnroll,
+    OnlineAlgorithm,
+    AlgorithmicRewrite,
+    GridStrideLoop,
+}
+
+/// Full catalog, in a stable order (prompt rendering + tests rely on it).
+pub const OPT_CATALOG: [Opt; 17] = [
+    Opt::CoalesceAccesses,
+    Opt::VectorizeLoads,
+    Opt::UseSharedMemoryTiling,
+    Opt::IncreaseTileSize,
+    Opt::WarpShuffleReduction,
+    Opt::ReduceSyncs,
+    Opt::ReduceRegisterPressure,
+    Opt::ShrinkBlock,
+    Opt::PadSharedMemory,
+    Opt::DoubleBuffer,
+    Opt::CacheInRegisters,
+    Opt::FuseStages,
+    Opt::UseTensorCores,
+    Opt::IncreaseUnroll,
+    Opt::OnlineAlgorithm,
+    Opt::AlgorithmicRewrite,
+    Opt::GridStrideLoop,
+];
+
+impl Opt {
+    pub fn name(self) -> &'static str {
+        match self {
+            Opt::CoalesceAccesses => "coalesce_global_accesses",
+            Opt::VectorizeLoads => "vectorize_loads_float4",
+            Opt::UseSharedMemoryTiling => "shared_memory_tiling",
+            Opt::IncreaseTileSize => "increase_tile_size",
+            Opt::WarpShuffleReduction => "warp_shuffle_reduction",
+            Opt::ReduceSyncs => "reduce_syncthreads",
+            Opt::ReduceRegisterPressure => "reduce_register_pressure",
+            Opt::ShrinkBlock => "shrink_block_size",
+            Opt::PadSharedMemory => "pad_shared_memory",
+            Opt::DoubleBuffer => "double_buffer_pipeline",
+            Opt::CacheInRegisters => "cache_inputs_in_registers",
+            Opt::FuseStages => "fuse_adjacent_stages",
+            Opt::UseTensorCores => "use_tensor_cores",
+            Opt::IncreaseUnroll => "increase_unroll",
+            Opt::OnlineAlgorithm => "online_single_pass_algorithm",
+            Opt::AlgorithmicRewrite => "algorithmic_rewrite",
+            Opt::GridStrideLoop => "grid_stride_loop",
+        }
+    }
+
+    /// Judge-voice suggestion text (feeds the Coder's optimization prompt,
+    /// mirroring the JSON `optimisation method` field of Appendix A).
+    pub fn suggestion(self) -> &'static str {
+        match self {
+            Opt::CoalesceAccesses => {
+                "reorder thread-to-data mapping so adjacent lanes touch adjacent \
+                 addresses; eliminate strided global access"
+            }
+            Opt::VectorizeLoads => {
+                "widen global loads/stores to float4 to cut sector requests per byte"
+            }
+            Opt::UseSharedMemoryTiling => {
+                "stage operand tiles through shared memory to raise data reuse"
+            }
+            Opt::IncreaseTileSize => {
+                "enlarge the per-block output tile to improve arithmetic intensity"
+            }
+            Opt::WarpShuffleReduction => {
+                "use warp-level shuffles in the reduction phases, then a single \
+                 cross-warp combine, cutting __syncthreads() per block"
+            }
+            Opt::ReduceSyncs => "remove redundant __syncthreads() between phases",
+            Opt::ReduceRegisterPressure => {
+                "reduce per-thread registers to raise resident warps and improve \
+                 latency hiding"
+            }
+            Opt::ShrinkBlock => {
+                "shrink the thread block so more blocks fit per SM (occupancy \
+                 granularity)"
+            }
+            Opt::PadSharedMemory => {
+                "pad shared-memory tiles by one element to remove bank conflicts"
+            }
+            Opt::DoubleBuffer => {
+                "double-buffer the global->shared pipeline to overlap loads with \
+                 compute"
+            }
+            Opt::CacheInRegisters => {
+                "cache the re-read inputs in per-thread registers during the first \
+                 pass, eliminating the redundant global read"
+            }
+            Opt::FuseStages => {
+                "fuse the adjacent elementwise/reduction stage into the kernel to \
+                 avoid one intermediate HBM round-trip"
+            }
+            Opt::UseTensorCores => {
+                "map the inner product onto tensor cores (mma) with 16x16 fragments \
+                 staged via shared memory"
+            }
+            Opt::IncreaseUnroll => {
+                "unroll the inner loop to expose instruction-level parallelism"
+            }
+            Opt::OnlineAlgorithm => {
+                "switch to a single-pass online algorithm (running max/sum) to \
+                 remove one full input pass"
+            }
+            Opt::AlgorithmicRewrite => {
+                "replace the redundant reference algorithm with the direct \
+                 formulation (avoid materializing intermediate operands)"
+            }
+            Opt::GridStrideLoop => {
+                "use a grid-stride loop so one wave of blocks covers the whole \
+                 problem (smooths the tail)"
+            }
+        }
+    }
+
+    /// Which bottleneck this move addresses (the Judge picks moves whose
+    /// target matches its diagnosis).
+    pub fn target(self) -> Bottleneck {
+        match self {
+            Opt::CoalesceAccesses => Bottleneck::Uncoalesced,
+            Opt::VectorizeLoads => Bottleneck::MemBandwidth,
+            Opt::UseSharedMemoryTiling => Bottleneck::MemBandwidth,
+            Opt::IncreaseTileSize => Bottleneck::MemBandwidth,
+            Opt::WarpShuffleReduction => Bottleneck::BarrierStall,
+            Opt::ReduceSyncs => Bottleneck::BarrierStall,
+            Opt::ReduceRegisterPressure => Bottleneck::OccupancyRegisters,
+            Opt::ShrinkBlock => Bottleneck::OccupancySmem,
+            Opt::PadSharedMemory => Bottleneck::ShortScoreboard,
+            Opt::DoubleBuffer => Bottleneck::MemLatency,
+            Opt::CacheInRegisters => Bottleneck::MemLatency,
+            Opt::FuseStages => Bottleneck::LaunchOverhead,
+            Opt::UseTensorCores => Bottleneck::ComputeBound,
+            Opt::IncreaseUnroll => Bottleneck::ComputeBound,
+            Opt::OnlineAlgorithm => Bottleneck::MemBandwidth,
+            Opt::AlgorithmicRewrite => Bottleneck::AlgorithmicWaste,
+            Opt::GridStrideLoop => Bottleneck::LaunchOverhead,
+        }
+    }
+
+    /// Can this move still do anything for (task, cfg)?
+    pub fn applicable(self, task: &TaskSpec, cfg: &KernelConfig) -> bool {
+        match self {
+            Opt::CoalesceAccesses => !cfg.coalesced,
+            Opt::VectorizeLoads => cfg.vector_width < 4,
+            Opt::UseSharedMemoryTiling => !cfg.use_smem && task.op_class.has_data_reuse(),
+            Opt::IncreaseTileSize => {
+                task.op_class.has_data_reuse() && cfg.tile_m < 128 && cfg.tile_n < 128
+            }
+            Opt::WarpShuffleReduction => !cfg.warp_shuffle && cfg.syncs_per_tile >= 2,
+            Opt::ReduceSyncs => cfg.syncs_per_tile >= 3,
+            Opt::ReduceRegisterPressure => cfg.regs_per_thread > 48,
+            Opt::ShrinkBlock => cfg.block_threads > 128,
+            Opt::PadSharedMemory => cfg.use_smem && !cfg.smem_padded,
+            Opt::DoubleBuffer => cfg.use_smem && !cfg.double_buffer,
+            Opt::CacheInRegisters => cfg.extra_global_passes > 0,
+            Opt::FuseStages => cfg.fused_stages < task.stages,
+            Opt::UseTensorCores => task.tc_eligible && !cfg.use_tensor_cores,
+            Opt::IncreaseUnroll => cfg.unroll < 8,
+            Opt::OnlineAlgorithm => {
+                task.op_class.online_eligible() && !cfg.online_algorithm
+            }
+            Opt::AlgorithmicRewrite => task.baseline_waste > 1.0 && !cfg.algo_optimal,
+            Opt::GridStrideLoop => !cfg.grid_stride,
+        }
+    }
+
+    /// Apply the move faithfully (the Coder may instead mis-apply — that is
+    /// modelled in `agents::coder`, not here). Always re-legalizes.
+    pub fn apply(self, cfg: &mut KernelConfig, task: &TaskSpec, gpu: &GpuSpec) {
+        match self {
+            Opt::CoalesceAccesses => cfg.coalesced = true,
+            Opt::VectorizeLoads => cfg.vector_width = 4,
+            Opt::UseSharedMemoryTiling => {
+                cfg.use_smem = true;
+                cfg.tile_k = cfg.tile_k.max(16);
+                cfg.tile_m = cfg.tile_m.max(32);
+                cfg.tile_n = cfg.tile_n.max(32);
+                cfg.syncs_per_tile = cfg.syncs_per_tile.max(2);
+                cfg.regs_per_thread += 16;
+            }
+            Opt::IncreaseTileSize => {
+                cfg.tile_m *= 2;
+                cfg.tile_n *= 2;
+                cfg.regs_per_thread += 24;
+            }
+            Opt::WarpShuffleReduction => {
+                cfg.warp_shuffle = true;
+                // e.g. Fig. 8 round 2: "__syncthreads() per block from 16 to 2".
+                cfg.syncs_per_tile = cfg.syncs_per_tile.min(2);
+            }
+            Opt::ReduceSyncs => {
+                cfg.syncs_per_tile = cfg.syncs_per_tile.saturating_sub(2).max(1)
+            }
+            Opt::ReduceRegisterPressure => {
+                cfg.regs_per_thread = cfg.regs_per_thread.saturating_sub(32).max(32)
+            }
+            Opt::ShrinkBlock => cfg.block_threads = (cfg.block_threads / 2).max(128),
+            Opt::PadSharedMemory => cfg.smem_padded = true,
+            Opt::DoubleBuffer => {
+                cfg.double_buffer = true;
+                cfg.regs_per_thread += 8;
+            }
+            Opt::CacheInRegisters => {
+                cfg.extra_global_passes = cfg.extra_global_passes.saturating_sub(1);
+                cfg.regs_per_thread += 12;
+            }
+            Opt::FuseStages => {
+                cfg.fused_stages = (cfg.fused_stages + 1).min(task.stages)
+            }
+            Opt::UseTensorCores => {
+                cfg.use_tensor_cores = true;
+                cfg.use_smem = true;
+                cfg.tile_m = cfg.tile_m.max(32).next_multiple_of(16);
+                cfg.tile_n = cfg.tile_n.max(32).next_multiple_of(16);
+                cfg.tile_k = cfg.tile_k.max(16).next_multiple_of(16);
+                cfg.syncs_per_tile = cfg.syncs_per_tile.max(2);
+            }
+            Opt::IncreaseUnroll => {
+                cfg.unroll *= 2;
+                cfg.regs_per_thread += 8;
+            }
+            Opt::OnlineAlgorithm => {
+                cfg.online_algorithm = true;
+                cfg.extra_global_passes = cfg.extra_global_passes.saturating_sub(1);
+            }
+            Opt::AlgorithmicRewrite => cfg.algo_optimal = true,
+            Opt::GridStrideLoop => cfg.grid_stride = true,
+        }
+        cfg.legalize(gpu);
+    }
+
+    /// Moves addressing `b`, in catalog order.
+    pub fn for_bottleneck(b: Bottleneck) -> Vec<Opt> {
+        OPT_CATALOG.iter().copied().filter(|o| o.target() == b).collect()
+    }
+
+    pub fn by_name(name: &str) -> Option<Opt> {
+        OPT_CATALOG.iter().copied().find(|o| o.name() == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::RTX6000_ADA;
+    use crate::tasks::{by_id, kernelbench};
+    use crate::util::prop;
+
+    #[test]
+    fn every_bottleneck_has_a_move() {
+        for b in [
+            Bottleneck::MemBandwidth,
+            Bottleneck::MemLatency,
+            Bottleneck::Uncoalesced,
+            Bottleneck::BarrierStall,
+            Bottleneck::OccupancyRegisters,
+            Bottleneck::OccupancySmem,
+            Bottleneck::ComputeBound,
+            Bottleneck::ShortScoreboard,
+            Bottleneck::LaunchOverhead,
+            Bottleneck::AlgorithmicWaste,
+        ] {
+            assert!(!Opt::for_bottleneck(b).is_empty(), "{b:?} unaddressed");
+        }
+    }
+
+    #[test]
+    fn name_round_trip() {
+        for o in OPT_CATALOG {
+            assert_eq!(Opt::by_name(o.name()), Some(o));
+            assert!(!o.suggestion().is_empty());
+        }
+        assert_eq!(Opt::by_name("not_a_move"), None);
+    }
+
+    #[test]
+    fn warp_shuffle_cuts_syncs_like_fig8() {
+        let task = by_id("L1-95").unwrap();
+        let mut cfg = KernelConfig::naive();
+        cfg.syncs_per_tile = 16;
+        Opt::WarpShuffleReduction.apply(&mut cfg, &task, &RTX6000_ADA);
+        assert_eq!(cfg.syncs_per_tile, 2); // "from 16 to 2 (a reduction of 14)"
+        assert!(cfg.warp_shuffle);
+    }
+
+    /// Property: any sequence of applicable transforms keeps the config legal
+    /// and applicability is monotone (an applied move stops being applicable
+    /// for idempotent moves).
+    #[test]
+    fn prop_transform_sequences_stay_legal() {
+        let tasks = kernelbench();
+        prop::check("transforms-legal", 0xC0DE, |rng| {
+            let task = &tasks[rng.below(tasks.len())];
+            let mut cfg = KernelConfig::naive();
+            cfg.legalize(&RTX6000_ADA);
+            for _ in 0..rng.range_usize(1, 12) {
+                let o = OPT_CATALOG[rng.below(OPT_CATALOG.len())];
+                if o.applicable(task, &cfg) {
+                    o.apply(&mut cfg, task, &RTX6000_ADA);
+                    prop::ensure(
+                        cfg.is_legal(&RTX6000_ADA),
+                        format!("illegal after {:?}: {}", o, cfg.describe()),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: idempotent boolean moves are not applicable twice.
+    #[test]
+    fn prop_bool_moves_not_reapplicable() {
+        let tasks = kernelbench();
+        prop::check("bool-moves-once", 0xBEEF, |rng| {
+            let task = &tasks[rng.below(tasks.len())];
+            let mut cfg = KernelConfig::naive();
+            for o in [
+                Opt::CoalesceAccesses,
+                Opt::UseSharedMemoryTiling,
+                Opt::UseTensorCores,
+                Opt::OnlineAlgorithm,
+                Opt::GridStrideLoop,
+                Opt::AlgorithmicRewrite,
+                Opt::PadSharedMemory,
+                Opt::DoubleBuffer,
+            ] {
+                if o.applicable(task, &cfg) {
+                    o.apply(&mut cfg, task, &RTX6000_ADA);
+                    prop::ensure(
+                        !o.applicable(task, &cfg),
+                        format!("{o:?} applicable twice"),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+}

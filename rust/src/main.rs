@@ -1,0 +1,195 @@
+//! `cudaforge` — leader CLI for the CudaForge reproduction.
+//!
+//! Subcommands:
+//!   run        optimize one task (e.g. `run --task L1-95 --gpu rtx6000`)
+//!   suite      run a strategy over KernelBench or D*
+//!   bench      regenerate a paper table/figure (`--exp table1|...|all`)
+//!   select     run the offline metric-selection pipeline (Algorithms 1-2)
+//!   verify     execute every AOT artifact on PJRT vs its reference
+//!   specs      print the GPU spec database
+//!
+//! Global flags: --seed N --threads N --rounds N --gpu KEY --quick
+//!               --strategy NAME --coder MODEL --judge MODEL
+//!               --artifacts DIR (enables the real-numerics oracle)
+
+use cudaforge::agents::profiles;
+use cudaforge::coordinator::{default_threads, run_suite};
+use cudaforge::gpu;
+use cudaforge::report::{self, Ctx};
+use cudaforge::runtime::oracle::{RealOracle, VerificationMatrix};
+use cudaforge::runtime::Engine;
+use cudaforge::tasks;
+use cudaforge::util::cli::Args;
+use cudaforge::workflow::{run_task, CorrectnessOracle, NoOracle, Strategy, WorkflowConfig};
+
+fn strategy_by_name(name: &str) -> Option<Strategy> {
+    Some(match name.to_ascii_lowercase().as_str() {
+        "cudaforge" => Strategy::CudaForge,
+        "one-shot" | "oneshot" => Strategy::OneShot,
+        "self-refine" => Strategy::SelfRefine,
+        "correction" | "correction-only" => Strategy::CorrectionOnly,
+        "optimization" | "optimization-only" => Strategy::OptimizationOnly,
+        "full-metrics" => Strategy::CudaForgeFullMetrics,
+        "kevin" => Strategy::Kevin,
+        "agentic" => Strategy::AgenticBaseline,
+        _ => return None,
+    })
+}
+
+/// Build the real-numerics oracle if artifacts exist (or were requested).
+fn build_oracle(args: &Args) -> Box<dyn CorrectnessOracle> {
+    let dir = args.get_or("artifacts", "artifacts").to_string();
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        if args.get("artifacts").is_some() {
+            eprintln!("error: no manifest in {dir}; run `make artifacts`");
+            std::process::exit(2);
+        }
+        eprintln!("[no artifacts found — correctness uses the modelled check; run `make artifacts` for real numerics]");
+        return Box::new(NoOracle);
+    }
+    match Engine::new(&dir).and_then(|mut e| VerificationMatrix::build(&mut e, 42)) {
+        Ok(matrix) => {
+            let n = matrix.verdicts.len();
+            assert!(matrix.is_consistent(), "artifact verdicts inconsistent");
+            eprintln!("[real-numerics oracle: {n} artifacts verified on PJRT]");
+            Box::new(RealOracle::new(matrix))
+        }
+        Err(e) => {
+            eprintln!("warning: oracle unavailable ({e}); falling back to modelled check");
+            Box::new(NoOracle)
+        }
+    }
+}
+
+fn workflow_from(args: &Args) -> WorkflowConfig {
+    let gpu = gpu::by_key(args.get_or("gpu", "rtx6000")).unwrap_or_else(|| {
+        eprintln!("unknown gpu; options: rtx6000 rtx4090 rtx3090 a100 h100 h200");
+        std::process::exit(2);
+    });
+    let strategy = strategy_by_name(args.get_or("strategy", "cudaforge")).unwrap_or_else(|| {
+        eprintln!("unknown strategy");
+        std::process::exit(2);
+    });
+    let mut wf = WorkflowConfig::cudaforge(gpu, args.get_u64("seed", 2024))
+        .with_strategy(strategy)
+        .with_rounds(args.get_usize("rounds", 10));
+    if let Some(m) = args.get("coder") {
+        wf.coder = *profiles::by_name(m).expect("unknown coder model");
+    }
+    if let Some(m) = args.get("judge") {
+        wf.judge = *profiles::by_name(m).expect("unknown judge model");
+    }
+    wf
+}
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "run" => {
+            let id = args.get_or("task", "L1-95");
+            let task = tasks::by_id(id).unwrap_or_else(|| {
+                eprintln!("unknown task {id}");
+                std::process::exit(2);
+            });
+            let oracle = build_oracle(&args);
+            let wf = workflow_from(&args);
+            println!(
+                "optimizing {} ({}) on {} with {} (N={})",
+                task.id(), task.name, wf.gpu.name, wf.strategy.name(), wf.max_rounds
+            );
+            let r = run_task(&wf, &task, oracle.as_ref());
+            for round in &r.rounds {
+                println!(
+                    "  round {:>2} [{}] correct={} speedup={}",
+                    round.round,
+                    round.mode,
+                    round.correct,
+                    round.speedup.map(|s| format!("{s:.3}x")).unwrap_or_else(|| "-".into())
+                );
+                if !round.feedback_json.is_empty() {
+                    println!("        judge: {}", round.feedback_json);
+                }
+            }
+            println!(
+                "best {:.3}x | ${:.2} API | {:.1} min | {} real-numerics checks",
+                r.best_speedup, r.ledger.api_usd, r.ledger.wall_min(), r.oracle_checks
+            );
+        }
+        "suite" => {
+            let oracle = build_oracle(&args);
+            let wf = workflow_from(&args);
+            let set = if args.flag("dstar") { tasks::dstar() } else { tasks::kernelbench() };
+            let threads = args.get_usize("threads", default_threads());
+            let out = run_suite(&wf, &set, oracle.as_ref(), threads);
+            let s = &out.overall;
+            println!(
+                "{}: correct={:.1}% median={:.3} p75={:.3} perf={:.3} fast1={:.1}% \
+                 ${:.2} {:.1}min",
+                s.method, s.correct * 100.0, s.median, s.p75, s.perf,
+                s.fast1 * 100.0, s.avg_cost_usd, s.avg_time_min
+            );
+            for (lvl, ls) in &out.per_level {
+                println!(
+                    "  L{lvl}: correct={:.1}% median={:.3} perf={:.3} fast1={:.1}%",
+                    ls.correct * 100.0, ls.median, ls.perf, ls.fast1 * 100.0
+                );
+            }
+        }
+        "bench" => {
+            let oracle = build_oracle(&args);
+            let ctx = Ctx {
+                seed: args.get_u64("seed", 2024),
+                threads: args.get_usize("threads", default_threads()),
+                results_dir: args.get_or("out", "results").to_string(),
+                rounds: args.get_usize("rounds", 10),
+            };
+            let exp = args.get_or("exp", "all");
+            report::run_experiment(&ctx, exp, oracle.as_ref(), args.flag("quick"));
+        }
+        "select" => {
+            let ctx = Ctx {
+                seed: args.get_u64("seed", 2024),
+                results_dir: args.get_or("out", "results").to_string(),
+                ..Ctx::default()
+            };
+            report::table8(&ctx, args.get_usize("iterations", 100));
+        }
+        "verify" => {
+            let dir = args.get_or("artifacts", "artifacts");
+            let mut engine = Engine::new(dir).expect("engine (run `make artifacts`)");
+            let matrix = VerificationMatrix::build(&mut engine, args.get_u64("seed", 42))
+                .expect("verification");
+            let mut names: Vec<_> = matrix.verdicts.iter().collect();
+            names.sort_by(|a, b| a.0.cmp(b.0));
+            for (name, v) in names {
+                println!(
+                    "  {:36} {} max|diff|={:.3e} ({} elems)",
+                    name,
+                    if v.passes { "PASS" } else { "MISMATCH" },
+                    v.max_abs_diff,
+                    v.elements
+                );
+            }
+            println!(
+                "{} artifacts; consistent with labels: {}",
+                matrix.verdicts.len(),
+                matrix.is_consistent()
+            );
+        }
+        "specs" => {
+            for g in gpu::ALL {
+                println!("{}\n", g.spec_sheet());
+            }
+        }
+        _ => {
+            println!("cudaforge {} — CudaForge reproduction CLI", cudaforge::version());
+            println!("usage: cudaforge <run|suite|bench|select|verify|specs> [flags]");
+            println!("  run    --task L1-95 [--gpu rtx6000 --strategy cudaforge --rounds 10]");
+            println!("  suite  [--dstar] [--strategy NAME --coder o3 --judge gpt5]");
+            println!("  bench  --exp <table1|table2|table3|table4|table5|fig4..fig9|table6|table8|all> [--quick]");
+            println!("  select [--iterations 100]");
+            println!("  verify [--artifacts artifacts]");
+        }
+    }
+}

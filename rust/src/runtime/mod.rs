@@ -1,0 +1,302 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO text — see /opt/xla-example/README.md for why text, not protos) and
+//! executes them on the PJRT CPU client via the `xla` crate.
+//!
+//! This is where the three layers compose: the Pallas kernels (L1) lowered
+//! through JAX (L2) run under the Rust coordinator (L3), giving the workflow
+//! *real numerics* for the artifact-bound anchor tasks — the correctness
+//! stage genuinely executes a kernel variant against its pure-jnp reference
+//! at the paper's tolerance (1e-4), including intentionally-buggy variants
+//! that produce genuinely wrong outputs.
+
+pub mod oracle;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Input generator spec from the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GenSpec {
+    /// Uniform f32 in [lo, hi).
+    Uniform { lo: f32, hi: f32 },
+    /// Uniform i32 in [0, mod).
+    RandInt { modulus: i32 },
+}
+
+/// One input tensor spec.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+    pub gen: GenSpec,
+}
+
+impl InputSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One artifact catalog entry.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub family: String,
+    pub variant: String,
+    pub file: String,
+    pub reference: String,
+    pub buggy: bool,
+    pub tol: f64,
+    pub inputs: Vec<InputSpec>,
+}
+
+/// Parsed artifacts/manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let entries = v
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing entries"))?;
+        let mut out = Vec::with_capacity(entries.len());
+        for e in entries {
+            let field = |k: &str| -> Result<&Json> {
+                e.get(k).ok_or_else(|| anyhow!("entry missing {k}"))
+            };
+            let mut inputs = Vec::new();
+            for i in field("inputs")?.as_arr().unwrap_or(&[]) {
+                let shape = i
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                    .unwrap_or_default();
+                let dtype = i
+                    .get("dtype")
+                    .and_then(|d| d.as_str())
+                    .unwrap_or("f32")
+                    .to_string();
+                let gen = match i.get("gen").and_then(|g| g.as_str()) {
+                    Some("randint") => GenSpec::RandInt {
+                        modulus: i.get("mod").and_then(|m| m.as_f64()).unwrap_or(2.0) as i32,
+                    },
+                    _ => GenSpec::Uniform {
+                        lo: i.get("lo").and_then(|x| x.as_f64()).unwrap_or(-1.0) as f32,
+                        hi: i.get("hi").and_then(|x| x.as_f64()).unwrap_or(1.0) as f32,
+                    },
+                };
+                inputs.push(InputSpec { shape, dtype, gen });
+            }
+            out.push(ManifestEntry {
+                name: field("name")?.as_str().unwrap_or("").to_string(),
+                family: field("family")?.as_str().unwrap_or("").to_string(),
+                variant: field("variant")?.as_str().unwrap_or("").to_string(),
+                file: field("file")?.as_str().unwrap_or("").to_string(),
+                reference: field("ref")?.as_str().unwrap_or("").to_string(),
+                buggy: field("buggy")?.as_bool().unwrap_or(false),
+                tol: field("tol")?.as_f64().unwrap_or(1e-4),
+                inputs: out_inputs(inputs),
+            });
+        }
+        Ok(Manifest { dir, entries: out })
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn families(&self) -> Vec<&str> {
+        let mut f: Vec<&str> = self.entries.iter().map(|e| e.family.as_str()).collect();
+        f.sort_unstable();
+        f.dedup();
+        f
+    }
+}
+
+fn out_inputs(v: Vec<InputSpec>) -> Vec<InputSpec> {
+    v
+}
+
+/// The PJRT execution engine: a CPU client plus a compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, compiled: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (and cache) one artifact.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?
+            .clone();
+        let path = self.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", entry.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Generate deterministic inputs for an entry (both the variant and its
+    /// reference receive the *same* literals — the paper's "same inputs").
+    pub fn gen_inputs(&self, entry: &ManifestEntry, seed: u64) -> Result<Vec<xla::Literal>> {
+        let mut rng = Rng::new(seed);
+        let mut lits = Vec::with_capacity(entry.inputs.len());
+        for spec in &entry.inputs {
+            let n = spec.elems();
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match (&spec.gen, spec.dtype.as_str()) {
+                (GenSpec::Uniform { lo, hi }, _) => {
+                    let data: Vec<f32> =
+                        (0..n).map(|_| rng.uniform_f32(*lo, *hi)).collect();
+                    if spec.shape.is_empty() {
+                        xla::Literal::from(data[0])
+                    } else {
+                        xla::Literal::vec1(&data)
+                            .reshape(&dims)
+                            .map_err(|e| anyhow!("reshape: {e:?}"))?
+                    }
+                }
+                (GenSpec::RandInt { modulus }, _) => {
+                    let data: Vec<i32> =
+                        (0..n).map(|_| rng.below(*modulus as usize) as i32).collect();
+                    if spec.shape.is_empty() {
+                        xla::Literal::from(data[0])
+                    } else {
+                        xla::Literal::vec1(&data)
+                            .reshape(&dims)
+                            .map_err(|e| anyhow!("reshape: {e:?}"))?
+                    }
+                }
+            };
+            lits.push(lit);
+        }
+        Ok(lits)
+    }
+
+    /// Execute an artifact on inputs, returning the flattened f32 output.
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        self.compile(name)?;
+        let exe = self.compiled.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Run variant-vs-reference on identical inputs and compare at the
+    /// manifest tolerance. Returns (passes, max_abs_diff, n_elements).
+    pub fn check_against_ref(&mut self, name: &str, seed: u64) -> Result<(bool, f64, usize)> {
+        let entry = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?
+            .clone();
+        if entry.reference.is_empty() {
+            bail!("{name} is itself a reference artifact");
+        }
+        let inputs = self.gen_inputs(&entry, seed)?;
+        let got = self.execute(&entry.name, &inputs)?;
+        let want = self.execute(&entry.reference, &inputs)?;
+        if got.len() != want.len() {
+            bail!("{name}: output length {} vs ref {}", got.len(), want.len());
+        }
+        let tol = entry.tol;
+        let mut max_diff = 0.0f64;
+        let mut ok = true;
+        for (a, b) in got.iter().zip(&want) {
+            let diff = (a - b).abs() as f64;
+            max_diff = max_diff.max(diff);
+            if diff > tol + tol * (b.abs() as f64) {
+                ok = false;
+            }
+        }
+        Ok((ok, max_diff, got.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses_and_is_complete() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert!(m.entries.len() >= 30, "{} entries", m.entries.len());
+        for e in &m.entries {
+            assert!(m.dir.join(&e.file).exists(), "{} file missing", e.name);
+            if !e.reference.is_empty() {
+                assert!(m.by_name(&e.reference).is_some(), "{} dangling ref", e.name);
+            }
+        }
+        let fams = m.families();
+        for f in [
+            "matmul", "softmax", "cross_entropy", "linear_epilogue", "reduce_rows",
+            "layernorm", "ew_chain", "diag_matmul", "mini_model",
+        ] {
+            assert!(fams.contains(&f), "missing family {f}");
+        }
+    }
+
+    #[test]
+    fn input_specs_materialize() {
+        if !have_artifacts() {
+            return;
+        }
+        let engine = Engine::new(artifacts_dir()).unwrap();
+        let entry = engine.manifest().by_name("cross_entropy_lane_reduce").unwrap().clone();
+        let lits = engine.gen_inputs(&entry, 7).unwrap();
+        assert_eq!(lits.len(), 2); // logits + targets
+    }
+}

@@ -1,0 +1,232 @@
+//! Real-numerics correctness oracle.
+//!
+//! At startup, `VerificationMatrix::build` executes **every** kernel-variant
+//! artifact against its pure-jnp reference on the PJRT CPU client and records
+//! the verdicts. During workflow runs the oracle maps an agent-generated
+//! kernel configuration onto the matching artifact variant for the task's
+//! bound family and reports that artifact's *measured* verdict — so the
+//! correction loop's pass/fail signals on anchor tasks come from genuine
+//! executions of genuine (sometimes genuinely buggy) kernels, not from the
+//! bug model.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::kernel::{Bug, KernelConfig};
+use crate::runtime::Engine;
+use crate::tasks::TaskSpec;
+use crate::workflow::{CheckOutcome, CorrectnessOracle};
+
+/// Measured verdict for one artifact.
+#[derive(Clone, Debug)]
+pub struct Verdict {
+    pub passes: bool,
+    pub max_abs_diff: f64,
+    pub elements: usize,
+}
+
+/// All artifact verdicts, measured once on the PJRT client.
+#[derive(Clone, Debug, Default)]
+pub struct VerificationMatrix {
+    pub verdicts: HashMap<String, Verdict>,
+    /// family -> variant names present (non-ref).
+    pub by_family: HashMap<String, Vec<String>>,
+}
+
+impl VerificationMatrix {
+    /// Execute every non-reference artifact against its reference.
+    pub fn build(engine: &mut Engine, seed: u64) -> Result<VerificationMatrix> {
+        let names: Vec<(String, String)> = engine
+            .manifest()
+            .entries
+            .iter()
+            .filter(|e| !e.reference.is_empty())
+            .map(|e| (e.name.clone(), e.family.clone()))
+            .collect();
+        let mut m = VerificationMatrix::default();
+        for (name, family) in names {
+            let (passes, max_abs_diff, elements) = engine.check_against_ref(&name, seed)?;
+            m.verdicts.insert(name.clone(), Verdict { passes, max_abs_diff, elements });
+            m.by_family.entry(family).or_default().push(name);
+        }
+        Ok(m)
+    }
+
+    /// Sanity: every `bug_*` artifact must actually fail, every other variant
+    /// must actually pass (this is asserted in the integration tests — if a
+    /// "buggy" kernel passes tolerance the whole correction-loop story would
+    /// be fake).
+    pub fn is_consistent(&self) -> bool {
+        self.verdicts.iter().all(|(name, v)| {
+            let should_fail = name.contains("bug_");
+            should_fail != v.passes
+        })
+    }
+}
+
+/// Maps a workflow (task, config) onto the artifact realizing it.
+pub fn artifact_for(family: &str, cfg: &KernelConfig) -> Option<String> {
+    // Runtime-buggy config -> the family's matching buggy artifact.
+    let runtime_bug = cfg.bugs.iter().copied().find(|b| !b.is_compile_error());
+    if let Some(bug) = runtime_bug {
+        let name = match (family, bug) {
+            ("matmul", Bug::OobIndex) => "matmul_bug_oob",
+            ("matmul", _) => "matmul_bug_uninit",
+            ("softmax", _) => "softmax_bug_wrong_axis",
+            ("cross_entropy", _) => "cross_entropy_bug_uninit_target",
+            ("linear_epilogue", _) => "linear_epilogue_bug_wrong_gelu",
+            ("reduce_rows", _) => "reduce_rows_bug_off_by_one",
+            ("layernorm", _) => "layernorm_bug_biased_var",
+            ("ew_chain", _) => "ew_chain_bug_wrong_const",
+            ("diag_matmul", _) => "diag_matmul_bug_transposed",
+            _ => return None,
+        };
+        return Some(name.to_string());
+    }
+    // Clean config -> the variant expressing its optimization state.
+    let name = match family {
+        "matmul" => {
+            if cfg.fused_stages > 1 {
+                "matmul_bias_relu_fused" // fused epilogue variant
+            } else if cfg.use_smem {
+                "matmul_tiled"
+            } else {
+                "matmul_naive"
+            }
+        }
+        "softmax" => {
+            if cfg.online_algorithm {
+                "softmax_online"
+            } else if cfg.extra_global_passes == 0 {
+                "softmax_fused"
+            } else {
+                "softmax_naive"
+            }
+        }
+        "cross_entropy" => {
+            if cfg.warp_shuffle || cfg.extra_global_passes == 0 {
+                "cross_entropy_lane_reduce"
+            } else {
+                "cross_entropy_block_reduce"
+            }
+        }
+        "linear_epilogue" => {
+            if cfg.fused_stages >= 2 {
+                "linear_epilogue_fused"
+            } else {
+                "linear_epilogue_unfused"
+            }
+        }
+        "reduce_rows" => {
+            if cfg.extra_global_passes == 0 {
+                "reduce_rows_onepass"
+            } else {
+                "reduce_rows_twopass"
+            }
+        }
+        "layernorm" => {
+            if cfg.fused_stages >= 2 || cfg.extra_global_passes == 0 {
+                "layernorm_fused"
+            } else {
+                "layernorm_naive"
+            }
+        }
+        "ew_chain" => {
+            if cfg.fused_stages >= 2 {
+                "ew_chain_fused"
+            } else {
+                "ew_chain_unfused"
+            }
+        }
+        "diag_matmul" => {
+            if cfg.algo_optimal {
+                "diag_matmul_broadcast"
+            } else {
+                "diag_matmul_full_diag"
+            }
+        }
+        "matmul_bias_relu" => "matmul_bias_relu_fused",
+        "mini_model" => "mini_model_pallas",
+        _ => return None,
+    };
+    Some(name.to_string())
+}
+
+/// The oracle handed to the workflow: pure data (Sync), built once.
+pub struct RealOracle {
+    matrix: VerificationMatrix,
+}
+
+impl RealOracle {
+    pub fn new(matrix: VerificationMatrix) -> RealOracle {
+        RealOracle { matrix }
+    }
+
+    pub fn matrix(&self) -> &VerificationMatrix {
+        &self.matrix
+    }
+}
+
+impl CorrectnessOracle for RealOracle {
+    fn check(&self, task: &TaskSpec, cfg: &KernelConfig) -> Option<CheckOutcome> {
+        let family = task.binding?;
+        // Compile errors never reach execution; the artifact layer has
+        // nothing to say about them.
+        if let Some(b) = cfg.bugs.iter().find(|b| b.is_compile_error()) {
+            return Some(CheckOutcome::CompileError(b.error_log().to_string()));
+        }
+        let name = artifact_for(family, cfg)?;
+        let verdict = self.matrix.verdicts.get(&name)?;
+        if verdict.passes {
+            Some(CheckOutcome::Pass)
+        } else {
+            Some(CheckOutcome::Mismatch(format!(
+                "Outputs are not close: artifact {} max|diff|={:.3e} over {} elements \
+                 (tolerance 1e-4)",
+                name, verdict.max_abs_diff, verdict.elements
+            )))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_mapping_covers_families() {
+        let mut cfg = KernelConfig::naive();
+        assert_eq!(artifact_for("matmul", &cfg).unwrap(), "matmul_naive");
+        cfg.use_smem = true;
+        assert_eq!(artifact_for("matmul", &cfg).unwrap(), "matmul_tiled");
+        cfg.bugs.push(Bug::OobIndex);
+        assert_eq!(artifact_for("matmul", &cfg).unwrap(), "matmul_bug_oob");
+        cfg.bugs.clear();
+        cfg.online_algorithm = true;
+        assert_eq!(artifact_for("softmax", &cfg).unwrap(), "softmax_online");
+        cfg.algo_optimal = true;
+        assert_eq!(artifact_for("diag_matmul", &cfg).unwrap(), "diag_matmul_broadcast");
+        assert!(artifact_for("unknown_family", &cfg).is_none());
+    }
+
+    #[test]
+    fn compile_errors_short_circuit() {
+        let matrix = VerificationMatrix::default();
+        let oracle = RealOracle::new(matrix);
+        let task = crate::tasks::by_id("L1-95").unwrap();
+        let mut cfg = KernelConfig::naive();
+        cfg.bugs.push(Bug::CompileSyntax);
+        match oracle.check(&task, &cfg) {
+            Some(CheckOutcome::CompileError(_)) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unbound_tasks_defer_to_model() {
+        let oracle = RealOracle::new(VerificationMatrix::default());
+        let task = crate::tasks::by_id("L1-2").unwrap(); // no binding
+        assert!(oracle.check(&task, &KernelConfig::naive()).is_none());
+    }
+}

@@ -1,0 +1,693 @@
+//! Analytical GPU performance simulator (DESIGN.md §2).
+//!
+//! Substitutes for the paper's physical GPUs + Nsight Compute: given a
+//! (GPU spec, task workload, kernel configuration) triple it produces a
+//! latency estimate plus the internal state (occupancy, traffic, stall
+//! decomposition, pipe utilizations) that `ncu` turns into the metric vector
+//! the Judge reads. The model is a roofline (memory vs compute ceiling)
+//! composed with an occupancy model (register/smem/block limits), a
+//! warp-stall overhead model (barrier / long+short scoreboard / latency
+//! hiding), launch/tail effects, and the eager-stage cost of everything the
+//! custom kernel has not fused.
+//!
+//! The causal structure is what matters (DESIGN.md §2 table, row 3): each
+//! config lever moves exactly the metrics a CUDA expert would expect, so the
+//! Judge's metric-driven diagnosis loop is exercised faithfully.
+
+pub mod ncu;
+
+use crate::gpu::GpuSpec;
+use crate::kernel::transform::Bottleneck;
+use crate::kernel::KernelConfig;
+use crate::tasks::TaskSpec;
+
+/// Tunable physical constants. Defaults are calibrated once against the
+/// paper's Table 1 (CudaForge + o3 one-shot rows) and then frozen for every
+/// other experiment (DESIGN.md §6).
+#[derive(Clone, Debug)]
+pub struct SimParams {
+    /// Kernel-launch latency (us) per eager stage / kernel.
+    pub launch_us: f64,
+    /// Baseline DRAM efficiency of an uncoalesced scalar kernel.
+    pub bw_base: f64,
+    /// Extra DRAM efficiency from coalescing.
+    pub bw_coalesced: f64,
+    /// Extra DRAM efficiency from float4 loads.
+    pub bw_vec4: f64,
+    /// Sector-waste multiplier for uncoalesced access.
+    pub uncoalesced_waste: f64,
+    /// Fraction of input re-read per redundant pass.
+    pub pass_traffic: f64,
+    /// DRAM efficiency of library/eager elementwise stages.
+    pub eager_bw_frac: f64,
+    /// Pipe efficiency of library compute stages (cuBLAS-like).
+    pub lib_pipe: f64,
+    /// Barrier stall cost per sync per tile.
+    pub sync_cost: f64,
+    /// Shared-memory bank-conflict overhead when unpadded.
+    pub bank_conflict_cost: f64,
+    /// PyTorch eager dispatch overhead per stage (us) — framework cost the
+    /// custom kernel avoids (why one-shot kernels sometimes beat the
+    /// reference on small L1 workloads).
+    pub dispatch_us: f64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams {
+            launch_us: 4.5,
+            bw_base: 0.40,
+            bw_coalesced: 0.27,
+            bw_vec4: 0.09,
+            uncoalesced_waste: 2.6,
+            pass_traffic: 0.8,
+            eager_bw_frac: 0.72,
+            lib_pipe: 0.62,
+            sync_cost: 0.016,
+            bank_conflict_cost: 0.07,
+            dispatch_us: 8.0,
+        }
+    }
+}
+
+/// What capped occupancy (mirrors NCU's launch__occupancy_limit_*).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OccLimit {
+    Warps,
+    Registers,
+    SharedMem,
+    Blocks,
+}
+
+/// Simulator internals — everything the NCU emitter needs.
+#[derive(Clone, Debug)]
+pub struct Internals {
+    pub occupancy: f64,
+    pub occ_limit: OccLimit,
+    pub blocks_per_sm: f64,
+    pub grid_blocks: f64,
+    pub waves: f64,
+    pub dram_traffic: f64,
+    pub useful_bytes: f64,
+    pub mem_time_us: f64,
+    pub compute_time_us: f64,
+    pub kernel_time_us: f64,
+    pub eager_time_us: f64,
+    pub launch_time_us: f64,
+    pub bw_frac: f64,
+    pub mem_share: f64,
+    pub stall_barrier: f64,
+    pub stall_long_sb: f64,
+    pub stall_short_sb: f64,
+    pub stall_mem_dep: f64,
+    pub stall_branch: f64,
+    pub l1_hit: f64,
+    pub l2_hit: f64,
+    pub issue_frac: f64,
+    pub fp32_pipe: f64,
+    pub tensor_pipe: f64,
+    pub inst_executed: f64,
+    pub bottleneck: Bottleneck,
+}
+
+/// Simulation result for one kernel candidate on one task + GPU.
+#[derive(Clone, Debug)]
+pub struct SimOutput {
+    /// End-to-end task latency (custom kernel + unfused eager remainder).
+    pub runtime_us: f64,
+    pub internals: Internals,
+}
+
+impl SimOutput {
+    pub fn bottleneck(&self) -> Bottleneck {
+        self.internals.bottleneck
+    }
+}
+
+fn log2f(x: f64) -> f64 {
+    x.max(1.0).ln() / std::f64::consts::LN_2
+}
+
+/// Price a kernel configuration. `quality` scales the *kernel's* achieved
+/// efficiency (1.0 for agent-generated kernels; `task.baseline_quality` when
+/// pricing the PyTorch reference through `baseline_time`).
+pub fn simulate(
+    gpu: &GpuSpec,
+    task: &TaskSpec,
+    cfg: &KernelConfig,
+    params: &SimParams,
+    quality: f64,
+) -> SimOutput {
+    debug_assert!(cfg.is_legal(gpu), "simulate() requires a legalized config");
+    let waste = if cfg.algo_optimal { 1.0 } else { task.baseline_waste };
+    let work_flops = task.flops * waste;
+    let work_bytes = task.ideal_bytes * waste.sqrt(); // waste moves bytes too,
+                                                      // sublinearly (diag-matmul
+                                                      // wastes flops more)
+    let stages = task.stages as f64;
+    let fused = cfg.fused_stages.min(task.stages) as f64;
+    // A KernelBench submission replaces the *hot* operators first: for full
+    // networks the fused portion carries a disproportionate share of the
+    // work (so a slow custom kernel genuinely drags L3 tasks below 1.0x).
+    let heavy = if task.op_class == crate::tasks::OpClass::FullNetwork { 3.5 } else { 1.0 };
+    let frac_fused = (fused / stages * heavy).min(1.0);
+    let kernel_flops = work_flops * frac_fused;
+    let kernel_bytes_min = work_bytes * frac_fused;
+
+    // ----- occupancy ------------------------------------------------------
+    let warps_per_block = (cfg.block_threads / gpu.warp_size).max(1) as f64;
+    let by_warps = (gpu.max_warps_per_sm as f64 / warps_per_block).floor();
+    let by_regs = (gpu.regs_per_sm as f64
+        / (cfg.regs_per_thread as f64 * cfg.block_threads as f64))
+        .floor();
+    let by_smem = if cfg.smem_bytes() > 0.0 {
+        (gpu.smem_per_sm_kb * 1024.0 / cfg.smem_bytes()).floor()
+    } else {
+        f64::INFINITY
+    };
+    let by_blocks = gpu.max_blocks_per_sm as f64;
+    let mut blocks_per_sm = by_warps.min(by_regs).min(by_smem).min(by_blocks);
+    let occ_limit = if blocks_per_sm == by_regs && by_regs <= by_warps {
+        OccLimit::Registers
+    } else if blocks_per_sm == by_smem && by_smem <= by_warps {
+        OccLimit::SharedMem
+    } else if blocks_per_sm == by_blocks && by_blocks < by_warps {
+        OccLimit::Blocks
+    } else {
+        OccLimit::Warps
+    };
+    blocks_per_sm = blocks_per_sm.max(1.0);
+    let occupancy = (blocks_per_sm * warps_per_block / gpu.max_warps_per_sm as f64)
+        .min(1.0);
+
+    // ----- grid / tail ----------------------------------------------------
+    let tile_elems = (cfg.tile_m as f64) * (cfg.tile_n as f64);
+    let mut grid_blocks = (task.out_elems * frac_fused / tile_elems).ceil().max(1.0);
+    if cfg.grid_stride {
+        grid_blocks = grid_blocks.min(blocks_per_sm * gpu.sms as f64 * 8.0);
+    }
+    let concurrent = blocks_per_sm * gpu.sms as f64;
+    let waves = grid_blocks / concurrent;
+    let tail_factor = if waves >= 1.0 {
+        let t = waves.ceil() / waves;
+        if cfg.grid_stride {
+            1.0 + (t - 1.0) * 0.25
+        } else {
+            t
+        }
+    } else {
+        // Partial wave: the machine is underfilled.
+        (1.0 / waves).min(6.0).max(1.0)
+    };
+
+    // ----- memory traffic -------------------------------------------------
+    let passes = cfg.extra_global_passes as f64;
+    let mut useful_bytes = kernel_bytes_min * (1.0 + params.pass_traffic * passes);
+    // L2 absorbs part of the re-referenced traffic when the working set fits;
+    // the hit rate also reflects the access pattern (coalesced bursts and
+    // smem-staged tiles are L2-friendlier; redundant passes thrash).
+    let l2_hit = (0.18
+        + 0.55 * (gpu.l2_mb * 1e6 / kernel_bytes_min.max(1.0)).min(1.0)
+        + 0.05 * (cfg.coalesced as u8 as f64)
+        + 0.04 * (cfg.use_smem as u8 as f64)
+        - 0.04 * (cfg.extra_global_passes.min(2) as f64))
+        .clamp(0.05, 0.88);
+    if task.op_class.has_data_reuse() {
+        // Arithmetic intensity achievable with this staging scheme: smem tile
+        // reuse (~min(tile)/2 flops per DRAM byte for f32 GEMM tiles),
+        // amplified by L2 panel reuse across neighbouring blocks.
+        let intensity = if cfg.use_smem {
+            let t = cfg.tile_m.min(cfg.tile_n) as f64;
+            (t / 2.0) * if cfg.double_buffer { 1.1 } else { 1.0 }
+        } else {
+            3.0 // register-only blocking
+        };
+        let intensity =
+            (intensity * (1.0 + 2.0 * l2_hit)).min(task.ideal_intensity().max(1.0));
+        useful_bytes = useful_bytes.max(kernel_flops / intensity);
+    }
+    let waste_mult = if cfg.coalesced {
+        1.0
+    } else {
+        (params.uncoalesced_waste - 0.2 * cfg.vector_width as f64).max(1.6)
+    };
+    let dram_traffic = useful_bytes * waste_mult * (1.0 - 0.35 * l2_hit);
+
+    // ----- memory time ----------------------------------------------------
+    let vec_bonus = match cfg.vector_width {
+        4 => params.bw_vec4,
+        2 => params.bw_vec4 * 0.45,
+        _ => 0.0,
+    };
+    let occ_mem = (occupancy / 0.30).powf(0.6).min(1.0);
+    let bw_frac = ((params.bw_base
+        + params.bw_coalesced * (cfg.coalesced as u8 as f64)
+        + vec_bonus
+        + 0.05 * (cfg.double_buffer as u8 as f64))
+        * occ_mem)
+        .min(0.94);
+    let mem_time_us = dram_traffic / (gpu.dram_bytes_per_sec() * bw_frac) * 1e6;
+
+    // ----- compute time ---------------------------------------------------
+    let tc_aligned = cfg.tile_m % 16 == 0 && cfg.tile_n % 16 == 0 && cfg.tile_k % 16 == 0;
+    let tc_active = cfg.use_tensor_cores && task.tc_eligible && tc_aligned;
+    let peak_tflops = if tc_active { gpu.tensor_tflops } else { gpu.fp32_tflops };
+    let pipe_base = if tc_active {
+        0.40 + 0.20 * (cfg.use_smem as u8 as f64) + 0.08 * (cfg.double_buffer as u8 as f64)
+    } else {
+        0.50 + 0.08 * (cfg.use_smem as u8 as f64)
+    };
+    let occ_comp = (occupancy / 0.25).powf(0.5).min(1.0);
+    let ilp = (0.72 + 0.09 * log2f(cfg.unroll as f64)).min(1.0);
+    let pipe_eff = (pipe_base * occ_comp * ilp).min(0.90);
+    let compute_time_us = kernel_flops / (peak_tflops * 1e12 * pipe_eff) * 1e6;
+
+    // ----- stall overheads --------------------------------------------------
+    let mem_share = mem_time_us / (mem_time_us + compute_time_us).max(1e-9);
+    let stall_barrier = (params.sync_cost
+        * cfg.syncs_per_tile as f64
+        * (cfg.block_threads as f64 / 128.0).sqrt())
+    .min(0.50);
+    let stall_short_sb = if cfg.use_smem && !cfg.smem_padded {
+        params.bank_conflict_cost
+    } else if cfg.use_smem {
+        0.015
+    } else {
+        0.005
+    };
+    // Long-scoreboard: global latency not hidden — driven by low occupancy on
+    // the memory-bound side and by redundant passes (dependent re-reads).
+    let stall_long_sb = (mem_share * ((0.55 - occupancy).max(0.0) * 1.2 + 0.10 * passes))
+        .min(0.65);
+    let overhead = 1.0 + stall_barrier + stall_short_sb + stall_long_sb * 0.6;
+
+    let raw_kernel = mem_time_us.max(compute_time_us);
+    let kernel_time_us = raw_kernel * overhead * tail_factor / quality.max(0.05);
+
+    // ----- unfused eager remainder -----------------------------------------
+    let eager_stages = stages - fused;
+    let (eager_time_us, launch_time_us) = eager_cost(
+        gpu,
+        task,
+        params,
+        work_flops * (1.0 - frac_fused),
+        work_bytes * (1.0 - frac_fused),
+        eager_stages,
+    );
+    let launch_total = launch_time_us + params.launch_us; // + our own launch
+
+    let runtime_us = kernel_time_us + eager_time_us + launch_total;
+
+    // ----- bottleneck attribution ------------------------------------------
+    let bottleneck = attribute_bottleneck(
+        task,
+        cfg,
+        occupancy,
+        occ_limit,
+        mem_share,
+        stall_barrier,
+        stall_short_sb,
+        stall_long_sb,
+        waste_mult,
+        tc_active,
+        kernel_time_us,
+        eager_time_us + launch_total,
+        waste,
+    );
+
+    // Stall fractions normalized to "percent of active warps" style numbers.
+    let stall_mem_dep = (mem_share * 0.18).min(0.4);
+    let stall_branch = if cfg.grid_stride { 0.035 } else { 0.015 };
+    let issue_frac = (1.0
+        - (stall_barrier + stall_short_sb + stall_long_sb + stall_mem_dep + stall_branch))
+        .clamp(0.05, 0.95);
+
+    let inst_executed = kernel_flops / (2.0 * cfg.vector_width as f64)
+        + useful_bytes / (4.0 * cfg.vector_width as f64);
+
+    SimOutput {
+        runtime_us,
+        internals: Internals {
+            occupancy,
+            occ_limit,
+            blocks_per_sm,
+            grid_blocks,
+            waves,
+            dram_traffic,
+            useful_bytes,
+            mem_time_us,
+            compute_time_us,
+            kernel_time_us,
+            eager_time_us,
+            launch_time_us: launch_total,
+            bw_frac,
+            mem_share,
+            stall_barrier,
+            stall_long_sb,
+            stall_short_sb,
+            stall_mem_dep,
+            stall_branch,
+            l1_hit: if cfg.use_smem { 0.55 } else { 0.35 } + 0.2 * (cfg.coalesced as u8 as f64),
+            l2_hit,
+            issue_frac,
+            fp32_pipe: if tc_active { 0.12 } else { pipe_eff * (1.0 - mem_share).max(0.08) },
+            tensor_pipe: if tc_active { pipe_eff * (1.0 - mem_share).max(0.10) } else { 0.0 },
+            inst_executed,
+            bottleneck,
+        },
+    }
+}
+
+/// Cost of the stages the custom kernel did not fuse: each runs as a
+/// library/eager kernel, round-tripping its intermediates through HBM.
+fn eager_cost(
+    gpu: &GpuSpec,
+    task: &TaskSpec,
+    params: &SimParams,
+    work_flops: f64,
+    work_bytes: f64,
+    eager_stages: f64,
+) -> (f64, f64) {
+    if eager_stages <= 0.0 {
+        return (0.0, 0.0);
+    }
+    let per_stage_flops = work_flops / eager_stages;
+    let per_stage_bytes = work_bytes / eager_stages + 2.0 * task.intermediate_bytes;
+    let peak = if task.tc_eligible { gpu.tensor_tflops } else { gpu.fp32_tflops };
+    let t_mem = per_stage_bytes / (gpu.dram_bytes_per_sec() * params.eager_bw_frac) * 1e6;
+    let t_comp = per_stage_flops / (peak * 1e12 * params.lib_pipe) * 1e6;
+    let per_stage = t_mem.max(t_comp) / task.baseline_quality;
+    // Unfused stages stay framework ops: launch latency + eager dispatch.
+    (
+        eager_stages * per_stage,
+        eager_stages * (params.launch_us + params.dispatch_us),
+    )
+}
+
+/// The PyTorch reference latency: the library configuration priced through
+/// the same model (fused_stages = 1 — eager dispatch fuses nothing).
+pub fn baseline_time(gpu: &GpuSpec, task: &TaskSpec, params: &SimParams) -> f64 {
+    let mut cfg = library_config(task);
+    cfg.legalize(gpu);
+    // The reference's own "kernel" stage is a framework op too.
+    simulate(gpu, task, &cfg, params, task.baseline_quality).runtime_us
+        + params.dispatch_us
+}
+
+/// What a tuned vendor library kernel looks like in configuration space.
+pub fn library_config(task: &TaskSpec) -> KernelConfig {
+    let mut cfg = KernelConfig::naive();
+    cfg.coalesced = true;
+    cfg.vector_width = 4;
+    cfg.unroll = 4;
+    cfg.regs_per_thread = 96;
+    cfg.extra_global_passes = 0;
+    cfg.fused_stages = 1;
+    if task.op_class.has_data_reuse() {
+        cfg.use_smem = true;
+        cfg.smem_padded = true;
+        cfg.double_buffer = true;
+        cfg.tile_m = 64;
+        cfg.tile_n = 64;
+        cfg.tile_k = 32;
+        cfg.syncs_per_tile = 2;
+    }
+    if task.tc_eligible {
+        cfg.use_tensor_cores = true;
+        cfg.tile_m = 64;
+        cfg.tile_n = 64;
+        cfg.tile_k = 32;
+        cfg.use_smem = true;
+        cfg.smem_padded = true;
+        cfg.syncs_per_tile = 2;
+    }
+    // The library does NOT know the task's algebraic shortcut (that is the
+    // whole point of KernelBench's wasteful references like diag-matmul).
+    cfg.algo_optimal = false;
+    cfg
+}
+
+#[allow(clippy::too_many_arguments)]
+fn attribute_bottleneck(
+    task: &TaskSpec,
+    cfg: &KernelConfig,
+    occupancy: f64,
+    occ_limit: OccLimit,
+    mem_share: f64,
+    stall_barrier: f64,
+    stall_short_sb: f64,
+    stall_long_sb: f64,
+    waste_mult: f64,
+    tc_active: bool,
+    kernel_time: f64,
+    other_time: f64,
+    waste: f64,
+) -> Bottleneck {
+    // Priority order mirrors how an expert reads an NCU report.
+    if waste > 4.0 {
+        return Bottleneck::AlgorithmicWaste;
+    }
+    if other_time > kernel_time * 1.5 {
+        return Bottleneck::LaunchOverhead;
+    }
+    if stall_barrier > 0.12 && stall_barrier > stall_long_sb {
+        return Bottleneck::BarrierStall;
+    }
+    if mem_share > 0.55 {
+        if waste_mult > 1.5 {
+            return Bottleneck::Uncoalesced;
+        }
+        if occupancy < 0.45 {
+            return match occ_limit {
+                OccLimit::Registers => Bottleneck::OccupancyRegisters,
+                OccLimit::SharedMem => Bottleneck::OccupancySmem,
+                _ => Bottleneck::MemLatency,
+            };
+        }
+        if stall_long_sb > 0.25 || cfg.extra_global_passes > 0 {
+            return Bottleneck::MemLatency;
+        }
+        return Bottleneck::MemBandwidth;
+    }
+    if stall_short_sb > 0.05 {
+        return Bottleneck::ShortScoreboard;
+    }
+    if task.tc_eligible && !tc_active {
+        return Bottleneck::ComputeBound;
+    }
+    if occupancy < 0.30 {
+        return match occ_limit {
+            OccLimit::Registers => Bottleneck::OccupancyRegisters,
+            OccLimit::SharedMem => Bottleneck::OccupancySmem,
+            _ => Bottleneck::ComputeBound,
+        };
+    }
+    if mem_share > 0.4 {
+        Bottleneck::MemBandwidth
+    } else if cfg.unroll < 8 || !tc_active {
+        Bottleneck::ComputeBound
+    } else {
+        Bottleneck::None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::{A100, H200, RTX3090, RTX6000_ADA};
+    use crate::kernel::{Opt, OPT_CATALOG};
+    use crate::tasks::{by_id, kernelbench};
+    use crate::util::prop;
+
+    fn p() -> SimParams {
+        SimParams::default()
+    }
+
+    #[test]
+    fn baseline_is_positive_and_finite_everywhere() {
+        for t in kernelbench() {
+            for gpu in [&RTX6000_ADA, &A100, &H200, &RTX3090] {
+                let b = baseline_time(gpu, &t, &p());
+                assert!(b.is_finite() && b > 0.0, "{} on {}", t.id(), gpu.key);
+            }
+        }
+    }
+
+    #[test]
+    fn library_config_beats_naive() {
+        // The vendor library should beat a naive kernel on essentially every
+        // task (this is why o3 one-shot sits below 1.0x in Table 1).
+        let tasks = kernelbench();
+        let mut wins = 0;
+        for t in &tasks {
+            let mut naive = KernelConfig::naive();
+            naive.legalize(&RTX6000_ADA);
+            let tn = simulate(&RTX6000_ADA, t, &naive, &p(), 1.0).runtime_us;
+            let tb = baseline_time(&RTX6000_ADA, t, &p());
+            if tb < tn {
+                wins += 1;
+            }
+        }
+        assert!(wins > 200, "library won only {wins}/250");
+    }
+
+    #[test]
+    fn each_transform_helps_its_target_situation() {
+        let gpu = &RTX6000_ADA;
+        // Coalescing on an uncoalesced memory-bound kernel.
+        let t = by_id("L1-24").unwrap(); // Softmax: traffic-bound
+        let mut c = KernelConfig::naive();
+        c.legalize(gpu);
+        let before = simulate(gpu, &t, &c, &p(), 1.0).runtime_us;
+        Opt::CoalesceAccesses.apply(&mut c, &t, gpu);
+        let after = simulate(gpu, &t, &c, &p(), 1.0).runtime_us;
+        assert!(after < before * 0.8, "coalesce: {before} -> {after}");
+
+        // Warp shuffle on a barrier-heavy kernel.
+        let mut c = KernelConfig::naive();
+        c.syncs_per_tile = 16;
+        c.coalesced = true;
+        c.legalize(gpu);
+        let before = simulate(gpu, &t, &c, &p(), 1.0).runtime_us;
+        Opt::WarpShuffleReduction.apply(&mut c, &t, gpu);
+        let after = simulate(gpu, &t, &c, &p(), 1.0).runtime_us;
+        assert!(after < before, "shuffle: {before} -> {after}");
+
+        // Tensor cores + larger tiles on an eligible compute-heavy GEMM
+        // (controlled task: high arithmetic intensity so compute is the wall).
+        let t = TaskSpec {
+            level: 1,
+            index: 999,
+            name: "synthetic_big_gemm".into(),
+            op_class: crate::tasks::OpClass::MatMul,
+            flops: 2e8 * 256.0,
+            ideal_bytes: 2e8,
+            out_elems: 2.5e7,
+            intermediate_bytes: 1e8,
+            stages: 1,
+            tc_eligible: true,
+            difficulty: 0.3,
+            baseline_quality: 0.9,
+            baseline_waste: 1.0,
+            binding: None,
+        };
+        let mut c = KernelConfig::naive();
+        c.coalesced = true;
+        c.use_smem = true;
+        c.tile_m = 64;
+        c.tile_n = 64;
+        c.tile_k = 32;
+        c.syncs_per_tile = 2;
+        c.legalize(gpu);
+        let before = simulate(gpu, &t, &c, &p(), 1.0).runtime_us;
+        Opt::UseTensorCores.apply(&mut c, &t, gpu);
+        let mid = simulate(gpu, &t, &c, &p(), 1.0).runtime_us;
+        assert!(mid <= before * 1.001, "tensor cores alone: {before} -> {mid}");
+        Opt::IncreaseTileSize.apply(&mut c, &t, gpu);
+        let after = simulate(gpu, &t, &c, &p(), 1.0).runtime_us;
+        assert!(after < before * 0.8, "tc + tiles: {before} -> {after}");
+
+        // Fusing stages on an L2 chain.
+        let t = by_id("L2-51").unwrap();
+        let mut c = library_config(&t);
+        c.legalize(gpu);
+        let before = simulate(gpu, &t, &c, &p(), 1.0).runtime_us;
+        for _ in 0..(t.stages - 1) {
+            Opt::FuseStages.apply(&mut c, &t, gpu);
+        }
+        let after = simulate(gpu, &t, &c, &p(), 1.0).runtime_us;
+        assert!(after < before * 0.75, "fusion: {before} -> {after}");
+
+        // Algorithmic rewrite on the diag-matmul anchor.
+        let t = by_id("L1-12").unwrap();
+        let mut c = library_config(&t);
+        c.legalize(gpu);
+        let before = simulate(gpu, &t, &c, &p(), 1.0).runtime_us;
+        Opt::AlgorithmicRewrite.apply(&mut c, &t, gpu);
+        let after = simulate(gpu, &t, &c, &p(), 1.0).runtime_us;
+        assert!(after < before * 0.2, "algo rewrite: {before} -> {after}");
+    }
+
+    #[test]
+    fn occupancy_limits_attributed() {
+        let t = by_id("L1-1").unwrap();
+        let gpu = &RTX6000_ADA;
+        let mut c = KernelConfig::naive();
+        c.regs_per_thread = 255;
+        c.block_threads = 256;
+        c.legalize(gpu);
+        let out = simulate(gpu, &t, &c, &p(), 1.0);
+        assert_eq!(out.internals.occ_limit, OccLimit::Registers);
+        assert!(out.internals.occupancy < 0.5);
+    }
+
+    /// Property: runtime is finite/positive and stall fractions bounded for
+    /// arbitrary legal configs on arbitrary tasks/GPUs.
+    #[test]
+    fn prop_simulator_sane() {
+        let tasks = kernelbench();
+        prop::check("sim-sane", 0x51AB, |rng| {
+            let task = &tasks[rng.below(tasks.len())];
+            let gpu = crate::gpu::ALL[rng.below(crate::gpu::ALL.len())];
+            let mut cfg = KernelConfig::naive();
+            // Random walk in config space.
+            for _ in 0..rng.range_usize(0, 10) {
+                let o = OPT_CATALOG[rng.below(OPT_CATALOG.len())];
+                if o.applicable(task, &cfg) {
+                    o.apply(&mut cfg, task, gpu);
+                }
+            }
+            cfg.legalize(gpu);
+            let out = simulate(gpu, task, &cfg, &p(), 1.0);
+            let i = &out.internals;
+            prop::ensure(out.runtime_us.is_finite() && out.runtime_us > 0.0, "runtime")?;
+            prop::ensure((0.0..=1.0).contains(&i.occupancy), "occupancy")?;
+            prop::ensure(i.dram_traffic >= 0.0, "traffic")?;
+            let stalls = i.stall_barrier + i.stall_long_sb + i.stall_short_sb
+                + i.stall_mem_dep + i.stall_branch;
+            prop::ensure(stalls <= 1.8, format!("stall sum {stalls}"))?;
+            prop::ensure((0.0..=1.0).contains(&i.issue_frac), "issue")?;
+            Ok(())
+        });
+    }
+
+    /// Property: the simulator is monotone in obvious levers — adding a
+    /// redundant pass never speeds the kernel up; removing coalescing never
+    /// speeds it up.
+    #[test]
+    fn prop_monotonicity() {
+        let tasks = kernelbench();
+        prop::check("sim-monotone", 0x0A70, |rng| {
+            let task = &tasks[rng.below(tasks.len())];
+            let gpu = &RTX6000_ADA;
+            let mut cfg = KernelConfig::naive();
+            cfg.coalesced = rng.chance(0.5);
+            cfg.legalize(gpu);
+            let base = simulate(gpu, task, &cfg, &p(), 1.0).runtime_us;
+            let mut worse = cfg.clone();
+            worse.extra_global_passes += 1;
+            worse.legalize(gpu);
+            let slower = simulate(gpu, task, &worse, &p(), 1.0).runtime_us;
+            prop::ensure(slower >= base * 0.999, format!("pass: {base} -> {slower}"))?;
+            if cfg.coalesced {
+                let mut unc = cfg.clone();
+                unc.coalesced = false;
+                let t2 = simulate(gpu, task, &unc, &p(), 1.0).runtime_us;
+                prop::ensure(t2 >= base * 0.999, format!("uncoalesce {base} -> {t2}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn h200_faster_than_rtx3090_on_bandwidth_bound() {
+        let t = by_id("L1-24").unwrap();
+        let mut c = library_config(&t);
+        c.legalize(&H200);
+        let fast = simulate(&H200, &t, &c, &p(), 1.0).runtime_us;
+        let mut c2 = library_config(&t);
+        c2.legalize(&RTX3090);
+        let slow = simulate(&RTX3090, &t, &c2, &p(), 1.0).runtime_us;
+        assert!(fast < slow, "H200 {fast} vs 3090 {slow}");
+    }
+}

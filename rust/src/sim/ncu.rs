@@ -1,0 +1,392 @@
+//! Nsight-Compute metric emission.
+//!
+//! Turns simulator internals into the named metric vector the Judge reads.
+//! The catalog is a ~64-metric superset of the paper's 24-metric key subset
+//! (Appendix B.3, Table 8) plus the extra names appearing in the per-task
+//! Top-20 tables (Tables 6–7), plus aliases and weakly-informative metrics —
+//! the redundancy that "overwhelms" the full-metrics Judge (§3.6, App. B.1).
+//!
+//! Metrics are indexed positionally (`CATALOG[i]`), so the hot path never
+//! touches strings; names only matter for prompts, reports and the
+//! metric-selection pipeline output.
+
+use crate::gpu::GpuSpec;
+use crate::kernel::KernelConfig;
+use crate::sim::SimOutput;
+use crate::tasks::TaskSpec;
+use crate::util::rng::Rng;
+
+/// The paper's 24-metric key subset (Appendix B.3 Table 8, exact names).
+pub const KEY_SUBSET: [&str; 24] = [
+    "sm__cycles_active.avg",
+    "sm__warps_active.avg.pct_of_peak_sustained_active",
+    "launch__occupancy_limit_blocks",
+    "launch__occupancy_limit_registers",
+    "launch__occupancy_limit_shared_mem",
+    "launch__registers_per_thread",
+    "sm__inst_executed.sum",
+    "sm__inst_executed_pipe_fp32.avg.pct_of_peak_sustained_active",
+    "sm__inst_executed_pipe_tensor.avg.pct_of_peak_sustained_active",
+    "dram__bytes_read.sum",
+    "dram__bytes_write.sum",
+    "dram__throughput.avg.pct_of_peak_sustained_elapsed",
+    "dram__bytes.sum.per_second",
+    "gpu__dram_throughput.avg.pct_of_peak_sustained_elapsed",
+    "l1tex__t_sector_hit_rate.pct",
+    "l1tex__throughput.avg.pct_of_peak_sustained_active",
+    "lts__t_sector_hit_rate.pct",
+    "lts__throughput.avg.pct_of_peak_sustained_active",
+    "smsp__warp_issue_stalled_memory_dependency_per_warp_active.pct",
+    "smsp__warp_issue_stalled_short_scoreboard_per_warp_active.pct",
+    "smsp__warp_issue_stalled_long_scoreboard_per_warp_active.pct",
+    "smsp__warp_issue_stalled_barrier_per_warp_active.pct",
+    "smsp__warp_issue_stalled_branch_resolving_per_warp_active.pct",
+    "smsp__sass_average_branch_targets_threads_uniform.pct",
+];
+
+/// Full catalog: the key subset first (indices 0..24), then the Tables-6/7
+/// extras, aliases, and weak/noise metrics.
+pub const CATALOG: [&str; 64] = [
+    // 0..24 — key subset (order matches KEY_SUBSET)
+    "sm__cycles_active.avg",
+    "sm__warps_active.avg.pct_of_peak_sustained_active",
+    "launch__occupancy_limit_blocks",
+    "launch__occupancy_limit_registers",
+    "launch__occupancy_limit_shared_mem",
+    "launch__registers_per_thread",
+    "sm__inst_executed.sum",
+    "sm__inst_executed_pipe_fp32.avg.pct_of_peak_sustained_active",
+    "sm__inst_executed_pipe_tensor.avg.pct_of_peak_sustained_active",
+    "dram__bytes_read.sum",
+    "dram__bytes_write.sum",
+    "dram__throughput.avg.pct_of_peak_sustained_elapsed",
+    "dram__bytes.sum.per_second",
+    "gpu__dram_throughput.avg.pct_of_peak_sustained_elapsed",
+    "l1tex__t_sector_hit_rate.pct",
+    "l1tex__throughput.avg.pct_of_peak_sustained_active",
+    "lts__t_sector_hit_rate.pct",
+    "lts__throughput.avg.pct_of_peak_sustained_active",
+    "smsp__warp_issue_stalled_memory_dependency_per_warp_active.pct",
+    "smsp__warp_issue_stalled_short_scoreboard_per_warp_active.pct",
+    "smsp__warp_issue_stalled_long_scoreboard_per_warp_active.pct",
+    "smsp__warp_issue_stalled_barrier_per_warp_active.pct",
+    "smsp__warp_issue_stalled_branch_resolving_per_warp_active.pct",
+    "smsp__sass_average_branch_targets_threads_uniform.pct",
+    // 24.. — cycles/launch extras (Tables 6-7)
+    "gpc__cycles_elapsed.max",
+    "gpc__cycles_elapsed.avg.per_second",
+    "dram__cycles_elapsed.avg.per_second",
+    "launch__grid_size",
+    "launch__thread_count",
+    "launch__waves_per_multiprocessor",
+    "launch__shared_mem_per_block_static",
+    "launch__block_size",
+    // instruction aliases (collinear cluster around inst_executed)
+    "smsp__inst_executed.avg",
+    "smsp__inst_executed.sum",
+    "smsp__inst_issued.avg",
+    "smsp__inst_issued.sum",
+    "sm__inst_executed.avg.per_cycle_elapsed",
+    "sm__inst_executed.avg.per_cycle_active",
+    "sm__inst_issued.avg.per_cycle_active",
+    "sm__inst_issued.avg.pct_of_peak_sustained_active",
+    "sm__instruction_throughput.avg.pct_of_peak_sustained_active",
+    // issue metrics
+    "smsp__issue_active.avg.pct_of_peak_sustained",
+    "smsp__issue_active.avg.per_cycle_active",
+    "smsp__issue_inst0.avg.pct_of_peak_sustained_active",
+    "smsp__average_warp_latency_per_inst_issued.ratio",
+    "smsp__average_warps_active_per_inst_executed.ratio",
+    "smsp__warps_eligible.avg.per_cycle_active",
+    // branch
+    "smsp__inst_executed_op_branch.sum",
+    "derived__smsp__inst_executed_op_branch_pct",
+    // compound throughputs
+    "gpu__compute_memory_request_throughput.avg.pct_of_peak_sustained_elapsed",
+    "gpu__compute_memory_throughput.avg.pct_of_peak_sustained_elapsed",
+    "sm__throughput.avg.pct_of_peak_sustained_elapsed",
+    // shared-memory detail
+    "l1tex__data_bank_conflicts_pipe_lsu.sum",
+    "l1tex__data_pipe_lsu_wavefronts_mem_shared.sum",
+    // sass op counts (flops aliases)
+    "sm__sass_thread_inst_executed_op_fadd_pred_on.sum",
+    "sm__sass_thread_inst_executed_op_ffma_pred_on.sum",
+    "sm__sass_thread_inst_executed_op_fmul_pred_on.sum",
+    "smsp__thread_inst_executed_per_inst_executed.ratio",
+    // timing aliases
+    "gpu__time_duration.sum",
+    "sm__cycles_elapsed.avg",
+    // weak / noise metrics (real NCU names that rarely explain runtime)
+    "idc__request_cycles_active.avg.pct_of_peak_sustained_active",
+    "sm__mio2rf_writeback_active.avg.pct_of_peak_sustained_active",
+    "l1tex__m_xbar2l1tex_read_sectors.sum",
+    "lts__t_sectors_srcunit_tex_op_read.sum",
+];
+
+pub const N_METRICS: usize = CATALOG.len();
+
+/// Index of a metric name in the catalog.
+pub fn index_of(name: &str) -> Option<usize> {
+    CATALOG.iter().position(|&n| n == name)
+}
+
+/// Indices of the key subset (0..24 by construction; asserted in tests).
+pub fn key_subset_indices() -> Vec<usize> {
+    KEY_SUBSET.iter().map(|n| index_of(n).unwrap()).collect()
+}
+
+/// Named metric ids used by the Judge's diagnosis rules (hot path avoids
+/// string lookups).
+pub mod id {
+    pub const CYCLES_ACTIVE: usize = 0;
+    pub const WARPS_ACTIVE_PCT: usize = 1;
+    pub const OCC_LIMIT_BLOCKS: usize = 2;
+    pub const OCC_LIMIT_REGISTERS: usize = 3;
+    pub const OCC_LIMIT_SHARED_MEM: usize = 4;
+    pub const REGISTERS_PER_THREAD: usize = 5;
+    pub const INST_EXECUTED: usize = 6;
+    pub const PIPE_FP32_PCT: usize = 7;
+    pub const PIPE_TENSOR_PCT: usize = 8;
+    pub const DRAM_BYTES_READ: usize = 9;
+    pub const DRAM_BYTES_WRITE: usize = 10;
+    pub const DRAM_THROUGHPUT_PCT: usize = 11;
+    pub const DRAM_BYTES_PER_SEC: usize = 12;
+    pub const GPU_DRAM_THROUGHPUT_PCT: usize = 13;
+    pub const L1_HIT_PCT: usize = 14;
+    pub const L1_THROUGHPUT_PCT: usize = 15;
+    pub const L2_HIT_PCT: usize = 16;
+    pub const L2_THROUGHPUT_PCT: usize = 17;
+    pub const STALL_MEM_DEP_PCT: usize = 18;
+    pub const STALL_SHORT_SB_PCT: usize = 19;
+    pub const STALL_LONG_SB_PCT: usize = 20;
+    pub const STALL_BARRIER_PCT: usize = 21;
+    pub const STALL_BRANCH_PCT: usize = 22;
+    pub const BRANCH_UNIFORM_PCT: usize = 23;
+}
+
+/// Profile one kernel: emit the full metric vector with NCU-like run-to-run
+/// observation noise (~1.5% on dynamic counters; static launch metrics are
+/// exact).
+pub fn profile(
+    gpu: &GpuSpec,
+    task: &TaskSpec,
+    cfg: &KernelConfig,
+    out: &SimOutput,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let i = &out.internals;
+    // NCU profiles the custom kernel itself, not the eager remainder.
+    let kt_us = i.kernel_time_us.max(1e-3);
+    let kt_s = kt_us * 1e-6;
+    let cycles = kt_us * gpu.clock_ghz * 1e3; // per-SM active cycles
+    let warps_per_block = (cfg.block_threads / gpu.warp_size).max(1) as f64;
+    let occ_pct = i.occupancy * 100.0;
+    let dram_bps = i.dram_traffic / kt_s;
+    let dram_pct = (dram_bps / gpu.dram_bytes_per_sec() * 100.0).min(108.0);
+    // Occupancy-limit block counts per limiter (what launch__occupancy_limit_*
+    // reports): how many blocks each resource alone would allow.
+    let lim_blocks = gpu.max_blocks_per_sm as f64;
+    let lim_regs = (gpu.regs_per_sm as f64
+        / (cfg.regs_per_thread as f64 * cfg.block_threads as f64))
+        .floor()
+        .min(99.0);
+    let lim_smem = if cfg.smem_bytes() > 0.0 {
+        (gpu.smem_per_sm_kb * 1024.0 / cfg.smem_bytes()).floor().min(99.0)
+    } else {
+        99.0 // NCU reports a large sentinel when smem is not limiting
+    };
+    let inst = i.inst_executed;
+    let inst_per_cycle = inst / (cycles * gpu.sms as f64).max(1.0);
+    let issue_pct = i.issue_frac * 100.0;
+    let branch_inst = inst * if cfg.grid_stride { 0.035 } else { 0.018 };
+    let flops = task.flops * if cfg.algo_optimal { 1.0 } else { task.baseline_waste };
+    let branch_uniform =
+        (97.5 - 6.0 * (cfg.grid_stride as u8 as f64)
+            - 5.0 * (!cfg.coalesced as u8 as f64))
+            .clamp(60.0, 100.0);
+    let bank_conflicts = if cfg.use_smem && !cfg.smem_padded {
+        inst * 0.04
+    } else {
+        0.0
+    };
+    let smem_wavefronts = if cfg.use_smem { inst * 0.3 } else { 0.0 };
+    let l1_pct = (i.l1_hit * 100.0).min(99.0);
+    let l2_pct = (i.l2_hit * 100.0).min(99.0);
+    let warp_latency = 1.0 / i.issue_frac.max(0.05) * 12.0;
+
+    let mut v = vec![0.0; N_METRICS];
+    v[id::CYCLES_ACTIVE] = cycles;
+    v[id::WARPS_ACTIVE_PCT] = occ_pct;
+    v[id::OCC_LIMIT_BLOCKS] = lim_blocks;
+    v[id::OCC_LIMIT_REGISTERS] = lim_regs;
+    v[id::OCC_LIMIT_SHARED_MEM] = lim_smem;
+    v[id::REGISTERS_PER_THREAD] = cfg.regs_per_thread as f64;
+    v[id::INST_EXECUTED] = inst;
+    v[id::PIPE_FP32_PCT] = i.fp32_pipe * 100.0;
+    v[id::PIPE_TENSOR_PCT] = i.tensor_pipe * 100.0;
+    // Read/write mix depends on the kernel's structure (redundant passes
+    // re-read; fused kernels avoid intermediate writes) — this is what keeps
+    // the DRAM metric family from being perfectly collinear, as in real NCU
+    // data.
+    let write_frac = (0.34 - 0.05 * cfg.extra_global_passes as f64
+        + 0.04 * (cfg.fused_stages == 1) as u8 as f64)
+        .clamp(0.15, 0.45);
+    v[id::DRAM_BYTES_READ] = i.dram_traffic * (1.0 - write_frac);
+    v[id::DRAM_BYTES_WRITE] = i.dram_traffic * write_frac;
+    v[id::DRAM_THROUGHPUT_PCT] = dram_pct;
+    v[id::DRAM_BYTES_PER_SEC] = dram_bps;
+    v[id::GPU_DRAM_THROUGHPUT_PCT] = dram_pct * 0.995;
+    v[id::L1_HIT_PCT] = l1_pct;
+    v[id::L1_THROUGHPUT_PCT] = (i.bw_frac * 70.0 + i.l1_hit * 25.0).min(98.0);
+    v[id::L2_HIT_PCT] = l2_pct;
+    v[id::L2_THROUGHPUT_PCT] = (dram_pct * 0.8 + l2_pct * 0.15).min(98.0);
+    v[id::STALL_MEM_DEP_PCT] = i.stall_mem_dep * 100.0;
+    v[id::STALL_SHORT_SB_PCT] = i.stall_short_sb * 100.0;
+    v[id::STALL_LONG_SB_PCT] = i.stall_long_sb * 100.0;
+    v[id::STALL_BARRIER_PCT] = i.stall_barrier * 100.0;
+    v[id::STALL_BRANCH_PCT] = i.stall_branch * 100.0;
+    v[id::BRANCH_UNIFORM_PCT] = branch_uniform;
+    // extras
+    let mut k = 24;
+    let set = |v: &mut Vec<f64>, k: &mut usize, x: f64| {
+        v[*k] = x;
+        *k += 1;
+    };
+    set(&mut v, &mut k, cycles * 1.012); // gpc__cycles_elapsed.max
+    set(&mut v, &mut k, gpu.clock_ghz * 1e9 * 0.99); // gpc cycles/sec (clock)
+    set(&mut v, &mut k, gpu.dram_gbps * 1e6 / 2.0); // dram cycles/sec (const)
+    set(&mut v, &mut k, i.grid_blocks); // launch__grid_size
+    set(&mut v, &mut k, i.grid_blocks * cfg.block_threads as f64); // thread_count
+    set(&mut v, &mut k, i.waves); // waves_per_multiprocessor
+    set(&mut v, &mut k, cfg.smem_bytes()); // shared_mem_per_block_static
+    set(&mut v, &mut k, cfg.block_threads as f64); // block_size
+    // instruction aliases
+    let smsp_inst = inst / (gpu.sms as f64 * 4.0);
+    set(&mut v, &mut k, smsp_inst); // smsp inst_executed.avg
+    set(&mut v, &mut k, inst); // smsp inst_executed.sum
+    set(&mut v, &mut k, smsp_inst * 1.02); // smsp inst_issued.avg
+    set(&mut v, &mut k, inst * 1.02); // smsp inst_issued.sum
+    set(&mut v, &mut k, inst_per_cycle * 0.97); // per_cycle_elapsed
+    set(&mut v, &mut k, inst_per_cycle); // per_cycle_active
+    set(&mut v, &mut k, inst_per_cycle * 1.02); // issued per cycle
+    set(&mut v, &mut k, issue_pct * 0.98); // issued pct of peak
+    set(&mut v, &mut k, issue_pct * 0.95); // instruction_throughput pct
+    // issue metrics
+    set(&mut v, &mut k, issue_pct); // issue_active pct
+    set(&mut v, &mut k, i.issue_frac); // issue_active per cycle
+    set(&mut v, &mut k, 100.0 - issue_pct); // issue_inst0 pct
+    set(&mut v, &mut k, warp_latency); // avg warp latency / inst issued
+    set(&mut v, &mut k, warp_latency * 0.99); // warps active / inst executed
+    set(&mut v, &mut k, (i.issue_frac * warps_per_block).min(16.0)); // eligible
+    // branch
+    set(&mut v, &mut k, branch_inst);
+    set(&mut v, &mut k, branch_inst / inst.max(1.0) * 100.0);
+    // compound throughput: max of compute/memory utilization
+    let compute_pct = (i.fp32_pipe + i.tensor_pipe) * 100.0;
+    set(&mut v, &mut k, dram_pct.max(compute_pct) * 0.97);
+    set(&mut v, &mut k, dram_pct.max(compute_pct));
+    set(&mut v, &mut k, compute_pct.max(issue_pct * 0.6));
+    // shared-memory detail
+    set(&mut v, &mut k, bank_conflicts);
+    set(&mut v, &mut k, smem_wavefronts);
+    // sass flop aliases
+    set(&mut v, &mut k, flops * 0.18);
+    set(&mut v, &mut k, flops * 0.41);
+    set(&mut v, &mut k, flops * 0.12);
+    set(&mut v, &mut k, 31.2); // threads per inst (near-constant)
+    // timing aliases
+    set(&mut v, &mut k, kt_us * 1e3); // gpu__time_duration.sum (ns)
+    set(&mut v, &mut k, cycles * 1.006); // sm__cycles_elapsed.avg
+    // weak/noise metrics
+    set(&mut v, &mut k, 3.0); // idc
+    set(&mut v, &mut k, 8.0); // mio2rf
+    set(&mut v, &mut k, i.dram_traffic / 32.0 * 1.1); // xbar sectors alias
+    set(&mut v, &mut k, i.dram_traffic * 0.68 / 32.0); // lts sectors alias
+    debug_assert_eq!(k, N_METRICS);
+
+    // Observation noise: dynamic counters wobble run to run; launch statics
+    // (indices of launch__* and registers) are exact.
+    const EXACT: [usize; 8] = [2, 3, 4, 5, 28, 30, 31, 27];
+    for (idx, x) in v.iter_mut().enumerate() {
+        if !EXACT.contains(&idx) {
+            *x *= rng.lognormal_noise(0.015);
+        }
+    }
+    v
+}
+
+/// Render a metric block for the Judge prompt (name: value lines).
+pub fn render_block(indices: &[usize], values: &[f64]) -> String {
+    use std::fmt::Write;
+    // Preallocate: ~64 chars/line (name + value). Hot path: 1-2x per round.
+    let mut s = String::with_capacity(indices.len() * 80);
+    for &i in indices {
+        let _ = writeln!(s, "{}: {:.4}", CATALOG[i], values[i]);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::RTX6000_ADA;
+    use crate::kernel::KernelConfig;
+    use crate::sim::{simulate, SimParams};
+    use crate::tasks::by_id;
+
+    #[test]
+    fn catalog_well_formed() {
+        assert_eq!(N_METRICS, 64);
+        // key subset occupies the first 24 slots in order
+        for (j, name) in KEY_SUBSET.iter().enumerate() {
+            assert_eq!(index_of(name), Some(j), "{name}");
+        }
+        // no duplicate names
+        let mut names: Vec<&str> = CATALOG.to_vec();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), N_METRICS);
+    }
+
+    #[test]
+    fn profile_emits_consistent_signals() {
+        let task = by_id("L1-95").unwrap();
+        let gpu = &RTX6000_ADA;
+        let mut cfg = KernelConfig::naive();
+        cfg.syncs_per_tile = 16;
+        cfg.legalize(gpu);
+        let out = simulate(gpu, &task, &cfg, &SimParams::default(), 1.0);
+        let mut rng = Rng::new(1);
+        let v = profile(gpu, &task, &cfg, &out, &mut rng);
+        assert_eq!(v.len(), N_METRICS);
+        assert!(v.iter().all(|x| x.is_finite()));
+        // barrier-heavy kernel shows barrier stalls
+        assert!(v[id::STALL_BARRIER_PCT] > 10.0, "{}", v[id::STALL_BARRIER_PCT]);
+        // registers metric is exact
+        assert_eq!(v[id::REGISTERS_PER_THREAD], cfg.regs_per_thread as f64);
+        // read+write split sums to ~traffic
+        let t = v[id::DRAM_BYTES_READ] + v[id::DRAM_BYTES_WRITE];
+        assert!((t / out.internals.dram_traffic - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn noise_differs_across_profiles_but_statics_exact() {
+        let task = by_id("L1-1").unwrap();
+        let gpu = &RTX6000_ADA;
+        let mut cfg = KernelConfig::naive();
+        cfg.legalize(gpu);
+        let out = simulate(gpu, &task, &cfg, &SimParams::default(), 1.0);
+        let a = profile(gpu, &task, &cfg, &out, &mut Rng::new(1));
+        let b = profile(gpu, &task, &cfg, &out, &mut Rng::new(2));
+        assert_ne!(a[id::CYCLES_ACTIVE], b[id::CYCLES_ACTIVE]);
+        assert_eq!(a[id::REGISTERS_PER_THREAD], b[id::REGISTERS_PER_THREAD]);
+        assert_eq!(a[id::OCC_LIMIT_SHARED_MEM], b[id::OCC_LIMIT_SHARED_MEM]);
+    }
+
+    #[test]
+    fn render_block_lists_names() {
+        let s = render_block(&[0, 5], &vec![1.5; N_METRICS]);
+        assert!(s.contains("sm__cycles_active.avg: 1.5"));
+        assert!(s.contains("launch__registers_per_thread: 1.5"));
+    }
+}

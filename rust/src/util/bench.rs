@@ -1,0 +1,98 @@
+//! Criterion-style micro-benchmark harness (criterion itself is not in the
+//! offline vendor set). Used by the `cargo bench` targets and the §Perf pass:
+//! warmup, timed iterations, mean / p50 / p95 and throughput reporting.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn per_second(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Run `f` under timing: ~0.5 s warmup then enough iterations to cover
+/// ~2 s of measurement (min 10, max `max_iters`). Prints a criterion-like
+/// line and returns the stats.
+pub fn bench<F: FnMut()>(name: &str, max_iters: u64, mut f: F) -> BenchResult {
+    // Warmup + per-iteration estimate.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0u64;
+    while warm_start.elapsed() < Duration::from_millis(300) && warm_iters < max_iters {
+        f();
+        warm_iters += 1;
+    }
+    let per_iter = warm_start.elapsed().as_nanos() as f64 / warm_iters.max(1) as f64;
+    let target_iters = ((2e9 / per_iter.max(1.0)) as u64).clamp(10, max_iters);
+
+    let mut samples = Vec::with_capacity(target_iters as usize);
+    for _ in 0..target_iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p50 = samples[samples.len() / 2];
+    let p95 = samples[(samples.len() as f64 * 0.95) as usize % samples.len()];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: target_iters,
+        mean_ns: mean,
+        p50_ns: p50,
+        p95_ns: p95,
+    };
+    println!(
+        "bench {:44} {:>12}/iter  p50 {:>12}  p95 {:>12}  ({} iters, {:>12.0}/s)",
+        r.name,
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.p50_ns),
+        fmt_ns(r.p95_ns),
+        r.iters,
+        r.per_second(),
+    );
+    r
+}
+
+/// `black_box` shim (std::hint::black_box is stable).
+pub use std::hint::black_box;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 1000, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p95_ns * 1.001);
+        assert!(r.iters >= 10);
+    }
+}

@@ -1,0 +1,11 @@
+//! Self-contained infrastructure (the offline vendor set only carries the
+//! `xla` closure — see DESIGN.md §2): JSON, PRNG, statistics, CLI parsing,
+//! ASCII tables, and a property-testing harness.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod bench;
+pub mod table;

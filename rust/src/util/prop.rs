@@ -1,0 +1,85 @@
+//! Property-testing mini-harness (proptest is unavailable offline).
+//!
+//! `check` runs a property over many seeded random cases and, on failure,
+//! reports the failing case seed so the case can be replayed exactly:
+//! every generator draws from a fresh `Rng::new(case_seed)`. No shrinking —
+//! failures print the seed instead, which is enough to reproduce and debug.
+
+use crate::util::rng::Rng;
+
+/// Number of cases the repo-wide property tests run per property.
+pub const DEFAULT_CASES: u64 = 128;
+
+/// Run `prop` over `cases` deterministic cases. `base_seed` separates
+/// properties from each other so adding a property never reshuffles cases
+/// of the others.
+pub fn check_with<F>(name: &str, base_seed: u64, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {case_seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// `check` with the default case count.
+pub fn check<F>(name: &str, base_seed: u64, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check_with(name, base_seed, DEFAULT_CASES, prop);
+}
+
+/// Assertion helpers returning `Result` so properties compose with `?`.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check_with("count", 1, 50, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_seed() {
+        check_with("fails", 2, 10, |rng| {
+            ensure(rng.f64() < 0.5, "value too large")
+        });
+    }
+
+    #[test]
+    fn ensure_close_scales_tolerance() {
+        assert!(ensure_close(1000.0, 1000.05, 1e-4, "x").is_ok());
+        assert!(ensure_close(0.0, 0.5, 1e-4, "x").is_err());
+    }
+}

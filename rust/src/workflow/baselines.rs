@@ -1,0 +1,325 @@
+//! External-system baselines: a Kevin-32B-like RL refiner (Fig. 5) and the
+//! ensemble agentic baseline of [2] (Table 1 / Fig. 4 / Table 3).
+//!
+//! Both are modelled at the fidelity the comparison needs (DESIGN.md §5
+//! "expected shapes"): Kevin does 16 parallel trajectories x 8 refinement
+//! turns with *score-only* feedback (no hardware metrics -> blind
+//! exploration, §1 C3); the agentic baseline samples candidate ensembles and
+//! keeps verified winners (no NCU feedback either), at ~$5 and ~60 min per
+//! kernel (Table 3).
+
+use crate::agents::profiles::O3;
+use crate::agents::{Coder, Feedback, Judge, ModelProfile};
+use crate::cost::CostLedger;
+use crate::kernel::{Bug, KernelConfig};
+use crate::sim::{baseline_time, simulate};
+use crate::tasks::TaskSpec;
+use crate::util::rng::Rng;
+use crate::workflow::{
+    modelled_check, CheckOutcome, CorrectnessOracle, RoundLog, TaskResult, WorkflowConfig,
+};
+
+/// Kevin-32B stand-in: a fine-tuned 32B model — much weaker generation than
+/// o3, decent error fixing (it was RL-trained on exactly that), zero API cost
+/// (self-hosted).
+pub const KEVIN_32B: ModelProfile = ModelProfile {
+    name: "Kevin-32B",
+    gen_skill: 0.45,
+    fix_skill: 0.70,
+    diag_skill: 0.52,
+    follow: 0.60,
+    bug_rate: 0.40,
+    usd_per_mtok_in: 0.0,
+    usd_per_mtok_out: 0.0,
+    seconds_per_call: 20.0,
+    gen_out_tokens: 3000.0,
+    judge_out_tokens: 0.0,
+};
+
+const KEVIN_TRAJECTORIES: usize = 16;
+const KEVIN_TURNS: usize = 8;
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Kevin: 16 trajectories x 8 turns, refinement driven only by the error log
+/// and the speedup score — no NCU, no GPU specs, no independent Judge.
+pub fn run_kevin(
+    wf: &WorkflowConfig,
+    task: &TaskSpec,
+    oracle: &dyn CorrectnessOracle,
+) -> TaskResult {
+    let mut rng = Rng::new(wf.seed ^ fnv(&task.id()) ^ 0x4B45);
+    let coder = Coder::new(KEVIN_32B);
+    // Kevin reads its own error logs (that is what the RL reward taught it).
+    let self_judge = Judge::self_refine(KEVIN_32B);
+    let base_us = baseline_time(wf.gpu, task, &wf.sim);
+
+    // Systematic blind spot: samples from one fine-tuned model share failure
+    // modes, so for a fraction of (hard) tasks *every* trajectory carries an
+    // unfixable defect. This is what keeps any-of-16 from saturating
+    // correctness, matching Kevin's reported 82% on L1-2-difficulty tasks.
+    let hard_case = rng.chance(0.05 + 0.28 * task.difficulty);
+
+    let mut ledger = CostLedger::default();
+    let mut rounds = Vec::new();
+    let mut best: Option<(f64, KernelConfig)> = None;
+    let mut oracle_checks = 0;
+
+    for traj in 0..KEVIN_TRAJECTORIES {
+        let mut trng = rng.fork(traj as u64);
+        let (mut cfg, st) = coder.initial(task, wf.gpu, &mut trng);
+        ledger.charge_call(&wf.cost, &KEVIN_32B, st);
+        if hard_case {
+            cfg.bugs.push(Bug::RaceCondition); // the shared blind spot
+        }
+        let mut pending: Option<(Feedback, String, bool)> = None;
+        for turn in 1..=KEVIN_TURNS {
+            if let Some((fb, log, was_failure)) = pending.take() {
+                let (c, st) = if was_failure {
+                    coder.revise_correction(task, wf.gpu, &cfg, &fb, &log, &mut trng)
+                } else {
+                    // Score-only feedback: no named move — blind exploration.
+                    coder.revise_optimization(
+                        task,
+                        wf.gpu,
+                        &cfg,
+                        &Feedback::NothingFound,
+                        &mut trng,
+                    )
+                };
+                ledger.charge_call(&wf.cost, &KEVIN_32B, st);
+                cfg = c;
+                if hard_case {
+                    // The blind spot re-manifests in every rewrite.
+                    if !cfg.bugs.contains(&Bug::RaceCondition) {
+                        cfg.bugs.push(Bug::RaceCondition);
+                    }
+                }
+            }
+            let outcome = match oracle.check(task, &cfg) {
+                Some(o) => {
+                    oracle_checks += 1;
+                    o
+                }
+                None => modelled_check(&cfg),
+            };
+            let compiled = !matches!(outcome, CheckOutcome::CompileError(_));
+            ledger.charge_compile(&wf.cost, compiled);
+            let (correct, speedup) = match &outcome {
+                CheckOutcome::Pass => {
+                    let out = simulate(wf.gpu, task, &cfg, &wf.sim, 1.0);
+                    let s = base_us / (out.runtime_us * trng.lognormal_noise(0.01));
+                    if best.as_ref().map(|(b, _)| s > *b).unwrap_or(true) {
+                        best = Some((s, cfg.clone()));
+                    }
+                    (true, Some(s))
+                }
+                _ => (false, None),
+            };
+            let error_log = match &outcome {
+                CheckOutcome::CompileError(l) | CheckOutcome::Mismatch(l) => l.clone(),
+                CheckOutcome::Pass => String::new(),
+            };
+            if turn < KEVIN_TURNS {
+                let fb = if !correct {
+                    let (fb, _) = self_judge.correction(task, &cfg, &error_log, &mut trng);
+                    fb
+                } else {
+                    Feedback::NothingFound
+                };
+                pending = Some((fb, error_log, !correct));
+            }
+            if traj == 0 {
+                rounds.push(RoundLog {
+                    round: turn,
+                    mode: if turn == 1 { "initial" } else if correct { "optimization" } else { "correction" },
+                    correct,
+                    compiled,
+                    speedup,
+                    feedback_json: String::new(),
+                    config: cfg.clone(),
+                });
+            }
+        }
+    }
+
+    let (best_speedup, best_config) = match best {
+        Some((s, c)) => (s, Some(c)),
+        None => (0.0, None),
+    };
+    TaskResult {
+        task_id: task.id(),
+        level: task.level,
+        correct: best_config.is_some(),
+        best_speedup,
+        best_config,
+        rounds,
+        ledger,
+        oracle_checks,
+    }
+}
+
+const AGENTIC_ROUNDS: usize = 12;
+const AGENTIC_SAMPLES: usize = 3;
+/// Per-candidate benchmarking overhead of the baseline's exhaustive
+/// verification harness (seconds).
+const AGENTIC_VERIFY_S: f64 = 85.0;
+
+/// The agentic baseline [2]: every round samples an ensemble of candidates
+/// (reasoning + conventional LLMs), verification-filters them, and keeps the
+/// best verified kernel. No hardware feedback; heavy API + wall-clock cost
+/// (the full conversation history rides along in every call).
+pub fn run_agentic(
+    wf: &WorkflowConfig,
+    task: &TaskSpec,
+    oracle: &dyn CorrectnessOracle,
+) -> TaskResult {
+    let mut rng = Rng::new(wf.seed ^ fnv(&task.id()) ^ 0xA6E7);
+    let coder = Coder::new(O3);
+    let judge = Judge::new(O3, crate::agents::MetricMode::Subset);
+    let base_us = baseline_time(wf.gpu, task, &wf.sim);
+
+    let mut ledger = CostLedger::default();
+    let mut rounds = Vec::new();
+    let mut oracle_checks = 0;
+    let mut best: Option<(f64, KernelConfig)> = None;
+    let mut current: Option<KernelConfig> = None;
+    let mut last_fb: Option<(Feedback, String, bool)> = None;
+
+    for round in 1..=AGENTIC_ROUNDS {
+        // Sample an ensemble of candidates.
+        let mut round_best: Option<(f64, bool, KernelConfig, CheckOutcome)> = None;
+        for sample in 0..AGENTIC_SAMPLES {
+            let mut srng = rng.fork((round * 100 + sample) as u64);
+            // Optimization progress comes from *fresh translation sampling*
+            // (best-of-N draws, verification-filtered); refinement chains are
+            // only used to repair a failing candidate. This is what keeps the
+            // baseline below hardware-guided iteration (§1 C3).
+            let (cfg, mut st) = match (&current, &last_fb) {
+                (Some(prev), Some((fb, log, true))) => {
+                    coder.revise_correction(task, wf.gpu, prev, fb, log, &mut srng)
+                }
+                _ => coder.initial(task, wf.gpu, &mut srng),
+            };
+            // The pipeline forwards the full dialogue history every call.
+            st.tokens_in += 20_000.0;
+            ledger.charge_call(&wf.cost, &O3, st);
+            ledger.wall_s += AGENTIC_VERIFY_S;
+            let outcome = match oracle.check(task, &cfg) {
+                Some(o) => {
+                    oracle_checks += 1;
+                    o
+                }
+                None => modelled_check(&cfg),
+            };
+            let compiled = !matches!(outcome, CheckOutcome::CompileError(_));
+            ledger.charge_compile(&wf.cost, compiled);
+            let score = match &outcome {
+                CheckOutcome::Pass => {
+                    let out = simulate(wf.gpu, task, &cfg, &wf.sim, 1.0);
+                    base_us / (out.runtime_us * srng.lognormal_noise(0.01))
+                }
+                _ => -1.0,
+            };
+            let better = round_best
+                .as_ref()
+                .map(|(s, _, _, _)| score > *s)
+                .unwrap_or(true);
+            if better {
+                round_best = Some((score, score > 0.0, cfg, outcome));
+            }
+        }
+        let (score, correct, cfg, outcome) = round_best.expect("samples > 0");
+        if correct && best.as_ref().map(|(b, _)| score > *b).unwrap_or(true) {
+            best = Some((score, cfg.clone()));
+        }
+        // Verification filtering: keep the best verified candidate as the
+        // next round's seed; on failure, carry correction feedback.
+        let error_log = match &outcome {
+            CheckOutcome::CompileError(l) | CheckOutcome::Mismatch(l) => l.clone(),
+            CheckOutcome::Pass => String::new(),
+        };
+        if !correct {
+            let (fb, st) = judge.correction(task, &cfg, &error_log, &mut rng);
+            ledger.charge_call(&wf.cost, &O3, st);
+            last_fb = Some((fb, error_log, true));
+        } else {
+            last_fb = None;
+        }
+        current = Some(match &best {
+            Some((_, b)) if correct => b.clone(),
+            _ => cfg.clone(),
+        });
+        rounds.push(RoundLog {
+            round,
+            mode: if round == 1 { "initial" } else if correct { "optimization" } else { "correction" },
+            correct,
+            compiled: true,
+            speedup: if correct { Some(score) } else { None },
+            feedback_json: String::new(),
+            config: cfg,
+        });
+    }
+
+    let (best_speedup, best_config) = match best {
+        Some((s, c)) => (s, Some(c)),
+        None => (0.0, None),
+    };
+    TaskResult {
+        task_id: task.id(),
+        level: task.level,
+        correct: best_config.is_some(),
+        best_speedup,
+        best_config,
+        rounds,
+        ledger,
+        oracle_checks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::{H200, RTX6000_ADA};
+    use crate::tasks::by_id;
+    use crate::workflow::{NoOracle, Strategy};
+
+    #[test]
+    fn kevin_runs_trajectories_on_h200() {
+        let task = by_id("L1-95").unwrap();
+        let wf = WorkflowConfig::cudaforge(&H200, 11).with_strategy(Strategy::Kevin);
+        let r = run_kevin(&wf, &task, &NoOracle);
+        // 16 trajectories x 8 turns of compiles.
+        assert_eq!(r.ledger.compiles, (KEVIN_TRAJECTORIES * KEVIN_TURNS) as u32);
+        assert_eq!(r.ledger.api_usd, 0.0); // self-hosted
+        assert_eq!(r.rounds.len(), KEVIN_TURNS); // logs trajectory 0
+    }
+
+    #[test]
+    fn agentic_costs_dollars_not_cents() {
+        let task = by_id("L2-3").unwrap();
+        let wf = WorkflowConfig::cudaforge(&RTX6000_ADA, 2)
+            .with_strategy(Strategy::AgenticBaseline);
+        let r = run_agentic(&wf, &task, &NoOracle);
+        assert!(r.ledger.api_usd > 2.0, "agentic usd {}", r.ledger.api_usd);
+        assert!(r.ledger.wall_min() > 40.0, "agentic min {}", r.ledger.wall_min());
+        assert_eq!(r.rounds.len(), AGENTIC_ROUNDS);
+    }
+
+    #[test]
+    fn kevin_deterministic() {
+        let task = by_id("L1-3").unwrap();
+        let wf = WorkflowConfig::cudaforge(&H200, 5).with_strategy(Strategy::Kevin);
+        let a = run_kevin(&wf, &task, &NoOracle);
+        let b = run_kevin(&wf, &task, &NoOracle);
+        assert_eq!(a.best_speedup, b.best_speedup);
+        assert_eq!(a.correct, b.correct);
+    }
+}

@@ -1,0 +1,456 @@
+//! The CudaForge workflow engine (§2.1, Fig. 2) and its ablation/baseline
+//! strategies (§3.2).
+//!
+//! One `run_task` call executes up to N rounds of the paper's loop for a
+//! single KernelBench task: generate → compile/execute correctness test →
+//! (on failure) Judge correction → (on success) NCU profile + Judge
+//! optimization → Coder revision. The best correct kernel across rounds is
+//! the task's solution (§2.1 "after which we select the most efficient
+//! correct kernel").
+//!
+//! Real numerics: when a task is bound to a Pallas artifact family and a
+//! `CorrectnessOracle` is supplied, the compile/execute stage runs genuine
+//! PJRT executions of the matching kernel variant against its reference
+//! oracle (see `runtime::oracle`).
+
+pub mod baselines;
+
+use crate::agents::{Coder, Feedback, Judge, MetricMode, ModelProfile};
+use crate::cost::{CostLedger, CostModel};
+use crate::gpu::GpuSpec;
+use crate::kernel::KernelConfig;
+use crate::sim::{baseline_time, ncu, simulate, SimParams};
+use crate::tasks::TaskSpec;
+use crate::util::rng::Rng;
+
+/// Which workflow variant to run (Table 1's method rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Base model, single generation, no iteration.
+    OneShot,
+    /// Ten rounds of self-refinement: the same model corrects and optimizes
+    /// its own kernels given hardware feedback (no independent Judge).
+    SelfRefine,
+    /// Judge provides only correctness feedback (o3-correction).
+    CorrectionOnly,
+    /// Judge provides only optimization feedback (o3-optimization).
+    OptimizationOnly,
+    /// The full system: correction + optimization, 24-metric subset.
+    CudaForge,
+    /// Ablation: Judge sees the entire NCU metric set.
+    CudaForgeFullMetrics,
+    /// Kevin-32B-like multi-trajectory RL-style refiner (16 x 8, score-only
+    /// optimization feedback) — Fig. 5's comparison.
+    Kevin,
+    /// The ensemble sampling + verification-filtering agentic baseline [2].
+    AgenticBaseline,
+}
+
+impl Strategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::OneShot => "one-shot",
+            Strategy::SelfRefine => "self-refine",
+            Strategy::CorrectionOnly => "correction-only",
+            Strategy::OptimizationOnly => "optimization-only",
+            Strategy::CudaForge => "CudaForge",
+            Strategy::CudaForgeFullMetrics => "CudaForge(full metrics)",
+            Strategy::Kevin => "Kevin-like",
+            Strategy::AgenticBaseline => "Agentic Baseline",
+        }
+    }
+}
+
+/// Workflow configuration for one run.
+#[derive(Clone)]
+pub struct WorkflowConfig {
+    pub strategy: Strategy,
+    pub max_rounds: usize,
+    pub coder: ModelProfile,
+    pub judge: ModelProfile,
+    pub gpu: &'static GpuSpec,
+    pub sim: SimParams,
+    pub cost: CostModel,
+    pub seed: u64,
+}
+
+impl WorkflowConfig {
+    pub fn cudaforge(gpu: &'static GpuSpec, seed: u64) -> WorkflowConfig {
+        WorkflowConfig {
+            strategy: Strategy::CudaForge,
+            max_rounds: 10,
+            coder: crate::agents::profiles::O3,
+            judge: crate::agents::profiles::O3,
+            gpu,
+            sim: SimParams::default(),
+            cost: CostModel::default(),
+            seed,
+        }
+    }
+
+    pub fn with_strategy(mut self, s: Strategy) -> WorkflowConfig {
+        self.strategy = s;
+        self
+    }
+
+    pub fn with_rounds(mut self, n: usize) -> WorkflowConfig {
+        self.max_rounds = n;
+        self
+    }
+}
+
+/// Outcome of the compile + execute correctness stage (§2.2).
+#[derive(Clone, Debug, PartialEq)]
+pub enum CheckOutcome {
+    CompileError(String),
+    Mismatch(String),
+    Pass,
+}
+
+/// Hook for real-numerics correctness on artifact-bound tasks. Returning
+/// `None` defers to the modelled check (bug presence).
+pub trait CorrectnessOracle: Sync {
+    fn check(&self, task: &TaskSpec, cfg: &KernelConfig) -> Option<CheckOutcome>;
+}
+
+/// The no-op oracle: everything modelled.
+pub struct NoOracle;
+
+impl CorrectnessOracle for NoOracle {
+    fn check(&self, _: &TaskSpec, _: &KernelConfig) -> Option<CheckOutcome> {
+        None
+    }
+}
+
+/// What happened in one round (drives Figs. 7–9 and the case study).
+#[derive(Clone, Debug)]
+pub struct RoundLog {
+    pub round: usize,
+    /// "correction" | "optimization" | "initial"
+    pub mode: &'static str,
+    pub correct: bool,
+    pub compiled: bool,
+    /// Measured speedup vs the PyTorch baseline (correct rounds only).
+    pub speedup: Option<f64>,
+    /// Judge feedback JSON produced *after* this round's test (empty on the
+    /// final round).
+    pub feedback_json: String,
+    pub config: KernelConfig,
+}
+
+/// Result of optimizing one task.
+#[derive(Clone, Debug)]
+pub struct TaskResult {
+    pub task_id: String,
+    pub level: u8,
+    /// Any round produced a correct kernel.
+    pub correct: bool,
+    /// Best speedup among correct rounds (0.0 if never correct — the
+    /// KernelBench fast_p convention).
+    pub best_speedup: f64,
+    pub best_config: Option<KernelConfig>,
+    pub rounds: Vec<RoundLog>,
+    pub ledger: CostLedger,
+    /// Real-numerics executions performed through the oracle.
+    pub oracle_checks: u32,
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Modelled correctness stage (used when no oracle claims the task).
+pub fn modelled_check(cfg: &KernelConfig) -> CheckOutcome {
+    if let Some(b) = cfg.bugs.iter().find(|b| b.is_compile_error()) {
+        return CheckOutcome::CompileError(b.error_log().to_string());
+    }
+    match cfg
+        .bugs
+        .iter()
+        .copied()
+        .max_by(|a, b| a.observability().partial_cmp(&b.observability()).unwrap())
+    {
+        Some(b) => CheckOutcome::Mismatch(b.error_log().to_string()),
+        None => CheckOutcome::Pass,
+    }
+}
+
+/// Run one task through the configured workflow.
+pub fn run_task(
+    wf: &WorkflowConfig,
+    task: &TaskSpec,
+    oracle: &dyn CorrectnessOracle,
+) -> TaskResult {
+    match wf.strategy {
+        Strategy::Kevin => baselines::run_kevin(wf, task, oracle),
+        Strategy::AgenticBaseline => baselines::run_agentic(wf, task, oracle),
+        _ => run_iterative(wf, task, oracle),
+    }
+}
+
+/// The shared iterative loop used by CudaForge and its ablations.
+pub(crate) fn run_iterative(
+    wf: &WorkflowConfig,
+    task: &TaskSpec,
+    oracle: &dyn CorrectnessOracle,
+) -> TaskResult {
+    let mut rng = Rng::new(wf.seed ^ fnv(&task.id()));
+    let coder = Coder::new(wf.coder);
+    let judge = match wf.strategy {
+        Strategy::SelfRefine => Judge::self_refine(wf.coder),
+        Strategy::CudaForgeFullMetrics => Judge::new(wf.judge, MetricMode::Full),
+        _ => Judge::new(wf.judge, MetricMode::Subset),
+    };
+    let full_profile = wf.strategy == Strategy::CudaForgeFullMetrics;
+    let base_us = baseline_time(wf.gpu, task, &wf.sim);
+
+    let mut ledger = CostLedger::default();
+    let mut rounds: Vec<RoundLog> = Vec::with_capacity(wf.max_rounds);
+    let mut oracle_checks = 0u32;
+    let mut best: Option<(f64, KernelConfig)> = None;
+
+    // Round state carried across iterations (lightweight memory: only the
+    // latest candidate + latest feedback survive, per §2.2).
+    let mut cfg: KernelConfig;
+    let mut pending: Option<(Feedback, String, bool)> = None; // (fb, error_log, was_failure)
+
+    let max_rounds = if wf.strategy == Strategy::OneShot { 1 } else { wf.max_rounds };
+
+    {
+        let (c, st) = coder.initial(task, wf.gpu, &mut rng);
+        ledger.charge_call(&wf.cost, &wf.coder, st);
+        cfg = c;
+    }
+
+    for round in 1..=max_rounds {
+        let mut mode = "initial";
+        if round > 1 {
+            let (fb, log, was_failure) = pending.take().expect("feedback pending");
+            let (mut c, st) = if was_failure {
+                mode = "correction";
+                coder.revise_correction(task, wf.gpu, &cfg, &fb, &log, &mut rng)
+            } else {
+                mode = "optimization";
+                coder.revise_optimization(task, wf.gpu, &cfg, &fb, &mut rng)
+            };
+            // Self-refinement carries the model's own rationale as context;
+            // its speculative rewrites hallucinate more (§2.2), which is why
+            // the paper's self-refine loses correctness vs correction-only.
+            if wf.strategy == Strategy::SelfRefine
+                && mode == "optimization"
+                && rng.chance(0.12)
+            {
+                c.bugs.push(crate::kernel::Bug::OobIndex);
+            }
+            ledger.charge_call(&wf.cost, &wf.coder, st);
+            cfg = c;
+        }
+
+        // ---- compile + execute correctness stage --------------------------
+        let outcome = match oracle.check(task, &cfg) {
+            Some(o) => {
+                oracle_checks += 1;
+                o
+            }
+            None => modelled_check(&cfg),
+        };
+        let compiled = !matches!(outcome, CheckOutcome::CompileError(_));
+        ledger.charge_compile(&wf.cost, compiled);
+
+        // One pricing per round: the same SimOutput backs both the latency
+        // measurement and the NCU profile (EXPERIMENTS.md §Perf, change 1).
+        let mut sim_out = None;
+        let (correct, speedup) = match &outcome {
+            CheckOutcome::Pass => {
+                // Measured end-to-end latency (KernelBench timing harness),
+                // with run-to-run noise.
+                let out = simulate(wf.gpu, task, &cfg, &wf.sim, 1.0);
+                let measured = out.runtime_us * rng.lognormal_noise(0.01);
+                sim_out = Some(out);
+                let s = base_us / measured;
+                if best.as_ref().map(|(b, _)| s > *b).unwrap_or(true) {
+                    best = Some((s, cfg.clone()));
+                }
+                (true, Some(s))
+            }
+            _ => (false, None),
+        };
+
+        // ---- feedback for the next round ----------------------------------
+        let mut feedback_json = String::new();
+        if round < max_rounds {
+            let error_log = match &outcome {
+                CheckOutcome::CompileError(l) | CheckOutcome::Mismatch(l) => l.clone(),
+                CheckOutcome::Pass => String::new(),
+            };
+            let (fb, was_failure) = if !correct {
+                let (fb, st) = match wf.strategy {
+                    // o3-optimization: no correction feedback — the Coder only
+                    // sees the raw error log.
+                    Strategy::OptimizationOnly => (Feedback::NothingFound, none_stats()),
+                    _ => {
+                        let (fb, st) = judge.correction(task, &cfg, &error_log, &mut rng);
+                        (fb, st)
+                    }
+                };
+                if st_nonzero(st) {
+                    ledger.charge_call(&wf.cost, &wf.judge, st);
+                }
+                (fb, true)
+            } else {
+                let (fb, st) = match wf.strategy {
+                    // o3-correction: no optimization feedback — the Coder
+                    // improvises unguided.
+                    Strategy::CorrectionOnly => (Feedback::NothingFound, none_stats()),
+                    _ => {
+                        let out = sim_out.take().expect("priced on pass");
+                        let metrics =
+                            ncu::profile(wf.gpu, task, &cfg, &out, &mut rng);
+                        ledger.charge_profile(&wf.cost, full_profile);
+                        judge.optimization(task, wf.gpu, &cfg, &metrics, &mut rng)
+                    }
+                };
+                if st_nonzero(st) {
+                    ledger.charge_call(&wf.cost, &wf.judge, st);
+                }
+                (fb, false)
+            };
+            // The JSON wire round-trip is part of the protocol (§2.2 "Judge
+            // generates structured feedback in JSON format, which is then
+            // extracted and passed to the Coder").
+            feedback_json = fb.to_json().to_string();
+            let parsed = Feedback::from_json(
+                &crate::util::json::Json::parse(&feedback_json).expect("valid JSON"),
+            )
+            .expect("parseable feedback");
+            pending = Some((parsed, error_log, was_failure));
+        }
+
+        rounds.push(RoundLog {
+            round,
+            mode,
+            correct,
+            compiled,
+            speedup,
+            feedback_json,
+            config: cfg.clone(),
+        });
+    }
+
+    let (best_speedup, best_config) = match best {
+        Some((s, c)) => (s, Some(c)),
+        None => (0.0, None),
+    };
+    TaskResult {
+        task_id: task.id(),
+        level: task.level,
+        correct: best_config.is_some(),
+        best_speedup,
+        best_config,
+        rounds,
+        ledger,
+        oracle_checks,
+    }
+}
+
+fn none_stats() -> crate::agents::CallStats {
+    crate::agents::CallStats::default()
+}
+
+fn st_nonzero(st: crate::agents::CallStats) -> bool {
+    st.tokens_in > 0.0 || st.tokens_out > 0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::RTX6000_ADA;
+    use crate::tasks::by_id;
+
+    fn wf(strategy: Strategy, seed: u64) -> WorkflowConfig {
+        WorkflowConfig::cudaforge(&RTX6000_ADA, seed).with_strategy(strategy)
+    }
+
+    #[test]
+    fn cudaforge_runs_n_rounds_and_tracks_best() {
+        let task = by_id("L1-95").unwrap();
+        let r = run_task(&wf(Strategy::CudaForge, 42), &task, &NoOracle);
+        assert_eq!(r.rounds.len(), 10);
+        assert_eq!(r.rounds[0].mode, "initial");
+        if r.correct {
+            assert!(r.best_speedup > 0.0);
+            // best is the max over correct rounds
+            let max_round = r
+                .rounds
+                .iter()
+                .filter_map(|x| x.speedup)
+                .fold(0.0f64, f64::max);
+            assert!((r.best_speedup - max_round).abs() < 1e-9);
+        }
+        assert!(r.ledger.api_usd > 0.0);
+        assert!(r.ledger.wall_s > 0.0);
+    }
+
+    #[test]
+    fn one_shot_is_single_round() {
+        let task = by_id("L1-1").unwrap();
+        let r = run_task(&wf(Strategy::OneShot, 1), &task, &NoOracle);
+        assert_eq!(r.rounds.len(), 1);
+        assert!(r.rounds[0].feedback_json.is_empty());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let task = by_id("L2-51").unwrap();
+        let a = run_task(&wf(Strategy::CudaForge, 7), &task, &NoOracle);
+        let b = run_task(&wf(Strategy::CudaForge, 7), &task, &NoOracle);
+        assert_eq!(a.best_speedup, b.best_speedup);
+        assert_eq!(a.rounds.len(), b.rounds.len());
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.correct, y.correct);
+            assert_eq!(x.feedback_json, y.feedback_json);
+        }
+        let c = run_task(&wf(Strategy::CudaForge, 8), &task, &NoOracle);
+        // different seed should (almost surely) differ somewhere
+        let same = a
+            .rounds
+            .iter()
+            .zip(&c.rounds)
+            .all(|(x, y)| x.feedback_json == y.feedback_json);
+        assert!(!same || a.best_speedup != c.best_speedup);
+    }
+
+    #[test]
+    fn correction_only_never_profiles() {
+        let task = by_id("L1-95").unwrap();
+        let r = run_task(&wf(Strategy::CorrectionOnly, 5), &task, &NoOracle);
+        assert_eq!(r.ledger.profiles, 0);
+    }
+
+    #[test]
+    fn full_metrics_costs_more() {
+        let task = by_id("L2-51").unwrap();
+        let a = run_task(&wf(Strategy::CudaForge, 3), &task, &NoOracle);
+        let b = run_task(&wf(Strategy::CudaForgeFullMetrics, 3), &task, &NoOracle);
+        if a.ledger.profiles > 0 && b.ledger.profiles > 0 {
+            let per_a = a.ledger.wall_s / a.ledger.profiles as f64;
+            let per_b = b.ledger.wall_s / b.ledger.profiles as f64;
+            assert!(per_b > per_a);
+        }
+    }
+
+    #[test]
+    fn modelled_check_classifies() {
+        let mut cfg = KernelConfig::naive();
+        assert_eq!(modelled_check(&cfg), CheckOutcome::Pass);
+        cfg.bugs.push(crate::kernel::Bug::OobIndex);
+        assert!(matches!(modelled_check(&cfg), CheckOutcome::Mismatch(_)));
+        cfg.bugs.push(crate::kernel::Bug::CompileSyntax);
+        assert!(matches!(modelled_check(&cfg), CheckOutcome::CompileError(_)));
+    }
+}

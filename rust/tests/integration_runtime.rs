@@ -1,0 +1,110 @@
+//! Integration: the three layers compose. Executes every AOT artifact on the
+//! PJRT CPU client against its pure-jnp reference, then runs the CudaForge
+//! workflow on the artifact-bound anchor tasks with the real oracle.
+//!
+//! Requires `make artifacts` (skips, loudly, if artifacts are absent).
+
+use std::path::PathBuf;
+
+use cudaforge::gpu::RTX6000_ADA;
+use cudaforge::runtime::oracle::{RealOracle, VerificationMatrix};
+use cudaforge::runtime::Engine;
+use cudaforge::tasks;
+use cudaforge::workflow::{run_task, Strategy, WorkflowConfig};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine() -> Option<Engine> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing; run `make artifacts`");
+        return None;
+    }
+    Some(Engine::new(artifacts_dir()).expect("engine"))
+}
+
+#[test]
+fn every_artifact_verdict_matches_its_label() {
+    let Some(mut engine) = engine() else { return };
+    let matrix = VerificationMatrix::build(&mut engine, 42).expect("verification");
+    assert!(matrix.verdicts.len() >= 25, "{} verdicts", matrix.verdicts.len());
+    for (name, v) in &matrix.verdicts {
+        if name.contains("bug_") {
+            assert!(
+                !v.passes,
+                "intentionally-buggy artifact {name} unexpectedly matches its \
+                 reference (max|diff|={:.3e})",
+                v.max_abs_diff
+            );
+        } else {
+            assert!(
+                v.passes,
+                "correct artifact {name} fails tolerance (max|diff|={:.3e})",
+                v.max_abs_diff
+            );
+        }
+    }
+    assert!(matrix.is_consistent());
+}
+
+#[test]
+fn verification_is_stable_across_input_seeds() {
+    let Some(mut engine) = engine() else { return };
+    for seed in [1u64, 99, 12345] {
+        let m = VerificationMatrix::build(&mut engine, seed).expect("verification");
+        assert!(m.is_consistent(), "seed {seed} produced inconsistent verdicts");
+    }
+}
+
+#[test]
+fn workflow_on_anchor_tasks_uses_real_numerics() {
+    let Some(mut engine) = engine() else { return };
+    let matrix = VerificationMatrix::build(&mut engine, 7).expect("verification");
+    let oracle = RealOracle::new(matrix);
+    let mut bound_checked = 0;
+    for id in ["L1-95", "L1-12", "L1-24", "L2-51", "L3-5", "L1-40", "L1-47"] {
+        let task = tasks::by_id(id).expect(id);
+        assert!(task.binding.is_some(), "{id} should be artifact-bound");
+        let wf = WorkflowConfig::cudaforge(&RTX6000_ADA, 2024);
+        let r = run_task(&wf, &task, &oracle);
+        assert_eq!(r.rounds.len(), 10);
+        assert!(r.oracle_checks > 0, "{id}: oracle never consulted");
+        bound_checked += 1;
+        // On anchors CudaForge should essentially always end up correct: the
+        // correction loop sees real mismatches and fixes them.
+        assert!(r.correct, "{id} never produced a correct kernel");
+    }
+    assert_eq!(bound_checked, 7);
+}
+
+#[test]
+fn oracle_and_model_agree_on_clean_and_buggy_configs() {
+    // The modelled check and the artifact-backed check must tell the same
+    // story: clean configs pass, runtime-buggy configs mismatch.
+    let Some(mut engine) = engine() else { return };
+    let matrix = VerificationMatrix::build(&mut engine, 3).expect("verification");
+    let oracle = RealOracle::new(matrix);
+    let task = tasks::by_id("L1-95").unwrap();
+    let mut cfg = cudaforge::kernel::KernelConfig::naive();
+    cfg.legalize(&RTX6000_ADA);
+    use cudaforge::workflow::{modelled_check, CheckOutcome, CorrectnessOracle};
+    assert_eq!(oracle.check(&task, &cfg), Some(CheckOutcome::Pass));
+    assert_eq!(modelled_check(&cfg), CheckOutcome::Pass);
+    cfg.bugs.push(cudaforge::kernel::Bug::UninitValue);
+    assert!(matches!(oracle.check(&task, &cfg), Some(CheckOutcome::Mismatch(_))));
+    assert!(matches!(modelled_check(&cfg), CheckOutcome::Mismatch(_)));
+}
+
+#[test]
+fn kevin_and_agentic_run_with_oracle() {
+    let Some(mut engine) = engine() else { return };
+    let matrix = VerificationMatrix::build(&mut engine, 5).expect("verification");
+    let oracle = RealOracle::new(matrix);
+    let task = tasks::by_id("L1-95").unwrap();
+    for strategy in [Strategy::Kevin, Strategy::AgenticBaseline] {
+        let wf = WorkflowConfig::cudaforge(&RTX6000_ADA, 17).with_strategy(strategy);
+        let r = run_task(&wf, &task, &oracle);
+        assert!(r.oracle_checks > 0, "{strategy:?} skipped the oracle");
+    }
+}

@@ -1,0 +1,169 @@
+//! Property tests over the coordinator/workflow invariants (the proptest
+//! role, via util::prop): run randomized workflows and check the paper's
+//! accounting identities hold for every trace.
+
+use cudaforge::gpu;
+use cudaforge::tasks::kernelbench;
+use cudaforge::util::prop::{check_with, ensure};
+use cudaforge::util::rng::Rng;
+use cudaforge::workflow::{run_task, NoOracle, Strategy, WorkflowConfig};
+
+const STRATEGIES: [Strategy; 8] = [
+    Strategy::OneShot,
+    Strategy::SelfRefine,
+    Strategy::CorrectionOnly,
+    Strategy::OptimizationOnly,
+    Strategy::CudaForge,
+    Strategy::CudaForgeFullMetrics,
+    Strategy::Kevin,
+    Strategy::AgenticBaseline,
+];
+
+fn random_wf(rng: &mut Rng) -> WorkflowConfig {
+    let gpu = gpu::ALL[rng.below(gpu::ALL.len())];
+    WorkflowConfig::cudaforge(gpu, rng.next_u64())
+        .with_strategy(STRATEGIES[rng.below(STRATEGIES.len())])
+        .with_rounds(rng.range_usize(1, 12))
+}
+
+#[test]
+fn prop_task_result_invariants() {
+    let tasks = kernelbench();
+    check_with("task-result-invariants", 0xF00D, 60, |rng| {
+        let task = &tasks[rng.below(tasks.len())];
+        let wf = random_wf(rng);
+        let r = run_task(&wf, task, &NoOracle);
+        // Correctness flag consistent with the best config.
+        ensure(r.correct == r.best_config.is_some(), "correct <-> best_config")?;
+        ensure(
+            (r.correct && r.best_speedup > 0.0) || (!r.correct && r.best_speedup == 0.0),
+            "speedup consistent with correctness",
+        )?;
+        // Best speedup covers the per-round measured speedups. For the
+        // iterative strategies it is exactly the max over the logged rounds;
+        // Kevin/agentic log only one trajectory (resp. the round winner), so
+        // their best may exceed the logged max but never fall below it.
+        let max_round = r.rounds.iter().filter_map(|x| x.speedup).fold(0.0f64, f64::max);
+        match wf.strategy {
+            Strategy::Kevin | Strategy::AgenticBaseline => ensure(
+                r.best_speedup >= max_round - 1e-9,
+                format!("best {} >= logged max {}", r.best_speedup, max_round),
+            )?,
+            _ => ensure(
+                (r.best_speedup - max_round).abs() < 1e-9,
+                format!("best {} == max round {}", r.best_speedup, max_round),
+            )?,
+        }
+        // Rounds marked correct must carry a speedup and vice versa.
+        for round in &r.rounds {
+            ensure(round.correct == round.speedup.is_some(), "round correct <-> speedup")?;
+            ensure(
+                round.speedup.map(|s| s.is_finite() && s > 0.0).unwrap_or(true),
+                "speedup finite",
+            )?;
+            // compile failures can never be correct
+            ensure(round.compiled || !round.correct, "uncompiled can't be correct")?;
+        }
+        // Ledger sanity.
+        ensure(r.ledger.api_usd >= 0.0 && r.ledger.wall_s > 0.0, "ledger positive")?;
+        ensure(r.ledger.agent_calls >= 1, "at least the initial generation")?;
+        ensure(
+            r.ledger.tokens_in > 0.0 || wf.strategy == Strategy::Kevin,
+            "tokens accounted",
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mode_sequencing_follows_the_paper_loop() {
+    // After a failing round the next round is a correction; after a passing
+    // round the next is an optimization (Fig. 2's two feedback arrows).
+    let tasks = kernelbench();
+    check_with("mode-sequencing", 0xAB1E, 60, |rng| {
+        let task = &tasks[rng.below(tasks.len())];
+        let wf = WorkflowConfig::cudaforge(
+            gpu::ALL[rng.below(gpu::ALL.len())],
+            rng.next_u64(),
+        )
+        .with_rounds(rng.range_usize(2, 12));
+        let r = run_task(&wf, task, &NoOracle);
+        for w in r.rounds.windows(2) {
+            let expected = if w[0].correct { "optimization" } else { "correction" };
+            ensure(
+                w[1].mode == expected,
+                format!(
+                    "round {} after correct={} was {}",
+                    w[1].round, w[0].correct, w[1].mode
+                ),
+            )?;
+        }
+        ensure(r.rounds[0].mode == "initial", "first round is the initial generation")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_feedback_wire_format_always_parses() {
+    // Every non-final round's feedback must be valid JSON that round-trips
+    // through the Appendix-A schema.
+    use cudaforge::agents::Feedback;
+    use cudaforge::util::json::Json;
+    let tasks = kernelbench();
+    check_with("feedback-wire-format", 0x1CE, 40, |rng| {
+        let task = &tasks[rng.below(tasks.len())];
+        let wf = random_wf(rng);
+        let r = run_task(&wf, task, &NoOracle);
+        for round in &r.rounds {
+            if round.feedback_json.is_empty() {
+                continue;
+            }
+            let v = Json::parse(&round.feedback_json)
+                .map_err(|e| format!("invalid JSON: {e}"))?;
+            ensure(Feedback::from_json(&v).is_some(), "schema parse")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_more_rounds_never_worse_same_seed() {
+    // With the same seed, raising N extends the same trajectory, so the
+    // best-of selection can only improve (monotone test-time scaling).
+    let tasks = kernelbench();
+    check_with("rounds-monotone", 0x5EED, 30, |rng| {
+        let task = &tasks[rng.below(tasks.len())];
+        let seed = rng.next_u64();
+        let gpu = &gpu::RTX6000_ADA;
+        let small = run_task(
+            &WorkflowConfig::cudaforge(gpu, seed).with_rounds(4),
+            task,
+            &NoOracle,
+        );
+        let large = run_task(
+            &WorkflowConfig::cudaforge(gpu, seed).with_rounds(12),
+            task,
+            &NoOracle,
+        );
+        ensure(
+            large.best_speedup >= small.best_speedup * 0.999 - 1e-9,
+            format!("N=12 {} vs N=4 {}", large.best_speedup, small.best_speedup),
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cost_scales_with_rounds() {
+    let tasks = kernelbench();
+    check_with("cost-scales", 0xC057, 30, |rng| {
+        let task = &tasks[rng.below(tasks.len())];
+        let seed = rng.next_u64();
+        let gpu = &gpu::RTX6000_ADA;
+        let a = run_task(&WorkflowConfig::cudaforge(gpu, seed).with_rounds(2), task, &NoOracle);
+        let b = run_task(&WorkflowConfig::cudaforge(gpu, seed).with_rounds(10), task, &NoOracle);
+        ensure(b.ledger.api_usd > a.ledger.api_usd, "more rounds, more spend")?;
+        ensure(b.ledger.wall_s > a.ledger.wall_s, "more rounds, more time")?;
+        Ok(())
+    });
+}
