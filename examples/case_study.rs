@@ -8,8 +8,7 @@
 //!     cargo run --release --example case_study
 
 use cudaforge::gpu::RTX6000_ADA;
-use cudaforge::runtime::oracle::{RealOracle, VerificationMatrix};
-use cudaforge::runtime::Engine;
+use cudaforge::runtime;
 use cudaforge::tasks;
 use cudaforge::util::json::Json;
 use cudaforge::workflow::{run_task, CorrectnessOracle, NoOracle, WorkflowConfig};
@@ -18,11 +17,10 @@ fn main() {
     let task = tasks::by_id("L1-95").unwrap();
     println!("== Figure 8 case study: {} ({}) ==\n", task.id(), task.name);
 
-    let oracle: Box<dyn CorrectnessOracle> =
-        match Engine::new("artifacts").and_then(|mut e| VerificationMatrix::build(&mut e, 42)) {
-            Ok(m) => Box::new(RealOracle::new(m)),
-            Err(_) => Box::new(NoOracle),
-        };
+    let oracle: Box<dyn CorrectnessOracle> = match runtime::try_real_oracle("artifacts", 42) {
+        Some(o) => Box::new(o),
+        None => Box::new(NoOracle),
+    };
 
     // Try several seeds and present the run that contains at least one
     // correction round — the paper's Figure 8 shows a 10-round trace with

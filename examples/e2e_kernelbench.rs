@@ -12,16 +12,25 @@
 //!
 //!     make artifacts && cargo run --release --example e2e_kernelbench
 
-use std::time::Instant;
-
-use cudaforge::coordinator::{default_threads, run_suite};
-use cudaforge::gpu::RTX6000_ADA;
-use cudaforge::runtime::oracle::{RealOracle, VerificationMatrix};
-use cudaforge::runtime::Engine;
-use cudaforge::tasks;
-use cudaforge::workflow::WorkflowConfig;
-
+#[cfg(not(feature = "pjrt"))]
 fn main() {
+    println!(
+        "e2e_kernelbench needs the PJRT engine — rebuild with `--features pjrt` \
+         (requires the vendored `xla` crate, see rust/Cargo.toml)"
+    );
+}
+
+#[cfg(feature = "pjrt")]
+fn main() {
+    use std::time::Instant;
+
+    use cudaforge::coordinator::{default_threads, run_suite};
+    use cudaforge::gpu::RTX6000_ADA;
+    use cudaforge::runtime::oracle::{RealOracle, VerificationMatrix};
+    use cudaforge::runtime::Engine;
+    use cudaforge::tasks;
+    use cudaforge::workflow::WorkflowConfig;
+
     // ---- stage 1: execute every artifact on PJRT --------------------------
     let mut engine = Engine::new("artifacts")
         .expect("artifacts/manifest.json missing — run `make artifacts` first");

@@ -7,8 +7,7 @@
 //! `make artifacts` first), otherwise the modelled correctness check.
 
 use cudaforge::gpu::RTX6000_ADA;
-use cudaforge::runtime::oracle::{RealOracle, VerificationMatrix};
-use cudaforge::runtime::Engine;
+use cudaforge::runtime;
 use cudaforge::tasks;
 use cudaforge::workflow::{run_task, CorrectnessOracle, NoOracle, WorkflowConfig};
 
@@ -16,18 +15,20 @@ fn main() {
     let task = tasks::by_id("L2-51").expect("the Appendix-B.1 anchor task");
     println!("task: {} — {} (level {})", task.id(), task.name, task.level);
 
-    // Real numerics when the AOT artifacts are present.
-    let oracle: Box<dyn CorrectnessOracle> =
-        match Engine::new("artifacts").and_then(|mut e| VerificationMatrix::build(&mut e, 42)) {
-            Ok(m) => {
-                println!("real-numerics oracle: {} artifacts verified on PJRT\n", m.verdicts.len());
-                Box::new(RealOracle::new(m))
-            }
-            Err(_) => {
-                println!("(artifacts missing; modelled correctness — run `make artifacts`)\n");
-                Box::new(NoOracle)
-            }
-        };
+    // Real numerics when the AOT artifacts are present (pjrt feature).
+    let oracle: Box<dyn CorrectnessOracle> = match runtime::try_real_oracle("artifacts", 42) {
+        Some(o) => {
+            println!(
+                "real-numerics oracle: {} artifacts verified on PJRT\n",
+                o.matrix().verdicts.len()
+            );
+            Box::new(o)
+        }
+        None => {
+            println!("(no PJRT oracle; modelled correctness — run `make artifacts` + --features pjrt)\n");
+            Box::new(NoOracle)
+        }
+    };
 
     let wf = WorkflowConfig::cudaforge(&RTX6000_ADA, 7);
     let result = run_task(&wf, &task, oracle.as_ref());

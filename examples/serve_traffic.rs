@@ -1,0 +1,57 @@
+//! Service-layer walkthrough: replay Zipf traffic through the kernel-
+//! optimization service, snapshot the cache, then restart warm and replay a
+//! second day of traffic to show the economics of a persistent cache.
+//!
+//!     cargo run --release --example serve_traffic
+
+use cudaforge::report::service_table;
+use cudaforge::service::cache::ResultCache;
+use cudaforge::service::traffic::{generate, TrafficConfig};
+use cudaforge::service::{KernelService, ServiceConfig};
+use cudaforge::tasks;
+use cudaforge::workflow::NoOracle;
+
+fn main() {
+    let suite = tasks::kernelbench();
+    let config = ServiceConfig { window: 32, ..ServiceConfig::default() };
+    let snapshot = std::env::temp_dir().join("cudaforge_serve_traffic.jsonl");
+
+    // ---- day 1: cold service ----------------------------------------------
+    let day1 = generate(
+        suite.len(),
+        &TrafficConfig { requests: 800, seed: 7, ..TrafficConfig::default() },
+    );
+    let mut svc = KernelService::new(config.clone());
+    let r1 = svc.replay(&day1, &suite, &NoOracle);
+    println!("{}", service_table(&r1).render());
+    println!(
+        "day 1 (cold start): hit rate {:.1}%, ${:.2} spent, ${:.2} saved\n",
+        r1.hit_rate * 100.0,
+        r1.api_usd_spent,
+        r1.api_usd_saved
+    );
+    svc.cache().snapshot(&snapshot).expect("snapshot");
+    println!("[cache snapshot: {} entries -> {}]\n", svc.cache().len(), snapshot.display());
+
+    // ---- day 2: restart warm from the snapshot ----------------------------
+    let cache = ResultCache::restore(&snapshot, config.capacity).expect("restore");
+    let mut warm_svc = KernelService::with_cache(config, cache);
+    let day2 = generate(
+        suite.len(),
+        &TrafficConfig { requests: 800, seed: 8, ..TrafficConfig::default() },
+    );
+    let r2 = warm_svc.replay(&day2, &suite, &NoOracle);
+    println!("{}", service_table(&r2).render());
+    println!(
+        "day 2 (warm restart, new traffic mix): hit rate {:.1}% vs day-1 {:.1}%, \
+         ${:.2} spent vs ${:.2}",
+        r2.hit_rate * 100.0,
+        r1.hit_rate * 100.0,
+        r2.api_usd_spent,
+        r1.api_usd_spent
+    );
+    println!(
+        "warm-started runs reached their best kernel in {:.2} mean rounds (cold: {:.2})",
+        r2.mean_rounds_to_best_warm, r2.mean_rounds_to_best_cold
+    );
+}

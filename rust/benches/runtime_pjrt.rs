@@ -3,10 +3,16 @@
 //!
 //! Skips (prints a notice) when `artifacts/` is missing.
 
-use cudaforge::runtime::Engine;
-use cudaforge::util::bench::{bench, black_box};
-
+#[cfg(not(feature = "pjrt"))]
 fn main() {
+    println!("runtime_pjrt: built without the `pjrt` feature; skipping");
+}
+
+#[cfg(feature = "pjrt")]
+fn main() {
+    use cudaforge::runtime::Engine;
+    use cudaforge::util::bench::{bench, black_box};
+
     let mut engine = match Engine::new("artifacts") {
         Ok(e) => e,
         Err(_) => {

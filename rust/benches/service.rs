@@ -1,0 +1,82 @@
+//! Bench: the service-layer hot paths — fingerprinting, cache lookups under
+//! LRU churn, single-flight queue ops, and an end-to-end traffic replay.
+//! The admission path (fingerprint + cache probe) runs once per request at
+//! serving time, so it must stay far below the microsecond regime.
+
+use cudaforge::agents::profiles::O3;
+use cudaforge::gpu::RTX6000_ADA;
+use cudaforge::kernel::KernelConfig;
+use cudaforge::service::cache::{CacheEntry, ResultCache};
+use cudaforge::service::fingerprint::{of_request, Fingerprint};
+use cudaforge::service::queue::{JobQueue, Priority, Request};
+use cudaforge::service::traffic::{generate, TrafficConfig};
+use cudaforge::service::{KernelService, ServiceConfig};
+use cudaforge::tasks;
+use cudaforge::util::bench::{bench, black_box};
+use cudaforge::workflow::{NoOracle, Strategy};
+
+fn entry(fp: u64) -> CacheEntry {
+    CacheEntry {
+        fingerprint: Fingerprint(fp),
+        task_id: format!("L1-{}", fp % 100 + 1),
+        gpu_key: "rtx6000".to_string(),
+        strategy: "CudaForge".to_string(),
+        coder: "OpenAI-o3".to_string(),
+        judge: "OpenAI-o3".to_string(),
+        best_speedup: 1.5,
+        best_config: KernelConfig::naive(),
+        api_usd: 0.30,
+        cold_api_usd: 0.30,
+        wall_s: 1590.0,
+        rounds_to_best: 6,
+    }
+}
+
+fn main() {
+    let suite = tasks::kernelbench();
+    let task = &suite[0];
+
+    bench("service::fingerprint::of_request", 2_000_000, || {
+        black_box(of_request(task, &RTX6000_ADA, &O3, &O3, Strategy::CudaForge, 10));
+    });
+
+    let mut cache = ResultCache::new(512);
+    for i in 0..512u64 {
+        cache.insert(entry(i));
+    }
+    let mut i = 0u64;
+    bench("service::cache get+insert under LRU churn", 1_000_000, || {
+        black_box(cache.get(Fingerprint(i % 700)));
+        if i % 7 == 0 {
+            cache.insert(entry(i % 900));
+        }
+        i += 1;
+    });
+
+    let mut seq = 0u64;
+    let mut q = JobQueue::new();
+    bench("service::queue push+drain (window of 32)", 200_000, || {
+        for k in 0..32u64 {
+            q.push(Request {
+                seq,
+                fingerprint: Fingerprint(k % 11), // heavy dedup
+                priority: Priority::Standard,
+            });
+            seq += 1;
+        }
+        black_box(q.drain().len());
+    });
+
+    bench("service::replay 200 Zipf requests (e2e)", 500, || {
+        let trace = generate(
+            suite.len(),
+            &TrafficConfig { requests: 200, ..TrafficConfig::default() },
+        );
+        let mut svc = KernelService::new(ServiceConfig {
+            threads: 1,
+            window: 16,
+            ..ServiceConfig::default()
+        });
+        black_box(svc.replay(&trace, &suite, &NoOracle));
+    });
+}

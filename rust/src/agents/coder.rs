@@ -133,6 +133,47 @@ impl Coder {
         (cfg, stats)
     }
 
+    /// Round 1 of a warm-started run (service layer): adapt a cached best
+    /// kernel instead of generating cold. Cheaper than `initial` (short
+    /// prompt, short completion) and far less defect-prone — porting a known-
+    /// good kernel is a light edit, not a rewrite. Cross-GPU transfers
+    /// re-legalize the launch geometry against the target part and carry a
+    /// small re-tuning risk.
+    pub fn adapt(
+        &self,
+        task: &TaskSpec,
+        gpu: &GpuSpec,
+        warm: &crate::workflow::WarmStart,
+        rng: &mut Rng,
+    ) -> (KernelConfig, CallStats) {
+        let mut cfg = warm.config.clone();
+        cfg.bugs.clear(); // cached entries hold correct kernels only
+        let cross_gpu = gpu.key != warm.source_gpu;
+        if cross_gpu {
+            // Transfer heuristic: the launch envelope moves with the part
+            // (smem per block, register file, warp count) — legalize clamps
+            // the cached geometry into the new envelope. Occasionally the
+            // port fumbles a tuning knob and has to re-discover it.
+            if rng.chance(0.15 * (1.0 - self.profile.follow)) {
+                perturb(&mut cfg, rng);
+            }
+        }
+        // Light-edit defect risk, well below a cold generation's p_bug.
+        let p = (0.25 * self.p_bug(task) * if cross_gpu { 1.5 } else { 1.0 }).min(0.3);
+        if rng.chance(p) {
+            cfg.bugs.push(rewrite_bug(rng));
+        }
+        cfg.legalize(gpu);
+        let prompt = prompts::coder_adapt(task, gpu, &warm.config);
+        let stats = CallStats {
+            tokens_in: estimate_tokens(&prompt),
+            // Porting emits the kernel once, without the exploratory chatter
+            // of a cold generation.
+            tokens_out: self.profile.gen_out_tokens * 0.45,
+        };
+        (cfg, stats)
+    }
+
     /// Rounds 2..N, correction mode: fix the named problem.
     pub fn revise_correction(
         &self,

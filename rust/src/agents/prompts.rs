@@ -55,6 +55,27 @@ pub fn coder_initial(task: &TaskSpec) -> String {
     )
 }
 
+/// Warm-start adaptation prompt (service layer): port a cached best kernel
+/// onto the current target GPU instead of generating from scratch. Much
+/// shorter than the one-shot prompt — that gap is the service's per-request
+/// token saving.
+pub fn coder_adapt(task: &TaskSpec, gpu: &GpuSpec, cached: &KernelConfig) -> String {
+    format!(
+        "You previously optimized this operator and the best known kernel is \
+         cached below. Port it to the target GPU: keep the algorithmic \
+         structure, re-check launch limits (threads per block, shared memory \
+         per block, registers) against the target's specification, and adjust \
+         tile sizes only where the limits require it. Output the adapted \
+         kernel only.\n\n\
+         Target GPU:\n{spec}\n\n\
+         The architecture:\n{arch}\n\n\
+         Cached best kernel:\n{src}",
+        spec = gpu.spec_sheet_cached(),
+        arch = arch_src(task),
+        src = cuda_src(cached),
+    )
+}
+
 /// Judge prompt, correction mode (Appendix A.2, "CUDA Kernel Correction").
 pub fn judge_correction(task: &TaskSpec, cfg: &KernelConfig, error_log: &str) -> String {
     format!(

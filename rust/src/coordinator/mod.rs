@@ -2,13 +2,11 @@
 //! aggregates the paper's evaluation metrics (§3.1): Correct, Median, 75%,
 //! Perf (mean), Fast_1 — overall and per level — plus cost averages.
 //!
-//! tokio is unavailable offline (DESIGN.md §2), so the pool is std::thread
-//! with an atomic work queue. Results are deterministic regardless of
-//! scheduling because every task derives its own seed stream.
+//! Dispatch goes through `service::pool::run_indexed` (shared with the
+//! service scheduler). Results are deterministic regardless of scheduling
+//! because every task derives its own seed stream.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
-
+use crate::service::pool;
 use crate::tasks::TaskSpec;
 use crate::util::stats::{frac_above, mean, median, percentile};
 use crate::workflow::{run_task, CorrectnessOracle, TaskResult, WorkflowConfig};
@@ -64,28 +62,8 @@ pub fn run_suite(
     oracle: &dyn CorrectnessOracle,
     threads: usize,
 ) -> SuiteOutcome {
-    let threads = threads.max(1).min(tasks.len().max(1));
-    let slots: Vec<Mutex<Option<TaskResult>>> =
-        (0..tasks.len()).map(|_| Mutex::new(None)).collect();
-    let next = AtomicUsize::new(0);
-
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= tasks.len() {
-                    break;
-                }
-                let result = run_task(wf, &tasks[i], oracle);
-                *slots[i].lock().unwrap() = Some(result);
-            });
-        }
-    });
-
-    let results: Vec<TaskResult> = slots
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("task completed"))
-        .collect();
+    let results: Vec<TaskResult> =
+        pool::run_indexed(tasks.len(), threads, |i| run_task(wf, &tasks[i], oracle));
 
     let method = wf.strategy.name();
     let overall = summarize(method, &results);

@@ -43,6 +43,11 @@ pub const ALL_BUGS: [Bug; 9] = [
 ];
 
 impl Bug {
+    /// Inverse of `name()` (used when deserializing cached configs).
+    pub fn by_name(name: &str) -> Option<Bug> {
+        ALL_BUGS.iter().copied().find(|b| b.name() == name)
+    }
+
     pub fn is_compile_error(self) -> bool {
         matches!(
             self,
@@ -257,6 +262,69 @@ impl KernelConfig {
             && self.fused_stages >= 1
     }
 
+    /// Serialize for the service layer's JSONL cache snapshots.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("block_threads", Json::num(self.block_threads)),
+            ("tile_m", Json::num(self.tile_m)),
+            ("tile_n", Json::num(self.tile_n)),
+            ("tile_k", Json::num(self.tile_k)),
+            ("vector_width", Json::num(self.vector_width)),
+            ("unroll", Json::num(self.unroll)),
+            ("use_smem", Json::Bool(self.use_smem)),
+            ("smem_padded", Json::Bool(self.smem_padded)),
+            ("double_buffer", Json::Bool(self.double_buffer)),
+            ("regs_per_thread", Json::num(self.regs_per_thread)),
+            ("syncs_per_tile", Json::num(self.syncs_per_tile)),
+            ("warp_shuffle", Json::Bool(self.warp_shuffle)),
+            ("coalesced", Json::Bool(self.coalesced)),
+            ("use_tensor_cores", Json::Bool(self.use_tensor_cores)),
+            ("fused_stages", Json::num(self.fused_stages)),
+            ("extra_global_passes", Json::num(self.extra_global_passes)),
+            ("online_algorithm", Json::Bool(self.online_algorithm)),
+            ("grid_stride", Json::Bool(self.grid_stride)),
+            ("algo_optimal", Json::Bool(self.algo_optimal)),
+            (
+                "bugs",
+                Json::Arr(self.bugs.iter().map(|b| Json::str(b.name())).collect()),
+            ),
+        ])
+    }
+
+    /// Inverse of `to_json`. `None` on a malformed document.
+    pub fn from_json(v: &crate::util::json::Json) -> Option<KernelConfig> {
+        let u32_of = |k: &str| v.get(k)?.as_f64().map(|n| n as u32);
+        let bool_of = |k: &str| v.get(k)?.as_bool();
+        Some(KernelConfig {
+            block_threads: u32_of("block_threads")?,
+            tile_m: u32_of("tile_m")?,
+            tile_n: u32_of("tile_n")?,
+            tile_k: u32_of("tile_k")?,
+            vector_width: u32_of("vector_width")?,
+            unroll: u32_of("unroll")?,
+            use_smem: bool_of("use_smem")?,
+            smem_padded: bool_of("smem_padded")?,
+            double_buffer: bool_of("double_buffer")?,
+            regs_per_thread: u32_of("regs_per_thread")?,
+            syncs_per_tile: u32_of("syncs_per_tile")?,
+            warp_shuffle: bool_of("warp_shuffle")?,
+            coalesced: bool_of("coalesced")?,
+            use_tensor_cores: bool_of("use_tensor_cores")?,
+            fused_stages: u32_of("fused_stages")?,
+            extra_global_passes: u32_of("extra_global_passes")?,
+            online_algorithm: bool_of("online_algorithm")?,
+            grid_stride: bool_of("grid_stride")?,
+            algo_optimal: bool_of("algo_optimal")?,
+            bugs: v
+                .get("bugs")?
+                .as_arr()?
+                .iter()
+                .filter_map(|b| b.as_str().and_then(Bug::by_name))
+                .collect(),
+        })
+    }
+
     /// Compact source-like fingerprint used in prompts and logs.
     pub fn describe(&self) -> String {
         format!(
@@ -326,6 +394,19 @@ mod tests {
         assert!(c.remove_bug(Bug::OobIndex));
         assert!(!c.is_buggy());
         assert!(!c.remove_bug(Bug::OobIndex));
+    }
+
+    #[test]
+    fn config_json_round_trips() {
+        let mut c = KernelConfig::naive();
+        c.use_smem = true;
+        c.tile_m = 64;
+        c.warp_shuffle = true;
+        c.bugs.push(Bug::OobIndex);
+        let wire = c.to_json().to_string();
+        let v = crate::util::json::Json::parse(&wire).unwrap();
+        assert_eq!(KernelConfig::from_json(&v), Some(c));
+        assert!(KernelConfig::from_json(&crate::util::json::Json::Null).is_none());
     }
 
     #[test]

@@ -7,12 +7,17 @@
 //! the experiment index mapping every paper table and figure to a command.
 //!
 //! Layer map:
+//! - L4 (`service`): the kernel-optimization service layer — content-
+//!   addressed result cache, single-flight job queue, warm-start scheduling,
+//!   Zipf traffic replay — the first subsystem aimed at serving repeated
+//!   multi-user traffic rather than reproducing paper tables.
 //! - L3 (this crate): the CudaForge workflow — Coder/Judge agents, hardware
 //!   feedback, the GPU/NCU simulator, the KernelBench-sim suite, baselines,
 //!   the metric-selection pipeline, cost model, coordinator and reports.
 //! - L2/L1 (`python/compile/`): JAX graphs + Pallas kernels, AOT-lowered to
 //!   `artifacts/*.hlo.txt`; the `runtime` module executes them via PJRT for
-//!   real-numerics correctness checks on the bound anchor tasks.
+//!   real-numerics correctness checks on the bound anchor tasks (requires
+//!   the `pjrt` cargo feature + the vendored `xla` crate).
 
 pub mod agents;
 pub mod coordinator;
@@ -22,6 +27,7 @@ pub mod kernel;
 pub mod metrics;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod tasks;
 pub mod util;

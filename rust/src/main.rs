@@ -3,59 +3,71 @@
 //! Subcommands:
 //!   run        optimize one task (e.g. `run --task L1-95 --gpu rtx6000`)
 //!   suite      run a strategy over KernelBench or D*
+//!   serve      replay Zipf traffic through the kernel-optimization service
 //!   bench      regenerate a paper table/figure (`--exp table1|...|all`)
 //!   select     run the offline metric-selection pipeline (Algorithms 1-2)
-//!   verify     execute every AOT artifact on PJRT vs its reference
+//!   verify     execute every AOT artifact on PJRT vs its reference (pjrt)
 //!   specs      print the GPU spec database
 //!
 //! Global flags: --seed N --threads N --rounds N --gpu KEY --quick
 //!               --strategy NAME --coder MODEL --judge MODEL
 //!               --artifacts DIR (enables the real-numerics oracle)
+//! Serve flags:  --requests N --zipf S --capacity N --window N
+//!               --snapshot PATH (restore before / save after the replay)
 
 use cudaforge::agents::profiles;
 use cudaforge::coordinator::{default_threads, run_suite};
 use cudaforge::gpu;
 use cudaforge::report::{self, Ctx};
-use cudaforge::runtime::oracle::{RealOracle, VerificationMatrix};
-use cudaforge::runtime::Engine;
+use cudaforge::runtime;
+use cudaforge::service::cache::ResultCache;
+use cudaforge::service::traffic::{generate, TrafficConfig};
+use cudaforge::service::{KernelService, ServiceConfig};
 use cudaforge::tasks;
 use cudaforge::util::cli::Args;
-use cudaforge::workflow::{run_task, CorrectnessOracle, NoOracle, Strategy, WorkflowConfig};
+use cudaforge::workflow::{
+    run_task, CorrectnessOracle, NoOracle, Strategy, WorkflowConfig, ALL_STRATEGIES,
+};
 
-fn strategy_by_name(name: &str) -> Option<Strategy> {
-    Some(match name.to_ascii_lowercase().as_str() {
-        "cudaforge" => Strategy::CudaForge,
-        "one-shot" | "oneshot" => Strategy::OneShot,
-        "self-refine" => Strategy::SelfRefine,
-        "correction" | "correction-only" => Strategy::CorrectionOnly,
-        "optimization" | "optimization-only" => Strategy::OptimizationOnly,
-        "full-metrics" => Strategy::CudaForgeFullMetrics,
-        "kevin" => Strategy::Kevin,
-        "agentic" => Strategy::AgenticBaseline,
-        _ => return None,
+fn strategy_or_exit(name: &str) -> Strategy {
+    Strategy::by_name(name).unwrap_or_else(|| {
+        eprintln!("error: unknown strategy '{name}'");
+        eprintln!("valid strategies:");
+        for s in ALL_STRATEGIES {
+            eprintln!("  {:<14} {}", s.cli_key(), s.name());
+        }
+        std::process::exit(2);
     })
 }
 
 /// Build the real-numerics oracle if artifacts exist (or were requested).
 fn build_oracle(args: &Args) -> Box<dyn CorrectnessOracle> {
     let dir = args.get_or("artifacts", "artifacts").to_string();
+    let explicit = args.get("artifacts").is_some();
     if !std::path::Path::new(&dir).join("manifest.json").exists() {
-        if args.get("artifacts").is_some() {
+        if explicit {
             eprintln!("error: no manifest in {dir}; run `make artifacts`");
             std::process::exit(2);
         }
         eprintln!("[no artifacts found — correctness uses the modelled check; run `make artifacts` for real numerics]");
         return Box::new(NoOracle);
     }
-    match Engine::new(&dir).and_then(|mut e| VerificationMatrix::build(&mut e, 42)) {
-        Ok(matrix) => {
-            let n = matrix.verdicts.len();
-            assert!(matrix.is_consistent(), "artifact verdicts inconsistent");
+    match runtime::try_real_oracle(&dir, 42) {
+        Some(oracle) => {
+            let n = oracle.matrix().verdicts.len();
+            assert!(oracle.matrix().is_consistent(), "artifact verdicts inconsistent");
             eprintln!("[real-numerics oracle: {n} artifacts verified on PJRT]");
-            Box::new(RealOracle::new(matrix))
+            Box::new(oracle)
         }
-        Err(e) => {
-            eprintln!("warning: oracle unavailable ({e}); falling back to modelled check");
+        None => {
+            if explicit && !cfg!(feature = "pjrt") {
+                eprintln!(
+                    "error: --artifacts given but this binary was built without the \
+                     `pjrt` feature (cargo build --features pjrt)"
+                );
+                std::process::exit(2);
+            }
+            eprintln!("warning: oracle unavailable; falling back to modelled check");
             Box::new(NoOracle)
         }
     }
@@ -63,13 +75,10 @@ fn build_oracle(args: &Args) -> Box<dyn CorrectnessOracle> {
 
 fn workflow_from(args: &Args) -> WorkflowConfig {
     let gpu = gpu::by_key(args.get_or("gpu", "rtx6000")).unwrap_or_else(|| {
-        eprintln!("unknown gpu; options: rtx6000 rtx4090 rtx3090 a100 h100 h200");
+        eprintln!("error: unknown gpu; options: rtx6000 rtx4090 rtx3090 a100 h100 h200");
         std::process::exit(2);
     });
-    let strategy = strategy_by_name(args.get_or("strategy", "cudaforge")).unwrap_or_else(|| {
-        eprintln!("unknown strategy");
-        std::process::exit(2);
-    });
+    let strategy = strategy_or_exit(args.get_or("strategy", "cudaforge"));
     let mut wf = WorkflowConfig::cudaforge(gpu, args.get_u64("seed", 2024))
         .with_strategy(strategy)
         .with_rounds(args.get_usize("rounds", 10));
@@ -82,6 +91,104 @@ fn workflow_from(args: &Args) -> WorkflowConfig {
     wf
 }
 
+fn serve(args: &Args) {
+    let oracle = build_oracle(args);
+    let suite = tasks::kernelbench();
+    let seed = args.get_u64("seed", 7);
+    let traffic = TrafficConfig {
+        requests: args.get_usize("requests", 2000),
+        zipf_s: args.get_f64("zipf", 1.1),
+        seed,
+        ..TrafficConfig::default()
+    };
+    let mut config = ServiceConfig {
+        capacity: args.get_usize("capacity", 1024),
+        window: args.get_usize("window", 32),
+        threads: args.get_usize("threads", default_threads()),
+        strategy: strategy_or_exit(args.get_or("strategy", "cudaforge")),
+        rounds: args.get_usize("rounds", 10),
+        seed,
+        ..ServiceConfig::default()
+    };
+    if let Some(m) = args.get("coder") {
+        config.coder = *profiles::by_name(m).unwrap_or_else(|| {
+            eprintln!("error: unknown coder model '{m}'");
+            std::process::exit(2);
+        });
+    }
+    if let Some(m) = args.get("judge") {
+        config.judge = *profiles::by_name(m).unwrap_or_else(|| {
+            eprintln!("error: unknown judge model '{m}'");
+            std::process::exit(2);
+        });
+    }
+    let snapshot = args.get("snapshot").map(|s| s.to_string());
+
+    let mut svc = match &snapshot {
+        Some(path) if std::path::Path::new(path).exists() => {
+            match ResultCache::restore(path, config.capacity) {
+                Ok(cache) => {
+                    eprintln!("[restored {} cached results from {path}]", cache.len());
+                    KernelService::with_cache(config, cache)
+                }
+                Err(e) => {
+                    eprintln!("error: snapshot {path} unreadable: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        _ => KernelService::new(config),
+    };
+
+    println!(
+        "serving {} requests (zipf s={}, seed {}) over {} tasks | cache {} | window {}",
+        traffic.requests,
+        traffic.zipf_s,
+        seed,
+        suite.len(),
+        svc.config.capacity,
+        svc.config.window,
+    );
+    let trace = generate(suite.len(), &traffic);
+    let t0 = std::time::Instant::now();
+    let report = svc.replay(&trace, &suite, oracle.as_ref());
+    let ctx = Ctx {
+        seed,
+        results_dir: args.get_or("out", "results").to_string(),
+        ..Ctx::default()
+    };
+    report::service_report(&ctx, &report);
+    println!(
+        "replay wall {:.2}s | {} runs executed, {:.1}% served from cache/in-flight | \
+         warm runs reached best in {:.2} mean rounds vs {:.2} cold",
+        t0.elapsed().as_secs_f64(),
+        report.flights_run,
+        report.hit_rate * 100.0,
+        report.mean_rounds_to_best_warm,
+        report.mean_rounds_to_best_cold,
+    );
+    if let Some(path) = &snapshot {
+        match svc.cache().snapshot(path) {
+            Ok(()) => eprintln!("[snapshot: {} entries -> {path}]", svc.cache().len()),
+            Err(e) => eprintln!("warning: snapshot failed: {e}"),
+        }
+    }
+}
+
+fn usage() {
+    println!("cudaforge {} — CudaForge reproduction CLI", cudaforge::version());
+    println!("usage: cudaforge <run|suite|serve|bench|select|verify|specs> [flags]");
+    println!("  run    --task L1-95 [--gpu rtx6000 --strategy cudaforge --rounds 10]");
+    println!("  suite  [--dstar] [--strategy NAME --coder o3 --judge gpt5]");
+    println!("  serve  [--requests 2000 --zipf 1.1 --seed 7 --capacity 1024 --window 32 --snapshot cache.jsonl]");
+    println!("  bench  --exp <table1|table2|table3|table4|table5|fig4..fig9|table6|table8|all> [--quick]");
+    println!("  select [--iterations 100]");
+    println!("  verify [--artifacts artifacts]   (needs --features pjrt)");
+    println!("  specs");
+    let keys: Vec<&str> = ALL_STRATEGIES.iter().map(|s| s.cli_key()).collect();
+    println!("strategies: {}", keys.join(" "));
+}
+
 fn main() {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -89,7 +196,7 @@ fn main() {
         "run" => {
             let id = args.get_or("task", "L1-95");
             let task = tasks::by_id(id).unwrap_or_else(|| {
-                eprintln!("unknown task {id}");
+                eprintln!("error: unknown task {id}");
                 std::process::exit(2);
             });
             let oracle = build_oracle(&args);
@@ -136,6 +243,7 @@ fn main() {
                 );
             }
         }
+        "serve" => serve(&args),
         "bench" => {
             let oracle = build_oracle(&args);
             let ctx = Ctx {
@@ -156,40 +264,50 @@ fn main() {
             report::table8(&ctx, args.get_usize("iterations", 100));
         }
         "verify" => {
-            let dir = args.get_or("artifacts", "artifacts");
-            let mut engine = Engine::new(dir).expect("engine (run `make artifacts`)");
-            let matrix = VerificationMatrix::build(&mut engine, args.get_u64("seed", 42))
-                .expect("verification");
-            let mut names: Vec<_> = matrix.verdicts.iter().collect();
-            names.sort_by(|a, b| a.0.cmp(b.0));
-            for (name, v) in names {
+            #[cfg(feature = "pjrt")]
+            {
+                use cudaforge::runtime::oracle::VerificationMatrix;
+                use cudaforge::runtime::Engine;
+                let dir = args.get_or("artifacts", "artifacts");
+                let mut engine = Engine::new(dir).expect("engine (run `make artifacts`)");
+                let matrix = VerificationMatrix::build(&mut engine, args.get_u64("seed", 42))
+                    .expect("verification");
+                let mut names: Vec<_> = matrix.verdicts.iter().collect();
+                names.sort_by(|a, b| a.0.cmp(b.0));
+                for (name, v) in names {
+                    println!(
+                        "  {:36} {} max|diff|={:.3e} ({} elems)",
+                        name,
+                        if v.passes { "PASS" } else { "MISMATCH" },
+                        v.max_abs_diff,
+                        v.elements
+                    );
+                }
                 println!(
-                    "  {:36} {} max|diff|={:.3e} ({} elems)",
-                    name,
-                    if v.passes { "PASS" } else { "MISMATCH" },
-                    v.max_abs_diff,
-                    v.elements
+                    "{} artifacts; consistent with labels: {}",
+                    matrix.verdicts.len(),
+                    matrix.is_consistent()
                 );
             }
-            println!(
-                "{} artifacts; consistent with labels: {}",
-                matrix.verdicts.len(),
-                matrix.is_consistent()
-            );
+            #[cfg(not(feature = "pjrt"))]
+            {
+                eprintln!(
+                    "error: `verify` needs the PJRT engine — rebuild with \
+                     `cargo build --features pjrt` (requires the vendored `xla` crate)"
+                );
+                std::process::exit(2);
+            }
         }
         "specs" => {
             for g in gpu::ALL {
                 println!("{}\n", g.spec_sheet());
             }
         }
-        _ => {
-            println!("cudaforge {} — CudaForge reproduction CLI", cudaforge::version());
-            println!("usage: cudaforge <run|suite|bench|select|verify|specs> [flags]");
-            println!("  run    --task L1-95 [--gpu rtx6000 --strategy cudaforge --rounds 10]");
-            println!("  suite  [--dstar] [--strategy NAME --coder o3 --judge gpt5]");
-            println!("  bench  --exp <table1|table2|table3|table4|table5|fig4..fig9|table6|table8|all> [--quick]");
-            println!("  select [--iterations 100]");
-            println!("  verify [--artifacts artifacts]");
+        "help" => usage(),
+        other => {
+            eprintln!("error: unknown subcommand '{other}'\n");
+            usage();
+            std::process::exit(2);
         }
     }
 }

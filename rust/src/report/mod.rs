@@ -408,6 +408,44 @@ pub fn table8(ctx: &Ctx, iterations: usize) {
     );
 }
 
+/// Service-layer replay report (the `serve` subcommand): throughput, cache
+/// effectiveness, latency percentiles, and the API dollars the cache saved
+/// versus serving every request cold.
+pub fn service_table(r: &crate::service::ServiceReport) -> Table {
+    let mut t = Table::new(
+        "Service report — Zipf traffic replay over KernelBench-sim",
+        &["Metric", "Value"],
+    );
+    let rows: Vec<(&str, String)> = vec![
+        ("Requests", r.requests.to_string()),
+        ("Workflow runs (cache misses)", r.flights_run.to_string()),
+        ("Cache hits", r.cache_hits.to_string()),
+        ("Single-flight shared", r.shared.to_string()),
+        ("Cache evictions", r.evictions.to_string()),
+        ("Warm-started runs", r.warm_started.to_string()),
+        ("Hit rate", pct(r.hit_rate)),
+        ("p50 latency (min)", f2(r.p50_latency_s / 60.0)),
+        ("p95 latency (min)", f2(r.p95_latency_s / 60.0)),
+        ("Mean latency (min)", f2(r.mean_latency_s / 60.0)),
+        ("API spent ($)", f2(r.api_usd_spent)),
+        ("API saved vs cold ($)", f2(r.api_usd_saved)),
+        ("API cost if all-cold ($)", f2(r.api_usd_cold)),
+        ("Mean rounds-to-best (cold)", f2(r.mean_rounds_to_best_cold)),
+        ("Mean rounds-to-best (warm)", f2(r.mean_rounds_to_best_warm)),
+        ("Simulated GPU-hours", f2(r.gpu_hours)),
+        ("Requests / GPU-hour", f2(r.requests_per_gpu_hour)),
+    ];
+    for (k, v) in rows {
+        t.row(vec![k.to_string(), v]);
+    }
+    t
+}
+
+/// Render + persist a service report like the paper experiments do.
+pub fn service_report(ctx: &Ctx, r: &crate::service::ServiceReport) {
+    ctx.save("service", &service_table(r));
+}
+
 /// Run every experiment (the `bench --exp all` path).
 pub fn run_all(ctx: &Ctx, oracle: &dyn CorrectnessOracle, quick: bool) {
     table1(ctx, oracle, quick);

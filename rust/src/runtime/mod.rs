@@ -8,16 +8,25 @@
 //! stage genuinely executes a kernel variant against its pure-jnp reference
 //! at the paper's tolerance (1e-4), including intentionally-buggy variants
 //! that produce genuinely wrong outputs.
+//!
+//! The `xla`-backed engine is gated behind the `pjrt` cargo feature so the
+//! crate builds offline without the vendored `xla` crate; manifest parsing
+//! and the oracle types stay available either way.
 
 pub mod oracle;
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::util::json::Json;
+
+#[cfg(feature = "pjrt")]
+use anyhow::bail;
+#[cfg(feature = "pjrt")]
 use crate::util::rng::Rng;
+#[cfg(feature = "pjrt")]
+use std::collections::HashMap;
 
 /// Input generator spec from the manifest.
 #[derive(Clone, Debug, PartialEq)]
@@ -130,13 +139,37 @@ fn out_inputs(v: Vec<InputSpec>) -> Vec<InputSpec> {
     v
 }
 
+/// Build the real-numerics oracle: compiles + executes every artifact
+/// variant against its reference and records the verdicts. Returns `None`
+/// when the engine is unavailable (artifacts missing, or the crate was built
+/// without the `pjrt` feature).
+#[cfg(feature = "pjrt")]
+pub fn try_real_oracle(dir: &str, seed: u64) -> Option<oracle::RealOracle> {
+    match Engine::new(dir).and_then(|mut e| oracle::VerificationMatrix::build(&mut e, seed)) {
+        Ok(m) => Some(oracle::RealOracle::new(m)),
+        Err(e) => {
+            eprintln!("[real-numerics oracle unavailable: {e}]");
+            None
+        }
+    }
+}
+
+/// Without the `pjrt` feature there is no execution engine; callers fall
+/// back to the modelled correctness check.
+#[cfg(not(feature = "pjrt"))]
+pub fn try_real_oracle(_dir: &str, _seed: u64) -> Option<oracle::RealOracle> {
+    None
+}
+
 /// The PJRT execution engine: a CPU client plus a compiled-executable cache.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
     compiled: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
         let manifest = Manifest::load(&artifacts_dir)?;
@@ -289,6 +322,7 @@ mod tests {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn input_specs_materialize() {
         if !have_artifacts() {

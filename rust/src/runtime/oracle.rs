@@ -11,10 +11,7 @@
 
 use std::collections::HashMap;
 
-use anyhow::Result;
-
 use crate::kernel::{Bug, KernelConfig};
-use crate::runtime::Engine;
 use crate::tasks::TaskSpec;
 use crate::workflow::{CheckOutcome, CorrectnessOracle};
 
@@ -36,7 +33,11 @@ pub struct VerificationMatrix {
 
 impl VerificationMatrix {
     /// Execute every non-reference artifact against its reference.
-    pub fn build(engine: &mut Engine, seed: u64) -> Result<VerificationMatrix> {
+    #[cfg(feature = "pjrt")]
+    pub fn build(
+        engine: &mut crate::runtime::Engine,
+        seed: u64,
+    ) -> anyhow::Result<VerificationMatrix> {
         let names: Vec<(String, String)> = engine
             .manifest()
             .entries

@@ -1,0 +1,357 @@
+//! Content-addressed result cache with LRU eviction and JSONL persistence.
+//!
+//! Maps a request `Fingerprint` to the best kernel a workflow run found for
+//! it, plus the cost ledger of that run — enough to (i) answer a repeat
+//! request without touching the agents, (ii) price what the hit *saved*, and
+//! (iii) seed a warm start for the same task on a different GPU.
+//!
+//! Internals are `BTreeMap`-based on purpose: every scan (warm-candidate
+//! lookup, snapshotting) iterates in a total order, so service replays are
+//! bit-deterministic regardless of insertion history or hash seeds. Recency
+//! is a monotonic tick plus a tick->fingerprint index, so the admission-path
+//! operations (get / insert / evict) are all O(log n), never O(capacity).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::kernel::KernelConfig;
+use crate::service::fingerprint::Fingerprint;
+use crate::util::json::Json;
+
+/// One cached optimization result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheEntry {
+    pub fingerprint: Fingerprint,
+    pub task_id: String,
+    pub gpu_key: String,
+    pub strategy: String,
+    pub coder: String,
+    pub judge: String,
+    pub best_speedup: f64,
+    pub best_config: KernelConfig,
+    /// API dollars the producing run actually spent (a warm-started run
+    /// spends less than a cold one).
+    pub api_usd: f64,
+    /// What a *cold* run of this fingerprint costs — the counterfactual a
+    /// hit avoids. For cold runs this equals `api_usd`; warm-started runs
+    /// inherit it from their warm-start source.
+    pub cold_api_usd: f64,
+    /// Wall seconds the producing run took — what a hit avoids re-waiting.
+    pub wall_s: f64,
+    /// Round at which the producing run first measured its best kernel.
+    pub rounds_to_best: usize,
+}
+
+impl CacheEntry {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("fingerprint", Json::str(self.fingerprint.to_string())),
+            ("task_id", Json::str(self.task_id.clone())),
+            ("gpu_key", Json::str(self.gpu_key.clone())),
+            ("strategy", Json::str(self.strategy.clone())),
+            ("coder", Json::str(self.coder.clone())),
+            ("judge", Json::str(self.judge.clone())),
+            ("best_speedup", Json::num(self.best_speedup)),
+            ("best_config", self.best_config.to_json()),
+            ("api_usd", Json::num(self.api_usd)),
+            ("cold_api_usd", Json::num(self.cold_api_usd)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("rounds_to_best", Json::num(self.rounds_to_best as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<CacheEntry> {
+        Some(CacheEntry {
+            fingerprint: Fingerprint::parse(v.get("fingerprint")?.as_str()?)?,
+            task_id: v.get("task_id")?.as_str()?.to_string(),
+            gpu_key: v.get("gpu_key")?.as_str()?.to_string(),
+            strategy: v.get("strategy")?.as_str()?.to_string(),
+            coder: v.get("coder")?.as_str()?.to_string(),
+            judge: v.get("judge")?.as_str()?.to_string(),
+            best_speedup: v.get("best_speedup")?.as_f64()?,
+            best_config: KernelConfig::from_json(v.get("best_config")?)?,
+            api_usd: v.get("api_usd")?.as_f64()?,
+            cold_api_usd: v.get("cold_api_usd")?.as_f64()?,
+            wall_s: v.get("wall_s")?.as_f64()?,
+            rounds_to_best: v.get("rounds_to_best")?.as_usize()?,
+        })
+    }
+}
+
+/// Hit/miss/eviction counters (monotonic over the cache's lifetime).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+}
+
+struct Slot {
+    entry: CacheEntry,
+    tick: u64,
+}
+
+/// Bounded content-addressed cache, least-recently-used eviction.
+pub struct ResultCache {
+    capacity: usize,
+    map: BTreeMap<Fingerprint, Slot>,
+    /// tick -> fingerprint; ticks are unique, so the first key is the LRU.
+    recency: BTreeMap<u64, Fingerprint>,
+    tick: u64,
+    pub stats: CacheStats,
+}
+
+impl ResultCache {
+    /// `capacity` is clamped to at least 1.
+    pub fn new(capacity: usize) -> ResultCache {
+        ResultCache {
+            capacity: capacity.max(1),
+            map: BTreeMap::new(),
+            recency: BTreeMap::new(),
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn touch(&mut self, fp: Fingerprint) {
+        self.tick += 1;
+        if let Some(slot) = self.map.get_mut(&fp) {
+            self.recency.remove(&slot.tick);
+            slot.tick = self.tick;
+            self.recency.insert(self.tick, fp);
+        }
+    }
+
+    /// Lookup, counting a hit or miss and refreshing recency on hit.
+    pub fn get(&mut self, fp: Fingerprint) -> Option<&CacheEntry> {
+        if self.map.contains_key(&fp) {
+            self.stats.hits += 1;
+            self.touch(fp);
+            self.map.get(&fp).map(|s| &s.entry)
+        } else {
+            self.stats.misses += 1;
+            None
+        }
+    }
+
+    /// Lookup without touching recency or counters (introspection).
+    pub fn peek(&self, fp: Fingerprint) -> Option<&CacheEntry> {
+        self.map.get(&fp).map(|s| &s.entry)
+    }
+
+    /// Insert (or refresh) an entry, evicting the LRU entry when full.
+    pub fn insert(&mut self, entry: CacheEntry) {
+        let fp = entry.fingerprint;
+        self.stats.inserts += 1;
+        if let Some(slot) = self.map.get_mut(&fp) {
+            slot.entry = entry;
+            self.touch(fp);
+            return;
+        }
+        if self.map.len() >= self.capacity {
+            if let Some((_, cold)) = self.recency.pop_first() {
+                self.map.remove(&cold);
+                self.stats.evictions += 1;
+            }
+        }
+        self.tick += 1;
+        self.recency.insert(self.tick, fp);
+        self.map.insert(fp, Slot { entry, tick: self.tick });
+    }
+
+    /// Best cross-GPU transfer candidate: a cached correct kernel for the
+    /// same task / strategy / models, tuned on a *different* GPU. Ties break
+    /// on (speedup, fingerprint) so the scan is order-independent.
+    pub fn warm_candidate(
+        &self,
+        task_id: &str,
+        gpu_key: &str,
+        strategy: &str,
+        coder: &str,
+        judge: &str,
+    ) -> Option<&CacheEntry> {
+        self.map
+            .values()
+            .map(|s| &s.entry)
+            .filter(|e| {
+                e.task_id == task_id
+                    && e.gpu_key != gpu_key
+                    && e.strategy == strategy
+                    && e.coder == coder
+                    && e.judge == judge
+                    && e.best_speedup > 0.0
+            })
+            .max_by(|a, b| {
+                (a.best_speedup, a.fingerprint)
+                    .partial_cmp(&(b.best_speedup, b.fingerprint))
+                    .unwrap()
+            })
+    }
+
+    /// Entries coldest-first (the order `snapshot` writes and `restore`
+    /// replays, so recency survives a round trip).
+    pub fn entries_coldest_first(&self) -> impl Iterator<Item = &CacheEntry> {
+        self.recency
+            .values()
+            .filter_map(|fp| self.map.get(fp).map(|s| &s.entry))
+    }
+
+    /// Write the cache as JSONL, one entry per line, coldest first.
+    pub fn snapshot(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut out = String::new();
+        for e in self.entries_coldest_first() {
+            out.push_str(&e.to_json().to_string());
+            out.push('\n');
+        }
+        std::fs::write(path.as_ref(), out)
+            .with_context(|| format!("writing snapshot {}", path.as_ref().display()))
+    }
+
+    /// Rebuild a cache from a JSONL snapshot. Lines are inserted in file
+    /// order, so the snapshot's recency (and its eviction decisions, if the
+    /// new capacity is smaller) is reproduced. Malformed lines are an error:
+    /// a warm restart from a corrupt snapshot should fail loudly, not serve
+    /// half a cache.
+    pub fn restore(path: impl AsRef<Path>, capacity: usize) -> Result<ResultCache> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading snapshot {}", path.as_ref().display()))?;
+        let mut cache = ResultCache::new(capacity);
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = Json::parse(line)
+                .map_err(|e| anyhow!("snapshot line {}: {e}", i + 1))?;
+            let entry = CacheEntry::from_json(&v)
+                .ok_or_else(|| anyhow!("snapshot line {}: missing fields", i + 1))?;
+            cache.insert(entry);
+        }
+        // Restoring is not traffic: don't let the rebuild pollute counters.
+        cache.stats = CacheStats::default();
+        Ok(cache)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(fp: u64, task: &str, gpu: &str, speedup: f64) -> CacheEntry {
+        CacheEntry {
+            fingerprint: Fingerprint(fp),
+            task_id: task.to_string(),
+            gpu_key: gpu.to_string(),
+            strategy: "CudaForge".to_string(),
+            coder: "OpenAI-o3".to_string(),
+            judge: "OpenAI-o3".to_string(),
+            best_speedup: speedup,
+            best_config: KernelConfig::naive(),
+            api_usd: 0.30,
+            cold_api_usd: 0.30,
+            wall_s: 1590.0,
+            rounds_to_best: 6,
+        }
+    }
+
+    #[test]
+    fn hit_miss_counters() {
+        let mut c = ResultCache::new(4);
+        assert!(c.get(Fingerprint(1)).is_none());
+        c.insert(entry(1, "L1-1", "rtx6000", 1.5));
+        assert!(c.get(Fingerprint(1)).is_some());
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.misses, 1);
+        assert_eq!(c.stats.inserts, 1);
+    }
+
+    #[test]
+    fn lru_evicts_coldest_and_get_refreshes() {
+        let mut c = ResultCache::new(2);
+        c.insert(entry(1, "L1-1", "rtx6000", 1.0));
+        c.insert(entry(2, "L1-2", "rtx6000", 1.0));
+        // touch 1 so 2 becomes coldest
+        assert!(c.get(Fingerprint(1)).is_some());
+        c.insert(entry(3, "L1-3", "rtx6000", 1.0));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats.evictions, 1);
+        assert!(c.peek(Fingerprint(2)).is_none(), "2 was LRU");
+        assert!(c.peek(Fingerprint(1)).is_some());
+        assert!(c.peek(Fingerprint(3)).is_some());
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_eviction() {
+        let mut c = ResultCache::new(2);
+        c.insert(entry(1, "L1-1", "rtx6000", 1.0));
+        c.insert(entry(2, "L1-2", "rtx6000", 1.0));
+        c.insert(entry(1, "L1-1", "rtx6000", 2.0)); // refresh, not a new key
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats.evictions, 0);
+        assert_eq!(c.peek(Fingerprint(1)).unwrap().best_speedup, 2.0);
+        // now 2 is coldest
+        c.insert(entry(3, "L1-3", "rtx6000", 1.0));
+        assert!(c.peek(Fingerprint(2)).is_none());
+    }
+
+    #[test]
+    fn warm_candidate_prefers_fastest_other_gpu() {
+        let mut c = ResultCache::new(8);
+        c.insert(entry(1, "L1-95", "rtx6000", 1.4));
+        c.insert(entry(2, "L1-95", "a100", 2.0));
+        c.insert(entry(3, "L1-95", "h100", 1.7));
+        c.insert(entry(4, "L1-1", "a100", 9.0)); // different task
+        let w = c
+            .warm_candidate("L1-95", "rtx6000", "CudaForge", "OpenAI-o3", "OpenAI-o3")
+            .unwrap();
+        assert_eq!(w.gpu_key, "a100");
+        assert_eq!(w.best_speedup, 2.0);
+        assert!(
+            c.warm_candidate("L1-95", "rtx6000", "one-shot", "OpenAI-o3", "OpenAI-o3")
+                .is_none(),
+            "strategy must match"
+        );
+    }
+
+    #[test]
+    fn snapshot_restore_round_trips_entries_and_recency() {
+        let dir = std::env::temp_dir().join("cudaforge_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.jsonl");
+
+        let mut c = ResultCache::new(4);
+        c.insert(entry(1, "L1-1", "rtx6000", 1.1));
+        c.insert(entry(2, "L1-2", "a100", 1.2));
+        c.get(Fingerprint(1)); // 2 is now coldest
+        c.snapshot(&path).unwrap();
+
+        let mut r = ResultCache::restore(&path, 4).unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.stats, CacheStats::default());
+        assert_eq!(r.peek(Fingerprint(2)), c.peek(Fingerprint(2)));
+        // recency survived: inserting fresh keys evicts 2 first, not 1
+        r.insert(entry(3, "L1-3", "rtx6000", 1.0));
+        r.insert(entry(4, "L1-4", "rtx6000", 1.0));
+        r.insert(entry(5, "L1-5", "rtx6000", 1.0));
+        assert!(r.peek(Fingerprint(2)).is_none());
+        assert!(r.peek(Fingerprint(1)).is_some());
+
+        assert!(ResultCache::restore(dir.join("absent.jsonl"), 4).is_err());
+        std::fs::write(dir.join("bad.jsonl"), "{not json}\n").unwrap();
+        assert!(ResultCache::restore(dir.join("bad.jsonl"), 4).is_err());
+    }
+}

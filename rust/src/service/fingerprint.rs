@@ -1,0 +1,178 @@
+//! Content-addressed request fingerprints.
+//!
+//! A fingerprint is a stable 64-bit digest of everything that determines a
+//! request's answer: the task's physical workload descriptor, the target GPU,
+//! the agent models, the strategy and the round budget. Two requests with the
+//! same fingerprint are the same piece of work — the cache and the
+//! single-flight queue key on it.
+//!
+//! Stability matters more than speed here: the digest is computed over a
+//! *canonical* field list (sorted by field name), so the order in which
+//! callers add fields — or the order struct fields happen to be declared
+//! in — can never change the hash. The seed is deliberately excluded:
+//! re-rolling the RNG does not change what the user asked for.
+
+use std::fmt;
+
+use crate::agents::ModelProfile;
+use crate::gpu::GpuSpec;
+use crate::tasks::TaskSpec;
+use crate::workflow::Strategy;
+
+/// 64-bit content address of one optimization request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(pub u64);
+
+impl fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+impl Fingerprint {
+    /// Parse the hex form written by `Display` (cache snapshots).
+    pub fn parse(s: &str) -> Option<Fingerprint> {
+        u64::from_str_radix(s, 16).ok().map(Fingerprint)
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn fnv_extend(mut h: u64, bytes: &[u8]) -> u64 {
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Order-insensitive field hasher: add `(name, value)` pairs in any order,
+/// `finish` canonicalizes (sorts by name) before digesting.
+#[derive(Default)]
+pub struct FieldHasher {
+    fields: Vec<(String, String)>,
+}
+
+impl FieldHasher {
+    pub fn new() -> FieldHasher {
+        FieldHasher::default()
+    }
+
+    pub fn field(mut self, name: &str, value: impl fmt::Display) -> FieldHasher {
+        self.fields.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn finish(mut self) -> Fingerprint {
+        self.fields.sort();
+        let mut h = FNV_OFFSET;
+        for (name, value) in &self.fields {
+            // Unit separators terminate both halves, so neither "ab"+"c" vs
+            // "a"+"bc" nor a value containing the name/value delimiter can
+            // alias another field list.
+            h = fnv_extend(h, name.as_bytes());
+            h = fnv_extend(h, b"\x1f");
+            h = fnv_extend(h, value.as_bytes());
+            h = fnv_extend(h, b"\x1f");
+        }
+        Fingerprint(h)
+    }
+}
+
+/// Fingerprint one optimization request. Content-addressed: every TaskSpec
+/// field that feeds the simulator participates, so a task whose workload
+/// descriptor changes (new suite revision) misses the old cache entries.
+pub fn of_request(
+    task: &TaskSpec,
+    gpu: &GpuSpec,
+    coder: &ModelProfile,
+    judge: &ModelProfile,
+    strategy: Strategy,
+    rounds: usize,
+) -> Fingerprint {
+    FieldHasher::new()
+        .field("task.level", task.level)
+        .field("task.index", task.index)
+        .field("task.name", &task.name)
+        .field("task.op_class", task.op_class.name())
+        .field("task.flops", task.flops)
+        .field("task.ideal_bytes", task.ideal_bytes)
+        .field("task.out_elems", task.out_elems)
+        .field("task.intermediate_bytes", task.intermediate_bytes)
+        .field("task.stages", task.stages)
+        .field("task.tc_eligible", task.tc_eligible)
+        .field("task.difficulty", task.difficulty)
+        .field("task.baseline_quality", task.baseline_quality)
+        .field("task.baseline_waste", task.baseline_waste)
+        .field("task.binding", task.binding.unwrap_or("-"))
+        .field("gpu.key", gpu.key)
+        .field("coder", coder.name)
+        .field("judge", judge.name)
+        .field("strategy", strategy.name())
+        .field("rounds", rounds)
+        .finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::profiles::{GPT5, O3};
+    use crate::gpu::{A100, RTX6000_ADA};
+    use crate::tasks::by_id;
+
+    #[test]
+    fn stable_across_field_insertion_order() {
+        let a = FieldHasher::new()
+            .field("gpu", "rtx6000")
+            .field("task", "L1-95")
+            .field("rounds", 10)
+            .finish();
+        let b = FieldHasher::new()
+            .field("rounds", 10)
+            .field("task", "L1-95")
+            .field("gpu", "rtx6000")
+            .finish();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn field_boundaries_do_not_collide() {
+        let a = FieldHasher::new().field("ab", "c").finish();
+        let b = FieldHasher::new().field("a", "bc").finish();
+        assert_ne!(a, b);
+        // a delimiter-looking value must not shift the name/value boundary
+        let c = FieldHasher::new().field("a", "b=c").finish();
+        let d = FieldHasher::new().field("a=b", "c").finish();
+        assert_ne!(c, d);
+    }
+
+    #[test]
+    fn request_fingerprint_discriminates_every_axis() {
+        let t95 = by_id("L1-95").unwrap();
+        let t1 = by_id("L1-1").unwrap();
+        let base = of_request(&t95, &RTX6000_ADA, &O3, &O3, Strategy::CudaForge, 10);
+        assert_eq!(
+            base,
+            of_request(&t95, &RTX6000_ADA, &O3, &O3, Strategy::CudaForge, 10),
+            "same request, same address"
+        );
+        for other in [
+            of_request(&t1, &RTX6000_ADA, &O3, &O3, Strategy::CudaForge, 10),
+            of_request(&t95, &A100, &O3, &O3, Strategy::CudaForge, 10),
+            of_request(&t95, &RTX6000_ADA, &GPT5, &O3, Strategy::CudaForge, 10),
+            of_request(&t95, &RTX6000_ADA, &O3, &GPT5, Strategy::CudaForge, 10),
+            of_request(&t95, &RTX6000_ADA, &O3, &O3, Strategy::OneShot, 10),
+            of_request(&t95, &RTX6000_ADA, &O3, &O3, Strategy::CudaForge, 30),
+        ] {
+            assert_ne!(base, other);
+        }
+    }
+
+    #[test]
+    fn hex_round_trips() {
+        let fp = Fingerprint(0x0123_4567_89ab_cdef);
+        assert_eq!(Fingerprint::parse(&fp.to_string()), Some(fp));
+        assert!(Fingerprint::parse("not-hex").is_none());
+    }
+}

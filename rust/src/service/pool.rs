@@ -1,0 +1,74 @@
+//! Reusable fixed-size worker pool over an indexed work list.
+//!
+//! Refactored out of `coordinator::run_suite`'s ad-hoc thread loop so the
+//! batch suite runner and the service scheduler dispatch through one
+//! mechanism. tokio is unavailable offline (DESIGN.md §2), so this is
+//! std::thread with an atomic work counter: workers claim indices until the
+//! list is exhausted, and results land in their slot regardless of which
+//! worker ran them — output order, and therefore every downstream
+//! aggregation, is independent of scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `f(i)` for every `i` in `0..n` on up to `threads` workers, returning
+/// the results in index order. Deterministic for deterministic `f` no matter
+/// the worker count or interleaving.
+pub fn run_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        // Fast path: no thread spawn overhead for serial or tiny batches.
+        return (0..n).map(f).collect();
+    }
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let result = f(i);
+                *slots[i].lock().unwrap() = Some(result);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker completed slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_index_order() {
+        let out = run_indexed(100, 8, |i| i * i);
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn handles_empty_and_serial() {
+        assert!(run_indexed(0, 4, |i| i).is_empty());
+        assert_eq!(run_indexed(3, 1, |i| i + 1), vec![1, 2, 3]);
+        // more threads than items
+        assert_eq!(run_indexed(2, 64, |i| i), vec![0, 1]);
+    }
+
+    #[test]
+    fn same_result_across_worker_counts() {
+        let a = run_indexed(50, 1, |i| (i as u64).wrapping_mul(0x9E3779B9));
+        let b = run_indexed(50, 7, |i| (i as u64).wrapping_mul(0x9E3779B9));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,188 @@
+//! Job queue: request admission, priorities, and single-flight dedup.
+//!
+//! Requests that miss the cache are admitted here. Concurrent requests for
+//! the same fingerprint coalesce into one *flight*: the first arrival is the
+//! leader and actually runs the workflow; later arrivals become followers
+//! and share the leader's result (and its cost) when it lands. A flight's
+//! priority is the most urgent priority among its members, so a batch
+//! request that later attracts an interactive follower jumps the line.
+//!
+//! Draining is deterministic: flights come out ordered by (priority,
+//! arrival sequence), never by map iteration order.
+
+use std::collections::BTreeMap;
+
+use crate::service::fingerprint::Fingerprint;
+
+/// Request urgency classes (lower = more urgent).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// A user is waiting at a prompt.
+    Interactive,
+    /// Normal API traffic.
+    Standard,
+    /// Offline sweeps, precomputation.
+    Batch,
+}
+
+pub const ALL_PRIORITIES: [Priority; 3] =
+    [Priority::Interactive, Priority::Standard, Priority::Batch];
+
+impl Priority {
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+/// One admitted request (already known to miss the cache).
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Arrival sequence number — the caller's index into its trace.
+    pub seq: u64,
+    pub fingerprint: Fingerprint,
+    pub priority: Priority,
+}
+
+/// One unit of actual work: a leader plus the followers sharing its flight.
+#[derive(Clone, Debug)]
+pub struct Flight {
+    pub fingerprint: Fingerprint,
+    /// Arrival seq of the leader (first admitted request).
+    pub leader_seq: u64,
+    /// Arrival seqs of coalesced followers, in arrival order.
+    pub follower_seqs: Vec<u64>,
+    /// Most urgent priority across all members.
+    pub priority: Priority,
+}
+
+impl Flight {
+    pub fn members(&self) -> usize {
+        1 + self.follower_seqs.len()
+    }
+}
+
+/// Queue counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QueueStats {
+    /// Requests admitted (leaders + followers).
+    pub admitted: u64,
+    /// Requests that coalesced onto an existing flight.
+    pub coalesced: u64,
+    /// Flights handed to the scheduler.
+    pub dispatched: u64,
+}
+
+/// The pending-flight set. `BTreeMap` keyed by fingerprint keeps membership
+/// checks O(log n) and every scan deterministic.
+#[derive(Default)]
+pub struct JobQueue {
+    pending: BTreeMap<Fingerprint, Flight>,
+    pub stats: QueueStats,
+}
+
+impl JobQueue {
+    pub fn new() -> JobQueue {
+        JobQueue::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Admit a request. Returns `true` when it opened a new flight, `false`
+    /// when it coalesced onto an in-flight duplicate (single-flight dedup).
+    pub fn push(&mut self, req: Request) -> bool {
+        self.stats.admitted += 1;
+        match self.pending.get_mut(&req.fingerprint) {
+            Some(flight) => {
+                flight.follower_seqs.push(req.seq);
+                flight.priority = flight.priority.min(req.priority);
+                self.stats.coalesced += 1;
+                false
+            }
+            None => {
+                self.pending.insert(
+                    req.fingerprint,
+                    Flight {
+                        fingerprint: req.fingerprint,
+                        leader_seq: req.seq,
+                        follower_seqs: Vec::new(),
+                        priority: req.priority,
+                    },
+                );
+                true
+            }
+        }
+    }
+
+    /// Take every pending flight, most urgent first (ties by arrival order).
+    pub fn drain(&mut self) -> Vec<Flight> {
+        let mut flights: Vec<Flight> = std::mem::take(&mut self.pending)
+            .into_values()
+            .collect();
+        flights.sort_by_key(|f| (f.priority, f.leader_seq));
+        self.stats.dispatched += flights.len() as u64;
+        flights
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(seq: u64, fp: u64, p: Priority) -> Request {
+        Request { seq, fingerprint: Fingerprint(fp), priority: p }
+    }
+
+    #[test]
+    fn single_flight_dedups_identical_requests() {
+        let mut q = JobQueue::new();
+        assert!(q.push(req(0, 7, Priority::Standard)));
+        assert!(!q.push(req(1, 7, Priority::Standard)));
+        assert!(!q.push(req(2, 7, Priority::Batch)));
+        assert!(q.push(req(3, 9, Priority::Standard)));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.stats.admitted, 4);
+        assert_eq!(q.stats.coalesced, 2);
+
+        let flights = q.drain();
+        assert_eq!(flights.len(), 2);
+        let f7 = flights.iter().find(|f| f.fingerprint == Fingerprint(7)).unwrap();
+        assert_eq!(f7.leader_seq, 0);
+        assert_eq!(f7.follower_seqs, vec![1, 2]);
+        assert_eq!(f7.members(), 3);
+        assert_eq!(q.stats.dispatched, 2);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn followers_escalate_flight_priority() {
+        let mut q = JobQueue::new();
+        q.push(req(0, 1, Priority::Batch));
+        q.push(req(1, 2, Priority::Standard));
+        q.push(req(2, 1, Priority::Interactive)); // escalates flight 1
+        let flights = q.drain();
+        assert_eq!(flights[0].fingerprint, Fingerprint(1));
+        assert_eq!(flights[0].priority, Priority::Interactive);
+        assert_eq!(flights[1].fingerprint, Fingerprint(2));
+    }
+
+    #[test]
+    fn drain_orders_by_priority_then_arrival() {
+        let mut q = JobQueue::new();
+        q.push(req(0, 10, Priority::Batch));
+        q.push(req(1, 11, Priority::Interactive));
+        q.push(req(2, 12, Priority::Standard));
+        q.push(req(3, 13, Priority::Interactive));
+        let order: Vec<u64> = q.drain().iter().map(|f| f.leader_seq).collect();
+        assert_eq!(order, vec![1, 3, 2, 0]);
+    }
+}

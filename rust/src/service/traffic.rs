@@ -1,0 +1,132 @@
+//! Synthetic traffic traces: Zipf-distributed task popularity over the
+//! KernelBench-sim suite, a skewed GPU mix, and a priority mix.
+//!
+//! Production kernel-optimization traffic is heavy-tailed — a few operators
+//! (attention, GEMM epilogues, softmax variants) dominate while a long tail
+//! trickles — which is exactly the regime where a result cache pays for
+//! itself. The trace is fully determined by its seed.
+
+use crate::gpu::{self, GpuSpec};
+use crate::service::queue::{Priority, ALL_PRIORITIES};
+use crate::util::rng::Rng;
+
+/// Trace shape parameters.
+#[derive(Clone, Debug)]
+pub struct TrafficConfig {
+    pub requests: usize,
+    /// Zipf exponent s (popularity of the k-th task ∝ k^-s).
+    pub zipf_s: f64,
+    pub seed: u64,
+    /// `(gpu key, weight)` — most traffic targets the default part, a
+    /// minority targets others (the cross-GPU warm-start opportunity).
+    pub gpu_mix: Vec<(&'static str, f64)>,
+    /// Weights for [interactive, standard, batch].
+    pub priority_mix: [f64; 3],
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig {
+            requests: 2000,
+            zipf_s: 1.1,
+            seed: 7,
+            gpu_mix: vec![
+                ("rtx6000", 0.85),
+                ("a100", 0.05),
+                ("rtx4090", 0.05),
+                ("h100", 0.05),
+            ],
+            priority_mix: [0.2, 0.6, 0.2],
+        }
+    }
+}
+
+/// One arriving request: an index into the caller's task set, a target GPU,
+/// and an urgency class.
+#[derive(Clone, Copy, Debug)]
+pub struct TrafficRequest {
+    pub task_index: usize,
+    pub gpu: &'static GpuSpec,
+    pub priority: Priority,
+}
+
+/// Generate a trace over a task set of `n_tasks`. Popularity rank is mapped
+/// onto task indices through a seeded shuffle, so *which* tasks are hot
+/// varies with the seed while the rank-frequency law does not.
+pub fn generate(n_tasks: usize, cfg: &TrafficConfig) -> Vec<TrafficRequest> {
+    assert!(n_tasks > 0, "traffic needs a task set");
+    let mut rng = Rng::new(cfg.seed ^ 0x7261_6666_6963_u64);
+
+    // rank -> task index
+    let mut perm: Vec<usize> = (0..n_tasks).collect();
+    rng.shuffle(&mut perm);
+    let zipf_weights: Vec<f64> =
+        (1..=n_tasks).map(|k| (k as f64).powf(-cfg.zipf_s)).collect();
+
+    let gpus: Vec<&'static GpuSpec> = cfg
+        .gpu_mix
+        .iter()
+        .map(|(key, _)| gpu::by_key(key).unwrap_or_else(|| panic!("unknown gpu {key}")))
+        .collect();
+    let gpu_weights: Vec<f64> = cfg.gpu_mix.iter().map(|(_, w)| *w).collect();
+
+    (0..cfg.requests)
+        .map(|_| {
+            let rank = rng.weighted_choice(&zipf_weights);
+            let g = rng.weighted_choice(&gpu_weights);
+            let p = rng.weighted_choice(&cfg.priority_mix);
+            TrafficRequest {
+                task_index: perm[rank],
+                gpu: gpus[g],
+                priority: ALL_PRIORITIES[p],
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = TrafficConfig { requests: 200, ..TrafficConfig::default() };
+        let a = generate(250, &cfg);
+        let b = generate(250, &cfg);
+        assert_eq!(a.len(), 200);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.task_index, y.task_index);
+            assert_eq!(x.gpu.key, y.gpu.key);
+            assert_eq!(x.priority, y.priority);
+        }
+        let c = generate(250, &TrafficConfig { seed: 8, ..cfg });
+        assert!(a.iter().zip(&c).any(|(x, y)| x.task_index != y.task_index));
+    }
+
+    #[test]
+    fn zipf_trace_is_heavy_tailed() {
+        let cfg = TrafficConfig { requests: 2000, ..TrafficConfig::default() };
+        let trace = generate(250, &cfg);
+        let mut counts = vec![0usize; 250];
+        for r in &trace {
+            counts[r.task_index] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        // The hottest task should dwarf the median task.
+        assert!(counts[0] > 100, "head count {}", counts[0]);
+        assert!(counts[0] > counts[125].max(1) * 10);
+        // And repeats dominate: far fewer distinct tasks than requests.
+        let distinct = counts.iter().filter(|c| **c > 0).count();
+        assert!(distinct < 250, "some tail tasks never arrive");
+    }
+
+    #[test]
+    fn gpu_mix_respected() {
+        let cfg = TrafficConfig { requests: 2000, ..TrafficConfig::default() };
+        let trace = generate(250, &cfg);
+        let default_share = trace.iter().filter(|r| r.gpu.key == "rtx6000").count() as f64
+            / trace.len() as f64;
+        assert!((0.8..0.9).contains(&default_share), "share {default_share}");
+        assert!(trace.iter().any(|r| r.gpu.key != "rtx6000"));
+    }
+}

@@ -2,7 +2,10 @@
 //! PJRT CPU client against its pure-jnp reference, then runs the CudaForge
 //! workflow on the artifact-bound anchor tasks with the real oracle.
 //!
-//! Requires `make artifacts` (skips, loudly, if artifacts are absent).
+//! Requires `make artifacts` (skips, loudly, if artifacts are absent) and a
+//! build with `--features pjrt` (compiles to an empty test crate otherwise).
+
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 

@@ -1,0 +1,109 @@
+//! Integration: the kernel-optimization service layer end to end — replay
+//! determinism across worker counts, the Zipf cache-economics shape the
+//! ROADMAP's multi-user target depends on, warm-start convergence, and
+//! snapshot/restore warm restarts.
+
+use cudaforge::service::cache::ResultCache;
+use cudaforge::service::traffic::{generate, TrafficConfig};
+use cudaforge::service::{KernelService, ServiceConfig, ServiceReport};
+use cudaforge::tasks;
+use cudaforge::workflow::NoOracle;
+
+fn replay(threads: usize, requests: usize, seed: u64) -> ServiceReport {
+    let suite = tasks::kernelbench();
+    let trace = generate(
+        suite.len(),
+        &TrafficConfig { requests, seed, ..TrafficConfig::default() },
+    );
+    let mut svc = KernelService::new(ServiceConfig {
+        threads,
+        window: 16,
+        seed,
+        ..ServiceConfig::default()
+    });
+    svc.replay(&trace, &suite, &NoOracle)
+}
+
+#[test]
+fn report_identical_regardless_of_worker_count() {
+    // The hard determinism contract: every report field — counters, f64
+    // latency percentiles, dollar sums — is bit-identical whether one OS
+    // thread or eight crunch the flights.
+    let a = replay(1, 300, 7);
+    let b = replay(4, 300, 7);
+    let c = replay(8, 300, 7);
+    assert_eq!(a, b);
+    assert_eq!(a, c);
+    // ...and seeds actually matter.
+    let d = replay(4, 300, 8);
+    assert_ne!(a, d);
+}
+
+#[test]
+fn zipf_traffic_amortizes_most_requests() {
+    let r = replay(4, 500, 7);
+    assert!(r.hit_rate > 0.5, "hit rate {} on Zipf traffic", r.hit_rate);
+    assert!(
+        (r.flights_run as u64) + r.cache_hits + r.shared == r.requests as u64,
+        "admission classes partition the trace"
+    );
+    assert!(r.api_usd_saved > r.api_usd_spent * 0.5, "cache pays for itself");
+    assert!((r.api_usd_cold - r.api_usd_spent - r.api_usd_saved).abs() < 1e-9);
+    // Median request is a cache hit (sub-second); tail is a cold run.
+    assert!(r.p50_latency_s < 1.0, "p50 {}", r.p50_latency_s);
+    assert!(r.p95_latency_s > 60.0, "p95 {}", r.p95_latency_s);
+}
+
+#[test]
+fn warm_starts_converge_in_strictly_fewer_mean_rounds() {
+    // The acceptance property for the cross-GPU transfer heuristic, at the
+    // service level: secondary-GPU requests for tasks already solved on the
+    // primary GPU reach their best kernel in fewer rounds than cold runs.
+    let r = replay(4, 600, 7);
+    assert!(r.warm_started > 0, "trace must trigger cross-GPU warm starts");
+    assert!(r.mean_rounds_to_best_cold > 0.0);
+    assert!(
+        r.mean_rounds_to_best_warm < r.mean_rounds_to_best_cold,
+        "warm {} !< cold {}",
+        r.mean_rounds_to_best_warm,
+        r.mean_rounds_to_best_cold
+    );
+}
+
+#[test]
+fn snapshot_restore_makes_the_restart_warm() {
+    let suite = tasks::kernelbench();
+    let config = ServiceConfig { threads: 2, window: 16, ..ServiceConfig::default() };
+    let dir = std::env::temp_dir().join("cudaforge_service_itest");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cache.jsonl");
+
+    let day1 = generate(
+        suite.len(),
+        &TrafficConfig { requests: 300, seed: 7, ..TrafficConfig::default() },
+    );
+    let mut svc = KernelService::new(config.clone());
+    let r1 = svc.replay(&day1, &suite, &NoOracle);
+    svc.cache().snapshot(&path).unwrap();
+
+    // Same traffic, fresh process, restored cache: nothing needs a rerun
+    // except the never-correct stragglers.
+    let cache = ResultCache::restore(&path, config.capacity).unwrap();
+    assert_eq!(cache.len(), svc.cache().len());
+    let mut warm = KernelService::with_cache(config.clone(), cache);
+    let r2 = warm.replay(&day1, &suite, &NoOracle);
+    assert!(
+        r2.hit_rate > r1.hit_rate,
+        "restored cache must beat the cold start: {} vs {}",
+        r2.hit_rate,
+        r1.hit_rate
+    );
+    assert!(r2.api_usd_spent < r1.api_usd_spent);
+    assert!(r2.flights_run < r1.flights_run);
+
+    // A cold-restarted service on the same trace reproduces day 1 exactly —
+    // the snapshot is what made the difference.
+    let mut cold = KernelService::new(config);
+    let r3 = cold.replay(&day1, &suite, &NoOracle);
+    assert_eq!(r1, r3);
+}
