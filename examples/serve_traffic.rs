@@ -1,6 +1,8 @@
 //! Service-layer walkthrough: replay Zipf traffic through the kernel-
-//! optimization service, snapshot the cache, then restart warm and replay a
-//! second day of traffic to show the economics of a persistent cache.
+//! optimization service, snapshot the cache, restart warm and replay a
+//! second day of traffic, then sweep the simulated GPU fleet size to answer
+//! the capacity-planning question: how many GPUs does this traffic need to
+//! meet its per-priority SLOs?
 //!
 //!     cargo run --release --example serve_traffic
 
@@ -25,17 +27,20 @@ fn main() {
     let r1 = svc.replay(&day1, &suite, &NoOracle);
     println!("{}", service_table(&r1).render());
     println!(
-        "day 1 (cold start): hit rate {:.1}%, ${:.2} spent, ${:.2} saved\n",
+        "day 1 (cold start): hit rate {:.1}%, ${:.2} spent, ${:.2} saved, \
+         mean queue wait {:.1} min on {} simulated GPUs\n",
         r1.hit_rate * 100.0,
         r1.api_usd_spent,
-        r1.api_usd_saved
+        r1.api_usd_saved,
+        r1.mean_queue_wait_s / 60.0,
+        config.sim_workers,
     );
     svc.cache().snapshot(&snapshot).expect("snapshot");
     println!("[cache snapshot: {} entries -> {}]\n", svc.cache().len(), snapshot.display());
 
     // ---- day 2: restart warm from the snapshot ----------------------------
     let cache = ResultCache::restore(&snapshot, config.capacity).expect("restore");
-    let mut warm_svc = KernelService::with_cache(config, cache);
+    let mut warm_svc = KernelService::with_cache(config.clone(), cache);
     let day2 = generate(
         suite.len(),
         &TrafficConfig { requests: 800, seed: 8, ..TrafficConfig::default() },
@@ -51,7 +56,32 @@ fn main() {
         r1.api_usd_spent
     );
     println!(
-        "warm-started runs reached their best kernel in {:.2} mean rounds (cold: {:.2})",
+        "warm-started runs reached their best kernel in {:.2} mean rounds (cold: {:.2})\n",
         r2.mean_rounds_to_best_warm, r2.mean_rounds_to_best_cold
     );
+
+    // ---- capacity planning: sweep the simulated fleet ---------------------
+    println!("fleet sizing on day-1 traffic (cold cache each run):");
+    println!(
+        "{:>8}  {:>9}  {:>9}  {:>10}  {:>12}  {:>12}",
+        "GPUs", "p95 (m)", "p99 (m)", "wait (m)", "util", "batch SLO"
+    );
+    for sim_workers in [1usize, 2, 4, 8, 16] {
+        let mut s = KernelService::new(ServiceConfig { sim_workers, ..config.clone() });
+        let r = s.replay(&day1, &suite, &NoOracle);
+        let batch = r
+            .per_priority
+            .iter()
+            .find(|c| c.priority.name() == "batch")
+            .expect("batch class present");
+        println!(
+            "{:>8}  {:>9.1}  {:>9.1}  {:>10.1}  {:>11.1}%  {:>11.1}%",
+            sim_workers,
+            r.p95_latency_s / 60.0,
+            r.p99_latency_s / 60.0,
+            r.mean_queue_wait_s / 60.0,
+            r.utilization * 100.0,
+            batch.slo_attainment * 100.0,
+        );
+    }
 }

@@ -1,13 +1,15 @@
 //! Bench: the service-layer hot paths — fingerprinting, cache lookups under
-//! LRU churn, single-flight queue ops, and an end-to-end traffic replay.
-//! The admission path (fingerprint + cache probe) runs once per request at
-//! serving time, so it must stay far below the microsecond regime.
+//! LRU churn, single-flight queue ops, the discrete-event fleet simulator,
+//! and an end-to-end traffic replay. The admission path (fingerprint +
+//! cache probe + fleet advance) runs once per request at serving time, so
+//! it must stay far below the microsecond regime.
 
 use cudaforge::agents::profiles::O3;
 use cudaforge::gpu::RTX6000_ADA;
 use cudaforge::kernel::KernelConfig;
 use cudaforge::service::cache::{CacheEntry, ResultCache};
 use cudaforge::service::fingerprint::{of_request, Fingerprint};
+use cudaforge::service::pool::{FleetSim, SimFlight};
 use cudaforge::service::queue::{JobQueue, Priority, Request};
 use cudaforge::service::traffic::{generate, TrafficConfig};
 use cudaforge::service::{KernelService, ServiceConfig};
@@ -65,6 +67,26 @@ fn main() {
             seq += 1;
         }
         black_box(q.drain().len());
+    });
+
+    let mut sim_seq = 0u64;
+    bench("service::fleet submit+advance (16 flights, 4 workers)", 100_000, || {
+        let mut fleet = FleetSim::new(4);
+        for k in 0..16u64 {
+            fleet.submit(SimFlight {
+                fingerprint: Fingerprint(sim_seq ^ k),
+                priority: Priority::Standard,
+                leader_seq: sim_seq + k,
+                arrival_s: k as f64 * 3.0,
+                service_s: 900.0 + k as f64,
+                members: vec![(sim_seq + k, k as f64 * 3.0)],
+                cold_ref: 0.30,
+            });
+        }
+        let mut served = 0usize;
+        fleet.advance(f64::INFINITY, &mut |_, _| served += 1);
+        black_box(served);
+        sim_seq += 16;
     });
 
     bench("service::replay 200 Zipf requests (e2e)", 500, || {

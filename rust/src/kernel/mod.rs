@@ -320,8 +320,12 @@ impl KernelConfig {
                 .get("bugs")?
                 .as_arr()?
                 .iter()
-                .filter_map(|b| b.as_str().and_then(Bug::by_name))
-                .collect(),
+                // An unknown bug name is a malformed document, not an empty
+                // bug list — dropping it would deserialize a config that
+                // looks healthier than what was written (cache restores must
+                // fail loudly instead).
+                .map(|b| b.as_str().and_then(Bug::by_name))
+                .collect::<Option<Vec<_>>>()?,
         })
     }
 
@@ -407,6 +411,11 @@ mod tests {
         let v = crate::util::json::Json::parse(&wire).unwrap();
         assert_eq!(KernelConfig::from_json(&v), Some(c));
         assert!(KernelConfig::from_json(&crate::util::json::Json::Null).is_none());
+        // An unknown bug name must reject the whole document, not silently
+        // deserialize a healthier-looking config.
+        let corrupt = wire.replace("out_of_bounds_index", "oob_idx");
+        let v = crate::util::json::Json::parse(&corrupt).unwrap();
+        assert!(KernelConfig::from_json(&v).is_none());
     }
 
     #[test]

@@ -9,8 +9,10 @@
 //! Layer map:
 //! - L4 (`service`): the kernel-optimization service layer — content-
 //!   addressed result cache, single-flight job queue, warm-start scheduling,
-//!   Zipf traffic replay — the first subsystem aimed at serving repeated
-//!   multi-user traffic rather than reproducing paper tables.
+//!   and a discrete-event queueing simulation of Zipf traffic over a finite
+//!   simulated GPU fleet (per-priority SLOs, admission control) — the first
+//!   subsystem aimed at serving repeated multi-user traffic rather than
+//!   reproducing paper tables.
 //! - L3 (this crate): the CudaForge workflow — Coder/Judge agents, hardware
 //!   feedback, the GPU/NCU simulator, the KernelBench-sim suite, baselines,
 //!   the metric-selection pipeline, cost model, coordinator and reports.

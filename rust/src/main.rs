@@ -13,6 +13,10 @@
 //!               --strategy NAME --coder MODEL --judge MODEL
 //!               --artifacts DIR (enables the real-numerics oracle)
 //! Serve flags:  --requests N --zipf S --capacity N --window N
+//!               --interarrival SECS (mean Poisson arrival gap)
+//!               --sim-workers N (simulated GPU fleet size)
+//!               --queue-depth N (shed batch work past this backlog)
+//!               --slo I,S,B (per-priority latency targets, seconds)
 //!               --snapshot PATH (restore before / save after the replay)
 
 use cudaforge::agents::profiles;
@@ -21,8 +25,8 @@ use cudaforge::gpu;
 use cudaforge::report::{self, Ctx};
 use cudaforge::runtime;
 use cudaforge::service::cache::ResultCache;
-use cudaforge::service::traffic::{generate, TrafficConfig};
-use cudaforge::service::{KernelService, ServiceConfig};
+use cudaforge::service::traffic::{try_generate, TrafficConfig};
+use cudaforge::service::{KernelService, ServiceConfig, SloTargets};
 use cudaforge::tasks;
 use cudaforge::util::cli::Args;
 use cudaforge::workflow::{
@@ -91,6 +95,30 @@ fn workflow_from(args: &Args) -> WorkflowConfig {
     wf
 }
 
+/// Parse `--slo I,S,B` (interactive/standard/batch latency targets, secs).
+fn slo_from(arg: &str) -> SloTargets {
+    let parts: Vec<f64> = arg
+        .split(',')
+        .map(|p| {
+            p.trim().parse().unwrap_or_else(|_| {
+                eprintln!("error: --slo wants three numbers, got '{p}' in '{arg}'");
+                std::process::exit(2);
+            })
+        })
+        .collect();
+    if parts.len() != 3 {
+        eprintln!(
+            "error: --slo wants interactive,standard,batch seconds (e.g. 120,7200,86400)"
+        );
+        std::process::exit(2);
+    }
+    if parts.iter().any(|s| !s.is_finite() || *s <= 0.0) {
+        eprintln!("error: --slo targets must be finite and > 0 seconds, got '{arg}'");
+        std::process::exit(2);
+    }
+    SloTargets { interactive_s: parts[0], standard_s: parts[1], batch_s: parts[2] }
+}
+
 fn serve(args: &Args) {
     let oracle = build_oracle(args);
     let suite = tasks::kernelbench();
@@ -98,6 +126,7 @@ fn serve(args: &Args) {
     let traffic = TrafficConfig {
         requests: args.get_usize("requests", 2000),
         zipf_s: args.get_f64("zipf", 1.1),
+        mean_interarrival_s: args.get_f64("interarrival", 90.0),
         seed,
         ..TrafficConfig::default()
     };
@@ -105,11 +134,16 @@ fn serve(args: &Args) {
         capacity: args.get_usize("capacity", 1024),
         window: args.get_usize("window", 32),
         threads: args.get_usize("threads", default_threads()),
+        sim_workers: args.get_usize("sim-workers", 8),
+        queue_depth: args.get_usize("queue-depth", usize::MAX),
         strategy: strategy_or_exit(args.get_or("strategy", "cudaforge")),
         rounds: args.get_usize("rounds", 10),
         seed,
         ..ServiceConfig::default()
     };
+    if let Some(slo) = args.get("slo") {
+        config.slo = slo_from(slo);
+    }
     if let Some(m) = args.get("coder") {
         config.coder = *profiles::by_name(m).unwrap_or_else(|| {
             eprintln!("error: unknown coder model '{m}'");
@@ -141,15 +175,21 @@ fn serve(args: &Args) {
     };
 
     println!(
-        "serving {} requests (zipf s={}, seed {}) over {} tasks | cache {} | window {}",
+        "serving {} requests (zipf s={}, seed {}, mean gap {}s) over {} tasks | \
+         cache {} | window {} | {} sim GPU workers",
         traffic.requests,
         traffic.zipf_s,
         seed,
+        traffic.mean_interarrival_s,
         suite.len(),
         svc.config.capacity,
         svc.config.window,
+        svc.config.sim_workers,
     );
-    let trace = generate(suite.len(), &traffic);
+    let trace = try_generate(suite.len(), &traffic).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
     let t0 = std::time::Instant::now();
     let report = svc.replay(&trace, &suite, oracle.as_ref());
     let ctx = Ctx {
@@ -158,15 +198,31 @@ fn serve(args: &Args) {
         ..Ctx::default()
     };
     report::service_report(&ctx, &report);
+    let rounds = report::mean_rounds;
     println!(
-        "replay wall {:.2}s | {} runs executed, {:.1}% served from cache/in-flight | \
-         warm runs reached best in {:.2} mean rounds vs {:.2} cold",
+        "replay wall {:.2}s | {} runs executed, {:.1}% served from cache/in-flight, \
+         {} shed | warm runs reached best in {} mean rounds vs {} cold",
         t0.elapsed().as_secs_f64(),
         report.flights_run,
         report.hit_rate * 100.0,
-        report.mean_rounds_to_best_warm,
-        report.mean_rounds_to_best_cold,
+        report.rejected,
+        rounds(report.mean_rounds_to_best_warm),
+        rounds(report.mean_rounds_to_best_cold),
     );
+    for c in &report.per_priority {
+        println!(
+            "  {:<11} p50 {:.1}m p95 {:.1}m p99 {:.1}m | SLO <= {}s attained {:.1}% | \
+             {} requests, {} rejected",
+            c.priority.name(),
+            c.p50_latency_s / 60.0,
+            c.p95_latency_s / 60.0,
+            c.p99_latency_s / 60.0,
+            c.slo_target_s,
+            c.slo_attainment * 100.0,
+            c.requests,
+            c.rejected,
+        );
+    }
     if let Some(path) = &snapshot {
         match svc.cache().snapshot(path) {
             Ok(()) => eprintln!("[snapshot: {} entries -> {path}]", svc.cache().len()),
@@ -180,7 +236,9 @@ fn usage() {
     println!("usage: cudaforge <run|suite|serve|bench|select|verify|specs> [flags]");
     println!("  run    --task L1-95 [--gpu rtx6000 --strategy cudaforge --rounds 10]");
     println!("  suite  [--dstar] [--strategy NAME --coder o3 --judge gpt5]");
-    println!("  serve  [--requests 2000 --zipf 1.1 --seed 7 --capacity 1024 --window 32 --snapshot cache.jsonl]");
+    println!("  serve  [--requests 2000 --zipf 1.1 --seed 7 --capacity 1024 --window 32]");
+    println!("         [--interarrival 90 --sim-workers 8 --queue-depth N --slo 120,7200,86400]");
+    println!("         [--snapshot cache.jsonl]");
     println!("  bench  --exp <table1|table2|table3|table4|table5|fig4..fig9|table6|table8|all> [--quick]");
     println!("  select [--iterations 100]");
     println!("  verify [--artifacts artifacts]   (needs --features pjrt)");

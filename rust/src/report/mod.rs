@@ -408,35 +408,78 @@ pub fn table8(ctx: &Ctx, iterations: usize) {
     );
 }
 
+/// Render a mean rounds-to-best figure; rounds are 1-based, so 0.0 can only
+/// mean "no such runs ran" and renders as "-", never as instant convergence.
+pub fn mean_rounds(x: f64) -> String {
+    if x > 0.0 {
+        f2(x)
+    } else {
+        "-".to_string()
+    }
+}
+
 /// Service-layer replay report (the `serve` subcommand): throughput, cache
-/// effectiveness, latency percentiles, and the API dollars the cache saved
-/// versus serving every request cold.
+/// effectiveness, queueing-aware latency percentiles, per-priority SLO
+/// attainment, admission-control shedding, and the API dollars the cache
+/// saved versus serving every request cold.
 pub fn service_table(r: &crate::service::ServiceReport) -> Table {
     let mut t = Table::new(
         "Service report — Zipf traffic replay over KernelBench-sim",
         &["Metric", "Value"],
     );
-    let rows: Vec<(&str, String)> = vec![
-        ("Requests", r.requests.to_string()),
-        ("Workflow runs (cache misses)", r.flights_run.to_string()),
-        ("Cache hits", r.cache_hits.to_string()),
-        ("Single-flight shared", r.shared.to_string()),
-        ("Cache evictions", r.evictions.to_string()),
-        ("Warm-started runs", r.warm_started.to_string()),
-        ("Hit rate", pct(r.hit_rate)),
-        ("p50 latency (min)", f2(r.p50_latency_s / 60.0)),
-        ("p95 latency (min)", f2(r.p95_latency_s / 60.0)),
-        ("Mean latency (min)", f2(r.mean_latency_s / 60.0)),
-        ("API spent ($)", f2(r.api_usd_spent)),
-        ("API saved vs cold ($)", f2(r.api_usd_saved)),
-        ("API cost if all-cold ($)", f2(r.api_usd_cold)),
-        ("Mean rounds-to-best (cold)", f2(r.mean_rounds_to_best_cold)),
-        ("Mean rounds-to-best (warm)", f2(r.mean_rounds_to_best_warm)),
-        ("Simulated GPU-hours", f2(r.gpu_hours)),
-        ("Requests / GPU-hour", f2(r.requests_per_gpu_hour)),
+    let mut rows: Vec<(String, String)> = vec![
+        ("Requests".into(), r.requests.to_string()),
+        ("Workflow runs (cache misses)".into(), r.flights_run.to_string()),
+        ("Cache hits".into(), r.cache_hits.to_string()),
+        ("Single-flight shared".into(), r.shared.to_string()),
+        ("Rejected (admission control)".into(), r.rejected.to_string()),
+        ("Cache evictions".into(), r.evictions.to_string()),
+        ("Warm-started runs".into(), r.warm_started.to_string()),
+        (
+            "Warm-run correctness".into(),
+            if r.warm_started == 0 {
+                "-".to_string()
+            } else {
+                pct(r.warm_correct as f64 / r.warm_started as f64)
+            },
+        ),
+        ("Hit rate".into(), pct(r.hit_rate)),
+        ("p50 latency (min)".into(), f2(r.p50_latency_s / 60.0)),
+        ("p95 latency (min)".into(), f2(r.p95_latency_s / 60.0)),
+        ("p99 latency (min)".into(), f2(r.p99_latency_s / 60.0)),
+        ("Mean latency (min)".into(), f2(r.mean_latency_s / 60.0)),
+        ("Mean queue wait (min)".into(), f2(r.mean_queue_wait_s / 60.0)),
+        ("Peak queue depth".into(), r.peak_queue_depth.to_string()),
+        ("Fleet utilization".into(), pct(r.utilization)),
+        ("API spent ($)".into(), f2(r.api_usd_spent)),
+        ("API saved vs cold ($)".into(), f2(r.api_usd_saved)),
+        ("API cost if all-cold ($)".into(), f2(r.api_usd_cold)),
+        ("Mean rounds-to-best (cold)".into(), mean_rounds(r.mean_rounds_to_best_cold)),
+        ("Mean rounds-to-best (warm)".into(), mean_rounds(r.mean_rounds_to_best_warm)),
+        ("Simulated GPU-hours".into(), f2(r.gpu_hours)),
+        ("Requests / GPU-hour".into(), f2(r.requests_per_gpu_hour)),
     ];
+    for c in &r.per_priority {
+        let name = c.priority.name();
+        rows.push((
+            format!("{name}: p50/p95/p99 (min)"),
+            format!(
+                "{} / {} / {}",
+                f2(c.p50_latency_s / 60.0),
+                f2(c.p95_latency_s / 60.0),
+                f2(c.p99_latency_s / 60.0)
+            ),
+        ));
+        rows.push((
+            format!("{name}: SLO <= {}s attainment", c.slo_target_s),
+            pct(c.slo_attainment),
+        ));
+        rows.push((format!("{name}: requests (rejected)"), {
+            format!("{} ({})", c.requests, c.rejected)
+        }));
+    }
     for (k, v) in rows {
-        t.row(vec![k.to_string(), v]);
+        t.row(vec![k, v]);
     }
     t
 }

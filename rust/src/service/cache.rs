@@ -14,11 +14,18 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::kernel::KernelConfig;
 use crate::service::fingerprint::Fingerprint;
 use crate::util::json::Json;
+
+/// Snapshot wire-format version, written as the first JSONL line and
+/// required by `restore`. Fingerprints are stored literally, so this must
+/// be bumped whenever the `fingerprint` hashing scheme changes — a restore
+/// against an incompatible scheme then fails loudly instead of silently
+/// never hitting. v2: length-prefixed `FieldHasher` fields.
+pub const SNAPSHOT_VERSION: u32 = 2;
 
 /// One cached optimization result.
 #[derive(Clone, Debug, PartialEq)]
@@ -94,6 +101,22 @@ struct Slot {
     tick: u64,
 }
 
+/// Re-tick a resident slot to most-recently-used. Free function over the
+/// disjoint fields so `get`/`insert` can call it while holding the map's
+/// `&mut Slot` — the recency index and the slot must move together or LRU
+/// eviction order corrupts.
+fn retick(
+    tick: &mut u64,
+    recency: &mut BTreeMap<u64, Fingerprint>,
+    slot: &mut Slot,
+    fp: Fingerprint,
+) {
+    *tick += 1;
+    recency.remove(&slot.tick);
+    slot.tick = *tick;
+    recency.insert(*tick, fp);
+}
+
 /// Bounded content-addressed cache, least-recently-used eviction.
 pub struct ResultCache {
     capacity: usize,
@@ -128,24 +151,19 @@ impl ResultCache {
         self.capacity
     }
 
-    fn touch(&mut self, fp: Fingerprint) {
-        self.tick += 1;
-        if let Some(slot) = self.map.get_mut(&fp) {
-            self.recency.remove(&slot.tick);
-            slot.tick = self.tick;
-            self.recency.insert(self.tick, fp);
-        }
-    }
-
-    /// Lookup, counting a hit or miss and refreshing recency on hit.
+    /// Lookup, counting a hit or miss and refreshing recency on hit. One
+    /// map probe: the slot found by `get_mut` is re-ticked in place.
     pub fn get(&mut self, fp: Fingerprint) -> Option<&CacheEntry> {
-        if self.map.contains_key(&fp) {
-            self.stats.hits += 1;
-            self.touch(fp);
-            self.map.get(&fp).map(|s| &s.entry)
-        } else {
-            self.stats.misses += 1;
-            None
+        match self.map.get_mut(&fp) {
+            Some(slot) => {
+                self.stats.hits += 1;
+                retick(&mut self.tick, &mut self.recency, slot, fp);
+                Some(&slot.entry)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
         }
     }
 
@@ -160,7 +178,7 @@ impl ResultCache {
         self.stats.inserts += 1;
         if let Some(slot) = self.map.get_mut(&fp) {
             slot.entry = entry;
-            self.touch(fp);
+            retick(&mut self.tick, &mut self.recency, slot, fp);
             return;
         }
         if self.map.len() >= self.capacity {
@@ -197,9 +215,11 @@ impl ResultCache {
                     && e.best_speedup > 0.0
             })
             .max_by(|a, b| {
-                (a.best_speedup, a.fingerprint)
-                    .partial_cmp(&(b.best_speedup, b.fingerprint))
-                    .unwrap()
+                // total_cmp: a NaN speedup (already excluded by the filter,
+                // but snapshots are external input) must never panic a scan.
+                a.best_speedup
+                    .total_cmp(&b.best_speedup)
+                    .then_with(|| a.fingerprint.cmp(&b.fingerprint))
             })
     }
 
@@ -211,9 +231,15 @@ impl ResultCache {
             .filter_map(|fp| self.map.get(fp).map(|s| &s.entry))
     }
 
-    /// Write the cache as JSONL, one entry per line, coldest first.
+    /// Write the cache as JSONL: a version header, then one entry per line,
+    /// coldest first.
     pub fn snapshot(&self, path: impl AsRef<Path>) -> Result<()> {
-        let mut out = String::new();
+        let mut out = Json::obj(vec![(
+            "snapshot_version",
+            Json::num(SNAPSHOT_VERSION as f64),
+        )])
+        .to_string();
+        out.push('\n');
         for e in self.entries_coldest_first() {
             out.push_str(&e.to_json().to_string());
             out.push('\n');
@@ -222,27 +248,59 @@ impl ResultCache {
             .with_context(|| format!("writing snapshot {}", path.as_ref().display()))
     }
 
-    /// Rebuild a cache from a JSONL snapshot. Lines are inserted in file
+    /// Rebuild a cache from a JSONL snapshot. The first line must carry a
+    /// matching [`SNAPSHOT_VERSION`]; entry lines are inserted in file
     /// order, so the snapshot's recency (and its eviction decisions, if the
-    /// new capacity is smaller) is reproduced. Malformed lines are an error:
-    /// a warm restart from a corrupt snapshot should fail loudly, not serve
-    /// half a cache.
+    /// new capacity is smaller) is reproduced; evictions forced by a smaller
+    /// capacity stay on the counter — they are real capacity decisions —
+    /// while the hit/miss/insert churn of the rebuild is reset. Malformed
+    /// lines are an error: a warm restart from a corrupt snapshot should
+    /// fail loudly, not serve half a cache.
     pub fn restore(path: impl AsRef<Path>, capacity: usize) -> Result<ResultCache> {
         let text = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("reading snapshot {}", path.as_ref().display()))?;
         let mut cache = ResultCache::new(capacity);
+        let mut saw_header = false;
         for (i, line) in text.lines().enumerate() {
             if line.trim().is_empty() {
                 continue;
             }
             let v = Json::parse(line)
                 .map_err(|e| anyhow!("snapshot line {}: {e}", i + 1))?;
+            if !saw_header {
+                // The first line must declare a compatible fingerprint
+                // scheme; a version-less snapshot was written by a build
+                // whose fingerprints no longer match anything.
+                match v.get("snapshot_version").and_then(|x| x.as_f64()) {
+                    Some(x) if x == SNAPSHOT_VERSION as f64 => {
+                        saw_header = true;
+                        continue;
+                    }
+                    Some(x) => bail!(
+                        "snapshot version {x} unsupported (this build reads \
+                         {SNAPSHOT_VERSION}) — delete the snapshot and re-warm"
+                    ),
+                    None => bail!(
+                        "snapshot has no version header (written before the \
+                         v{SNAPSHOT_VERSION} fingerprint scheme) — delete the \
+                         snapshot and re-warm"
+                    ),
+                }
+            }
             let entry = CacheEntry::from_json(&v)
                 .ok_or_else(|| anyhow!("snapshot line {}: missing fields", i + 1))?;
             cache.insert(entry);
         }
-        // Restoring is not traffic: don't let the rebuild pollute counters.
-        cache.stats = CacheStats::default();
+        if !saw_header {
+            bail!(
+                "snapshot {} is empty or missing its version header",
+                path.as_ref().display()
+            );
+        }
+        // Restoring is not traffic: don't let the rebuild pollute the
+        // hit/miss/insert counters. Evictions survive — a snapshot squeezed
+        // into a smaller cache really did drop entries.
+        cache.stats = CacheStats { evictions: cache.stats.evictions, ..CacheStats::default() };
         Ok(cache)
     }
 }
@@ -328,6 +386,51 @@ mod tests {
     }
 
     #[test]
+    fn warm_candidate_survives_nan_speedups() {
+        let mut c = ResultCache::new(8);
+        let mut poisoned = entry(1, "L1-95", "a100", 1.0);
+        poisoned.best_speedup = f64::NAN; // e.g. a hand-edited snapshot
+        c.insert(poisoned);
+        c.insert(entry(2, "L1-95", "h100", 1.3));
+        c.insert(entry(3, "L1-95", "rtx4090", 1.3)); // tie -> fingerprint order
+        let w = c
+            .warm_candidate("L1-95", "rtx6000", "CudaForge", "OpenAI-o3", "OpenAI-o3")
+            .unwrap();
+        assert_eq!(w.fingerprint, Fingerprint(3), "NaN skipped, tie broken by fingerprint");
+
+        let mut all_nan = ResultCache::new(4);
+        let mut e = entry(4, "L1-95", "a100", 1.0);
+        e.best_speedup = f64::NAN;
+        all_nan.insert(e);
+        assert!(all_nan
+            .warm_candidate("L1-95", "rtx6000", "CudaForge", "OpenAI-o3", "OpenAI-o3")
+            .is_none());
+    }
+
+    #[test]
+    fn restore_into_smaller_capacity_records_evictions() {
+        let dir = std::env::temp_dir().join("cudaforge_cache_shrink_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.jsonl");
+
+        let mut c = ResultCache::new(8);
+        for i in 1..=6u64 {
+            c.insert(entry(i, &format!("L1-{i}"), "rtx6000", 1.0));
+        }
+        c.snapshot(&path).unwrap();
+
+        let r = ResultCache::restore(&path, 2).unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.stats.evictions, 4, "squeezing 6 entries into 2 drops 4");
+        assert_eq!(r.stats.inserts, 0, "rebuild churn is not traffic");
+        assert_eq!(r.stats.hits, 0);
+        // The hottest (last-written) entries survive, coldest go first.
+        assert!(r.peek(Fingerprint(5)).is_some());
+        assert!(r.peek(Fingerprint(6)).is_some());
+        assert!(r.peek(Fingerprint(1)).is_none());
+    }
+
+    #[test]
     fn snapshot_restore_round_trips_entries_and_recency() {
         let dir = std::env::temp_dir().join("cudaforge_cache_test");
         std::fs::create_dir_all(&dir).unwrap();
@@ -353,5 +456,23 @@ mod tests {
         assert!(ResultCache::restore(dir.join("absent.jsonl"), 4).is_err());
         std::fs::write(dir.join("bad.jsonl"), "{not json}\n").unwrap();
         assert!(ResultCache::restore(dir.join("bad.jsonl"), 4).is_err());
+
+        // Version gate: fingerprints are stored literally, so a snapshot
+        // from another scheme must fail loudly, not restore-and-never-hit.
+        let entry_line = entry(9, "L1-9", "rtx6000", 1.0).to_json().to_string();
+        std::fs::write(dir.join("headerless.jsonl"), format!("{entry_line}\n")).unwrap();
+        let err = ResultCache::restore(dir.join("headerless.jsonl"), 4)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("version"), "{err}");
+        std::fs::write(
+            dir.join("old.jsonl"),
+            format!("{{\"snapshot_version\":1}}\n{entry_line}\n"),
+        )
+        .unwrap();
+        let err = ResultCache::restore(dir.join("old.jsonl"), 4).unwrap_err().to_string();
+        assert!(err.contains("unsupported"), "{err}");
+        std::fs::write(dir.join("empty.jsonl"), "").unwrap();
+        assert!(ResultCache::restore(dir.join("empty.jsonl"), 4).is_err());
     }
 }

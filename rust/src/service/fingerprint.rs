@@ -11,6 +11,11 @@
 //! callers add fields — or the order struct fields happen to be declared
 //! in — can never change the hash. The seed is deliberately excluded:
 //! re-rolling the RNG does not change what the user asked for.
+//!
+//! Cache snapshots store fingerprints literally, so any change to this
+//! hashing scheme orphans every existing JSONL snapshot (restore succeeds
+//! but nothing ever hits) — treat the byte layout in `finish` as a wire
+//! format.
 
 use std::fmt;
 
@@ -68,13 +73,14 @@ impl FieldHasher {
         self.fields.sort();
         let mut h = FNV_OFFSET;
         for (name, value) in &self.fields {
-            // Unit separators terminate both halves, so neither "ab"+"c" vs
-            // "a"+"bc" nor a value containing the name/value delimiter can
-            // alias another field list.
+            // Length-prefix both halves: unlike a sentinel separator, no
+            // byte a name or value might itself contain (task names are
+            // caller-provided) can shift the name/value or field/field
+            // boundary and alias another field list.
+            h = fnv_extend(h, &(name.len() as u64).to_le_bytes());
             h = fnv_extend(h, name.as_bytes());
-            h = fnv_extend(h, b"\x1f");
+            h = fnv_extend(h, &(value.len() as u64).to_le_bytes());
             h = fnv_extend(h, value.as_bytes());
-            h = fnv_extend(h, b"\x1f");
         }
         Fingerprint(h)
     }
@@ -145,6 +151,14 @@ mod tests {
         let c = FieldHasher::new().field("a", "b=c").finish();
         let d = FieldHasher::new().field("a=b", "c").finish();
         assert_ne!(c, d);
+        // ...nor may an embedded separator byte: these alias under any
+        // sentinel-delimited scheme.
+        let e = FieldHasher::new().field("a", "b\x1fc").finish();
+        let f = FieldHasher::new().field("a\x1fb", "c").finish();
+        assert_ne!(e, f);
+        let g = FieldHasher::new().field("a", "b").field("c", "d").finish();
+        let h = FieldHasher::new().field("a", "b\x1fc\x1fd").finish();
+        assert_ne!(g, h);
     }
 
     #[test]

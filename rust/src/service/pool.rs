@@ -1,15 +1,29 @@
-//! Reusable fixed-size worker pool over an indexed work list.
+//! Worker pools, real and simulated.
 //!
-//! Refactored out of `coordinator::run_suite`'s ad-hoc thread loop so the
-//! batch suite runner and the service scheduler dispatch through one
-//! mechanism. tokio is unavailable offline (DESIGN.md §2), so this is
+//! Two fleets live here:
+//!
+//! - [`run_indexed`] — the reusable fixed-size *OS-thread* pool over an
+//!   indexed work list, refactored out of `coordinator::run_suite`. It only
+//!   affects how fast the host machine crunches workflow runs, never any
+//!   reported number.
+//! - [`FleetSim`] — the *simulated* GPU-worker fleet the service layer's
+//!   discrete-event latency model schedules onto. `ServiceConfig::sim_workers`
+//!   sizes this fleet; queue wait, completion times, and therefore every
+//!   latency percentile in a `ServiceReport` come from it.
+//!
+//! tokio is unavailable offline (DESIGN.md §2), so `run_indexed` is
 //! std::thread with an atomic work counter: workers claim indices until the
 //! list is exhausted, and results land in their slot regardless of which
 //! worker ran them — output order, and therefore every downstream
 //! aggregation, is independent of scheduling.
 
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+use crate::service::fingerprint::Fingerprint;
+use crate::service::queue::Priority;
 
 /// Run `f(i)` for every `i` in `0..n` on up to `threads` workers, returning
 /// the results in index order. Deterministic for deterministic `f` no matter
@@ -44,6 +58,187 @@ where
         .collect()
 }
 
+/// One unit of simulated work: a drained flight whose workflow result (and
+/// therefore service time) is already known, waiting for a simulated worker.
+#[derive(Clone, Debug)]
+pub struct SimFlight {
+    pub fingerprint: Fingerprint,
+    /// Most urgent priority across members; late joiners can escalate it
+    /// while the flight still waits.
+    pub priority: Priority,
+    /// Arrival seq of the leader — the tie-breaker within a priority class.
+    pub leader_seq: u64,
+    /// Simulated instant the flight exists from (its leader's arrival).
+    pub arrival_s: f64,
+    /// Seconds one simulated worker needs to serve it (the run's wall time).
+    pub service_s: f64,
+    /// `(seq, arrival_s)` of every member — leader first, then followers in
+    /// join order. Each member's latency is `completion - its own arrival`.
+    pub members: Vec<(u64, f64)>,
+    /// Cold-counterfactual dollars each member credits (see `replay`).
+    pub cold_ref: f64,
+}
+
+/// When a flight started and finished on the simulated fleet.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SimCompletion {
+    pub start_s: f64,
+    pub completion_s: f64,
+}
+
+/// Discrete-event simulation of a finite GPU-worker fleet serving
+/// per-priority queues, non-preemptively and without clairvoyance: whenever
+/// a worker frees at time `f`, it takes the most urgent flight (ties by
+/// leader arrival order) among those that have arrived by `max(f, earliest
+/// waiting arrival)`. All state is `BTreeMap`/heap based and every scan is
+/// in a total order, so a replay is bit-deterministic.
+pub struct FleetSim {
+    workers: usize,
+    /// Next-free instant per worker. Min-heap over `f64::to_bits`, which
+    /// orders like the values because simulated times are finite and >= 0.
+    free_at: BinaryHeap<Reverse<u64>>,
+    /// The per-priority queues: flights waiting for a worker, drained in
+    /// (priority, leader arrival) order.
+    waiting: BTreeMap<(Priority, u64), SimFlight>,
+    /// fingerprint -> key in `waiting`, for single-flight joins.
+    waiting_by_fp: BTreeMap<Fingerprint, (Priority, u64)>,
+    /// `(arrival_s bits, leader_seq)` of every waiting flight — the first
+    /// element is the earliest arrival, so the per-arrival `advance` probe
+    /// is O(log n) instead of a scan over the whole backlog.
+    arrivals: BTreeSet<(u64, u64)>,
+    /// fingerprint -> (completion_s, cold_ref) of the most recently started
+    /// flight, for joins onto work already on a worker.
+    started: BTreeMap<Fingerprint, (f64, f64)>,
+    queue_wait_s: f64,
+    served: usize,
+    busy_s: f64,
+    makespan_s: f64,
+}
+
+impl FleetSim {
+    /// `workers` is clamped to at least 1.
+    pub fn new(workers: usize) -> FleetSim {
+        let workers = workers.max(1);
+        FleetSim {
+            workers,
+            free_at: (0..workers).map(|_| Reverse(0.0f64.to_bits())).collect(),
+            waiting: BTreeMap::new(),
+            waiting_by_fp: BTreeMap::new(),
+            arrivals: BTreeSet::new(),
+            started: BTreeMap::new(),
+            queue_wait_s: 0.0,
+            served: 0,
+            busy_s: 0.0,
+            makespan_s: 0.0,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Flights waiting for a worker (the admission-control depth signal).
+    pub fn depth(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Enqueue a flight. Any previous flight for the same fingerprint must
+    /// already have started (single-flight: a waiting duplicate would have
+    /// been joined instead).
+    pub fn submit(&mut self, flight: SimFlight) {
+        let key = (flight.priority, flight.leader_seq);
+        self.waiting_by_fp.insert(flight.fingerprint, key);
+        self.arrivals.insert((flight.arrival_s.to_bits(), flight.leader_seq));
+        self.waiting.insert(key, flight);
+    }
+
+    /// Join a *waiting* flight for `fp` as a follower, escalating its
+    /// priority if the joiner is more urgent. Returns the flight's cold
+    /// counterfactual when the join happened, `None` when nothing waits.
+    pub fn join_waiting(
+        &mut self,
+        fp: Fingerprint,
+        seq: u64,
+        arrival_s: f64,
+        priority: Priority,
+    ) -> Option<f64> {
+        let key = *self.waiting_by_fp.get(&fp)?;
+        let mut flight = self.waiting.remove(&key).expect("waiting_by_fp tracks waiting");
+        flight.members.push((seq, arrival_s));
+        flight.priority = flight.priority.min(priority);
+        let new_key = (flight.priority, flight.leader_seq);
+        let cold_ref = flight.cold_ref;
+        self.waiting_by_fp.insert(fp, new_key);
+        self.waiting.insert(new_key, flight);
+        Some(cold_ref)
+    }
+
+    /// `(completion_s, cold_ref)` of a flight for `fp` that is on a worker
+    /// at `now` — started, not yet finished. A joiner's latency is the
+    /// *remaining* time, `completion_s - now`.
+    pub fn in_flight(&self, fp: Fingerprint, now: f64) -> Option<(f64, f64)> {
+        self.started.get(&fp).copied().filter(|(done, _)| *done > now)
+    }
+
+    /// Process every service start due by `now`, invoking `on_served` per
+    /// flight in start order. Call with `f64::INFINITY` to drain.
+    pub fn advance(&mut self, now: f64, on_served: &mut dyn FnMut(&SimFlight, SimCompletion)) {
+        while !self.waiting.is_empty() {
+            let free = f64::from_bits(self.free_at.peek().expect("fleet has workers").0);
+            let earliest_arrival = f64::from_bits(
+                self.arrivals.first().expect("arrivals mirrors waiting").0,
+            );
+            // The next start: a worker is free and at least one flight has
+            // arrived. Non-clairvoyant — the worker takes the best flight
+            // available at that instant, not one still in the future.
+            let start = free.max(earliest_arrival);
+            if start > now {
+                break;
+            }
+            // Worst-case O(waiting), but early-exits at the first eligible
+            // key; under backlog (`free >= every arrival`) that is the head
+            // of the map, so the common overload case selects in O(log n).
+            let key = *self
+                .waiting
+                .iter()
+                .find(|(_, f)| f.arrival_s <= start)
+                .expect("a flight has arrived by the start instant")
+                .0;
+            let flight = self.waiting.remove(&key).expect("key taken from the map");
+            self.waiting_by_fp.remove(&flight.fingerprint);
+            self.arrivals.remove(&(flight.arrival_s.to_bits(), flight.leader_seq));
+            self.free_at.pop();
+            let completion = start + flight.service_s;
+            self.free_at.push(Reverse(completion.to_bits()));
+            self.started.insert(flight.fingerprint, (completion, flight.cold_ref));
+            self.queue_wait_s += start - flight.arrival_s;
+            self.busy_s += flight.service_s;
+            self.served += 1;
+            self.makespan_s = self.makespan_s.max(completion);
+            on_served(&flight, SimCompletion { start_s: start, completion_s: completion });
+        }
+    }
+
+    /// Total simulated worker-busy seconds across served flights.
+    pub fn busy_s(&self) -> f64 {
+        self.busy_s
+    }
+
+    /// Instant the last served flight completed (0 when nothing ran).
+    pub fn makespan_s(&self) -> f64 {
+        self.makespan_s
+    }
+
+    /// Mean seconds served flights spent waiting for a worker.
+    pub fn mean_queue_wait_s(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.queue_wait_s / self.served as f64
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -70,5 +265,101 @@ mod tests {
         let a = run_indexed(50, 1, |i| (i as u64).wrapping_mul(0x9E3779B9));
         let b = run_indexed(50, 7, |i| (i as u64).wrapping_mul(0x9E3779B9));
         assert_eq!(a, b);
+    }
+
+    fn flight(fp: u64, seq: u64, arrival_s: f64, service_s: f64, p: Priority) -> SimFlight {
+        SimFlight {
+            fingerprint: Fingerprint(fp),
+            priority: p,
+            leader_seq: seq,
+            arrival_s,
+            service_s,
+            members: vec![(seq, arrival_s)],
+            cold_ref: 0.30,
+        }
+    }
+
+    fn drain_completions(sim: &mut FleetSim) -> Vec<(u64, SimCompletion)> {
+        let mut out = Vec::new();
+        sim.advance(f64::INFINITY, &mut |f, c| out.push((f.leader_seq, c)));
+        out
+    }
+
+    #[test]
+    fn one_worker_serializes_and_charges_queue_wait() {
+        let mut sim = FleetSim::new(1);
+        sim.submit(flight(1, 0, 0.0, 100.0, Priority::Standard));
+        sim.submit(flight(2, 1, 10.0, 50.0, Priority::Standard));
+        let done = drain_completions(&mut sim);
+        assert_eq!(done[0], (0, SimCompletion { start_s: 0.0, completion_s: 100.0 }));
+        // The second flight waited 90s for the worker, then ran 50s.
+        assert_eq!(done[1].1.start_s, 100.0);
+        assert_eq!(done[1].1.completion_s, 150.0);
+        assert!((sim.mean_queue_wait_s() - 45.0).abs() < 1e-12);
+        assert_eq!(sim.busy_s(), 150.0);
+        assert_eq!(sim.makespan_s(), 150.0);
+    }
+
+    #[test]
+    fn two_workers_run_in_parallel() {
+        let mut sim = FleetSim::new(2);
+        sim.submit(flight(1, 0, 0.0, 100.0, Priority::Standard));
+        sim.submit(flight(2, 1, 10.0, 50.0, Priority::Standard));
+        let done = drain_completions(&mut sim);
+        assert_eq!(done[1].1.start_s, 10.0, "second worker picks it up at arrival");
+        assert_eq!(sim.mean_queue_wait_s(), 0.0);
+        assert_eq!(sim.makespan_s(), 100.0);
+    }
+
+    #[test]
+    fn urgent_flights_jump_the_queue_but_never_preempt() {
+        let mut sim = FleetSim::new(1);
+        sim.submit(flight(1, 0, 0.0, 100.0, Priority::Batch));
+        sim.submit(flight(2, 1, 5.0, 10.0, Priority::Batch));
+        sim.submit(flight(3, 2, 6.0, 10.0, Priority::Interactive));
+        let order: Vec<u64> = drain_completions(&mut sim).iter().map(|(s, _)| *s).collect();
+        // Flight 0 was already running when 2 arrived (no preemption); the
+        // interactive flight then overtakes the earlier batch flight.
+        assert_eq!(order, vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn workers_do_not_serve_flights_from_the_future() {
+        let mut sim = FleetSim::new(1);
+        sim.submit(flight(1, 0, 50.0, 10.0, Priority::Batch));
+        sim.submit(flight(2, 1, 80.0, 10.0, Priority::Interactive));
+        let done = drain_completions(&mut sim);
+        // The batch flight starts at its own arrival — the worker does not
+        // idle until 80 just because something more urgent arrives later.
+        assert_eq!(done[0], (0, SimCompletion { start_s: 50.0, completion_s: 60.0 }));
+        assert_eq!(done[1].1.start_s, 80.0);
+    }
+
+    #[test]
+    fn joins_escalate_priority_and_share_completion() {
+        let mut sim = FleetSim::new(1);
+        sim.submit(flight(1, 0, 0.0, 100.0, Priority::Standard));
+        sim.submit(flight(2, 1, 1.0, 10.0, Priority::Batch));
+        sim.submit(flight(3, 2, 2.0, 10.0, Priority::Standard));
+        assert_eq!(sim.depth(), 3);
+        // An interactive join on the batch flight escalates it past seq 2.
+        assert_eq!(sim.join_waiting(Fingerprint(2), 3, 3.0, Priority::Interactive), Some(0.30));
+        assert_eq!(sim.join_waiting(Fingerprint(99), 4, 3.0, Priority::Batch), None);
+        assert_eq!(sim.depth(), 3, "a join adds no new flight");
+
+        let mut members: Vec<Vec<u64>> = Vec::new();
+        sim.advance(f64::INFINITY, &mut |f, _| {
+            members.push(f.members.iter().map(|(s, _)| *s).collect())
+        });
+        assert_eq!(members[1], vec![1, 3], "follower rides the escalated flight");
+
+        // Once started, the flight is joinable as in-flight work instead.
+        let mut sim2 = FleetSim::new(1);
+        sim2.submit(flight(7, 0, 0.0, 100.0, Priority::Standard));
+        sim2.advance(0.0, &mut |_, _| {});
+        assert_eq!(sim2.depth(), 0);
+        assert_eq!(sim2.in_flight(Fingerprint(7), 40.0), Some((100.0, 0.30)));
+        assert_eq!(sim2.in_flight(Fingerprint(7), 100.0), None, "finished by then");
+        assert_eq!(sim2.join_waiting(Fingerprint(7), 1, 40.0, Priority::Standard), None);
     }
 }

@@ -74,6 +74,8 @@ pub struct QueueStats {
     pub coalesced: u64,
     /// Flights handed to the scheduler.
     pub dispatched: u64,
+    /// Requests shed by admission control instead of being admitted.
+    pub rejected: u64,
 }
 
 /// The pending-flight set. `BTreeMap` keyed by fingerprint keeps membership
@@ -95,6 +97,18 @@ impl JobQueue {
 
     pub fn is_empty(&self) -> bool {
         self.pending.is_empty()
+    }
+
+    /// Whether a pending flight for `fp` exists — i.e. whether a push would
+    /// coalesce instead of opening a new flight. Admission control only
+    /// sheds requests that would *grow* the queue.
+    pub fn contains(&self, fp: Fingerprint) -> bool {
+        self.pending.contains_key(&fp)
+    }
+
+    /// Record a request shed by admission control (never admitted).
+    pub fn reject(&mut self) {
+        self.stats.rejected += 1;
     }
 
     /// Admit a request. Returns `true` when it opened a new flight, `false`
@@ -146,6 +160,8 @@ mod tests {
     fn single_flight_dedups_identical_requests() {
         let mut q = JobQueue::new();
         assert!(q.push(req(0, 7, Priority::Standard)));
+        assert!(q.contains(Fingerprint(7)));
+        assert!(!q.contains(Fingerprint(9)));
         assert!(!q.push(req(1, 7, Priority::Standard)));
         assert!(!q.push(req(2, 7, Priority::Batch)));
         assert!(q.push(req(3, 9, Priority::Standard)));

@@ -1,10 +1,16 @@
 //! Synthetic traffic traces: Zipf-distributed task popularity over the
-//! KernelBench-sim suite, a skewed GPU mix, and a priority mix.
+//! KernelBench-sim suite, a skewed GPU mix, a priority mix, and Poisson
+//! arrival times.
 //!
 //! Production kernel-optimization traffic is heavy-tailed — a few operators
 //! (attention, GEMM epilogues, softmax variants) dominate while a long tail
 //! trickles — which is exactly the regime where a result cache pays for
-//! itself. The trace is fully determined by its seed.
+//! itself. Each request also carries a simulated arrival instant (exponential
+//! interarrival gaps, i.e. a Poisson process), which is what lets the service
+//! layer's discrete-event simulator charge queueing delay instead of bare
+//! service time. The trace is fully determined by its seed.
+
+use anyhow::{bail, Result};
 
 use crate::gpu::{self, GpuSpec};
 use crate::service::queue::{Priority, ALL_PRIORITIES};
@@ -17,6 +23,9 @@ pub struct TrafficConfig {
     /// Zipf exponent s (popularity of the k-th task ∝ k^-s).
     pub zipf_s: f64,
     pub seed: u64,
+    /// Mean gap between consecutive arrivals, in simulated seconds
+    /// (exponentially distributed). 0 models a single burst at t = 0.
+    pub mean_interarrival_s: f64,
     /// `(gpu key, weight)` — most traffic targets the default part, a
     /// minority targets others (the cross-GPU warm-start opportunity).
     pub gpu_mix: Vec<(&'static str, f64)>,
@@ -30,6 +39,7 @@ impl Default for TrafficConfig {
             requests: 2000,
             zipf_s: 1.1,
             seed: 7,
+            mean_interarrival_s: 90.0,
             gpu_mix: vec![
                 ("rtx6000", 0.85),
                 ("a100", 0.05),
@@ -41,20 +51,65 @@ impl Default for TrafficConfig {
     }
 }
 
+impl TrafficConfig {
+    /// Reject shapes the weighted samplers cannot draw from: negative or
+    /// non-finite weights, and mixes whose weights sum to zero.
+    pub fn validate(&self) -> Result<()> {
+        if !self.zipf_s.is_finite() {
+            bail!("traffic config: zipf_s must be finite, got {}", self.zipf_s);
+        }
+        if !(self.mean_interarrival_s.is_finite() && self.mean_interarrival_s >= 0.0) {
+            bail!(
+                "traffic config: mean_interarrival_s must be finite and >= 0, got {}",
+                self.mean_interarrival_s
+            );
+        }
+        if self.gpu_mix.is_empty() {
+            bail!("traffic config: gpu_mix must name at least one GPU");
+        }
+        for (key, w) in &self.gpu_mix {
+            if !(w.is_finite() && *w >= 0.0) {
+                bail!("traffic config: gpu_mix weight for '{key}' must be finite and >= 0, got {w}");
+            }
+        }
+        if self.gpu_mix.iter().map(|(_, w)| *w).sum::<f64>() <= 0.0 {
+            bail!("traffic config: gpu_mix weights sum to zero — no GPU can be drawn");
+        }
+        for (p, w) in ALL_PRIORITIES.iter().zip(&self.priority_mix) {
+            if !(w.is_finite() && *w >= 0.0) {
+                bail!(
+                    "traffic config: priority_mix weight for '{}' must be finite and >= 0, got {w}",
+                    p.name()
+                );
+            }
+        }
+        if self.priority_mix.iter().sum::<f64>() <= 0.0 {
+            bail!("traffic config: priority_mix weights sum to zero — no class can be drawn");
+        }
+        Ok(())
+    }
+}
+
 /// One arriving request: an index into the caller's task set, a target GPU,
-/// and an urgency class.
+/// an urgency class, and the simulated instant it arrives.
 #[derive(Clone, Copy, Debug)]
 pub struct TrafficRequest {
     pub task_index: usize,
     pub gpu: &'static GpuSpec,
     pub priority: Priority,
+    /// Simulated arrival time in seconds from trace start (nondecreasing).
+    pub arrival_s: f64,
 }
 
-/// Generate a trace over a task set of `n_tasks`. Popularity rank is mapped
-/// onto task indices through a seeded shuffle, so *which* tasks are hot
-/// varies with the seed while the rank-frequency law does not.
-pub fn generate(n_tasks: usize, cfg: &TrafficConfig) -> Vec<TrafficRequest> {
-    assert!(n_tasks > 0, "traffic needs a task set");
+/// Generate a trace over a task set of `n_tasks`, or explain why the config
+/// cannot produce one. Popularity rank is mapped onto task indices through a
+/// seeded shuffle, so *which* tasks are hot varies with the seed while the
+/// rank-frequency law does not.
+pub fn try_generate(n_tasks: usize, cfg: &TrafficConfig) -> Result<Vec<TrafficRequest>> {
+    if n_tasks == 0 {
+        bail!("traffic needs a task set");
+    }
+    cfg.validate()?;
     let mut rng = Rng::new(cfg.seed ^ 0x7261_6666_6963_u64);
 
     // rank -> task index
@@ -62,26 +117,47 @@ pub fn generate(n_tasks: usize, cfg: &TrafficConfig) -> Vec<TrafficRequest> {
     rng.shuffle(&mut perm);
     let zipf_weights: Vec<f64> =
         (1..=n_tasks).map(|k| (k as f64).powf(-cfg.zipf_s)).collect();
+    // A strongly negative exponent overflows k^-s to +inf, which would
+    // silently degenerate the weighted sampler instead of erroring.
+    if !zipf_weights.iter().all(|w| w.is_finite()) {
+        bail!(
+            "traffic config: zipf_s = {} overflows the rank weights for {n_tasks} tasks",
+            cfg.zipf_s
+        );
+    }
 
-    let gpus: Vec<&'static GpuSpec> = cfg
-        .gpu_mix
-        .iter()
-        .map(|(key, _)| gpu::by_key(key).unwrap_or_else(|| panic!("unknown gpu {key}")))
-        .collect();
+    let mut gpus: Vec<&'static GpuSpec> = Vec::with_capacity(cfg.gpu_mix.len());
+    for (key, _) in &cfg.gpu_mix {
+        match gpu::by_key(key) {
+            Some(g) => gpus.push(g),
+            None => bail!("traffic config: unknown gpu '{key}' in gpu_mix"),
+        }
+    }
     let gpu_weights: Vec<f64> = cfg.gpu_mix.iter().map(|(_, w)| *w).collect();
 
-    (0..cfg.requests)
+    let mut clock_s = 0.0f64;
+    Ok((0..cfg.requests)
         .map(|_| {
             let rank = rng.weighted_choice(&zipf_weights);
             let g = rng.weighted_choice(&gpu_weights);
             let p = rng.weighted_choice(&cfg.priority_mix);
+            // Exponential interarrival gap (Poisson arrivals). `1 - f64()` is
+            // in (0, 1], so the log is finite.
+            clock_s += -cfg.mean_interarrival_s * (1.0 - rng.f64()).ln();
             TrafficRequest {
                 task_index: perm[rank],
                 gpu: gpus[g],
                 priority: ALL_PRIORITIES[p],
+                arrival_s: clock_s,
             }
         })
-        .collect()
+        .collect())
+}
+
+/// Generate a trace, panicking on an invalid config (tests and examples; the
+/// CLI goes through [`try_generate`] for a clean exit).
+pub fn generate(n_tasks: usize, cfg: &TrafficConfig) -> Vec<TrafficRequest> {
+    try_generate(n_tasks, cfg).unwrap_or_else(|e| panic!("{e}"))
 }
 
 #[cfg(test)]
@@ -98,6 +174,7 @@ mod tests {
             assert_eq!(x.task_index, y.task_index);
             assert_eq!(x.gpu.key, y.gpu.key);
             assert_eq!(x.priority, y.priority);
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
         }
         let c = generate(250, &TrafficConfig { seed: 8, ..cfg });
         assert!(a.iter().zip(&c).any(|(x, y)| x.task_index != y.task_index));
@@ -128,5 +205,76 @@ mod tests {
             / trace.len() as f64;
         assert!((0.8..0.9).contains(&default_share), "share {default_share}");
         assert!(trace.iter().any(|r| r.gpu.key != "rtx6000"));
+    }
+
+    #[test]
+    fn arrivals_are_nondecreasing_with_the_configured_mean() {
+        let cfg = TrafficConfig { requests: 2000, ..TrafficConfig::default() };
+        let trace = generate(250, &cfg);
+        for pair in trace.windows(2) {
+            assert!(pair[0].arrival_s <= pair[1].arrival_s);
+        }
+        let span = trace.last().unwrap().arrival_s;
+        let mean_gap = span / trace.len() as f64;
+        assert!(
+            (mean_gap - cfg.mean_interarrival_s).abs() < cfg.mean_interarrival_s * 0.1,
+            "mean gap {mean_gap} vs configured {}",
+            cfg.mean_interarrival_s
+        );
+        // A zero mean models one burst at t = 0.
+        let burst = generate(
+            250,
+            &TrafficConfig { mean_interarrival_s: 0.0, requests: 50, ..TrafficConfig::default() },
+        );
+        assert!(burst.iter().all(|r| r.arrival_s == 0.0));
+    }
+
+    #[test]
+    fn invalid_mixes_are_rejected_with_clear_errors() {
+        let negative = TrafficConfig {
+            gpu_mix: vec![("rtx6000", -1.0)],
+            ..TrafficConfig::default()
+        };
+        let err = try_generate(10, &negative).unwrap_err().to_string();
+        assert!(err.contains("gpu_mix") && err.contains("rtx6000"), "{err}");
+
+        let zero_sum = TrafficConfig {
+            gpu_mix: vec![("rtx6000", 0.0), ("a100", 0.0)],
+            ..TrafficConfig::default()
+        };
+        let err = try_generate(10, &zero_sum).unwrap_err().to_string();
+        assert!(err.contains("sum to zero"), "{err}");
+
+        let bad_priority = TrafficConfig {
+            priority_mix: [0.0, 0.0, 0.0],
+            ..TrafficConfig::default()
+        };
+        let err = try_generate(10, &bad_priority).unwrap_err().to_string();
+        assert!(err.contains("priority_mix"), "{err}");
+
+        let nan_priority = TrafficConfig {
+            priority_mix: [f64::NAN, 1.0, 1.0],
+            ..TrafficConfig::default()
+        };
+        let err = try_generate(10, &nan_priority).unwrap_err().to_string();
+        assert!(err.contains("interactive"), "{err}");
+
+        let unknown_gpu = TrafficConfig {
+            gpu_mix: vec![("tpu9000", 1.0)],
+            ..TrafficConfig::default()
+        };
+        let err = try_generate(10, &unknown_gpu).unwrap_err().to_string();
+        assert!(err.contains("tpu9000"), "{err}");
+
+        let nan_zipf = TrafficConfig { zipf_s: f64::NAN, ..TrafficConfig::default() };
+        let err = try_generate(10, &nan_zipf).unwrap_err().to_string();
+        assert!(err.contains("zipf_s"), "{err}");
+
+        // 250^130 > f64::MAX: the rank weights would be +inf.
+        let inv_zipf = TrafficConfig { zipf_s: -130.0, ..TrafficConfig::default() };
+        let err = try_generate(250, &inv_zipf).unwrap_err().to_string();
+        assert!(err.contains("overflows"), "{err}");
+
+        assert!(try_generate(0, &TrafficConfig::default()).is_err());
     }
 }

@@ -1,9 +1,11 @@
 //! Integration: the kernel-optimization service layer end to end — replay
 //! determinism across worker counts, the Zipf cache-economics shape the
-//! ROADMAP's multi-user target depends on, warm-start convergence, and
-//! snapshot/restore warm restarts.
+//! ROADMAP's multi-user target depends on, queueing-aware latency and
+//! per-priority SLOs, warm-start convergence, and snapshot/restore warm
+//! restarts.
 
 use cudaforge::service::cache::ResultCache;
+use cudaforge::service::queue::Priority;
 use cudaforge::service::traffic::{generate, TrafficConfig};
 use cudaforge::service::{KernelService, ServiceConfig, ServiceReport};
 use cudaforge::tasks;
@@ -27,15 +29,17 @@ fn replay(threads: usize, requests: usize, seed: u64) -> ServiceReport {
 #[test]
 fn report_identical_regardless_of_worker_count() {
     // The hard determinism contract: every report field — counters, f64
-    // latency percentiles, dollar sums — is bit-identical whether one OS
-    // thread or eight crunch the flights.
+    // latency percentiles and SLO attainments, dollar sums — is
+    // bit-identical whether one OS thread or eight crunch the flights. The
+    // simulated fleet (`sim_workers`) is part of the config, not the host,
+    // so `threads` changes wall-clock only.
     let a = replay(1, 300, 7);
-    let b = replay(4, 300, 7);
+    let b = replay(2, 300, 7);
     let c = replay(8, 300, 7);
     assert_eq!(a, b);
     assert_eq!(a, c);
     // ...and seeds actually matter.
-    let d = replay(4, 300, 8);
+    let d = replay(2, 300, 8);
     assert_ne!(a, d);
 }
 
@@ -44,14 +48,80 @@ fn zipf_traffic_amortizes_most_requests() {
     let r = replay(4, 500, 7);
     assert!(r.hit_rate > 0.5, "hit rate {} on Zipf traffic", r.hit_rate);
     assert!(
-        (r.flights_run as u64) + r.cache_hits + r.shared == r.requests as u64,
+        (r.flights_run as u64) + r.cache_hits + r.shared + r.rejected == r.requests as u64,
         "admission classes partition the trace"
     );
     assert!(r.api_usd_saved > r.api_usd_spent * 0.5, "cache pays for itself");
     assert!((r.api_usd_cold - r.api_usd_spent - r.api_usd_saved).abs() < 1e-9);
-    // Median request is a cache hit (sub-second); tail is a cold run.
+    // Median request is a cache hit (sub-second); tail is a cold run plus
+    // whatever it queued behind.
     assert!(r.p50_latency_s < 1.0, "p50 {}", r.p50_latency_s);
     assert!(r.p95_latency_s > 60.0, "p95 {}", r.p95_latency_s);
+    assert!(r.p99_latency_s >= r.p95_latency_s);
+}
+
+#[test]
+fn per_priority_slos_cover_every_class() {
+    let r = replay(4, 500, 7);
+    assert_eq!(r.per_priority.len(), 3);
+    let classes: Vec<Priority> = r.per_priority.iter().map(|c| c.priority).collect();
+    assert_eq!(
+        classes,
+        vec![Priority::Interactive, Priority::Standard, Priority::Batch]
+    );
+    assert_eq!(
+        r.per_priority.iter().map(|c| c.requests).sum::<usize>(),
+        r.requests,
+        "classes partition the trace"
+    );
+    for c in &r.per_priority {
+        assert!(c.requests > 0, "default mix populates {}", c.priority.name());
+        assert!((0.0..=1.0).contains(&c.slo_attainment));
+        assert!(c.p50_latency_s <= c.p95_latency_s);
+        assert!(c.p95_latency_s <= c.p99_latency_s);
+        assert!(c.slo_target_s > 0.0);
+    }
+    // No admission bound configured: nothing is shed.
+    assert_eq!(r.rejected, 0);
+    assert!(r.per_priority.iter().all(|c| c.rejected == 0));
+}
+
+#[test]
+fn smaller_fleets_queue_longer() {
+    // The fleet-sizing question the simulator exists to answer: the same
+    // traffic on fewer simulated GPUs must show equal-or-worse queue wait
+    // and tail latency, monotonically.
+    let suite = tasks::kernelbench();
+    let trace = generate(
+        suite.len(),
+        &TrafficConfig { requests: 300, mean_interarrival_s: 20.0, ..TrafficConfig::default() },
+    );
+    let run = |sim_workers: usize| {
+        let mut svc = KernelService::new(ServiceConfig {
+            threads: 4,
+            window: 16,
+            sim_workers,
+            ..ServiceConfig::default()
+        });
+        svc.replay(&trace, &suite, &NoOracle)
+    };
+    let narrow = run(1);
+    let wide = run(64);
+    assert!(narrow.mean_queue_wait_s >= wide.mean_queue_wait_s);
+    assert!(narrow.p99_latency_s >= wide.p99_latency_s);
+    assert!(
+        narrow.mean_queue_wait_s > 0.0,
+        "300 requests every ~20s must saturate a single simulated GPU"
+    );
+    // Both fleets answer every request one way or another.
+    assert_eq!(
+        narrow.cache_hits + narrow.shared + narrow.flights_run as u64 + narrow.rejected,
+        narrow.requests as u64
+    );
+    assert_eq!(
+        wide.cache_hits + wide.shared + wide.flights_run as u64 + wide.rejected,
+        wide.requests as u64
+    );
 }
 
 #[test]
@@ -61,6 +131,8 @@ fn warm_starts_converge_in_strictly_fewer_mean_rounds() {
     // primary GPU reach their best kernel in fewer rounds than cold runs.
     let r = replay(4, 600, 7);
     assert!(r.warm_started > 0, "trace must trigger cross-GPU warm starts");
+    assert!(r.warm_correct > 0, "warm runs must stay correct");
+    assert!(r.warm_correct <= r.warm_started);
     assert!(r.mean_rounds_to_best_cold > 0.0);
     assert!(
         r.mean_rounds_to_best_warm < r.mean_rounds_to_best_cold,
@@ -100,6 +172,19 @@ fn snapshot_restore_makes_the_restart_warm() {
     );
     assert!(r2.api_usd_spent < r1.api_usd_spent);
     assert!(r2.flights_run < r1.flights_run);
+
+    // Restoring into a smaller cache is a real capacity decision: the
+    // forced evictions are recorded, the hottest entries survive.
+    if svc.cache().len() > 2 {
+        let shrunk = ResultCache::restore(&path, 2).unwrap();
+        assert_eq!(shrunk.len(), 2);
+        assert_eq!(
+            shrunk.stats.evictions as usize,
+            svc.cache().len() - 2,
+            "squeezing {} entries into 2 must evict the rest",
+            svc.cache().len()
+        );
+    }
 
     // A cold-restarted service on the same trace reproduces day 1 exactly —
     // the snapshot is what made the difference.
