@@ -1,0 +1,67 @@
+//! Bench: the cluster layer's hot paths — rendezvous routing (once per
+//! request at admission time, so it must stay in the tens-of-nanoseconds
+//! regime), the fair-share quota derivation, and an end-to-end sharded
+//! replay compared against the same traffic on one node.
+
+use cudaforge::cluster::{
+    fair_share_quotas, ClusterConfig, ClusterService, Router, TenantSpec,
+};
+use cudaforge::service::fingerprint::Fingerprint;
+use cudaforge::service::traffic::{generate, TrafficConfig};
+use cudaforge::service::ServiceConfig;
+use cudaforge::tasks;
+use cudaforge::util::bench::{bench, black_box};
+use cudaforge::workflow::NoOracle;
+
+fn main() {
+    let router = Router::new(8);
+    let alive = vec![true; 8];
+    let mut k = 0u64;
+    bench("cluster::router route (8 nodes)", 2_000_000, || {
+        let fp = Fingerprint(k.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        black_box(router.route(fp, &alive));
+        k += 1;
+    });
+
+    let mut degraded = vec![true; 8];
+    degraded[3] = false;
+    let mut j = 0u64;
+    bench("cluster::router route (8 nodes, 1 dead)", 2_000_000, || {
+        let fp = Fingerprint(j.wrapping_mul(0x2545_F491_4F6C_DD1D));
+        black_box(router.route(fp, &degraded));
+        j += 1;
+    });
+
+    let tenants: Vec<TenantSpec> = (0..16)
+        .map(|i| TenantSpec::new(format!("t{i}"), 1.0 + i as f64))
+        .collect();
+    bench("cluster::fair_share_quotas (16 tenants)", 1_000_000, || {
+        black_box(fair_share_quotas(64, &tenants));
+    });
+
+    let suite = tasks::kernelbench();
+    let trace = generate(
+        suite.len(),
+        &TrafficConfig {
+            requests: 200,
+            tenant_mix: vec![("alpha".to_string(), 3.0), ("beta".to_string(), 1.0)],
+            ..TrafficConfig::default()
+        },
+    );
+    bench("cluster::replay 200 Zipf requests over 4 nodes (e2e)", 200, || {
+        let mut svc = ClusterService::new(ClusterConfig {
+            nodes: 4,
+            tenants: vec![TenantSpec::new("alpha", 3.0), TenantSpec::new("beta", 1.0)],
+            tenant_quotas: true,
+            service: ServiceConfig {
+                threads: 1,
+                window: 16,
+                sim_workers: 2,
+                queue_depth: 16,
+                ..ServiceConfig::default()
+            },
+            ..ClusterConfig::default()
+        });
+        black_box(svc.replay(&trace, &suite, &NoOracle));
+    });
+}

@@ -63,6 +63,7 @@ fn main() {
                 seq,
                 fingerprint: Fingerprint(k % 11), // heavy dedup
                 priority: Priority::Standard,
+                tenant: 0,
             });
             seq += 1;
         }
@@ -77,6 +78,7 @@ fn main() {
                 fingerprint: Fingerprint(sim_seq ^ k),
                 priority: Priority::Standard,
                 leader_seq: sim_seq + k,
+                tenant: 0,
                 arrival_s: k as f64 * 3.0,
                 service_s: 900.0 + k as f64,
                 members: vec![(sim_seq + k, k as f64 * 3.0)],

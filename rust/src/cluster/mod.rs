@@ -1,0 +1,894 @@
+//! Sharded multi-tenant cluster simulation over the kernel-optimization
+//! service.
+//!
+//! `service::KernelService` prices one node: one result cache, one
+//! single-flight queue, one simulated GPU fleet. The ROADMAP's target —
+//! serving millions of users — is a *cluster* of such nodes, and the
+//! questions that matter at that scale are cluster questions: how evenly do
+//! fingerprints shard, what does a node failure cost, which tenant starves
+//! under overload, and when is it worth fetching a warm-start seed from
+//! another node's shard. This module answers them with the same
+//! discrete-event discipline as the single-node layer:
+//!
+//! - [`router`] — rendezvous (highest-random-weight) hashing routes each
+//!   fingerprint to one alive node; a node's death moves only its own keys.
+//! - Each simulated node owns its **own** `ResultCache` shard, `JobQueue`,
+//!   and `FleetSim` worker slice — there is no shared cache, so a request
+//!   hitting the "wrong" node's shard is impossible by construction.
+//! - **Tenancy.** Every trace request carries a tenant index. Under
+//!   overload (a node's flight backlog at `queue_depth`), weighted
+//!   fair-share quotas meter who may open *new* flights: tenant `i` may
+//!   hold at most `queue_depth * weight_i / total_weight` backlog slots.
+//!   Quota sheds are counted per tenant — the old global batch-shed is no
+//!   longer the only admission knob (it still applies first).
+//! - **Failure/rebalance.** A configured node drops mid-replay: its cache
+//!   shard is lost (entries counted), accepted work drains gracefully, and
+//!   subsequent requests for its keys rehash to surviving nodes where they
+//!   re-miss — the re-run flights and their API dollars are accounted in
+//!   [`RebalanceReport`].
+//! - **Cross-node warm starts.** A miss on node A may seed from the best
+//!   hit-adjacent entry owned by node B, paying a configurable transfer
+//!   latency on top of the run's service time.
+//!
+//! # Determinism
+//!
+//! Everything reported is simulated-time or request-count arithmetic
+//! accumulated in (arrival, node, flight) order; OS `threads` only changes
+//! how fast the host crunches workflow runs. A [`ClusterReport`] is
+//! bit-identical across thread counts, and a 1-node single-tenant cluster
+//! replay is bit-identical to [`KernelService::replay`]'s `ServiceReport` —
+//! both invariants are asserted by `tests/integration_cluster.rs`.
+//!
+//! [`KernelService::replay`]: crate::service::KernelService::replay
+
+pub mod router;
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::service::cache::{CacheEntry, ResultCache};
+use crate::service::fingerprint::Fingerprint;
+use crate::service::pool::{self, FleetSim, SimFlight};
+use crate::service::queue::{Flight, JobQueue, Priority, Request, ALL_PRIORITIES};
+use crate::service::traffic::TrafficRequest;
+use crate::service::{PriorityClassReport, ServiceConfig, ServiceReport};
+use crate::tasks::TaskSpec;
+use crate::util::stats::{mean, percentile};
+use crate::workflow::{run_task, CorrectnessOracle, TaskResult, WorkflowConfig};
+
+pub use router::Router;
+
+/// One tenant of the cluster: a name for reporting and a fair-share weight.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Relative share of each node's flight backlog this tenant may hold
+    /// under overload (see [`fair_share_quotas`]). Non-positive weights get
+    /// the minimum quota of one slot.
+    pub weight: f64,
+}
+
+impl TenantSpec {
+    pub fn new(name: impl Into<String>, weight: f64) -> TenantSpec {
+        TenantSpec { name: name.into(), weight }
+    }
+}
+
+/// Cluster deployment parameters. `service` holds the *per-node* knobs:
+/// `capacity` is each shard's entry budget, `sim_workers` each node's
+/// simulated GPU slice, `queue_depth` each node's admission bound;
+/// `window` and `threads` stay cluster-global.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub service: ServiceConfig,
+    /// Simulated nodes (clamped to at least 1).
+    pub nodes: usize,
+    /// The tenant population. `TrafficRequest::tenant` indexes this list
+    /// (out-of-range indices clamp to the last tenant).
+    pub tenants: Vec<TenantSpec>,
+    /// Enforce weighted fair-share quotas under overload. Off by default so
+    /// a 1-node, 1-tenant cluster reproduces the single-node service's
+    /// admission behaviour exactly (only batch work is shed at the bound).
+    pub tenant_quotas: bool,
+    /// Simulated seconds to fetch a warm-start seed kernel from another
+    /// node's shard, added to the run's service time.
+    pub transfer_latency_s: f64,
+    /// Fail node `.0` the first time simulated time reaches `.1` seconds:
+    /// its cache shard is lost and later requests for its keys rehash.
+    pub fail_node_at: Option<(usize, f64)>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            service: ServiceConfig::default(),
+            nodes: 4,
+            tenants: vec![TenantSpec::new("default", 1.0)],
+            tenant_quotas: false,
+            transfer_latency_s: 30.0,
+            fail_node_at: None,
+        }
+    }
+}
+
+/// Per-node backlog quota for each tenant: its weight-share of
+/// `queue_depth`, floored, but never below one slot (every tenant can make
+/// progress). An unbounded queue disables quotas entirely.
+pub fn fair_share_quotas(queue_depth: usize, tenants: &[TenantSpec]) -> Vec<usize> {
+    let total: f64 = tenants.iter().map(|t| t.weight.max(0.0)).sum();
+    tenants
+        .iter()
+        .map(|t| {
+            if queue_depth == usize::MAX || total <= 0.0 {
+                usize::MAX
+            } else {
+                let share = queue_depth as f64 * t.weight.max(0.0) / total;
+                (share.floor() as usize).max(1)
+            }
+        })
+        .collect()
+}
+
+/// One node's serving-state slice, with its cache-effectiveness and
+/// utilization aggregates for the replay.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeReport {
+    pub node: usize,
+    /// False once the failure event killed this node.
+    pub alive: bool,
+    /// Requests routed to this node (hits + joins + flights + sheds).
+    pub requests: usize,
+    pub cache_hits: u64,
+    pub shared: u64,
+    pub flights_run: usize,
+    pub rejected: u64,
+    pub evictions: u64,
+    pub hit_rate: f64,
+    /// Busy time / (node workers × node makespan).
+    pub utilization: f64,
+    pub peak_queue_depth: usize,
+    /// Entries resident in this node's shard after the replay.
+    pub cache_entries: usize,
+}
+
+/// One tenant's outcome: traffic volume, shed counts, and latency/SLO
+/// aggregates (each served request scored against its own priority class's
+/// target).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantReport {
+    pub tenant: String,
+    pub weight: f64,
+    pub requests: usize,
+    /// Requests that got an answer (requests − rejected).
+    pub served: usize,
+    /// All sheds of this tenant's traffic (batch overload + quota).
+    pub rejected: u64,
+    /// The subset of `rejected` shed specifically by this tenant exceeding
+    /// its fair-share quota.
+    pub quota_shed: u64,
+    pub p50_latency_s: f64,
+    pub p95_latency_s: f64,
+    pub p99_latency_s: f64,
+    /// Fraction of served requests within their priority class's SLO
+    /// target (1.0 when nothing was served — a vacuous SLO holds).
+    pub slo_attainment: f64,
+}
+
+/// What the configured node failure cost.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RebalanceReport {
+    pub failed_node: usize,
+    pub failed_at_s: f64,
+    /// Cache entries the dead node's shard held — all lost.
+    pub cache_entries_lost: usize,
+    /// Post-failure requests whose rendezvous owner *would have been* the
+    /// dead node — the traffic that rehashed to survivors.
+    pub rehashed_requests: usize,
+    /// Lost keys that had to re-run a full workflow on a surviving node.
+    pub remissed_flights: usize,
+    /// API dollars those re-runs spent — work the cluster had already paid
+    /// for once.
+    pub remiss_api_usd: f64,
+}
+
+/// Everything a cluster replay reports. `overall` is shaped exactly like
+/// the single-node report (and *is* that report, bit for bit, for a 1-node
+/// single-tenant cluster); the per-node / per-tenant / rebalance views are
+/// what the sharded deployment adds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterReport {
+    pub overall: ServiceReport,
+    pub nodes: usize,
+    pub per_node: Vec<NodeReport>,
+    pub per_tenant: Vec<TenantReport>,
+    /// Executed misses that warm-started from an entry owned by a
+    /// *different* node (each paid `transfer_latency_s`).
+    pub cross_node_warm: usize,
+    /// Total quota-exceeded sheds across tenants.
+    pub quota_shed: u64,
+    /// Present when `fail_node_at` fired during the replay.
+    pub rebalance: Option<RebalanceReport>,
+}
+
+/// Per-replay mutable state of one simulated node (caches live on the
+/// service so they survive across replays, like the single-node layer).
+struct NodeState {
+    queue: JobQueue,
+    fleet: FleetSim,
+    /// Flights opened but not yet started, per tenant — the fair-share
+    /// quota meter.
+    backlog_by_tenant: Vec<usize>,
+    requests: usize,
+    hits: u64,
+    shared: u64,
+    flights_run: usize,
+    rejected: u64,
+    peak_depth: usize,
+    /// This node's cache eviction counter at replay start (delta basis).
+    evictions0: u64,
+    /// Evictions accumulated before the cache shard was dropped by the
+    /// failure event (the replacement cache restarts its counter).
+    evictions_carry: u64,
+}
+
+/// The long-lived cluster: a router plus N cache shards and the
+/// cluster-wide cold-cost registry (counterfactual pricing is a property of
+/// fingerprints, not of which shard served them).
+pub struct ClusterService {
+    pub config: ClusterConfig,
+    router: Router,
+    caches: Vec<ResultCache>,
+    cold_cost: BTreeMap<Fingerprint, f64>,
+}
+
+impl ClusterService {
+    pub fn new(mut config: ClusterConfig) -> ClusterService {
+        config.nodes = config.nodes.max(1);
+        if config.tenants.is_empty() {
+            config.tenants.push(TenantSpec::new("default", 1.0));
+        }
+        let caches = (0..config.nodes)
+            .map(|_| ResultCache::new(config.service.capacity))
+            .collect();
+        let router = Router::new(config.nodes);
+        ClusterService { config, router, caches, cold_cost: BTreeMap::new() }
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Node `n`'s cache shard (introspection/tests).
+    pub fn cache(&self, n: usize) -> &ResultCache {
+        &self.caches[n]
+    }
+
+    /// Best warm-start candidate across every *alive* shard, with its
+    /// owning node (a dead node's entries are unreachable, not warm-start
+    /// donors). Ties break on (speedup, fingerprint, node) so the scan
+    /// order can never change the pick.
+    fn warm_candidate_across(
+        &self,
+        task_id: &str,
+        gpu_key: &str,
+        alive: &[bool],
+    ) -> Option<(usize, &CacheEntry)> {
+        let c = &self.config.service;
+        let mut best: Option<(usize, &CacheEntry)> = None;
+        for (node, cache) in self.caches.iter().enumerate() {
+            if !alive.get(node).copied().unwrap_or(false) {
+                continue;
+            }
+            let cand = cache.warm_candidate(
+                task_id,
+                gpu_key,
+                c.strategy.name(),
+                c.coder.name,
+                c.judge.name,
+            );
+            if let Some(e) = cand {
+                let better = match best {
+                    None => true,
+                    Some((bn, b)) => e
+                        .best_speedup
+                        .total_cmp(&b.best_speedup)
+                        .then_with(|| e.fingerprint.cmp(&b.fingerprint))
+                        .then_with(|| node.cmp(&bn))
+                        .is_gt(),
+                };
+                if better {
+                    best = Some((node, e));
+                }
+            }
+        }
+        best
+    }
+
+    /// Replay a traffic trace through the cluster. Mirrors
+    /// [`crate::service::KernelService::replay`] per node: windowed
+    /// admission, single-flight joins, per-node discrete-event fleets —
+    /// plus routing, tenancy, failure, and cross-node warm starts.
+    /// Deterministic per (config, trace); OS `threads` changes wall-clock
+    /// only.
+    pub fn replay(
+        &mut self,
+        trace: &[TrafficRequest],
+        tasks: &[TaskSpec],
+        oracle: &dyn CorrectnessOracle,
+    ) -> ClusterReport {
+        let nodes = self.config.nodes;
+        let n_tenants = self.config.tenants.len();
+        let window = self.config.service.window.max(1);
+        let sim_workers = self.config.service.sim_workers.max(1);
+        let queue_depth = self.config.service.queue_depth;
+        let hit_latency_s = self.config.service.hit_latency_s;
+        let quotas_on = self.config.tenant_quotas;
+        let quotas = fair_share_quotas(queue_depth, &self.config.tenants);
+        debug_assert!(
+            trace.windows(2).all(|p| p[0].arrival_s <= p[1].arrival_s),
+            "trace must be sorted by arrival time"
+        );
+
+        let mut states: Vec<NodeState> = (0..nodes)
+            .map(|i| NodeState {
+                queue: JobQueue::new(),
+                fleet: FleetSim::new(sim_workers),
+                backlog_by_tenant: vec![0; n_tenants],
+                requests: 0,
+                hits: 0,
+                shared: 0,
+                flights_run: 0,
+                rejected: 0,
+                peak_depth: 0,
+                evictions0: self.caches[i].stats.evictions,
+                evictions_carry: 0,
+            })
+            .collect();
+        let mut alive = vec![true; nodes];
+
+        let mut latencies: Vec<Option<f64>> = vec![None; trace.len()];
+        let mut api_spent = 0.0;
+        let mut api_cold = 0.0;
+        let mut flights_run = 0usize;
+        let mut warm_started = 0usize;
+        let mut warm_correct = 0usize;
+        let mut shared = 0u64;
+        let mut rejected = 0u64;
+        let mut rejected_by_class = [0u64; 3];
+        let mut cold_rounds: Vec<f64> = Vec::new();
+        let mut warm_rounds: Vec<f64> = Vec::new();
+        let mut cross_node_warm = 0usize;
+        let mut tenant_requests = vec![0usize; n_tenants];
+        let mut tenant_rejected = vec![0u64; n_tenants];
+        let mut tenant_quota_shed = vec![0u64; n_tenants];
+        let mut rebalance: Option<RebalanceReport> = None;
+        let mut lost_keys: BTreeSet<Fingerprint> = BTreeSet::new();
+
+        for (w0, win) in trace.chunks(window).enumerate().map(|(i, w)| (i * window, w)) {
+            // ---- admission: route each arrival to its shard --------------
+            for (off, req) in win.iter().enumerate() {
+                let seq = (w0 + off) as u64;
+                let now = req.arrival_s;
+                let t = req.tenant.min(n_tenants - 1);
+                for st in states.iter_mut() {
+                    let NodeState { fleet, backlog_by_tenant, .. } = st;
+                    fleet.advance(now, &mut |f, done| {
+                        for (s, arr) in &f.members {
+                            latencies[*s as usize] =
+                                Some((done.completion_s - arr).max(hit_latency_s));
+                        }
+                        backlog_by_tenant[f.tenant] =
+                            backlog_by_tenant[f.tenant].saturating_sub(1);
+                    });
+                }
+                // The failure event: drop the node's shard, remember its
+                // keys, keep serving its accepted work (graceful drain).
+                if let Some((fnode, ftime)) = self.config.fail_node_at {
+                    if fnode < nodes && alive[fnode] && now >= ftime {
+                        alive[fnode] = false;
+                        let capacity = self.config.service.capacity;
+                        let cache = &mut self.caches[fnode];
+                        lost_keys.extend(cache.entries_coldest_first().map(|e| e.fingerprint));
+                        let carry = cache.stats.evictions;
+                        *cache = ResultCache::new(capacity);
+                        let st_f = &mut states[fnode];
+                        st_f.evictions_carry = carry - st_f.evictions0;
+                        st_f.evictions0 = 0;
+                        rebalance = Some(RebalanceReport {
+                            failed_node: fnode,
+                            failed_at_s: ftime,
+                            cache_entries_lost: lost_keys.len(),
+                            rehashed_requests: 0,
+                            remissed_flights: 0,
+                            remiss_api_usd: 0.0,
+                        });
+                    }
+                }
+                let fp = self.config.service.fingerprint_of(&tasks[req.task_index], req.gpu);
+                if let Some(rb) = rebalance.as_mut() {
+                    if self.router.route_any(fp) == rb.failed_node {
+                        rb.rehashed_requests += 1;
+                    }
+                }
+                // Every arrival is this tenant's traffic, even one the
+                // cluster cannot route (served + rejected == requests must
+                // hold per tenant).
+                tenant_requests[t] += 1;
+                let ni = match self.router.route(fp, &alive) {
+                    Some(n) => n,
+                    None => {
+                        // Every node is dead: shed unconditionally.
+                        rejected += 1;
+                        rejected_by_class[req.priority as usize] += 1;
+                        tenant_rejected[t] += 1;
+                        continue;
+                    }
+                };
+                let st = &mut states[ni];
+                st.requests += 1;
+                if let Some(cold_ref) = st.fleet.join_waiting(fp, seq, now, req.priority) {
+                    shared += 1;
+                    st.shared += 1;
+                    api_cold += cold_ref;
+                    continue;
+                }
+                if let Some((completion_s, cold_ref)) = st.fleet.in_flight(fp, now) {
+                    latencies[seq as usize] = Some((completion_s - now).max(hit_latency_s));
+                    shared += 1;
+                    st.shared += 1;
+                    api_cold += cold_ref;
+                    continue;
+                }
+                if let Some(entry) = self.caches[ni].get(fp) {
+                    latencies[seq as usize] = Some(hit_latency_s);
+                    st.hits += 1;
+                    api_cold += entry.cold_api_usd;
+                    continue;
+                }
+                // Miss: admission control. The global batch-shed applies
+                // first (as on a single node), then the tenant's fair-share
+                // quota — both only against requests opening a *new*
+                // flight; joins are always free.
+                let depth = st.fleet.depth() + st.queue.len();
+                if depth >= queue_depth && !st.queue.contains(fp) {
+                    if req.priority == Priority::Batch {
+                        st.queue.reject();
+                        st.rejected += 1;
+                        rejected += 1;
+                        rejected_by_class[req.priority as usize] += 1;
+                        tenant_rejected[t] += 1;
+                        continue;
+                    }
+                    if quotas_on && st.backlog_by_tenant[t] >= quotas[t] {
+                        st.queue.reject();
+                        st.rejected += 1;
+                        rejected += 1;
+                        rejected_by_class[req.priority as usize] += 1;
+                        tenant_rejected[t] += 1;
+                        tenant_quota_shed[t] += 1;
+                        continue;
+                    }
+                }
+                let opened = st.queue.push(Request {
+                    seq,
+                    fingerprint: fp,
+                    priority: req.priority,
+                    tenant: t,
+                });
+                if opened {
+                    st.backlog_by_tenant[t] += 1;
+                }
+                st.peak_depth = st.peak_depth.max(st.fleet.depth() + st.queue.len());
+            }
+
+            // ---- dispatch: drain every shard, crunch on OS threads -------
+            let mut flights: Vec<(usize, Flight)> = Vec::new();
+            for (ni, st) in states.iter_mut().enumerate() {
+                for f in st.queue.drain() {
+                    flights.push((ni, f));
+                }
+            }
+            let c = &self.config.service;
+            let prepared: Vec<(WorkflowConfig, usize, bool)> = flights
+                .iter()
+                .map(|(ni, f)| {
+                    let req = &trace[f.leader_seq as usize];
+                    let task = &tasks[req.task_index];
+                    let wf = c.base_workflow(req.gpu);
+                    match self.warm_candidate_across(&task.id(), req.gpu.key, &alive) {
+                        Some((owner, entry)) => {
+                            (c.warm_start_from(wf, entry), req.task_index, owner != *ni)
+                        }
+                        None => (wf, req.task_index, false),
+                    }
+                })
+                .collect();
+            let results: Vec<TaskResult> = pool::run_indexed(
+                prepared.len(),
+                c.threads,
+                |i| run_task(&prepared[i].0, &tasks[prepared[i].1], oracle),
+            );
+
+            // ---- accounting + shard refill + fleet submission ------------
+            for (((ni, flight), (wf, task_index, cross)), result) in
+                flights.iter().zip(&prepared).zip(&results)
+            {
+                let st = &mut states[*ni];
+                flights_run += 1;
+                st.flights_run += 1;
+                api_spent += result.ledger.api_usd;
+                let warm = wf.warm_start.is_some();
+                if *cross {
+                    cross_node_warm += 1;
+                }
+                let cold_ref = if warm {
+                    self.cold_cost
+                        .get(&flight.fingerprint)
+                        .copied()
+                        .unwrap_or(result.ledger.api_usd)
+                } else {
+                    self.cold_cost
+                        .entry(flight.fingerprint)
+                        .or_insert(result.ledger.api_usd);
+                    result.ledger.api_usd
+                };
+                api_cold += cold_ref * flight.members() as f64;
+                shared += flight.follower_seqs.len() as u64;
+                st.shared += flight.follower_seqs.len() as u64;
+                if let Some(rb) = rebalance.as_mut() {
+                    // A lost key's first re-run is the failure's re-miss
+                    // cost: work the dead shard had already paid for.
+                    if lost_keys.remove(&flight.fingerprint) {
+                        rb.remissed_flights += 1;
+                        rb.remiss_api_usd += result.ledger.api_usd;
+                    }
+                }
+                if warm {
+                    warm_started += 1;
+                    if result.correct {
+                        warm_correct += 1;
+                    }
+                }
+                if let Some(r2b) = result.rounds_to_best() {
+                    if warm {
+                        warm_rounds.push(r2b as f64);
+                    } else {
+                        cold_rounds.push(r2b as f64);
+                    }
+                }
+                // A dead node's draining flights still answer their members,
+                // but their results must not repopulate the unreachable
+                // shard (the router will never send a request there again).
+                if result.correct && alive[*ni] {
+                    if let Some(best_config) = result.best_config.clone() {
+                        let task = &tasks[*task_index];
+                        self.caches[*ni].insert(CacheEntry {
+                            fingerprint: flight.fingerprint,
+                            task_id: task.id(),
+                            gpu_key: wf.gpu.key.to_string(),
+                            strategy: c.strategy.name().to_string(),
+                            coder: c.coder.name.to_string(),
+                            judge: c.judge.name.to_string(),
+                            best_speedup: result.best_speedup,
+                            best_config,
+                            api_usd: result.ledger.api_usd,
+                            cold_api_usd: cold_ref,
+                            wall_s: result.ledger.wall_s,
+                            rounds_to_best: result.rounds_to_best().unwrap_or(0),
+                        });
+                    }
+                }
+                let leader_arrival = trace[flight.leader_seq as usize].arrival_s;
+                let mut members = Vec::with_capacity(flight.members());
+                members.push((flight.leader_seq, leader_arrival));
+                members.extend(
+                    flight
+                        .follower_seqs
+                        .iter()
+                        .map(|s| (*s, trace[*s as usize].arrival_s)),
+                );
+                // A cross-node seed is fetched before the run starts: the
+                // transfer rides on the flight's service time.
+                let service_s = result.ledger.wall_s
+                    + if *cross { self.config.transfer_latency_s } else { 0.0 };
+                st.fleet.submit(SimFlight {
+                    fingerprint: flight.fingerprint,
+                    priority: flight.priority,
+                    leader_seq: flight.leader_seq,
+                    tenant: flight.tenant,
+                    arrival_s: leader_arrival,
+                    service_s,
+                    members,
+                    cold_ref,
+                });
+            }
+        }
+        // Drain: serve everything still queued at end of trace.
+        for st in states.iter_mut() {
+            let NodeState { fleet, backlog_by_tenant, .. } = st;
+            fleet.advance(f64::INFINITY, &mut |f, done| {
+                for (s, arr) in &f.members {
+                    latencies[*s as usize] =
+                        Some((done.completion_s - arr).max(hit_latency_s));
+                }
+                backlog_by_tenant[f.tenant] =
+                    backlog_by_tenant[f.tenant].saturating_sub(1);
+            });
+        }
+
+        let served: Vec<f64> = latencies.iter().filter_map(|l| *l).collect();
+        debug_assert_eq!(
+            served.len() + rejected as usize,
+            trace.len(),
+            "every request is served or rejected"
+        );
+        let slo = self.config.service.slo;
+        let per_priority: Vec<PriorityClassReport> = ALL_PRIORITIES
+            .iter()
+            .map(|p| {
+                let class: Vec<f64> = trace
+                    .iter()
+                    .zip(&latencies)
+                    .filter(|(r, _)| r.priority == *p)
+                    .filter_map(|(_, l)| *l)
+                    .collect();
+                let target = slo.target_s(*p);
+                let attainment = if class.is_empty() {
+                    1.0
+                } else {
+                    class.iter().filter(|l| **l <= target).count() as f64 / class.len() as f64
+                };
+                PriorityClassReport {
+                    priority: *p,
+                    requests: trace.iter().filter(|r| r.priority == *p).count(),
+                    rejected: rejected_by_class[*p as usize],
+                    p50_latency_s: percentile(&class, 50.0),
+                    p95_latency_s: percentile(&class, 95.0),
+                    p99_latency_s: percentile(&class, 99.0),
+                    slo_target_s: target,
+                    slo_attainment: attainment,
+                }
+            })
+            .collect();
+
+        let hits: u64 = states.iter().map(|s| s.hits).sum();
+        let evictions: u64 = states
+            .iter()
+            .enumerate()
+            .map(|(i, s)| s.evictions_carry + self.caches[i].stats.evictions - s.evictions0)
+            .sum();
+        let busy_s: f64 = states.iter().map(|s| s.fleet.busy_s()).sum();
+        let makespan = states
+            .iter()
+            .map(|s| s.fleet.makespan_s())
+            .fold(0.0f64, f64::max);
+        let wait_s: f64 = states.iter().map(|s| s.fleet.total_queue_wait_s()).sum();
+        let served_flights: usize = states.iter().map(|s| s.fleet.flights_served()).sum();
+        let total_workers = nodes * sim_workers;
+        let gpu_hours = busy_s / 3600.0;
+
+        let per_node: Vec<NodeReport> = states
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let node_makespan = s.fleet.makespan_s();
+                NodeReport {
+                    node: i,
+                    alive: alive[i],
+                    requests: s.requests,
+                    cache_hits: s.hits,
+                    shared: s.shared,
+                    flights_run: s.flights_run,
+                    rejected: s.rejected,
+                    evictions: s.evictions_carry + self.caches[i].stats.evictions
+                        - s.evictions0,
+                    hit_rate: if s.requests == 0 {
+                        0.0
+                    } else {
+                        (s.hits + s.shared) as f64 / s.requests as f64
+                    },
+                    utilization: if node_makespan > 0.0 {
+                        s.fleet.busy_s() / (sim_workers as f64 * node_makespan)
+                    } else {
+                        0.0
+                    },
+                    peak_queue_depth: s.peak_depth,
+                    cache_entries: self.caches[i].len(),
+                }
+            })
+            .collect();
+
+        let per_tenant: Vec<TenantReport> = self
+            .config
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(t, spec)| {
+                let lat: Vec<f64> = trace
+                    .iter()
+                    .zip(&latencies)
+                    .filter(|(r, _)| r.tenant.min(n_tenants - 1) == t)
+                    .filter_map(|(_, l)| *l)
+                    .collect();
+                let within = trace
+                    .iter()
+                    .zip(&latencies)
+                    .filter(|(r, _)| r.tenant.min(n_tenants - 1) == t)
+                    .filter_map(|(r, l)| l.map(|v| (r.priority, v)))
+                    .filter(|(p, v)| *v <= slo.target_s(*p))
+                    .count();
+                TenantReport {
+                    tenant: spec.name.clone(),
+                    weight: spec.weight,
+                    requests: tenant_requests[t],
+                    served: lat.len(),
+                    rejected: tenant_rejected[t],
+                    quota_shed: tenant_quota_shed[t],
+                    p50_latency_s: percentile(&lat, 50.0),
+                    p95_latency_s: percentile(&lat, 95.0),
+                    p99_latency_s: percentile(&lat, 99.0),
+                    slo_attainment: if lat.is_empty() {
+                        1.0
+                    } else {
+                        within as f64 / lat.len() as f64
+                    },
+                }
+            })
+            .collect();
+
+        let overall = ServiceReport {
+            requests: trace.len(),
+            flights_run,
+            cache_hits: hits,
+            shared,
+            evictions,
+            rejected,
+            warm_started,
+            warm_correct,
+            hit_rate: if trace.is_empty() {
+                0.0
+            } else {
+                (hits + shared) as f64 / trace.len() as f64
+            },
+            p50_latency_s: percentile(&served, 50.0),
+            p95_latency_s: percentile(&served, 95.0),
+            p99_latency_s: percentile(&served, 99.0),
+            mean_latency_s: mean(&served),
+            mean_queue_wait_s: if served_flights == 0 {
+                0.0
+            } else {
+                wait_s / served_flights as f64
+            },
+            peak_queue_depth: states.iter().map(|s| s.peak_depth).max().unwrap_or(0),
+            utilization: if makespan > 0.0 {
+                busy_s / (total_workers as f64 * makespan)
+            } else {
+                0.0
+            },
+            per_priority,
+            api_usd_spent: api_spent,
+            api_usd_saved: api_cold - api_spent,
+            api_usd_cold: api_cold,
+            mean_rounds_to_best_cold: mean(&cold_rounds),
+            mean_rounds_to_best_warm: mean(&warm_rounds),
+            gpu_hours,
+            requests_per_gpu_hour: if gpu_hours > 0.0 {
+                trace.len() as f64 / gpu_hours
+            } else {
+                0.0
+            },
+        };
+
+        ClusterReport {
+            overall,
+            nodes,
+            per_node,
+            per_tenant,
+            cross_node_warm,
+            quota_shed: tenant_quota_shed.iter().sum(),
+            rebalance,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu;
+    use crate::service::traffic::{generate, TrafficConfig};
+    use crate::tasks;
+    use crate::workflow::NoOracle;
+
+    #[test]
+    fn fair_shares_follow_weights_with_a_floor() {
+        let tenants = vec![TenantSpec::new("a", 3.0), TenantSpec::new("b", 1.0)];
+        assert_eq!(fair_share_quotas(8, &tenants), vec![6, 2]);
+        // Tiny weights still get one slot; unbounded depth disables quotas.
+        let skew = vec![TenantSpec::new("big", 100.0), TenantSpec::new("tiny", 0.0001)];
+        assert_eq!(fair_share_quotas(4, &skew), vec![3, 1]);
+        assert_eq!(
+            fair_share_quotas(usize::MAX, &tenants),
+            vec![usize::MAX, usize::MAX]
+        );
+        // Degenerate weights fall back to "no quota" rather than panicking.
+        let zeros = vec![TenantSpec::new("z", 0.0)];
+        assert_eq!(fair_share_quotas(8, &zeros), vec![usize::MAX]);
+    }
+
+    #[test]
+    fn requests_partition_across_nodes_and_tenants() {
+        let suite = tasks::kernelbench();
+        let trace = generate(
+            suite.len(),
+            &TrafficConfig {
+                requests: 300,
+                tenant_mix: vec![("a".to_string(), 1.0), ("b".to_string(), 1.0)],
+                ..TrafficConfig::default()
+            },
+        );
+        let mut cluster = ClusterService::new(ClusterConfig {
+            nodes: 3,
+            tenants: vec![TenantSpec::new("a", 1.0), TenantSpec::new("b", 1.0)],
+            service: ServiceConfig {
+                threads: 2,
+                window: 16,
+                ..ServiceConfig::default()
+            },
+            ..ClusterConfig::default()
+        });
+        let r = cluster.replay(&trace, &suite, &NoOracle);
+        assert_eq!(r.nodes, 3);
+        assert_eq!(r.per_node.len(), 3);
+        assert_eq!(r.per_tenant.len(), 2);
+        assert_eq!(
+            r.per_node.iter().map(|n| n.requests).sum::<usize>(),
+            r.overall.requests,
+            "routing partitions the trace across shards"
+        );
+        assert!(
+            r.per_node.iter().filter(|n| n.requests > 0).count() >= 2,
+            "rendezvous hashing spreads this trace over multiple nodes"
+        );
+        assert_eq!(
+            r.per_tenant.iter().map(|t| t.requests).sum::<usize>(),
+            r.overall.requests
+        );
+        for t in &r.per_tenant {
+            assert_eq!(t.served as u64 + t.rejected, t.requests as u64);
+            assert!((0.0..=1.0).contains(&t.slo_attainment));
+        }
+        assert_eq!(
+            r.overall.cache_hits + r.overall.shared + r.overall.flights_run as u64
+                + r.overall.rejected,
+            r.overall.requests as u64,
+            "every request is a hit, a follower, a flight, or shed"
+        );
+        assert!(r.rebalance.is_none());
+        assert_eq!(r.quota_shed, 0, "quotas are off by default");
+    }
+
+    #[test]
+    fn all_nodes_dead_sheds_everything() {
+        let suite = tasks::kernelbench();
+        let trace = vec![TrafficRequest {
+            task_index: 0,
+            gpu: gpu::by_key("rtx6000").unwrap(),
+            priority: Priority::Standard,
+            tenant: 0,
+            arrival_s: 10.0,
+        }];
+        let mut cluster = ClusterService::new(ClusterConfig {
+            nodes: 1,
+            fail_node_at: Some((0, 0.0)),
+            service: ServiceConfig { threads: 1, ..ServiceConfig::default() },
+            ..ClusterConfig::default()
+        });
+        let r = cluster.replay(&trace, &suite, &NoOracle);
+        assert_eq!(r.overall.rejected, 1, "an unroutable request is shed");
+        assert_eq!(r.overall.flights_run, 0);
+        assert!(!r.per_node[0].alive);
+        // The unroutable shed still counts as the tenant's traffic.
+        assert_eq!(r.per_tenant[0].requests, 1);
+        assert_eq!(r.per_tenant[0].rejected, 1);
+        assert_eq!(r.per_tenant[0].served, 0);
+    }
+}

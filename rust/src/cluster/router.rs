@@ -1,0 +1,122 @@
+//! Rendezvous (highest-random-weight) routing of fingerprints onto nodes.
+//!
+//! Every (fingerprint, node) pair gets a pseudo-random score; a fingerprint
+//! is owned by the alive node with the highest score. Two properties make
+//! this the right shape for the cluster simulation:
+//!
+//! - **Minimal disruption.** When a node dies, *only* the keys it owned
+//!   move (each to its runner-up node); every other key keeps its owner.
+//!   Consistent-hash rings need virtual nodes to approximate this —
+//!   rendezvous hashing gives it exactly, with no ring state to maintain.
+//! - **Determinism.** Scores are FNV-1a over the fingerprint and node index
+//!   (the same digest family `service::fingerprint` uses), so routing is a
+//!   pure function of (fingerprint, alive set) — replays are bit-stable and
+//!   no coordinator process needs simulating.
+//!
+//! Scores are compared as `(score, node)` so even a (vanishingly unlikely)
+//! 64-bit score tie breaks deterministically.
+
+use crate::service::fingerprint::{fnv_extend, Fingerprint, FNV_OFFSET};
+
+/// Stateless rendezvous router over `nodes` simulated nodes.
+#[derive(Clone, Copy, Debug)]
+pub struct Router {
+    nodes: usize,
+}
+
+impl Router {
+    /// `nodes` is clamped to at least 1.
+    pub fn new(nodes: usize) -> Router {
+        Router { nodes: nodes.max(1) }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// The rendezvous score of `fp` on `node`.
+    pub fn score(fp: Fingerprint, node: usize) -> u64 {
+        let h = fnv_extend(FNV_OFFSET, &fp.0.to_le_bytes());
+        fnv_extend(h, &(node as u64).to_le_bytes())
+    }
+
+    /// Owner of `fp` among nodes where `alive[node]` holds. `None` when no
+    /// node is alive (the caller sheds the request). `alive.len()` must
+    /// equal `nodes`.
+    pub fn route(&self, fp: Fingerprint, alive: &[bool]) -> Option<usize> {
+        debug_assert_eq!(alive.len(), self.nodes);
+        (0..self.nodes)
+            .filter(|n| alive.get(*n).copied().unwrap_or(false))
+            .max_by_key(|n| (Self::score(fp, *n), *n))
+    }
+
+    /// Owner of `fp` with every node alive — what routing *would* do absent
+    /// failures. Comparing against [`Router::route`] identifies requests
+    /// displaced by a dead node (the rebalanced keys).
+    pub fn route_any(&self, fp: Fingerprint) -> usize {
+        (0..self.nodes)
+            .max_by_key(|n| (Self::score(fp, *n), *n))
+            .expect("router has at least one node")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_are_deterministic_and_in_range() {
+        let r = Router::new(5);
+        let alive = vec![true; 5];
+        for k in 0..1000u64 {
+            let fp = Fingerprint(k.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let a = r.route(fp, &alive).unwrap();
+            let b = r.route(fp, &alive).unwrap();
+            assert_eq!(a, b);
+            assert!(a < 5);
+            assert_eq!(a, r.route_any(fp));
+        }
+    }
+
+    #[test]
+    fn load_spreads_across_nodes() {
+        let r = Router::new(4);
+        let alive = vec![true; 4];
+        let mut counts = [0usize; 4];
+        for k in 0..4000u64 {
+            let fp = Fingerprint(k.wrapping_mul(0x2545_F491_4F6C_DD1D));
+            counts[r.route(fp, &alive).unwrap()] += 1;
+        }
+        for (n, c) in counts.iter().enumerate() {
+            // Expected 1000 per node; rendezvous over a good hash stays
+            // well within +/- 20%.
+            assert!((800..1200).contains(c), "node {n} owns {c} of 4000");
+        }
+    }
+
+    #[test]
+    fn killing_a_node_moves_only_its_keys() {
+        let r = Router::new(4);
+        let all = vec![true; 4];
+        let mut without2 = vec![true; 4];
+        without2[2] = false;
+        for k in 0..2000u64 {
+            let fp = Fingerprint(k.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xABCD);
+            let before = r.route(fp, &all).unwrap();
+            let after = r.route(fp, &without2).unwrap();
+            if before == 2 {
+                assert_ne!(after, 2, "orphaned keys must rehash elsewhere");
+            } else {
+                assert_eq!(before, after, "keys on surviving nodes never move");
+            }
+        }
+    }
+
+    #[test]
+    fn no_alive_node_routes_nowhere() {
+        let r = Router::new(3);
+        assert_eq!(r.route(Fingerprint(7), &[false, false, false]), None);
+        assert_eq!(r.route(Fingerprint(7), &[false, true, false]), Some(1));
+        assert_eq!(Router::new(1).route(Fingerprint(9), &[true]), Some(0));
+    }
+}

@@ -7,12 +7,17 @@
 //! the experiment index mapping every paper table and figure to a command.
 //!
 //! Layer map:
-//! - L4 (`service`): the kernel-optimization service layer — content-
-//!   addressed result cache, single-flight job queue, warm-start scheduling,
-//!   and a discrete-event queueing simulation of Zipf traffic over a finite
-//!   simulated GPU fleet (per-priority SLOs, admission control) — the first
-//!   subsystem aimed at serving repeated multi-user traffic rather than
-//!   reproducing paper tables.
+//! - L5 (`cluster`): the sharded multi-tenant cluster simulation — a
+//!   rendezvous-hash router over N simulated nodes, each owning its own
+//!   cache shard / single-flight queue / GPU-fleet slice, with weighted
+//!   per-tenant fair-share quotas under overload, node-failure/rebalance
+//!   accounting, and cross-node warm-start routing.
+//! - L4 (`service`): the kernel-optimization service layer (one node of
+//!   the cluster) — content-addressed result cache, single-flight job
+//!   queue, warm-start scheduling, and a discrete-event queueing simulation
+//!   of Zipf traffic over a finite simulated GPU fleet (per-priority SLOs,
+//!   admission control) — the first subsystem aimed at serving repeated
+//!   multi-user traffic rather than reproducing paper tables.
 //! - L3 (this crate): the CudaForge workflow — Coder/Judge agents, hardware
 //!   feedback, the GPU/NCU simulator, the KernelBench-sim suite, baselines,
 //!   the metric-selection pipeline, cost model, coordinator and reports.
@@ -22,6 +27,7 @@
 //!   the `pjrt` cargo feature + the vendored `xla` crate).
 
 pub mod agents;
+pub mod cluster;
 pub mod coordinator;
 pub mod cost;
 pub mod gpu;

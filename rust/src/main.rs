@@ -4,6 +4,7 @@
 //!   run        optimize one task (e.g. `run --task L1-95 --gpu rtx6000`)
 //!   suite      run a strategy over KernelBench or D*
 //!   serve      replay Zipf traffic through the kernel-optimization service
+//!   cluster    replay Zipf traffic over a sharded multi-tenant cluster
 //!   bench      regenerate a paper table/figure (`--exp table1|...|all`)
 //!   select     run the offline metric-selection pipeline (Algorithms 1-2)
 //!   verify     execute every AOT artifact on PJRT vs its reference (pjrt)
@@ -18,8 +19,12 @@
 //!               --queue-depth N (shed batch work past this backlog)
 //!               --slo I,S,B (per-priority latency targets, seconds)
 //!               --snapshot PATH (restore before / save after the replay)
+//! Cluster flags: serve flags (capacity/sim-workers/queue-depth are *per
+//!               node*) plus --nodes N --tenants NAME:W,NAME:W --no-quotas
+//!               --transfer-latency SECS --fail-node N --fail-at SECS
 
 use cudaforge::agents::profiles;
+use cudaforge::cluster::{ClusterConfig, ClusterService, TenantSpec};
 use cudaforge::coordinator::{default_threads, run_suite};
 use cudaforge::gpu;
 use cudaforge::report::{self, Ctx};
@@ -119,6 +124,154 @@ fn slo_from(arg: &str) -> SloTargets {
     SloTargets { interactive_s: parts[0], standard_s: parts[1], batch_s: parts[2] }
 }
 
+/// Parse `--tenants NAME:WEIGHT,NAME:WEIGHT` (weight defaults to 1).
+fn tenants_from(arg: &str) -> Vec<TenantSpec> {
+    let mut out = Vec::new();
+    for part in arg.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, weight) = match part.split_once(':') {
+            Some((n, w)) => {
+                let w: f64 = w.trim().parse().unwrap_or_else(|_| {
+                    eprintln!("error: --tenants wants NAME:WEIGHT, got '{part}'");
+                    std::process::exit(2);
+                });
+                (n.trim(), w)
+            }
+            None => (part, 1.0),
+        };
+        if name.is_empty() || !(weight.is_finite() && weight > 0.0) {
+            eprintln!("error: --tenants entry '{part}' needs a name and a positive weight");
+            std::process::exit(2);
+        }
+        out.push(TenantSpec::new(name, weight));
+    }
+    if out.is_empty() {
+        eprintln!("error: --tenants names no tenants (e.g. alpha:3,beta:1)");
+        std::process::exit(2);
+    }
+    out
+}
+
+fn cluster(args: &Args) {
+    let oracle = build_oracle(args);
+    let suite = tasks::kernelbench();
+    let seed = args.get_u64("seed", 7);
+    let tenants = tenants_from(args.get_or("tenants", "alpha:3,beta:1"));
+    let traffic = TrafficConfig {
+        requests: args.get_usize("requests", 2000),
+        zipf_s: args.get_f64("zipf", 1.1),
+        mean_interarrival_s: args.get_f64("interarrival", 90.0),
+        seed,
+        tenant_mix: tenants.iter().map(|t| (t.name.clone(), t.weight)).collect(),
+        ..TrafficConfig::default()
+    };
+    let mut service = ServiceConfig {
+        capacity: args.get_usize("capacity", 512),
+        window: args.get_usize("window", 32),
+        threads: args.get_usize("threads", default_threads()),
+        sim_workers: args.get_usize("sim-workers", 2),
+        queue_depth: args.get_usize("queue-depth", 16),
+        strategy: strategy_or_exit(args.get_or("strategy", "cudaforge")),
+        rounds: args.get_usize("rounds", 10),
+        seed,
+        ..ServiceConfig::default()
+    };
+    if let Some(slo) = args.get("slo") {
+        service.slo = slo_from(slo);
+    }
+    if let Some(m) = args.get("coder") {
+        service.coder = *profiles::by_name(m).unwrap_or_else(|| {
+            eprintln!("error: unknown coder model '{m}'");
+            std::process::exit(2);
+        });
+    }
+    if let Some(m) = args.get("judge") {
+        service.judge = *profiles::by_name(m).unwrap_or_else(|| {
+            eprintln!("error: unknown judge model '{m}'");
+            std::process::exit(2);
+        });
+    }
+    let nodes = args.get_usize("nodes", 4).max(1);
+    let fail_node_at = args.get("fail-node").map(|v| {
+        let node: usize = v.parse().unwrap_or_else(|_| {
+            eprintln!("error: --fail-node wants a node index, got '{v}'");
+            std::process::exit(2);
+        });
+        if node >= nodes {
+            eprintln!(
+                "error: --fail-node {node} is out of range for --nodes {nodes} \
+                 (valid indices: 0..{})",
+                nodes - 1
+            );
+            std::process::exit(2);
+        }
+        (node, args.get_f64("fail-at", 0.0))
+    });
+    let config = ClusterConfig {
+        service,
+        nodes,
+        tenants: tenants.clone(),
+        tenant_quotas: !args.flag("no-quotas"),
+        transfer_latency_s: args.get_f64("transfer-latency", 30.0),
+        fail_node_at,
+    };
+    println!(
+        "cluster: {} nodes x {} sim GPUs | {} tenants (quotas {}) | cache {}/shard | \
+         queue depth {} | {} requests (zipf s={}, seed {})",
+        config.nodes,
+        config.service.sim_workers,
+        config.tenants.len(),
+        if config.tenant_quotas { "on" } else { "off" },
+        config.service.capacity,
+        config.service.queue_depth,
+        traffic.requests,
+        traffic.zipf_s,
+        seed,
+    );
+    if let Some((n, at)) = config.fail_node_at {
+        println!("  [failure scheduled: node {n} drops at t={at}s]");
+    }
+    let trace = try_generate(suite.len(), &traffic).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    let t0 = std::time::Instant::now();
+    let mut svc = ClusterService::new(config);
+    let report = svc.replay(&trace, &suite, oracle.as_ref());
+    let ctx = Ctx {
+        seed,
+        results_dir: args.get_or("out", "results").to_string(),
+        ..Ctx::default()
+    };
+    report::cluster_report(&ctx, &report);
+    println!(
+        "replay wall {:.2}s | {} runs executed across {} nodes, {:.1}% served from \
+         cache/in-flight, {} shed ({} by tenant quota), {} cross-node warm starts",
+        t0.elapsed().as_secs_f64(),
+        report.overall.flights_run,
+        report.nodes,
+        report.overall.hit_rate * 100.0,
+        report.overall.rejected,
+        report.quota_shed,
+        report.cross_node_warm,
+    );
+    if let Some(rb) = &report.rebalance {
+        println!(
+            "node {} failed at {}s: lost {} cached entries; {} requests rehashed to \
+             survivors; {} lost keys re-ran cold (${:.2} re-spent)",
+            rb.failed_node,
+            rb.failed_at_s,
+            rb.cache_entries_lost,
+            rb.rehashed_requests,
+            rb.remissed_flights,
+            rb.remiss_api_usd,
+        );
+    }
+}
+
 fn serve(args: &Args) {
     let oracle = build_oracle(args);
     let suite = tasks::kernelbench();
@@ -166,7 +319,21 @@ fn serve(args: &Args) {
                     KernelService::with_cache(config, cache)
                 }
                 Err(e) => {
-                    eprintln!("error: snapshot {path} unreadable: {e}");
+                    // The alternate format prints the whole anyhow chain —
+                    // the io error behind an unreadable file, or the
+                    // version-header diagnosis behind an incompatible
+                    // snapshot. Match the restore error's own remediation
+                    // phrase (not a bare substring a *path* could contain)
+                    // to decide whether the version hint applies.
+                    let chain = format!("{e:#}");
+                    eprintln!("error: cannot restore cache snapshot: {chain}");
+                    if chain.contains("delete the snapshot and re-warm") {
+                        eprintln!(
+                            "hint: {path} was written under a different fingerprint \
+                             scheme; delete it (the cache re-warms from traffic) or \
+                             rerun with a matching build"
+                        );
+                    }
                     std::process::exit(2);
                 }
             }
@@ -226,19 +393,21 @@ fn serve(args: &Args) {
     if let Some(path) = &snapshot {
         match svc.cache().snapshot(path) {
             Ok(()) => eprintln!("[snapshot: {} entries -> {path}]", svc.cache().len()),
-            Err(e) => eprintln!("warning: snapshot failed: {e}"),
+            Err(e) => eprintln!("warning: cache snapshot not saved: {e:#}"),
         }
     }
 }
 
 fn usage() {
     println!("cudaforge {} — CudaForge reproduction CLI", cudaforge::version());
-    println!("usage: cudaforge <run|suite|serve|bench|select|verify|specs> [flags]");
+    println!("usage: cudaforge <run|suite|serve|cluster|bench|select|verify|specs> [flags]");
     println!("  run    --task L1-95 [--gpu rtx6000 --strategy cudaforge --rounds 10]");
     println!("  suite  [--dstar] [--strategy NAME --coder o3 --judge gpt5]");
     println!("  serve  [--requests 2000 --zipf 1.1 --seed 7 --capacity 1024 --window 32]");
     println!("         [--interarrival 90 --sim-workers 8 --queue-depth N --slo 120,7200,86400]");
     println!("         [--snapshot cache.jsonl]");
+    println!("  cluster [serve flags, per node] [--nodes 4 --tenants alpha:3,beta:1]");
+    println!("         [--no-quotas --transfer-latency 30 --fail-node N --fail-at SECS]");
     println!("  bench  --exp <table1|table2|table3|table4|table5|fig4..fig9|table6|table8|all> [--quick]");
     println!("  select [--iterations 100]");
     println!("  verify [--artifacts artifacts]   (needs --features pjrt)");
@@ -302,6 +471,7 @@ fn main() {
             }
         }
         "serve" => serve(&args),
+        "cluster" => cluster(&args),
         "bench" => {
             let oracle = build_oracle(&args);
             let ctx = Ctx {

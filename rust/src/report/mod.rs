@@ -489,6 +489,91 @@ pub fn service_report(ctx: &Ctx, r: &crate::service::ServiceReport) {
     ctx.save("service", &service_table(r));
 }
 
+/// Cluster replay report (the `cluster` subcommand): the overall
+/// service-shaped aggregates, then the sharded deployment's views — per-node
+/// hit rate/utilization, per-tenant SLO attainment and shed counts, and the
+/// cost of the node-failure rebalance when one was simulated.
+pub fn cluster_table(r: &crate::cluster::ClusterReport) -> Table {
+    let o = &r.overall;
+    let mut t = Table::new(
+        "Cluster report — sharded multi-tenant replay",
+        &["Metric", "Value"],
+    );
+    let mut rows: Vec<(String, String)> = vec![
+        ("Nodes".into(), r.nodes.to_string()),
+        ("Requests".into(), o.requests.to_string()),
+        ("Workflow runs (cache misses)".into(), o.flights_run.to_string()),
+        ("Cache hits".into(), o.cache_hits.to_string()),
+        ("Single-flight shared".into(), o.shared.to_string()),
+        ("Rejected (all sheds)".into(), o.rejected.to_string()),
+        ("Quota sheds (tenant fair-share)".into(), r.quota_shed.to_string()),
+        ("Hit rate".into(), pct(o.hit_rate)),
+        ("Warm-started runs".into(), o.warm_started.to_string()),
+        ("Cross-node warm starts".into(), r.cross_node_warm.to_string()),
+        ("p50/p95/p99 latency (min)".into(), {
+            format!(
+                "{} / {} / {}",
+                f2(o.p50_latency_s / 60.0),
+                f2(o.p95_latency_s / 60.0),
+                f2(o.p99_latency_s / 60.0)
+            )
+        }),
+        ("Mean queue wait (min)".into(), f2(o.mean_queue_wait_s / 60.0)),
+        ("Fleet utilization (cluster)".into(), pct(o.utilization)),
+        ("API spent ($)".into(), f2(o.api_usd_spent)),
+        ("API saved vs cold ($)".into(), f2(o.api_usd_saved)),
+        ("Simulated GPU-hours".into(), f2(o.gpu_hours)),
+    ];
+    for n in &r.per_node {
+        rows.push((
+            format!("node {}{}", n.node, if n.alive { "" } else { " (failed)" }),
+            format!(
+                "{} reqs | hit {} | util {} | {} flights | {} shed | {} cached",
+                n.requests,
+                pct(n.hit_rate),
+                pct(n.utilization),
+                n.flights_run,
+                n.rejected,
+                n.cache_entries
+            ),
+        ));
+    }
+    for tn in &r.per_tenant {
+        rows.push((
+            format!("tenant {} (w={})", tn.tenant, tn.weight),
+            format!(
+                "{} reqs | SLO {} | p95 {}m | {} shed ({} quota)",
+                tn.requests,
+                pct(tn.slo_attainment),
+                f2(tn.p95_latency_s / 60.0),
+                tn.rejected,
+                tn.quota_shed
+            ),
+        ));
+    }
+    if let Some(rb) = &r.rebalance {
+        rows.push((
+            format!("rebalance: node {} failed @{}s", rb.failed_node, rb.failed_at_s),
+            format!(
+                "{} entries lost | {} reqs rehashed | {} re-missed flights (${} re-spent)",
+                rb.cache_entries_lost,
+                rb.rehashed_requests,
+                rb.remissed_flights,
+                f2(rb.remiss_api_usd)
+            ),
+        ));
+    }
+    for (k, v) in rows {
+        t.row(vec![k, v]);
+    }
+    t
+}
+
+/// Render + persist a cluster report.
+pub fn cluster_report(ctx: &Ctx, r: &crate::cluster::ClusterReport) {
+    ctx.save("cluster", &cluster_table(r));
+}
+
 /// Run every experiment (the `bench --exp all` path).
 pub fn run_all(ctx: &Ctx, oracle: &dyn CorrectnessOracle, quick: bool) {
     table1(ctx, oracle, quick);

@@ -265,30 +265,41 @@ impl ResultCache {
             if line.trim().is_empty() {
                 continue;
             }
-            let v = Json::parse(line)
-                .map_err(|e| anyhow!("snapshot line {}: {e}", i + 1))?;
+            let v = Json::parse(line).map_err(|e| {
+                anyhow!("snapshot {} line {}: {e}", path.as_ref().display(), i + 1)
+            })?;
             if !saw_header {
                 // The first line must declare a compatible fingerprint
                 // scheme; a version-less snapshot was written by a build
-                // whose fingerprints no longer match anything.
+                // whose fingerprints no longer match anything. Both
+                // diagnoses carry the offending path so the operator knows
+                // *which* file to delete.
                 match v.get("snapshot_version").and_then(|x| x.as_f64()) {
                     Some(x) if x == SNAPSHOT_VERSION as f64 => {
                         saw_header = true;
                         continue;
                     }
                     Some(x) => bail!(
-                        "snapshot version {x} unsupported (this build reads \
-                         {SNAPSHOT_VERSION}) — delete the snapshot and re-warm"
+                        "snapshot {} has version {x} unsupported by this build \
+                         (which reads {SNAPSHOT_VERSION}) — delete the snapshot \
+                         and re-warm",
+                        path.as_ref().display()
                     ),
                     None => bail!(
-                        "snapshot has no version header (written before the \
+                        "snapshot {} has no version header (written before the \
                          v{SNAPSHOT_VERSION} fingerprint scheme) — delete the \
-                         snapshot and re-warm"
+                         snapshot and re-warm",
+                        path.as_ref().display()
                     ),
                 }
             }
-            let entry = CacheEntry::from_json(&v)
-                .ok_or_else(|| anyhow!("snapshot line {}: missing fields", i + 1))?;
+            let entry = CacheEntry::from_json(&v).ok_or_else(|| {
+                anyhow!(
+                    "snapshot {} line {}: missing fields",
+                    path.as_ref().display(),
+                    i + 1
+                )
+            })?;
             cache.insert(entry);
         }
         if !saw_header {

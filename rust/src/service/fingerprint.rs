@@ -41,10 +41,12 @@ impl Fingerprint {
     }
 }
 
-const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+pub(crate) const FNV_OFFSET: u64 = 0xcbf29ce484222325;
 const FNV_PRIME: u64 = 0x100000001b3;
 
-fn fnv_extend(mut h: u64, bytes: &[u8]) -> u64 {
+/// FNV-1a over `bytes`, continuing from `h`. Shared with the cluster
+/// router's rendezvous scores so both sides key off the same digest family.
+pub(crate) fn fnv_extend(mut h: u64, bytes: &[u8]) -> u64 {
     for b in bytes {
         h ^= *b as u64;
         h = h.wrapping_mul(FNV_PRIME);

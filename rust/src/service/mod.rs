@@ -1,10 +1,11 @@
-//! The kernel-optimization service layer.
+//! The kernel-optimization service layer: one node of the deployment.
 //!
 //! Everything below `service/` exists for one reason: the paper's per-kernel
 //! economics (≈26.5 min, ≈$0.30 — Table 3) price a *cold* Coder/Judge loop,
 //! but production traffic is dominated by repeats. A deployment serving many
 //! users answers most requests from work it has already done. This module
-//! simulates that deployment on top of the existing workflow engine:
+//! simulates one *node* of that deployment on top of the existing workflow
+//! engine:
 //!
 //! - [`fingerprint`] — content addresses: a stable digest of
 //!   (task workload, GPU, models, strategy, rounds) identifying a request.
@@ -13,11 +14,30 @@
 //! - [`queue`] — priority admission with single-flight dedup: concurrent
 //!   identical requests share one workflow run.
 //! - [`traffic`] — deterministic Zipf-distributed synthetic traces with
-//!   Poisson arrival times.
+//!   Poisson arrival times and per-request tenant identity.
 //! - [`pool`] — the OS-thread pool shared with `coordinator::run_suite`,
 //!   plus [`pool::FleetSim`], the simulated GPU-worker fleet.
-//! - [`KernelService`] — the service loop over the discrete-event model
-//!   described next.
+//! - [`KernelService`] — the single-node service loop over the
+//!   discrete-event model described next.
+//!
+//! # One node vs. the cluster
+//!
+//! [`KernelService`] owns exactly one cache, one flight queue, and one
+//! simulated fleet — the single-node picture. The ROADMAP's target of
+//! millions of users is served by `crate::cluster`, which instantiates *N*
+//! of these building blocks (one `ResultCache` shard, one `JobQueue`, one
+//! `FleetSim` slice per simulated node), routes fingerprints across them
+//! with rendezvous hashing, meters per-tenant fair-share quotas under
+//! overload, and replays node-failure/rebalance scenarios. The cluster
+//! layer deliberately reuses this module's types unchanged: a 1-node,
+//! 1-tenant cluster replay is bit-identical to [`KernelService::replay`]
+//! (an invariant the integration tests assert), so every latency/SLO
+//! property validated here transfers to the sharded deployment.
+//! [`ServiceConfig`] doubles as the *per-node* parameter block of
+//! `cluster::ClusterConfig`; the request-shaping helpers
+//! ([`ServiceConfig::fingerprint_of`], [`ServiceConfig::base_workflow`],
+//! [`ServiceConfig::warm_start_from`]) are shared by both replay loops so
+//! the two layers can never drift apart on what a request means.
 //!
 //! # The latency model
 //!
@@ -146,6 +166,37 @@ impl Default for ServiceConfig {
     }
 }
 
+impl ServiceConfig {
+    /// Content address of one request under this config. Shared by the
+    /// single-node and cluster replay loops so both key their caches and
+    /// single-flight queues identically.
+    pub fn fingerprint_of(&self, task: &TaskSpec, gpu: &crate::gpu::GpuSpec) -> Fingerprint {
+        fingerprint::of_request(task, gpu, &self.coder, &self.judge, self.strategy, self.rounds)
+    }
+
+    /// The workflow a cold run of one request executes (no warm start yet).
+    pub fn base_workflow(&self, gpu: &'static crate::gpu::GpuSpec) -> WorkflowConfig {
+        let mut wf = WorkflowConfig::cudaforge(gpu, self.seed)
+            .with_strategy(self.strategy)
+            .with_rounds(self.rounds);
+        wf.coder = self.coder;
+        wf.judge = self.judge;
+        wf
+    }
+
+    /// Seed a workflow from a cached cross-GPU kernel, applying this
+    /// config's warm-run early-stop policy.
+    pub fn warm_start_from(&self, wf: WorkflowConfig, entry: &CacheEntry) -> WorkflowConfig {
+        let source_gpu = crate::gpu::by_key(&entry.gpu_key).map(|g| g.key).unwrap_or("unknown");
+        wf.with_warm_start(WarmStart {
+            config: entry.best_config.clone(),
+            source_gpu,
+            source_speedup: entry.best_speedup,
+        })
+        .with_early_stop(self.warm_early_stop)
+    }
+}
+
 /// Latency/SLO aggregates for one priority class. Rejected requests have no
 /// latency and are excluded from the percentiles; they are scored separately.
 #[derive(Clone, Debug, PartialEq)]
@@ -245,25 +296,14 @@ impl KernelService {
     }
 
     pub fn fingerprint_of(&self, task: &TaskSpec, gpu: &crate::gpu::GpuSpec) -> Fingerprint {
-        fingerprint::of_request(
-            task,
-            gpu,
-            &self.config.coder,
-            &self.config.judge,
-            self.config.strategy,
-            self.config.rounds,
-        )
+        self.config.fingerprint_of(task, gpu)
     }
 
     /// Prepare one flight's workflow, warm-starting from the best cached
     /// cross-GPU kernel when one exists.
     fn workflow_for(&self, req: &TrafficRequest, task: &TaskSpec) -> WorkflowConfig {
         let c = &self.config;
-        let mut wf = WorkflowConfig::cudaforge(req.gpu, c.seed)
-            .with_strategy(c.strategy)
-            .with_rounds(c.rounds);
-        wf.coder = c.coder;
-        wf.judge = c.judge;
+        let wf = c.base_workflow(req.gpu);
         let warm = self.cache.warm_candidate(
             &task.id(),
             req.gpu.key,
@@ -271,19 +311,10 @@ impl KernelService {
             c.coder.name,
             c.judge.name,
         );
-        if let Some(entry) = warm {
-            let source_gpu = crate::gpu::by_key(&entry.gpu_key)
-                .map(|g| g.key)
-                .unwrap_or("unknown");
-            wf = wf
-                .with_warm_start(WarmStart {
-                    config: entry.best_config.clone(),
-                    source_gpu,
-                    source_speedup: entry.best_speedup,
-                })
-                .with_early_stop(c.warm_early_stop);
+        match warm {
+            Some(entry) => c.warm_start_from(wf, entry),
+            None => wf,
         }
-        wf
     }
 
     /// Replay a traffic trace through the service. `trace[i].task_index`
@@ -375,7 +406,12 @@ impl KernelService {
                     rejected_by_class[req.priority as usize] += 1;
                     continue;
                 }
-                queue.push(Request { seq, fingerprint: fp, priority: req.priority });
+                queue.push(Request {
+                    seq,
+                    fingerprint: fp,
+                    priority: req.priority,
+                    tenant: req.tenant,
+                });
                 peak_depth = peak_depth.max(fleet.depth() + queue.len());
             }
 
@@ -466,6 +502,7 @@ impl KernelService {
                     fingerprint: flight.fingerprint,
                     priority: flight.priority,
                     leader_seq: flight.leader_seq,
+                    tenant: flight.tenant,
                     arrival_s: leader_arrival,
                     service_s: result.ledger.wall_s,
                     members,
@@ -586,6 +623,7 @@ mod tests {
             task_index,
             gpu: gpu::by_key(gpu_key).unwrap(),
             priority,
+            tenant: 0,
             arrival_s,
         }
     }

@@ -68,6 +68,9 @@ pub struct SimFlight {
     pub priority: Priority,
     /// Arrival seq of the leader — the tie-breaker within a priority class.
     pub leader_seq: u64,
+    /// Leader's tenant: the cluster layer releases this tenant's backlog
+    /// slot when the flight starts on a worker.
+    pub tenant: usize,
     /// Simulated instant the flight exists from (its leader's arrival).
     pub arrival_s: f64,
     /// Seconds one simulated worker needs to serve it (the run's wall time).
@@ -237,6 +240,18 @@ impl FleetSim {
             self.queue_wait_s / self.served as f64
         }
     }
+
+    /// Total simulated seconds served flights waited for a worker — the
+    /// cluster layer sums this across node fleets before dividing, so the
+    /// cluster-wide mean is flight-weighted, not node-weighted.
+    pub fn total_queue_wait_s(&self) -> f64 {
+        self.queue_wait_s
+    }
+
+    /// Flights this fleet has started serving.
+    pub fn flights_served(&self) -> usize {
+        self.served
+    }
 }
 
 #[cfg(test)]
@@ -272,6 +287,7 @@ mod tests {
             fingerprint: Fingerprint(fp),
             priority: p,
             leader_seq: seq,
+            tenant: 0,
             arrival_s,
             service_s,
             members: vec![(seq, arrival_s)],

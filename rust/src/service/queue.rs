@@ -45,6 +45,10 @@ pub struct Request {
     pub seq: u64,
     pub fingerprint: Fingerprint,
     pub priority: Priority,
+    /// Tenant index of the requester (0 in the single-tenant world). The
+    /// cluster layer attributes each flight's backlog slot to its leader's
+    /// tenant when metering fair-share quotas.
+    pub tenant: usize,
 }
 
 /// One unit of actual work: a leader plus the followers sharing its flight.
@@ -57,6 +61,9 @@ pub struct Flight {
     pub follower_seqs: Vec<u64>,
     /// Most urgent priority across all members.
     pub priority: Priority,
+    /// The *leader's* tenant — the flight's backlog slot is charged to
+    /// whoever opened it, not to followers who coalesce onto it.
+    pub tenant: usize,
 }
 
 impl Flight {
@@ -130,6 +137,7 @@ impl JobQueue {
                         leader_seq: req.seq,
                         follower_seqs: Vec::new(),
                         priority: req.priority,
+                        tenant: req.tenant,
                     },
                 );
                 true
@@ -153,7 +161,20 @@ mod tests {
     use super::*;
 
     fn req(seq: u64, fp: u64, p: Priority) -> Request {
-        Request { seq, fingerprint: Fingerprint(fp), priority: p }
+        Request { seq, fingerprint: Fingerprint(fp), priority: p, tenant: 0 }
+    }
+
+    #[test]
+    fn flight_keeps_the_leaders_tenant() {
+        let mut q = JobQueue::new();
+        q.push(Request { seq: 0, fingerprint: Fingerprint(1), priority: Priority::Batch, tenant: 2 });
+        // A follower from another tenant coalesces but does not take over
+        // the backlog attribution.
+        q.push(Request { seq: 1, fingerprint: Fingerprint(1), priority: Priority::Batch, tenant: 0 });
+        let flights = q.drain();
+        assert_eq!(flights.len(), 1);
+        assert_eq!(flights[0].tenant, 2);
+        assert_eq!(flights[0].follower_seqs, vec![1]);
     }
 
     #[test]

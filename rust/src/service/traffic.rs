@@ -1,6 +1,6 @@
 //! Synthetic traffic traces: Zipf-distributed task popularity over the
-//! KernelBench-sim suite, a skewed GPU mix, a priority mix, and Poisson
-//! arrival times.
+//! KernelBench-sim suite, a skewed GPU mix, a priority mix, a tenant mix,
+//! and Poisson arrival times.
 //!
 //! Production kernel-optimization traffic is heavy-tailed — a few operators
 //! (attention, GEMM epilogues, softmax variants) dominate while a long tail
@@ -8,7 +8,13 @@
 //! itself. Each request also carries a simulated arrival instant (exponential
 //! interarrival gaps, i.e. a Poisson process), which is what lets the service
 //! layer's discrete-event simulator charge queueing delay instead of bare
-//! service time. The trace is fully determined by its seed.
+//! service time, and a tenant index, which is what lets the cluster layer
+//! enforce per-tenant quotas. The trace is fully determined by its seed.
+//!
+//! Tenant draws come from a *separate* RNG stream derived from the seed, so
+//! adding or reshaping `tenant_mix` never perturbs which tasks, GPUs, or
+//! priorities a given seed produces — single-node replays stay byte-stable
+//! under multi-tenant reconfiguration.
 
 use anyhow::{bail, Result};
 
@@ -31,6 +37,11 @@ pub struct TrafficConfig {
     pub gpu_mix: Vec<(&'static str, f64)>,
     /// Weights for [interactive, standard, batch].
     pub priority_mix: [f64; 3],
+    /// `(tenant name, weight)` — who is asking. Index `i` of this list is
+    /// the `TrafficRequest::tenant` it produces; the cluster layer maps the
+    /// same indices onto its `TenantSpec` list. A single-entry mix models
+    /// the pre-cluster single-tenant world.
+    pub tenant_mix: Vec<(String, f64)>,
 }
 
 impl Default for TrafficConfig {
@@ -47,6 +58,7 @@ impl Default for TrafficConfig {
                 ("h100", 0.05),
             ],
             priority_mix: [0.2, 0.6, 0.2],
+            tenant_mix: vec![("default".to_string(), 1.0)],
         }
     }
 }
@@ -86,17 +98,33 @@ impl TrafficConfig {
         if self.priority_mix.iter().sum::<f64>() <= 0.0 {
             bail!("traffic config: priority_mix weights sum to zero — no class can be drawn");
         }
+        if self.tenant_mix.is_empty() {
+            bail!("traffic config: tenant_mix must name at least one tenant");
+        }
+        for (name, w) in &self.tenant_mix {
+            if !(w.is_finite() && *w >= 0.0) {
+                bail!(
+                    "traffic config: tenant_mix weight for '{name}' must be finite and >= 0, got {w}"
+                );
+            }
+        }
+        if self.tenant_mix.iter().map(|(_, w)| *w).sum::<f64>() <= 0.0 {
+            bail!("traffic config: tenant_mix weights sum to zero — no tenant can be drawn");
+        }
         Ok(())
     }
 }
 
 /// One arriving request: an index into the caller's task set, a target GPU,
-/// an urgency class, and the simulated instant it arrives.
+/// an urgency class, a tenant, and the simulated instant it arrives.
 #[derive(Clone, Copy, Debug)]
 pub struct TrafficRequest {
     pub task_index: usize,
     pub gpu: &'static GpuSpec,
     pub priority: Priority,
+    /// Index into the trace's `tenant_mix` (and the cluster's tenant list).
+    /// Single-node replays ignore it; the cluster layer meters quotas by it.
+    pub tenant: usize,
     /// Simulated arrival time in seconds from trace start (nondecreasing).
     pub arrival_s: f64,
 }
@@ -111,6 +139,9 @@ pub fn try_generate(n_tasks: usize, cfg: &TrafficConfig) -> Result<Vec<TrafficRe
     }
     cfg.validate()?;
     let mut rng = Rng::new(cfg.seed ^ 0x7261_6666_6963_u64);
+    // Tenants draw from their own stream: reshaping the tenant mix must not
+    // shift the task/GPU/priority/arrival draws of an existing seed.
+    let mut tenant_rng = Rng::new(cfg.seed ^ 0x7465_6e61_6e74_u64);
 
     // rank -> task index
     let mut perm: Vec<usize> = (0..n_tasks).collect();
@@ -134,6 +165,7 @@ pub fn try_generate(n_tasks: usize, cfg: &TrafficConfig) -> Result<Vec<TrafficRe
         }
     }
     let gpu_weights: Vec<f64> = cfg.gpu_mix.iter().map(|(_, w)| *w).collect();
+    let tenant_weights: Vec<f64> = cfg.tenant_mix.iter().map(|(_, w)| *w).collect();
 
     let mut clock_s = 0.0f64;
     Ok((0..cfg.requests)
@@ -141,6 +173,7 @@ pub fn try_generate(n_tasks: usize, cfg: &TrafficConfig) -> Result<Vec<TrafficRe
             let rank = rng.weighted_choice(&zipf_weights);
             let g = rng.weighted_choice(&gpu_weights);
             let p = rng.weighted_choice(&cfg.priority_mix);
+            let t = tenant_rng.weighted_choice(&tenant_weights);
             // Exponential interarrival gap (Poisson arrivals). `1 - f64()` is
             // in (0, 1], so the log is finite.
             clock_s += -cfg.mean_interarrival_s * (1.0 - rng.f64()).ln();
@@ -148,6 +181,7 @@ pub fn try_generate(n_tasks: usize, cfg: &TrafficConfig) -> Result<Vec<TrafficRe
                 task_index: perm[rank],
                 gpu: gpus[g],
                 priority: ALL_PRIORITIES[p],
+                tenant: t,
                 arrival_s: clock_s,
             }
         })
@@ -174,6 +208,7 @@ mod tests {
             assert_eq!(x.task_index, y.task_index);
             assert_eq!(x.gpu.key, y.gpu.key);
             assert_eq!(x.priority, y.priority);
+            assert_eq!(x.tenant, y.tenant);
             assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
         }
         let c = generate(250, &TrafficConfig { seed: 8, ..cfg });
@@ -230,6 +265,35 @@ mod tests {
     }
 
     #[test]
+    fn tenant_mix_is_respected_and_does_not_perturb_other_draws() {
+        let single = TrafficConfig { requests: 1000, ..TrafficConfig::default() };
+        let base = generate(250, &single);
+        assert!(base.iter().all(|r| r.tenant == 0), "default mix is one tenant");
+
+        let multi = TrafficConfig {
+            requests: 1000,
+            tenant_mix: vec![
+                ("alpha".to_string(), 3.0),
+                ("beta".to_string(), 1.0),
+            ],
+            ..TrafficConfig::default()
+        };
+        let trace = generate(250, &multi);
+        let alpha = trace.iter().filter(|r| r.tenant == 0).count() as f64
+            / trace.len() as f64;
+        assert!((0.68..0.82).contains(&alpha), "alpha share {alpha}");
+        assert!(trace.iter().any(|r| r.tenant == 1));
+        // The tenant stream is independent: every non-tenant draw of the
+        // seed is byte-identical to the single-tenant trace.
+        for (x, y) in base.iter().zip(&trace) {
+            assert_eq!(x.task_index, y.task_index);
+            assert_eq!(x.gpu.key, y.gpu.key);
+            assert_eq!(x.priority, y.priority);
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+        }
+    }
+
+    #[test]
     fn invalid_mixes_are_rejected_with_clear_errors() {
         let negative = TrafficConfig {
             gpu_mix: vec![("rtx6000", -1.0)],
@@ -265,6 +329,17 @@ mod tests {
         };
         let err = try_generate(10, &unknown_gpu).unwrap_err().to_string();
         assert!(err.contains("tpu9000"), "{err}");
+
+        let zero_tenants = TrafficConfig { tenant_mix: vec![], ..TrafficConfig::default() };
+        let err = try_generate(10, &zero_tenants).unwrap_err().to_string();
+        assert!(err.contains("tenant_mix"), "{err}");
+
+        let bad_tenant = TrafficConfig {
+            tenant_mix: vec![("alpha".to_string(), -2.0)],
+            ..TrafficConfig::default()
+        };
+        let err = try_generate(10, &bad_tenant).unwrap_err().to_string();
+        assert!(err.contains("tenant_mix") && err.contains("alpha"), "{err}");
 
         let nan_zipf = TrafficConfig { zipf_s: f64::NAN, ..TrafficConfig::default() };
         let err = try_generate(10, &nan_zipf).unwrap_err().to_string();

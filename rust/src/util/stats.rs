@@ -19,8 +19,24 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// Linear-interpolated percentile, q in [0, 100]. NaNs are rejected by debug
-/// assert; callers filter failures first.
+/// Percentile with **linear interpolation between closest ranks** (the
+/// Hyndman–Fan R-7 estimator, numpy's default), *not* nearest-rank: the
+/// rank is `q/100 * (n-1)` and a fractional rank interpolates between the
+/// two neighbouring order statistics. q in [0, 100]. NaNs are rejected by
+/// debug assert; callers filter failures first.
+///
+/// # Small-sample behaviour
+///
+/// High percentiles need samples in the tail to mean anything. The
+/// interpolated rank `q/100 * (n-1)` exceeds `n - 2` whenever
+/// `n < (200 - q) / (100 - q)` — e.g. p99 with up to 100 samples, or p95
+/// with up to 20 — and the result is then an interpolation between the
+/// two largest samples, i.e. practically the max (exactly the max for
+/// n = 1 or all-equal input). Service/cluster replays routinely report p99 over small
+/// per-class or per-tenant slices, so read those tails as "max observed
+/// latency", not as a distributional estimate. Degenerate inputs follow
+/// the same convention everywhere: empty input returns 0.0, a single
+/// sample is every percentile of itself.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
@@ -98,6 +114,42 @@ mod tests {
         assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
         assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
         assert_eq!(median(&[5.0]), 5.0);
+    }
+
+    #[test]
+    fn percentile_edge_cases_at_small_n() {
+        // n = 0: the documented 0.0 sentinel, for every q.
+        assert_eq!(percentile(&[], 0.0), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 99.0), 0.0);
+        // n = 1: a single sample is every percentile of itself.
+        for q in [0.0, 1.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[7.5], q), 7.5, "q={q}");
+        }
+        // n = 2: rank q/100 interpolates the pair; p99 is 99% of the way
+        // from min to max — "practically the max".
+        assert!((percentile(&[10.0, 20.0], 50.0) - 15.0).abs() < 1e-12);
+        assert!((percentile(&[10.0, 20.0], 99.0) - 19.9).abs() < 1e-12);
+        // Order independence: the input is sorted internally.
+        assert!((percentile(&[20.0, 10.0], 99.0) - 19.9).abs() < 1e-12);
+        // All-equal input: every percentile is that value, exactly.
+        let flat = [3.0; 5];
+        for q in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(percentile(&flat, q), 3.0, "q={q}");
+        }
+    }
+
+    #[test]
+    fn p99_below_100_samples_interpolates_the_top_two() {
+        // The documented small-n caveat: with n < 100 the p99 rank lands
+        // past n-2, so the estimate lives between the two largest samples.
+        let xs: Vec<f64> = (1..=50).map(|i| i as f64).collect();
+        let p99 = percentile(&xs, 99.0);
+        assert!(p99 > 49.0 && p99 <= 50.0, "p99={p99}");
+        // ...and with n >= 101 it no longer touches the max at all.
+        let ys: Vec<f64> = (1..=200).map(|i| i as f64).collect();
+        let p99 = percentile(&ys, 99.0);
+        assert!(p99 < 200.0 - 1e-9, "p99={p99}");
     }
 
     #[test]

@@ -1,0 +1,287 @@
+//! Integration: the sharded multi-tenant cluster layer — the two
+//! determinism contracts (a 1-node single-tenant cluster is bit-identical
+//! to the single-node service, and cluster reports are bit-identical across
+//! OS thread counts), plus the cluster-only behaviours: node failure with
+//! rebalance accounting, fair-share tenant quotas under overload, and
+//! cross-node warm-start routing with its transfer latency.
+
+use cudaforge::cluster::{ClusterConfig, ClusterReport, ClusterService, Router, TenantSpec};
+use cudaforge::gpu;
+use cudaforge::service::queue::Priority;
+use cudaforge::service::traffic::{generate, TrafficConfig, TrafficRequest};
+use cudaforge::service::{KernelService, ServiceConfig};
+use cudaforge::tasks;
+use cudaforge::workflow::{run_task, NoOracle};
+
+/// A hand-built request at an explicit simulated instant.
+fn req_at(
+    task_index: usize,
+    gpu_key: &str,
+    priority: Priority,
+    tenant: usize,
+    arrival_s: f64,
+) -> TrafficRequest {
+    TrafficRequest {
+        task_index,
+        gpu: gpu::by_key(gpu_key).unwrap(),
+        priority,
+        tenant,
+        arrival_s,
+    }
+}
+
+#[test]
+fn one_node_single_tenant_cluster_is_bit_identical_to_the_service() {
+    let suite = tasks::kernelbench();
+    let trace = generate(
+        suite.len(),
+        &TrafficConfig { requests: 300, seed: 7, ..TrafficConfig::default() },
+    );
+    let service_cfg = ServiceConfig { threads: 2, window: 16, seed: 7, ..ServiceConfig::default() };
+
+    let mut single = KernelService::new(service_cfg.clone());
+    let expected = single.replay(&trace, &suite, &NoOracle);
+
+    let mut cluster = ClusterService::new(ClusterConfig {
+        service: service_cfg,
+        nodes: 1,
+        ..ClusterConfig::default()
+    });
+    let r = cluster.replay(&trace, &suite, &NoOracle);
+    // The hard contract: every aggregate — counters, f64 percentiles,
+    // dollar sums — is the single-node report, bit for bit.
+    assert_eq!(r.overall, expected);
+    assert_eq!(r.nodes, 1);
+    assert_eq!(r.per_node.len(), 1);
+    assert_eq!(r.per_node[0].requests, expected.requests);
+    assert_eq!(r.per_node[0].cache_hits, expected.cache_hits);
+    assert_eq!(r.per_node[0].flights_run, expected.flights_run);
+    assert_eq!(r.cross_node_warm, 0, "one node has no other shard to fetch from");
+    assert_eq!(r.quota_shed, 0);
+
+    // Same contract on the overload path: a bounded queue shedding batch
+    // work must shed identically through the cluster's admission.
+    let burst: Vec<TrafficRequest> = (0..12)
+        .map(|i| {
+            let p = if i % 4 == 3 { Priority::Interactive } else { Priority::Batch };
+            req_at(i, "rtx6000", p, 0, i as f64)
+        })
+        .collect();
+    let tight = ServiceConfig {
+        threads: 1,
+        window: 4,
+        sim_workers: 1,
+        queue_depth: 2,
+        seed: 7,
+        ..ServiceConfig::default()
+    };
+    let mut single = KernelService::new(tight.clone());
+    let expected = single.replay(&burst, &suite, &NoOracle);
+    assert!(expected.rejected > 0, "the burst must overload the bounded queue");
+    let mut cluster = ClusterService::new(ClusterConfig {
+        service: tight,
+        nodes: 1,
+        ..ClusterConfig::default()
+    });
+    assert_eq!(cluster.replay(&burst, &suite, &NoOracle).overall, expected);
+}
+
+fn sharded_replay(threads: usize, seed: u64) -> ClusterReport {
+    let suite = tasks::kernelbench();
+    let trace = generate(
+        suite.len(),
+        &TrafficConfig {
+            requests: 300,
+            seed,
+            tenant_mix: vec![("alpha".to_string(), 3.0), ("beta".to_string(), 1.0)],
+            ..TrafficConfig::default()
+        },
+    );
+    // Exercise every cluster feature at once: sharding, quotas, a
+    // mid-replay node failure, and cross-node warm transfers.
+    let fail_at = trace[trace.len() / 2].arrival_s;
+    let mut svc = ClusterService::new(ClusterConfig {
+        nodes: 3,
+        tenants: vec![TenantSpec::new("alpha", 3.0), TenantSpec::new("beta", 1.0)],
+        tenant_quotas: true,
+        transfer_latency_s: 30.0,
+        fail_node_at: Some((1, fail_at)),
+        service: ServiceConfig {
+            threads,
+            window: 16,
+            sim_workers: 2,
+            queue_depth: 8,
+            seed,
+            ..ServiceConfig::default()
+        },
+    });
+    svc.replay(&trace, &suite, &NoOracle)
+}
+
+#[test]
+fn cluster_report_identical_regardless_of_worker_count() {
+    // The existing single-node assertion, extended to the cluster: the full
+    // ClusterReport — per-node, per-tenant, and rebalance views included —
+    // is bit-identical whether 1, 2, or 8 OS threads crunch the flights.
+    let a = sharded_replay(1, 7);
+    let b = sharded_replay(2, 7);
+    let c = sharded_replay(8, 7);
+    assert_eq!(a, b);
+    assert_eq!(a, c);
+    // ...and seeds actually matter.
+    let d = sharded_replay(2, 8);
+    assert_ne!(a, d);
+}
+
+#[test]
+fn node_failure_rehashes_keys_and_accounts_the_re_miss() {
+    let suite = tasks::kernelbench();
+    let probe_cfg = ServiceConfig { threads: 1, window: 1, seed: 7, ..ServiceConfig::default() };
+    // Deterministically pick a task whose cold rtx6000 run caches a usable
+    // kernel, so the shard provably holds its key when the node dies.
+    let anchor = (0..suite.len())
+        .find(|i| {
+            let wf = probe_cfg.base_workflow(gpu::by_key("rtx6000").unwrap());
+            let r = run_task(&wf, &suite[*i], &NoOracle);
+            r.correct && r.best_speedup > 0.0 && r.best_config.is_some()
+        })
+        .expect("some task solves cold on rtx6000");
+    let fp = probe_cfg.fingerprint_of(&suite[anchor], gpu::by_key("rtx6000").unwrap());
+    let owner = Router::new(2).route(fp, &[true, true]).unwrap();
+
+    // Arrivals are spaced far beyond any run's simulated service time, so
+    // the repeat at t=100k is a true cache hit (not an in-flight join).
+    let trace = vec![
+        req_at(anchor, "rtx6000", Priority::Standard, 0, 0.0),
+        req_at(anchor, "rtx6000", Priority::Standard, 0, 100_000.0),
+        req_at(anchor, "rtx6000", Priority::Standard, 0, 200_000.0),
+    ];
+    let mut svc = ClusterService::new(ClusterConfig {
+        nodes: 2,
+        fail_node_at: Some((owner, 150_000.0)),
+        service: probe_cfg,
+        ..ClusterConfig::default()
+    });
+    let r = svc.replay(&trace, &suite, &NoOracle);
+    // t=0 runs cold and caches on `owner`; t=100k hits that shard; at
+    // t=150k the shard dies; t=200k rehashes to the survivor and re-runs.
+    assert_eq!(r.overall.flights_run, 2, "the lost key re-misses");
+    assert_eq!(r.overall.cache_hits, 1);
+    let rb = r.rebalance.expect("failure fired mid-replay");
+    assert_eq!(rb.failed_node, owner);
+    assert!(rb.cache_entries_lost >= 1, "the anchor entry was resident");
+    assert!(rb.rehashed_requests >= 1, "the t=200 request was displaced");
+    assert_eq!(rb.remissed_flights, 1);
+    assert!(rb.remiss_api_usd > 0.0, "the re-run re-spent API dollars");
+    assert!(!r.per_node[owner].alive);
+    assert!(r.per_node[1 - owner].alive);
+    // The survivor ran the re-miss.
+    assert!(r.per_node[1 - owner].flights_run >= 1);
+}
+
+#[test]
+fn fair_share_quotas_shed_the_hog_and_protect_the_light_tenant() {
+    let suite = tasks::kernelbench();
+    // One node, queue_depth 4, equal weights => 2 backlog slots per tenant.
+    // Tenant 0 bursts 6 distinct standard-priority requests; tenant 1 sends
+    // 2. Nothing is batch, so only the quota knob can shed.
+    let mut trace: Vec<TrafficRequest> = (0..6)
+        .map(|i| req_at(i, "rtx6000", Priority::Standard, 0, 0.0))
+        .collect();
+    trace.push(req_at(6, "rtx6000", Priority::Standard, 1, 0.0));
+    trace.push(req_at(7, "rtx6000", Priority::Standard, 1, 0.0));
+    let mk = |quotas: bool| ClusterConfig {
+        nodes: 1,
+        tenants: vec![TenantSpec::new("hog", 1.0), TenantSpec::new("light", 1.0)],
+        tenant_quotas: quotas,
+        service: ServiceConfig {
+            threads: 1,
+            window: 32,
+            sim_workers: 1,
+            queue_depth: 4,
+            seed: 7,
+            ..ServiceConfig::default()
+        },
+        ..ClusterConfig::default()
+    };
+    let mut svc = ClusterService::new(mk(true));
+    let r = svc.replay(&trace, &suite, &NoOracle);
+    assert_eq!(r.quota_shed, 2, "the hog's 5th and 6th opens exceed its share");
+    assert_eq!(r.per_tenant[0].quota_shed, 2);
+    assert_eq!(r.per_tenant[0].rejected, 2);
+    assert_eq!(
+        r.per_tenant[1].quota_shed, 0,
+        "the light tenant is admitted past the bound — that is the fair share"
+    );
+    assert_eq!(r.per_tenant[1].rejected, 0);
+    assert_eq!(r.overall.flights_run, 6);
+    assert_eq!(
+        r.overall.cache_hits + r.overall.shared + r.overall.flights_run as u64
+            + r.overall.rejected,
+        r.overall.requests as u64
+    );
+
+    // Quotas off: standard-priority work is never shed (the pre-cluster
+    // behaviour), so the hog monopolizes the backlog unchecked.
+    let mut open = ClusterService::new(mk(false));
+    let r = open.replay(&trace, &suite, &NoOracle);
+    assert_eq!(r.overall.rejected, 0);
+    assert_eq!(r.quota_shed, 0);
+    assert_eq!(r.overall.flights_run, 8);
+}
+
+#[test]
+fn cross_node_warm_starts_pay_the_transfer_latency() {
+    let suite = tasks::kernelbench();
+    let probe_cfg = ServiceConfig { threads: 1, window: 1, seed: 7, ..ServiceConfig::default() };
+    let router = Router::new(2);
+    let alive = [true, true];
+    let rtx = gpu::by_key("rtx6000").unwrap();
+    // Find a task that (a) caches a usable kernel cold on rtx6000 and
+    // (b) has a second GPU whose fingerprint shards onto the *other* node.
+    let mut found = None;
+    'outer: for i in 0..suite.len() {
+        let r = run_task(&probe_cfg.base_workflow(rtx), &suite[i], &NoOracle);
+        if !(r.correct && r.best_speedup > 0.0 && r.best_config.is_some()) {
+            continue;
+        }
+        let fp_a = probe_cfg.fingerprint_of(&suite[i], rtx);
+        for key in ["a100", "h100", "rtx4090"] {
+            let fp_b = probe_cfg.fingerprint_of(&suite[i], gpu::by_key(key).unwrap());
+            if router.route(fp_a, &alive) != router.route(fp_b, &alive) {
+                found = Some((i, key));
+                break 'outer;
+            }
+        }
+    }
+    let (anchor, other_gpu) = found.expect("some warm pair shards across the two nodes");
+
+    let trace = vec![
+        req_at(anchor, "rtx6000", Priority::Standard, 0, 0.0),
+        req_at(anchor, other_gpu, Priority::Standard, 0, 10.0),
+    ];
+    let run = |transfer_latency_s: f64| {
+        let mut svc = ClusterService::new(ClusterConfig {
+            nodes: 2,
+            transfer_latency_s,
+            service: probe_cfg.clone(),
+            ..ClusterConfig::default()
+        });
+        svc.replay(&trace, &suite, &NoOracle)
+    };
+    let free = run(0.0);
+    assert_eq!(free.overall.flights_run, 2);
+    assert_eq!(free.overall.warm_started, 1, "the second GPU's run seeds from the first");
+    assert_eq!(free.cross_node_warm, 1, "the seed lives on the other shard");
+
+    // The transfer is priced into the warm flight's service time: with two
+    // served flights and everything else identical, the mean moves by
+    // exactly transfer/2.
+    let taxed = run(5000.0);
+    assert_eq!(taxed.cross_node_warm, 1);
+    let delta = taxed.overall.mean_latency_s - free.overall.mean_latency_s;
+    assert!(
+        (delta - 2500.0).abs() < 1e-6,
+        "transfer latency must surface in the latency model, delta {delta}"
+    );
+}
