@@ -2,7 +2,9 @@
 //! sharded 4-node cluster, then answer the two operational questions the
 //! simulation exists for — what does a node failure cost, and do fair-share
 //! quotas actually protect the light tenant when a heavy tenant floods the
-//! queue?
+//! queue? All node fleets advance through one global event loop, so a
+//! cross-node warm start only ever seeds from an entry whose producing
+//! flight has already completed in simulated time.
 //!
 //!     cargo run --release --example cluster_sim
 

@@ -1,7 +1,8 @@
 //! Bench: the cluster layer's hot paths — rendezvous routing (once per
 //! request at admission time, so it must stay in the tens-of-nanoseconds
 //! regime), the fair-share quota derivation, and an end-to-end sharded
-//! replay compared against the same traffic on one node.
+//! replay (the global event loop interleaving all node fleets in timestamp
+//! order) compared against the same traffic on one node.
 
 use cudaforge::cluster::{
     fair_share_quotas, ClusterConfig, ClusterService, Router, TenantSpec,

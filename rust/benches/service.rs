@@ -1,16 +1,18 @@
 //! Bench: the service-layer hot paths — fingerprinting, cache lookups under
-//! LRU churn, single-flight queue ops, the discrete-event fleet simulator,
-//! and an end-to-end traffic replay. The admission path (fingerprint +
-//! cache probe + fleet advance) runs once per request at serving time, so
-//! it must stay far below the microsecond regime.
+//! LRU churn, single-flight joins on the fleet, the event-driven fleet
+//! simulator itself, and an end-to-end traffic replay. The admission path
+//! (fingerprint + cache probe + fleet advance) runs once per request at
+//! serving time, so it must stay far below the microsecond regime. The
+//! final pair of replays shows the `window` knob is host-side batching
+//! only: both run the identical event-driven simulation.
 
 use cudaforge::agents::profiles::O3;
 use cudaforge::gpu::RTX6000_ADA;
 use cudaforge::kernel::KernelConfig;
 use cudaforge::service::cache::{CacheEntry, ResultCache};
 use cudaforge::service::fingerprint::{of_request, Fingerprint};
-use cudaforge::service::pool::{FleetSim, SimFlight};
-use cudaforge::service::queue::{JobQueue, Priority, Request};
+use cudaforge::service::pool::{FleetHooks, FleetSim, SimCompletion, SimFlight};
+use cudaforge::service::queue::Priority;
 use cudaforge::service::traffic::{generate, TrafficConfig};
 use cudaforge::service::{KernelService, ServiceConfig};
 use cudaforge::tasks;
@@ -32,6 +34,16 @@ fn entry(fp: u64) -> CacheEntry {
         wall_s: 1590.0,
         rounds_to_best: 6,
     }
+}
+
+/// Constant-service-time hooks: the fleet mechanics without workflow cost.
+struct Fixed(f64);
+
+impl FleetHooks for Fixed {
+    fn on_start(&mut self, _f: &SimFlight, _start_s: f64) -> f64 {
+        self.0
+    }
+    fn on_complete(&mut self, _f: &SimFlight, _done: SimCompletion) {}
 }
 
 fn main() {
@@ -56,23 +68,31 @@ fn main() {
     });
 
     let mut seq = 0u64;
-    let mut q = JobQueue::new();
-    bench("service::queue push+drain (window of 32)", 200_000, || {
+    bench("service::fleet submit+join (window of 32, heavy dedup)", 200_000, || {
+        let mut fleet = FleetSim::new(4);
+        let mut hooks = Fixed(900.0);
         for k in 0..32u64 {
-            q.push(Request {
-                seq,
-                fingerprint: Fingerprint(k % 11), // heavy dedup
-                priority: Priority::Standard,
-                tenant: 0,
-            });
+            let fp = Fingerprint(k % 11); // heavy dedup: most arrivals join
+            if !fleet.join_waiting(fp, seq, k as f64, Priority::Standard) {
+                fleet.submit(SimFlight {
+                    fingerprint: fp,
+                    priority: Priority::Standard,
+                    leader_seq: seq,
+                    tenant: 0,
+                    arrival_s: k as f64,
+                    members: vec![(seq, k as f64)],
+                });
+            }
             seq += 1;
         }
-        black_box(q.drain().len());
+        fleet.advance(f64::INFINITY, &mut hooks);
+        black_box(fleet.flights_served());
     });
 
     let mut sim_seq = 0u64;
     bench("service::fleet submit+advance (16 flights, 4 workers)", 100_000, || {
         let mut fleet = FleetSim::new(4);
+        let mut hooks = Fixed(900.0);
         for k in 0..16u64 {
             fleet.submit(SimFlight {
                 fingerprint: Fingerprint(sim_seq ^ k),
@@ -80,14 +100,11 @@ fn main() {
                 leader_seq: sim_seq + k,
                 tenant: 0,
                 arrival_s: k as f64 * 3.0,
-                service_s: 900.0 + k as f64,
                 members: vec![(sim_seq + k, k as f64 * 3.0)],
-                cold_ref: 0.30,
             });
         }
-        let mut served = 0usize;
-        fleet.advance(f64::INFINITY, &mut |_, _| served += 1);
-        black_box(served);
+        fleet.advance(f64::INFINITY, &mut hooks);
+        black_box(fleet.flights_served());
         sim_seq += 16;
     });
 
@@ -103,4 +120,21 @@ fn main() {
         });
         black_box(svc.replay(&trace, &suite, &NoOracle));
     });
+
+    // The window knob batches host work only; the simulation is identical.
+    for window in [1usize, 64] {
+        let name = format!("service::replay 200 Zipf requests (window {window})");
+        bench(&name, 200, || {
+            let trace = generate(
+                suite.len(),
+                &TrafficConfig { requests: 200, ..TrafficConfig::default() },
+            );
+            let mut svc = KernelService::new(ServiceConfig {
+                threads: 1,
+                window,
+                ..ServiceConfig::default()
+            });
+            black_box(svc.replay(&trace, &suite, &NoOracle));
+        });
+    }
 }

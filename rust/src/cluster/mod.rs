@@ -2,18 +2,18 @@
 //! service.
 //!
 //! `service::KernelService` prices one node: one result cache, one
-//! single-flight queue, one simulated GPU fleet. The ROADMAP's target —
-//! serving millions of users — is a *cluster* of such nodes, and the
-//! questions that matter at that scale are cluster questions: how evenly do
-//! fingerprints shard, what does a node failure cost, which tenant starves
-//! under overload, and when is it worth fetching a warm-start seed from
-//! another node's shard. This module answers them with the same
-//! discrete-event discipline as the single-node layer:
+//! simulated GPU fleet. The ROADMAP's target — serving millions of users —
+//! is a *cluster* of such nodes, and the questions that matter at that
+//! scale are cluster questions: how evenly do fingerprints shard, what does
+//! a node failure cost, which tenant starves under overload, and when is it
+//! worth fetching a warm-start seed from another node's shard. This module
+//! answers them with the same discrete-event discipline as the single-node
+//! layer:
 //!
 //! - [`router`] — rendezvous (highest-random-weight) hashing routes each
 //!   fingerprint to one alive node; a node's death moves only its own keys.
-//! - Each simulated node owns its **own** `ResultCache` shard, `JobQueue`,
-//!   and `FleetSim` worker slice — there is no shared cache, so a request
+//! - Each simulated node owns its **own** `ResultCache` shard and
+//!   `FleetSim` worker slice — there is no shared cache, so a request
 //!   hitting the "wrong" node's shard is impossible by construction.
 //! - **Tenancy.** Every trace request carries a tenant index. Under
 //!   overload (a node's flight backlog at `queue_depth`), weighted
@@ -30,14 +30,23 @@
 //!   hit-adjacent entry owned by node B, paying a configurable transfer
 //!   latency on top of the run's service time.
 //!
-//! # Determinism
+//! # Determinism and causality
 //!
-//! Everything reported is simulated-time or request-count arithmetic
-//! accumulated in (arrival, node, flight) order; OS `threads` only changes
-//! how fast the host crunches workflow runs. A [`ClusterReport`] is
-//! bit-identical across thread counts, and a 1-node single-tenant cluster
-//! replay is bit-identical to [`KernelService::replay`]'s `ServiceReport` —
-//! both invariants are asserted by `tests/integration_cluster.rs`.
+//! The replay drives every node fleet through one *global* event loop:
+//! starts and completions fire in cluster-wide timestamp order (completions
+//! before starts at ties, then node index), interleaved with arrivals. A
+//! flight starting on any node therefore observes exactly the cache
+//! entries — its own shard's and other shards' warm-start donors — whose
+//! producing flights completed by its start instant, never a result still
+//! being computed. Everything reported is simulated-time or request-count
+//! arithmetic accumulated in that event order; OS `threads` and the
+//! `window` speculation batch size only change how fast the host crunches
+//! workflow runs. A [`ClusterReport`] is bit-identical across thread
+//! counts, and a 1-node single-tenant cluster replay is bit-identical to
+//! [`KernelService::replay`]'s `ServiceReport` — both invariants are
+//! asserted by `tests/integration_cluster.rs`, and the per-flight
+//! accounting itself is one shared helper
+//! (`service::settle_flight_completion`), not parallel code.
 //!
 //! [`KernelService::replay`]: crate::service::KernelService::replay
 
@@ -47,13 +56,16 @@ use std::collections::{BTreeMap, BTreeSet};
 
 use crate::service::cache::{CacheEntry, ResultCache};
 use crate::service::fingerprint::Fingerprint;
-use crate::service::pool::{self, FleetSim, SimFlight};
-use crate::service::queue::{Flight, JobQueue, Priority, Request, ALL_PRIORITIES};
+use crate::service::pool::{FleetHooks, FleetSim, SimCompletion, SimFlight};
+use crate::service::queue::Priority;
 use crate::service::traffic::TrafficRequest;
-use crate::service::{PriorityClassReport, ServiceConfig, ServiceReport};
+use crate::service::{
+    per_priority_report, settle_flight_completion, speculate_window, PendingRun, ReplayStats,
+    RunMemo, ServiceConfig, ServiceReport,
+};
 use crate::tasks::TaskSpec;
-use crate::util::stats::{mean, percentile};
-use crate::workflow::{run_task, CorrectnessOracle, TaskResult, WorkflowConfig};
+use crate::util::stats::percentile;
+use crate::workflow::{run_task, CorrectnessOracle};
 
 pub use router::Router;
 
@@ -76,7 +88,8 @@ impl TenantSpec {
 /// Cluster deployment parameters. `service` holds the *per-node* knobs:
 /// `capacity` is each shard's entry budget, `sim_workers` each node's
 /// simulated GPU slice, `queue_depth` each node's admission bound;
-/// `window` and `threads` stay cluster-global.
+/// `window` and `threads` stay cluster-global (both are host-speed knobs
+/// with no effect on reported numbers).
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
     pub service: ServiceConfig,
@@ -92,8 +105,10 @@ pub struct ClusterConfig {
     /// Simulated seconds to fetch a warm-start seed kernel from another
     /// node's shard, added to the run's service time.
     pub transfer_latency_s: f64,
-    /// Fail node `.0` the first time simulated time reaches `.1` seconds:
-    /// its cache shard is lost and later requests for its keys rehash.
+    /// Fail node `.0` the first time simulated time reaches `.1` seconds
+    /// (at an arrival, or during the final drain if the instant falls after
+    /// the last arrival): its cache shard is lost and later requests for
+    /// its keys rehash.
     pub fail_node_at: Option<(usize, f64)>,
 }
 
@@ -209,25 +224,251 @@ pub struct ClusterReport {
     pub rebalance: Option<RebalanceReport>,
 }
 
-/// Per-replay mutable state of one simulated node (caches live on the
-/// service so they survive across replays, like the single-node layer).
-struct NodeState {
-    queue: JobQueue,
-    fleet: FleetSim,
-    /// Flights opened but not yet started, per tenant — the fair-share
-    /// quota meter.
-    backlog_by_tenant: Vec<usize>,
+/// Best warm-start candidate across every *alive* shard, with its owning
+/// node (a dead node's entries are unreachable, not warm-start donors).
+/// Ties break on (speedup, fingerprint, node) so the scan order can never
+/// change the pick.
+fn warm_candidate_across<'c>(
+    caches: &'c [ResultCache],
+    c: &ServiceConfig,
+    task_id: &str,
+    gpu_key: &str,
+    alive: &[bool],
+) -> Option<(usize, &'c CacheEntry)> {
+    let mut best: Option<(usize, &CacheEntry)> = None;
+    for (node, cache) in caches.iter().enumerate() {
+        if !alive.get(node).copied().unwrap_or(false) {
+            continue;
+        }
+        let cand = cache.warm_candidate(
+            task_id,
+            gpu_key,
+            c.strategy.name(),
+            c.coder.name,
+            c.judge.name,
+        );
+        if let Some(e) = cand {
+            let better = match best {
+                None => true,
+                Some((bn, b)) => e
+                    .best_speedup
+                    .total_cmp(&b.best_speedup)
+                    .then_with(|| e.fingerprint.cmp(&b.fingerprint))
+                    .then_with(|| node.cmp(&bn))
+                    .is_gt(),
+            };
+            if better {
+                best = Some((node, e));
+            }
+        }
+    }
+    best
+}
+
+/// Per-node admission/serving counters for one replay.
+struct NodeCounters {
     requests: usize,
     hits: u64,
     shared: u64,
     flights_run: usize,
     rejected: u64,
     peak_depth: usize,
+    /// Flights opened but not yet started, per tenant — the fair-share
+    /// quota meter (the slot is released when the flight starts on a
+    /// worker).
+    backlog_by_tenant: Vec<usize>,
     /// This node's cache eviction counter at replay start (delta basis).
     evictions0: u64,
     /// Evictions accumulated before the cache shard was dropped by the
     /// failure event (the replacement cache restarts its counter).
     evictions_carry: u64,
+}
+
+/// The cluster replay context. Implements [`FleetHooks`] for whichever node
+/// fleet is currently stepping (`node` is set by the global event loop):
+/// start events pick the warm seed across alive shards at event-time state,
+/// completion events apply side effects via the accounting helper shared
+/// with the single-node replay.
+struct ClusterHooks<'a> {
+    config: &'a ClusterConfig,
+    trace: &'a [TrafficRequest],
+    tasks: &'a [TaskSpec],
+    oracle: &'a dyn CorrectnessOracle,
+    caches: &'a mut Vec<ResultCache>,
+    cold_cost: &'a mut BTreeMap<Fingerprint, f64>,
+    stats: ReplayStats,
+    memo: RunMemo,
+    pending: BTreeMap<u64, PendingRun>,
+    /// Causality audit: the completion instant of each fingerprint's
+    /// producing flight *this replay* (absent = resident before it started).
+    visible_at: BTreeMap<Fingerprint, f64>,
+    per_node: Vec<NodeCounters>,
+    alive: Vec<bool>,
+    /// The node whose fleet is currently stepping.
+    node: usize,
+    cross_node_warm: usize,
+    rebalance: Option<RebalanceReport>,
+    lost_keys: BTreeSet<Fingerprint>,
+}
+
+impl FleetHooks for ClusterHooks<'_> {
+    fn on_start(&mut self, flight: &SimFlight, start_s: f64) -> f64 {
+        let req = &self.trace[flight.leader_seq as usize];
+        let task = &self.tasks[req.task_index];
+        let c = &self.config.service;
+        // The flight leaves the backlog: release its tenant's quota slot.
+        let nc = &mut self.per_node[self.node];
+        nc.backlog_by_tenant[flight.tenant] =
+            nc.backlog_by_tenant[flight.tenant].saturating_sub(1);
+        let base = c.base_workflow(req.gpu);
+        let (wf, cross) = match warm_candidate_across(
+            self.caches,
+            c,
+            &task.id(),
+            req.gpu.key,
+            &self.alive,
+        ) {
+            Some((owner, entry)) => {
+                // The causality contract: a warm seed's producing flight —
+                // on any node — completed no later than this start.
+                if let Some(done) = self.visible_at.get(&entry.fingerprint) {
+                    debug_assert!(
+                        *done <= start_s,
+                        "warm seed {} completes at {done} > consumer start {start_s}",
+                        entry.fingerprint,
+                    );
+                }
+                (c.warm_start_from(base, entry), owner != self.node)
+            }
+            None => (base, false),
+        };
+        if cross {
+            self.cross_node_warm += 1;
+        }
+        let result = match self.memo.take(flight.fingerprint, &wf.warm_start) {
+            Some(r) => r,
+            // Speculation missed: run inline with the true event-time
+            // workflow.
+            None => run_task(&wf, task, self.oracle),
+        };
+        // A cross-node seed is fetched before the run starts: the transfer
+        // rides on the flight's service time.
+        let service_s = result.ledger.wall_s
+            + if cross { self.config.transfer_latency_s } else { 0.0 };
+        self.pending.insert(
+            flight.leader_seq,
+            PendingRun { result, warm: wf.warm_start.is_some() },
+        );
+        service_s
+    }
+
+    fn on_complete(&mut self, flight: &SimFlight, done: SimCompletion) {
+        let run = self
+            .pending
+            .remove(&flight.leader_seq)
+            .expect("a completion follows its start");
+        let req = &self.trace[flight.leader_seq as usize];
+        let task = &self.tasks[req.task_index];
+        let entry = settle_flight_completion(
+            &self.config.service,
+            &mut self.stats,
+            self.cold_cost,
+            task,
+            req.gpu.key,
+            flight,
+            done,
+            run.warm,
+            &run.result,
+        );
+        let nc = &mut self.per_node[self.node];
+        nc.flights_run += 1;
+        nc.shared += (flight.members.len() - 1) as u64;
+        if let Some(rb) = self.rebalance.as_mut() {
+            // A lost key's first re-run is the failure's re-miss cost: work
+            // the dead shard had already paid for.
+            if self.lost_keys.remove(&flight.fingerprint) {
+                rb.remissed_flights += 1;
+                rb.remiss_api_usd += run.result.ledger.api_usd;
+            }
+        }
+        // A dead node's draining flights still answer their members, but
+        // their results must not repopulate the unreachable shard (the
+        // router will never send a request there again).
+        if self.alive[self.node] {
+            if let Some(e) = entry {
+                self.visible_at.insert(e.fingerprint, done.completion_s);
+                self.caches[self.node].insert(e);
+            }
+        }
+    }
+}
+
+/// Apply the configured node failure if simulated time has reached it: fire
+/// everything due strictly by `ftime` first (the shard is alive for those
+/// events), then drop the shard and record the loss. Consulted at every
+/// arrival *and* before the final drain, so the failure lands at its own
+/// instant even when it falls after the last arrival.
+fn apply_failure_if_due(
+    config: &ClusterConfig,
+    nodes: usize,
+    now: f64,
+    fleets: &mut [FleetSim],
+    hooks: &mut ClusterHooks,
+) {
+    let Some((fnode, ftime)) = config.fail_node_at else { return };
+    if fnode >= nodes || !hooks.alive[fnode] || now < ftime {
+        return;
+    }
+    advance_fleets(fleets, ftime, hooks);
+    hooks.alive[fnode] = false;
+    let lost: Vec<Fingerprint> = hooks.caches[fnode]
+        .entries_coldest_first()
+        .map(|e| e.fingerprint)
+        .collect();
+    hooks.lost_keys.extend(lost);
+    let carry = hooks.caches[fnode].stats.evictions;
+    hooks.caches[fnode] = ResultCache::new(config.service.capacity);
+    let nc = &mut hooks.per_node[fnode];
+    nc.evictions_carry = carry - nc.evictions0;
+    nc.evictions0 = 0;
+    hooks.rebalance = Some(RebalanceReport {
+        failed_node: fnode,
+        failed_at_s: ftime,
+        cache_entries_lost: hooks.lost_keys.len(),
+        rehashed_requests: 0,
+        remissed_flights: 0,
+        remiss_api_usd: 0.0,
+    });
+}
+
+/// Fire every start/completion due by `now` across all node fleets, in
+/// global timestamp order — completions before starts at equal instants,
+/// then node index — so a flight starting on node A at instant `t` observes
+/// exactly the side effects of every flight, on any node, completed by `t`.
+fn advance_fleets(fleets: &mut [FleetSim], now: f64, hooks: &mut ClusterHooks) {
+    loop {
+        let mut best: Option<(f64, u8, usize)> = None;
+        for (ni, fleet) in fleets.iter().enumerate() {
+            if let Some((t, is_completion)) = fleet.next_event() {
+                let key = (t, u8::from(!is_completion), ni);
+                let earlier = match best {
+                    None => true,
+                    Some(b) => key < b,
+                };
+                if earlier {
+                    best = Some(key);
+                }
+            }
+        }
+        match best {
+            Some((t, _, ni)) if t <= now => {
+                hooks.node = ni;
+                let fired = fleets[ni].step(now, &mut *hooks);
+                debug_assert!(fired, "the peeked event fires");
+            }
+            _ => break,
+        }
+    }
 }
 
 /// The long-lived cluster: a router plus N cache shards and the
@@ -262,53 +503,12 @@ impl ClusterService {
         &self.caches[n]
     }
 
-    /// Best warm-start candidate across every *alive* shard, with its
-    /// owning node (a dead node's entries are unreachable, not warm-start
-    /// donors). Ties break on (speedup, fingerprint, node) so the scan
-    /// order can never change the pick.
-    fn warm_candidate_across(
-        &self,
-        task_id: &str,
-        gpu_key: &str,
-        alive: &[bool],
-    ) -> Option<(usize, &CacheEntry)> {
-        let c = &self.config.service;
-        let mut best: Option<(usize, &CacheEntry)> = None;
-        for (node, cache) in self.caches.iter().enumerate() {
-            if !alive.get(node).copied().unwrap_or(false) {
-                continue;
-            }
-            let cand = cache.warm_candidate(
-                task_id,
-                gpu_key,
-                c.strategy.name(),
-                c.coder.name,
-                c.judge.name,
-            );
-            if let Some(e) = cand {
-                let better = match best {
-                    None => true,
-                    Some((bn, b)) => e
-                        .best_speedup
-                        .total_cmp(&b.best_speedup)
-                        .then_with(|| e.fingerprint.cmp(&b.fingerprint))
-                        .then_with(|| node.cmp(&bn))
-                        .is_gt(),
-                };
-                if better {
-                    best = Some((node, e));
-                }
-            }
-        }
-        best
-    }
-
-    /// Replay a traffic trace through the cluster. Mirrors
-    /// [`crate::service::KernelService::replay`] per node: windowed
-    /// admission, single-flight joins, per-node discrete-event fleets —
-    /// plus routing, tenancy, failure, and cross-node warm starts.
-    /// Deterministic per (config, trace); OS `threads` changes wall-clock
-    /// only.
+    /// Replay a traffic trace through the cluster. One event-driven loop
+    /// mirrors [`crate::service::KernelService::replay`] per node —
+    /// per-arrival admission, single-flight joins, completion-instant side
+    /// effects — plus routing, tenancy, failure, and cross-node warm
+    /// starts. Deterministic per (config, trace); OS `threads` and the
+    /// `window` batch size change wall-clock only.
     pub fn replay(
         &mut self,
         trace: &[TrafficRequest],
@@ -321,6 +521,7 @@ impl ClusterService {
         let sim_workers = self.config.service.sim_workers.max(1);
         let queue_depth = self.config.service.queue_depth;
         let hit_latency_s = self.config.service.hit_latency_s;
+        let threads = self.config.service.threads;
         let quotas_on = self.config.tenant_quotas;
         let quotas = fair_share_quotas(queue_depth, &self.config.tenants);
         debug_assert!(
@@ -328,84 +529,112 @@ impl ClusterService {
             "trace must be sorted by arrival time"
         );
 
-        let mut states: Vec<NodeState> = (0..nodes)
-            .map(|i| NodeState {
-                queue: JobQueue::new(),
-                fleet: FleetSim::new(sim_workers),
-                backlog_by_tenant: vec![0; n_tenants],
-                requests: 0,
-                hits: 0,
-                shared: 0,
-                flights_run: 0,
-                rejected: 0,
-                peak_depth: 0,
-                evictions0: self.caches[i].stats.evictions,
-                evictions_carry: 0,
-            })
-            .collect();
-        let mut alive = vec![true; nodes];
+        // Shard eviction counters at replay start (delta basis), snapshotted
+        // before the caches are mutably loaned to the hooks.
+        let evictions0: Vec<u64> = self.caches.iter().map(|c| c.stats.evictions).collect();
+        let config = &self.config;
+        let router = &self.router;
+        let caches = &mut self.caches;
+        let cold_cost = &mut self.cold_cost;
 
-        let mut latencies: Vec<Option<f64>> = vec![None; trace.len()];
-        let mut api_spent = 0.0;
-        let mut api_cold = 0.0;
-        let mut flights_run = 0usize;
-        let mut warm_started = 0usize;
-        let mut warm_correct = 0usize;
-        let mut shared = 0u64;
+        let mut fleets: Vec<FleetSim> =
+            (0..nodes).map(|_| FleetSim::new(sim_workers)).collect();
         let mut rejected = 0u64;
         let mut rejected_by_class = [0u64; 3];
-        let mut cold_rounds: Vec<f64> = Vec::new();
-        let mut warm_rounds: Vec<f64> = Vec::new();
-        let mut cross_node_warm = 0usize;
         let mut tenant_requests = vec![0usize; n_tenants];
         let mut tenant_rejected = vec![0u64; n_tenants];
         let mut tenant_quota_shed = vec![0u64; n_tenants];
-        let mut rebalance: Option<RebalanceReport> = None;
-        let mut lost_keys: BTreeSet<Fingerprint> = BTreeSet::new();
+
+        let mut hooks = ClusterHooks {
+            config,
+            trace,
+            tasks,
+            oracle,
+            caches,
+            cold_cost,
+            stats: ReplayStats::new(trace.len()),
+            memo: RunMemo::default(),
+            pending: BTreeMap::new(),
+            visible_at: BTreeMap::new(),
+            per_node: (0..nodes)
+                .map(|i| NodeCounters {
+                    requests: 0,
+                    hits: 0,
+                    shared: 0,
+                    flights_run: 0,
+                    rejected: 0,
+                    peak_depth: 0,
+                    backlog_by_tenant: vec![0; n_tenants],
+                    evictions0: evictions0[i],
+                    evictions_carry: 0,
+                })
+                .collect(),
+            alive: vec![true; nodes],
+            node: 0,
+            cross_node_warm: 0,
+            rebalance: None,
+            lost_keys: BTreeSet::new(),
+        };
 
         for (w0, win) in trace.chunks(window).enumerate().map(|(i, w)| (i * window, w)) {
-            // ---- admission: route each arrival to its shard --------------
+            // ---- speculation: batch-run predicted misses on OS threads ---
+            {
+                let caches: &[ResultCache] = hooks.caches;
+                let alive = &hooks.alive;
+                let fleets = &fleets;
+                let c = &config.service;
+                // Sweep speculations that never became flights (their
+                // request hit, joined, or was shed) so the memo stays
+                // bounded by the backlog, not the trace.
+                hooks.memo.retain(|fp| {
+                    fleets.iter().any(|f| f.is_waiting(fp) || f.is_running(fp))
+                });
+                speculate_window(&mut hooks.memo, threads, tasks, oracle, win, c, |fp, req| {
+                    let ni = router.route(fp, alive)?;
+                    if caches[ni].peek(fp).is_some()
+                        || fleets[ni].is_waiting(fp)
+                        || fleets[ni].is_running(fp)
+                    {
+                        return None;
+                    }
+                    // A batch request arriving into a full backlog will be
+                    // shed — don't burn a speculative run on it.
+                    if req.priority == Priority::Batch && fleets[ni].depth() >= queue_depth {
+                        return None;
+                    }
+                    let base = c.base_workflow(req.gpu);
+                    Some(
+                        match warm_candidate_across(
+                            caches,
+                            c,
+                            &tasks[req.task_index].id(),
+                            req.gpu.key,
+                            alive,
+                        ) {
+                            Some((_, entry)) => c.warm_start_from(base, entry),
+                            None => base,
+                        },
+                    )
+                });
+            }
+
+            // ---- admission: event-driven, one arrival at a time ----------
             for (off, req) in win.iter().enumerate() {
                 let seq = (w0 + off) as u64;
                 let now = req.arrival_s;
                 let t = req.tenant.min(n_tenants - 1);
-                for st in states.iter_mut() {
-                    let NodeState { fleet, backlog_by_tenant, .. } = st;
-                    fleet.advance(now, &mut |f, done| {
-                        for (s, arr) in &f.members {
-                            latencies[*s as usize] =
-                                Some((done.completion_s - arr).max(hit_latency_s));
-                        }
-                        backlog_by_tenant[f.tenant] =
-                            backlog_by_tenant[f.tenant].saturating_sub(1);
-                    });
-                }
-                // The failure event: drop the node's shard, remember its
-                // keys, keep serving its accepted work (graceful drain).
-                if let Some((fnode, ftime)) = self.config.fail_node_at {
-                    if fnode < nodes && alive[fnode] && now >= ftime {
-                        alive[fnode] = false;
-                        let capacity = self.config.service.capacity;
-                        let cache = &mut self.caches[fnode];
-                        lost_keys.extend(cache.entries_coldest_first().map(|e| e.fingerprint));
-                        let carry = cache.stats.evictions;
-                        *cache = ResultCache::new(capacity);
-                        let st_f = &mut states[fnode];
-                        st_f.evictions_carry = carry - st_f.evictions0;
-                        st_f.evictions0 = 0;
-                        rebalance = Some(RebalanceReport {
-                            failed_node: fnode,
-                            failed_at_s: ftime,
-                            cache_entries_lost: lost_keys.len(),
-                            rehashed_requests: 0,
-                            remissed_flights: 0,
-                            remiss_api_usd: 0.0,
-                        });
-                    }
-                }
-                let fp = self.config.service.fingerprint_of(&tasks[req.task_index], req.gpu);
-                if let Some(rb) = rebalance.as_mut() {
-                    if self.router.route_any(fp) == rb.failed_node {
+                // The failure event: drop the node's shard at its own
+                // instant, remember its keys, keep serving its accepted
+                // work (graceful drain). Starts between the failure and
+                // this arrival already see the node dead.
+                apply_failure_if_due(config, nodes, now, &mut fleets, &mut hooks);
+                // Fire every start/completion due by `now`, cluster-wide,
+                // so this arrival observes exactly the flights completed by
+                // its own instant.
+                advance_fleets(&mut fleets, now, &mut hooks);
+                let fp = config.service.fingerprint_of(&tasks[req.task_index], req.gpu);
+                if let Some(rb) = hooks.rebalance.as_mut() {
+                    if router.route_any(fp) == rb.failed_node {
                         rb.rehashed_requests += 1;
                     }
                 }
@@ -413,7 +642,7 @@ impl ClusterService {
                 // cluster cannot route (served + rejected == requests must
                 // hold per tenant).
                 tenant_requests[t] += 1;
-                let ni = match self.router.route(fp, &alive) {
+                let ni = match router.route(fp, &hooks.alive) {
                     Some(n) => n,
                     None => {
                         // Every node is dead: shed unconditionally.
@@ -423,263 +652,120 @@ impl ClusterService {
                         continue;
                     }
                 };
-                let st = &mut states[ni];
-                st.requests += 1;
-                if let Some(cold_ref) = st.fleet.join_waiting(fp, seq, now, req.priority) {
-                    shared += 1;
-                    st.shared += 1;
-                    api_cold += cold_ref;
-                    continue;
-                }
-                if let Some((completion_s, cold_ref)) = st.fleet.in_flight(fp, now) {
-                    latencies[seq as usize] = Some((completion_s - now).max(hit_latency_s));
-                    shared += 1;
-                    st.shared += 1;
-                    api_cold += cold_ref;
-                    continue;
-                }
-                if let Some(entry) = self.caches[ni].get(fp) {
-                    latencies[seq as usize] = Some(hit_latency_s);
-                    st.hits += 1;
-                    api_cold += entry.cold_api_usd;
-                    continue;
-                }
-                // Miss: admission control. The global batch-shed applies
-                // first (as on a single node), then the tenant's fair-share
-                // quota — both only against requests opening a *new*
-                // flight; joins are always free.
-                let depth = st.fleet.depth() + st.queue.len();
-                if depth >= queue_depth && !st.queue.contains(fp) {
-                    if req.priority == Priority::Batch {
-                        st.queue.reject();
-                        st.rejected += 1;
+                hooks.per_node[ni].requests += 1;
+                let fleet = &mut fleets[ni];
+                // Single-flight joins first: identical work waiting or on a
+                // worker is shared, not redone. Joiners settle with the
+                // flight at its completion.
+                if fleet.join_waiting(fp, seq, now, req.priority)
+                    || fleet.join_running(fp, seq, now)
+                {
+                    // joined
+                } else if let Some(entry) = hooks.caches[ni].get(fp) {
+                    if let Some(done) = hooks.visible_at.get(&fp) {
+                        debug_assert!(
+                            *done <= now,
+                            "cache hit on {fp}: producing flight completes at {done} > arrival {now}",
+                        );
+                    }
+                    hooks.stats.latencies[seq as usize] = Some(hit_latency_s);
+                    hooks.stats.api_cold += entry.cold_api_usd;
+                    hooks.per_node[ni].hits += 1;
+                } else {
+                    // Miss: admission control. The global batch-shed
+                    // applies first (as on a single node), then the
+                    // tenant's fair-share quota — both only against
+                    // requests opening a *new* flight; joins are always
+                    // free.
+                    let over = fleet.depth() >= queue_depth;
+                    if over && req.priority == Priority::Batch {
+                        hooks.per_node[ni].rejected += 1;
                         rejected += 1;
                         rejected_by_class[req.priority as usize] += 1;
                         tenant_rejected[t] += 1;
-                        continue;
-                    }
-                    if quotas_on && st.backlog_by_tenant[t] >= quotas[t] {
-                        st.queue.reject();
-                        st.rejected += 1;
+                    } else if over
+                        && quotas_on
+                        && hooks.per_node[ni].backlog_by_tenant[t] >= quotas[t]
+                    {
+                        hooks.per_node[ni].rejected += 1;
                         rejected += 1;
                         rejected_by_class[req.priority as usize] += 1;
                         tenant_rejected[t] += 1;
                         tenant_quota_shed[t] += 1;
-                        continue;
-                    }
-                }
-                let opened = st.queue.push(Request {
-                    seq,
-                    fingerprint: fp,
-                    priority: req.priority,
-                    tenant: t,
-                });
-                if opened {
-                    st.backlog_by_tenant[t] += 1;
-                }
-                st.peak_depth = st.peak_depth.max(st.fleet.depth() + st.queue.len());
-            }
-
-            // ---- dispatch: drain every shard, crunch on OS threads -------
-            let mut flights: Vec<(usize, Flight)> = Vec::new();
-            for (ni, st) in states.iter_mut().enumerate() {
-                for f in st.queue.drain() {
-                    flights.push((ni, f));
-                }
-            }
-            let c = &self.config.service;
-            let prepared: Vec<(WorkflowConfig, usize, bool)> = flights
-                .iter()
-                .map(|(ni, f)| {
-                    let req = &trace[f.leader_seq as usize];
-                    let task = &tasks[req.task_index];
-                    let wf = c.base_workflow(req.gpu);
-                    match self.warm_candidate_across(&task.id(), req.gpu.key, &alive) {
-                        Some((owner, entry)) => {
-                            (c.warm_start_from(wf, entry), req.task_index, owner != *ni)
-                        }
-                        None => (wf, req.task_index, false),
-                    }
-                })
-                .collect();
-            let results: Vec<TaskResult> = pool::run_indexed(
-                prepared.len(),
-                c.threads,
-                |i| run_task(&prepared[i].0, &tasks[prepared[i].1], oracle),
-            );
-
-            // ---- accounting + shard refill + fleet submission ------------
-            for (((ni, flight), (wf, task_index, cross)), result) in
-                flights.iter().zip(&prepared).zip(&results)
-            {
-                let st = &mut states[*ni];
-                flights_run += 1;
-                st.flights_run += 1;
-                api_spent += result.ledger.api_usd;
-                let warm = wf.warm_start.is_some();
-                if *cross {
-                    cross_node_warm += 1;
-                }
-                let cold_ref = if warm {
-                    self.cold_cost
-                        .get(&flight.fingerprint)
-                        .copied()
-                        .unwrap_or(result.ledger.api_usd)
-                } else {
-                    self.cold_cost
-                        .entry(flight.fingerprint)
-                        .or_insert(result.ledger.api_usd);
-                    result.ledger.api_usd
-                };
-                api_cold += cold_ref * flight.members() as f64;
-                shared += flight.follower_seqs.len() as u64;
-                st.shared += flight.follower_seqs.len() as u64;
-                if let Some(rb) = rebalance.as_mut() {
-                    // A lost key's first re-run is the failure's re-miss
-                    // cost: work the dead shard had already paid for.
-                    if lost_keys.remove(&flight.fingerprint) {
-                        rb.remissed_flights += 1;
-                        rb.remiss_api_usd += result.ledger.api_usd;
-                    }
-                }
-                if warm {
-                    warm_started += 1;
-                    if result.correct {
-                        warm_correct += 1;
-                    }
-                }
-                if let Some(r2b) = result.rounds_to_best() {
-                    if warm {
-                        warm_rounds.push(r2b as f64);
                     } else {
-                        cold_rounds.push(r2b as f64);
-                    }
-                }
-                // A dead node's draining flights still answer their members,
-                // but their results must not repopulate the unreachable
-                // shard (the router will never send a request there again).
-                if result.correct && alive[*ni] {
-                    if let Some(best_config) = result.best_config.clone() {
-                        let task = &tasks[*task_index];
-                        self.caches[*ni].insert(CacheEntry {
-                            fingerprint: flight.fingerprint,
-                            task_id: task.id(),
-                            gpu_key: wf.gpu.key.to_string(),
-                            strategy: c.strategy.name().to_string(),
-                            coder: c.coder.name.to_string(),
-                            judge: c.judge.name.to_string(),
-                            best_speedup: result.best_speedup,
-                            best_config,
-                            api_usd: result.ledger.api_usd,
-                            cold_api_usd: cold_ref,
-                            wall_s: result.ledger.wall_s,
-                            rounds_to_best: result.rounds_to_best().unwrap_or(0),
+                        fleet.submit(SimFlight {
+                            fingerprint: fp,
+                            priority: req.priority,
+                            leader_seq: seq,
+                            tenant: t,
+                            arrival_s: now,
+                            members: vec![(seq, now)],
                         });
+                        hooks.per_node[ni].backlog_by_tenant[t] += 1;
                     }
                 }
-                let leader_arrival = trace[flight.leader_seq as usize].arrival_s;
-                let mut members = Vec::with_capacity(flight.members());
-                members.push((flight.leader_seq, leader_arrival));
-                members.extend(
-                    flight
-                        .follower_seqs
-                        .iter()
-                        .map(|s| (*s, trace[*s as usize].arrival_s)),
-                );
-                // A cross-node seed is fetched before the run starts: the
-                // transfer rides on the flight's service time.
-                let service_s = result.ledger.wall_s
-                    + if *cross { self.config.transfer_latency_s } else { 0.0 };
-                st.fleet.submit(SimFlight {
-                    fingerprint: flight.fingerprint,
-                    priority: flight.priority,
-                    leader_seq: flight.leader_seq,
-                    tenant: flight.tenant,
-                    arrival_s: leader_arrival,
-                    service_s,
-                    members,
-                    cold_ref,
-                });
+                // Every admission decision samples this node's backlog —
+                // hits, joins, and sheds included.
+                let nc = &mut hooks.per_node[ni];
+                nc.peak_depth = nc.peak_depth.max(fleet.depth());
             }
         }
-        // Drain: serve everything still queued at end of trace.
-        for st in states.iter_mut() {
-            let NodeState { fleet, backlog_by_tenant, .. } = st;
-            fleet.advance(f64::INFINITY, &mut |f, done| {
-                for (s, arr) in &f.members {
-                    latencies[*s as usize] =
-                        Some((done.completion_s - arr).max(hit_latency_s));
-                }
-                backlog_by_tenant[f.tenant] =
-                    backlog_by_tenant[f.tenant].saturating_sub(1);
-            });
-        }
+        // Drain: serve everything still waiting or running at end of trace.
+        // A failure instant past the last arrival still fires here — the
+        // drain advances simulated time through it.
+        apply_failure_if_due(config, nodes, f64::INFINITY, &mut fleets, &mut hooks);
+        advance_fleets(&mut fleets, f64::INFINITY, &mut hooks);
+        debug_assert!(hooks.pending.is_empty(), "every started flight completed");
 
+        let ReplayStats {
+            latencies,
+            api_spent,
+            api_cold,
+            flights_run,
+            warm_started,
+            warm_correct,
+            shared,
+            cold_rounds,
+            warm_rounds,
+        } = hooks.stats;
         let served: Vec<f64> = latencies.iter().filter_map(|l| *l).collect();
         debug_assert_eq!(
             served.len() + rejected as usize,
             trace.len(),
             "every request is served or rejected"
         );
-        let slo = self.config.service.slo;
-        let per_priority: Vec<PriorityClassReport> = ALL_PRIORITIES
-            .iter()
-            .map(|p| {
-                let class: Vec<f64> = trace
-                    .iter()
-                    .zip(&latencies)
-                    .filter(|(r, _)| r.priority == *p)
-                    .filter_map(|(_, l)| *l)
-                    .collect();
-                let target = slo.target_s(*p);
-                let attainment = if class.is_empty() {
-                    1.0
-                } else {
-                    class.iter().filter(|l| **l <= target).count() as f64 / class.len() as f64
-                };
-                PriorityClassReport {
-                    priority: *p,
-                    requests: trace.iter().filter(|r| r.priority == *p).count(),
-                    rejected: rejected_by_class[*p as usize],
-                    p50_latency_s: percentile(&class, 50.0),
-                    p95_latency_s: percentile(&class, 95.0),
-                    p99_latency_s: percentile(&class, 99.0),
-                    slo_target_s: target,
-                    slo_attainment: attainment,
-                }
-            })
-            .collect();
+        let slo = config.service.slo;
+        let per_priority = per_priority_report(trace, &latencies, &slo, &rejected_by_class);
 
-        let hits: u64 = states.iter().map(|s| s.hits).sum();
-        let evictions: u64 = states
+        let hits: u64 = hooks.per_node.iter().map(|s| s.hits).sum();
+        let evictions: u64 = hooks
+            .per_node
             .iter()
             .enumerate()
-            .map(|(i, s)| s.evictions_carry + self.caches[i].stats.evictions - s.evictions0)
+            .map(|(i, s)| s.evictions_carry + hooks.caches[i].stats.evictions - s.evictions0)
             .sum();
-        let busy_s: f64 = states.iter().map(|s| s.fleet.busy_s()).sum();
-        let makespan = states
-            .iter()
-            .map(|s| s.fleet.makespan_s())
-            .fold(0.0f64, f64::max);
-        let wait_s: f64 = states.iter().map(|s| s.fleet.total_queue_wait_s()).sum();
-        let served_flights: usize = states.iter().map(|s| s.fleet.flights_served()).sum();
+        let busy_s: f64 = fleets.iter().map(|f| f.busy_s()).sum();
+        let makespan = fleets.iter().map(|f| f.makespan_s()).fold(0.0f64, f64::max);
+        let wait_s: f64 = fleets.iter().map(|f| f.total_queue_wait_s()).sum();
+        let served_flights: usize = fleets.iter().map(|f| f.flights_served()).sum();
         let total_workers = nodes * sim_workers;
         let gpu_hours = busy_s / 3600.0;
 
-        let per_node: Vec<NodeReport> = states
+        let per_node: Vec<NodeReport> = hooks
+            .per_node
             .iter()
             .enumerate()
             .map(|(i, s)| {
-                let node_makespan = s.fleet.makespan_s();
+                let node_makespan = fleets[i].makespan_s();
                 NodeReport {
                     node: i,
-                    alive: alive[i],
+                    alive: hooks.alive[i],
                     requests: s.requests,
                     cache_hits: s.hits,
                     shared: s.shared,
                     flights_run: s.flights_run,
                     rejected: s.rejected,
-                    evictions: s.evictions_carry + self.caches[i].stats.evictions
+                    evictions: s.evictions_carry + hooks.caches[i].stats.evictions
                         - s.evictions0,
                     hit_rate: if s.requests == 0 {
                         0.0
@@ -687,18 +773,17 @@ impl ClusterService {
                         (s.hits + s.shared) as f64 / s.requests as f64
                     },
                     utilization: if node_makespan > 0.0 {
-                        s.fleet.busy_s() / (sim_workers as f64 * node_makespan)
+                        fleets[i].busy_s() / (sim_workers as f64 * node_makespan)
                     } else {
                         0.0
                     },
                     peak_queue_depth: s.peak_depth,
-                    cache_entries: self.caches[i].len(),
+                    cache_entries: hooks.caches[i].len(),
                 }
             })
             .collect();
 
-        let per_tenant: Vec<TenantReport> = self
-            .config
+        let per_tenant: Vec<TenantReport> = config
             .tenants
             .iter()
             .enumerate()
@@ -752,13 +837,13 @@ impl ClusterService {
             p50_latency_s: percentile(&served, 50.0),
             p95_latency_s: percentile(&served, 95.0),
             p99_latency_s: percentile(&served, 99.0),
-            mean_latency_s: mean(&served),
+            mean_latency_s: crate::util::stats::mean(&served),
             mean_queue_wait_s: if served_flights == 0 {
                 0.0
             } else {
                 wait_s / served_flights as f64
             },
-            peak_queue_depth: states.iter().map(|s| s.peak_depth).max().unwrap_or(0),
+            peak_queue_depth: hooks.per_node.iter().map(|s| s.peak_depth).max().unwrap_or(0),
             utilization: if makespan > 0.0 {
                 busy_s / (total_workers as f64 * makespan)
             } else {
@@ -768,8 +853,8 @@ impl ClusterService {
             api_usd_spent: api_spent,
             api_usd_saved: api_cold - api_spent,
             api_usd_cold: api_cold,
-            mean_rounds_to_best_cold: mean(&cold_rounds),
-            mean_rounds_to_best_warm: mean(&warm_rounds),
+            mean_rounds_to_best_cold: crate::util::stats::mean(&cold_rounds),
+            mean_rounds_to_best_warm: crate::util::stats::mean(&warm_rounds),
             gpu_hours,
             requests_per_gpu_hour: if gpu_hours > 0.0 {
                 trace.len() as f64 / gpu_hours
@@ -783,9 +868,9 @@ impl ClusterService {
             nodes,
             per_node,
             per_tenant,
-            cross_node_warm,
+            cross_node_warm: hooks.cross_node_warm,
             quota_shed: tenant_quota_shed.iter().sum(),
-            rebalance,
+            rebalance: hooks.rebalance,
         }
     }
 }
@@ -864,6 +949,44 @@ mod tests {
         );
         assert!(r.rebalance.is_none());
         assert_eq!(r.quota_shed, 0, "quotas are off by default");
+    }
+
+    #[test]
+    fn failure_after_the_last_arrival_fires_during_the_drain() {
+        // The failure instant falls past every arrival: the final drain
+        // still advances simulated time through it, so the shard drop (and
+        // its entry-loss accounting) is reported instead of silently
+        // skipped.
+        let suite = tasks::kernelbench();
+        let probe_cfg = ServiceConfig { threads: 1, ..ServiceConfig::default() };
+        let anchor = (0..suite.len())
+            .find(|i| {
+                let wf = probe_cfg.base_workflow(gpu::by_key("rtx6000").unwrap());
+                let r = run_task(&wf, &suite[*i], &NoOracle);
+                r.correct && r.best_speedup > 0.0 && r.best_config.is_some()
+            })
+            .expect("some task solves cold on rtx6000");
+        let trace = vec![TrafficRequest {
+            task_index: anchor,
+            gpu: gpu::by_key("rtx6000").unwrap(),
+            priority: Priority::Standard,
+            tenant: 0,
+            arrival_s: 0.0,
+        }];
+        let mut cluster = ClusterService::new(ClusterConfig {
+            nodes: 1,
+            // Long after the lone flight completes (~26 simulated minutes).
+            fail_node_at: Some((0, 100_000.0)),
+            service: probe_cfg,
+            ..ClusterConfig::default()
+        });
+        let r = cluster.replay(&trace, &suite, &NoOracle);
+        assert_eq!(r.overall.flights_run, 1, "the pre-failure flight served normally");
+        let rb = r.rebalance.expect("the drain reaches the failure instant");
+        assert_eq!(rb.failed_node, 0);
+        assert_eq!(rb.cache_entries_lost, 1, "the completed flight's entry was resident");
+        assert!(!r.per_node[0].alive);
+        assert_eq!(r.per_node[0].cache_entries, 0);
     }
 
     #[test]

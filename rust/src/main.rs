@@ -13,7 +13,9 @@
 //! Global flags: --seed N --threads N --rounds N --gpu KEY --quick
 //!               --strategy NAME --coder MODEL --judge MODEL
 //!               --artifacts DIR (enables the real-numerics oracle)
-//! Serve flags:  --requests N --zipf S --capacity N --window N
+//! Serve flags:  --requests N --zipf S --capacity N
+//!               --window N (host-side OS-thread batch size; never changes
+//!               reported numbers — replay is event-driven)
 //!               --interarrival SECS (mean Poisson arrival gap)
 //!               --sim-workers N (simulated GPU fleet size)
 //!               --queue-depth N (shed batch work past this backlog)
@@ -156,6 +158,15 @@ fn tenants_from(arg: &str) -> Vec<TenantSpec> {
 }
 
 fn cluster(args: &Args) {
+    if args.get("snapshot").is_some() {
+        // The JSONL snapshot format is single-cache; a per-shard manifest is
+        // a ROADMAP item ("Shard-aware snapshot format").
+        eprintln!(
+            "warning: --snapshot is not supported by `cluster` yet (per-shard \
+             snapshots are unimplemented); the replay runs cold and nothing \
+             will be persisted"
+        );
+    }
     let oracle = build_oracle(args);
     let suite = tasks::kernelbench();
     let seed = args.get_u64("seed", 7);
@@ -343,15 +354,15 @@ fn serve(args: &Args) {
 
     println!(
         "serving {} requests (zipf s={}, seed {}, mean gap {}s) over {} tasks | \
-         cache {} | window {} | {} sim GPU workers",
+         cache {} | {} sim GPU workers | host batch window {}",
         traffic.requests,
         traffic.zipf_s,
         seed,
         traffic.mean_interarrival_s,
         suite.len(),
         svc.config.capacity,
-        svc.config.window,
         svc.config.sim_workers,
+        svc.config.window,
     );
     let trace = try_generate(suite.len(), &traffic).unwrap_or_else(|e| {
         eprintln!("error: {e}");
@@ -403,7 +414,8 @@ fn usage() {
     println!("usage: cudaforge <run|suite|serve|cluster|bench|select|verify|specs> [flags]");
     println!("  run    --task L1-95 [--gpu rtx6000 --strategy cudaforge --rounds 10]");
     println!("  suite  [--dstar] [--strategy NAME --coder o3 --judge gpt5]");
-    println!("  serve  [--requests 2000 --zipf 1.1 --seed 7 --capacity 1024 --window 32]");
+    println!("  serve  [--requests 2000 --zipf 1.1 --seed 7 --capacity 1024]");
+    println!("         [--window 32 (host batch size; reported numbers are window-free)]");
     println!("         [--interarrival 90 --sim-workers 8 --queue-depth N --slo 120,7200,86400]");
     println!("         [--snapshot cache.jsonl]");
     println!("  cluster [serve flags, per node] [--nodes 4 --tenants alpha:3,beta:1]");

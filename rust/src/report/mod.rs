@@ -421,7 +421,10 @@ pub fn mean_rounds(x: f64) -> String {
 /// Service-layer replay report (the `serve` subcommand): throughput, cache
 /// effectiveness, queueing-aware latency percentiles, per-priority SLO
 /// attainment, admission-control shedding, and the API dollars the cache
-/// saved versus serving every request cold.
+/// saved versus serving every request cold. All numbers come from the
+/// event-driven replay, where cache refills and warm-start eligibility land
+/// at each flight's simulated completion instant — hit rates and warm-start
+/// counts respect causality, not admission-batch boundaries.
 pub fn service_table(r: &crate::service::ServiceReport) -> Table {
     let mut t = Table::new(
         "Service report — Zipf traffic replay over KernelBench-sim",
@@ -449,7 +452,7 @@ pub fn service_table(r: &crate::service::ServiceReport) -> Table {
         ("p99 latency (min)".into(), f2(r.p99_latency_s / 60.0)),
         ("Mean latency (min)".into(), f2(r.mean_latency_s / 60.0)),
         ("Mean queue wait (min)".into(), f2(r.mean_queue_wait_s / 60.0)),
-        ("Peak queue depth".into(), r.peak_queue_depth.to_string()),
+        ("Peak backlog depth".into(), r.peak_queue_depth.to_string()),
         ("Fleet utilization".into(), pct(r.utilization)),
         ("API spent ($)".into(), f2(r.api_usd_spent)),
         ("API saved vs cold ($)".into(), f2(r.api_usd_saved)),

@@ -19,6 +19,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::kernel::KernelConfig;
 use crate::service::fingerprint::Fingerprint;
 use crate::util::json::Json;
+use crate::workflow::TaskResult;
 
 /// Snapshot wire-format version, written as the first JSONL line and
 /// required by `restore`. Fingerprints are stored literally, so this must
@@ -52,6 +53,42 @@ pub struct CacheEntry {
 }
 
 impl CacheEntry {
+    /// Assemble the entry a flight's completed run refills the cache with —
+    /// `None` when the run produced nothing cacheable (never correct, or no
+    /// best config survived). Shared by the single-node and cluster replay
+    /// loops via `service::settle_flight_completion`, so both layers cache
+    /// byte-identical entries for the same run.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_run(
+        fingerprint: Fingerprint,
+        task_id: String,
+        gpu_key: &str,
+        strategy: &str,
+        coder: &str,
+        judge: &str,
+        result: &TaskResult,
+        cold_api_usd: f64,
+    ) -> Option<CacheEntry> {
+        if !result.correct {
+            return None;
+        }
+        let best_config = result.best_config.clone()?;
+        Some(CacheEntry {
+            fingerprint,
+            task_id,
+            gpu_key: gpu_key.to_string(),
+            strategy: strategy.to_string(),
+            coder: coder.to_string(),
+            judge: judge.to_string(),
+            best_speedup: result.best_speedup,
+            best_config,
+            api_usd: result.ledger.api_usd,
+            cold_api_usd,
+            wall_s: result.ledger.wall_s,
+            rounds_to_best: result.rounds_to_best().unwrap_or(0),
+        })
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("fingerprint", Json::str(self.fingerprint.to_string())),

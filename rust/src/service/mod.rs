@@ -11,8 +11,8 @@
 //!   (task workload, GPU, models, strategy, rounds) identifying a request.
 //! - [`cache`] — bounded LRU result cache keyed by fingerprint, with JSONL
 //!   snapshot/restore so restarts are warm.
-//! - [`queue`] — priority admission with single-flight dedup: concurrent
-//!   identical requests share one workflow run.
+//! - [`queue`] — request priority classes (admission itself is event-driven
+//!   and lives on the simulated fleet).
 //! - [`traffic`] — deterministic Zipf-distributed synthetic traces with
 //!   Poisson arrival times and per-request tenant identity.
 //! - [`pool`] — the OS-thread pool shared with `coordinator::run_suite`,
@@ -22,24 +22,24 @@
 //!
 //! # One node vs. the cluster
 //!
-//! [`KernelService`] owns exactly one cache, one flight queue, and one
-//! simulated fleet — the single-node picture. The ROADMAP's target of
-//! millions of users is served by `crate::cluster`, which instantiates *N*
-//! of these building blocks (one `ResultCache` shard, one `JobQueue`, one
-//! `FleetSim` slice per simulated node), routes fingerprints across them
-//! with rendezvous hashing, meters per-tenant fair-share quotas under
-//! overload, and replays node-failure/rebalance scenarios. The cluster
-//! layer deliberately reuses this module's types unchanged: a 1-node,
-//! 1-tenant cluster replay is bit-identical to [`KernelService::replay`]
-//! (an invariant the integration tests assert), so every latency/SLO
-//! property validated here transfers to the sharded deployment.
-//! [`ServiceConfig`] doubles as the *per-node* parameter block of
-//! `cluster::ClusterConfig`; the request-shaping helpers
+//! [`KernelService`] owns exactly one cache and one simulated fleet — the
+//! single-node picture. The ROADMAP's target of millions of users is served
+//! by `crate::cluster`, which instantiates *N* of these building blocks
+//! (one `ResultCache` shard, one `FleetSim` slice per simulated node),
+//! routes fingerprints across them with rendezvous hashing, meters
+//! per-tenant fair-share quotas under overload, and replays
+//! node-failure/rebalance scenarios. The cluster layer deliberately reuses
+//! this module's machinery unchanged: a 1-node, 1-tenant cluster replay is
+//! bit-identical to [`KernelService::replay`] (an invariant the integration
+//! tests assert), so every latency/SLO property validated here transfers to
+//! the sharded deployment. [`ServiceConfig`] doubles as the *per-node*
+//! parameter block of `cluster::ClusterConfig`; the request-shaping helpers
 //! ([`ServiceConfig::fingerprint_of`], [`ServiceConfig::base_workflow`],
-//! [`ServiceConfig::warm_start_from`]) are shared by both replay loops so
-//! the two layers can never drift apart on what a request means.
+//! [`ServiceConfig::warm_start_from`]) and the per-flight accounting block
+//! (`settle_flight_completion`) are shared by both replay loops so the
+//! two layers can never drift apart on what a request means or costs.
 //!
-//! # The latency model
+//! # The latency model, and dispatch-time causality
 //!
 //! `replay` runs a discrete-event simulation. Each trace request carries a
 //! simulated arrival instant; a finite fleet of `ServiceConfig::sim_workers`
@@ -48,23 +48,32 @@
 //! bare service time: with one simulated worker and two concurrent misses,
 //! the second request's latency includes the first run's entire remaining
 //! time. Cache hits bypass the fleet (they are answered by the cache node in
-//! `hit_latency_s`); followers — whether coalesced at admission or joined
-//! onto waiting/running work later — inherit the leader's *remaining* time,
-//! `completion - their own arrival`.
+//! `hit_latency_s`); followers — whether joined onto waiting or running
+//! work — inherit the leader's *remaining* time, `completion - their own
+//! arrival`.
 //!
-//! Admission is windowed: `window` requests are admitted (cache lookups +
-//! single-flight coalescing + admission control) before their flights are
-//! dispatched, modelling "requests that arrive while the current batch
-//! runs". Under overload — more than `queue_depth` flights waiting for a
-//! worker — batch-class requests that would open a *new* flight are shed and
-//! counted as `rejected`; joins and more urgent classes are always admitted.
-//! On top of the corrected clock, [`SloTargets`] defines per-priority latency
+//! Admission is event-driven, one arrival at a time: each request is
+//! admitted (cache lookup, single-flight join, admission control) at its own
+//! simulated instant, and a flight's side effects — the cache refill, the
+//! cold reference that prices the counterfactual, its eligibility as a
+//! warm-start source — land exactly at the flight's simulated *completion*
+//! instant, interleaved with arrivals and starts in timestamp order. A
+//! request can therefore warm-start from a flight that completed moments
+//! before it started, and can never observe a result whose producing flight
+//! is still running. `ServiceConfig::window` is purely an OS-thread
+//! batching knob (how many arrivals are speculatively pre-run per
+//! [`pool::run_indexed`] batch); it has no effect on any reported number.
+//! Under overload — more than `queue_depth` flights waiting for a worker —
+//! batch-class requests that would open a *new* flight are shed and counted
+//! as `rejected`; joins and more urgent classes are always admitted. On top
+//! of the corrected clock, [`SloTargets`] defines per-priority latency
 //! targets and the report carries per-class p50/p95/p99 and SLO attainment,
 //! so sweeping `sim_workers` answers "how many GPUs does this traffic need".
 //!
 //! All reported quantities are in *simulated* time (the cost model's wall
-//! clock), accumulated in arrival/flight order — so a replay's report is
-//! bit-identical regardless of how many OS `threads` crunch it.
+//! clock), accumulated in event order — so a replay's report is
+//! bit-identical regardless of how many OS `threads` crunch it, and
+//! regardless of the `window` batch size.
 
 pub mod cache;
 pub mod fingerprint;
@@ -72,13 +81,13 @@ pub mod pool;
 pub mod queue;
 pub mod traffic;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::agents::ModelProfile;
 use crate::service::cache::{CacheEntry, ResultCache};
 use crate::service::fingerprint::Fingerprint;
-use crate::service::pool::{FleetSim, SimFlight};
-use crate::service::queue::{JobQueue, Priority, Request, ALL_PRIORITIES};
+use crate::service::pool::{run_indexed, FleetHooks, FleetSim, SimCompletion, SimFlight};
+use crate::service::queue::{Priority, ALL_PRIORITIES};
 use crate::service::traffic::TrafficRequest;
 use crate::tasks::TaskSpec;
 use crate::util::stats::{mean, percentile};
@@ -117,8 +126,11 @@ impl SloTargets {
 pub struct ServiceConfig {
     /// Result-cache capacity (entries).
     pub capacity: usize,
-    /// Requests per arrival window — the scope of single-flight dedup (a
-    /// window models "requests that arrive while the current batch runs").
+    /// Arrivals per speculative OS-thread batch: predicted misses are
+    /// pre-run `window` arrivals at a time on the host pool, and the event
+    /// loop reuses a pre-run result whenever its own event-time lookup
+    /// derives the identical workflow. Affects wall-clock only, never the
+    /// report.
     pub window: usize,
     /// OS worker threads for crunching flights. Affects wall-clock only,
     /// never the report.
@@ -169,7 +181,7 @@ impl Default for ServiceConfig {
 impl ServiceConfig {
     /// Content address of one request under this config. Shared by the
     /// single-node and cluster replay loops so both key their caches and
-    /// single-flight queues identically.
+    /// single-flight joins identically.
     pub fn fingerprint_of(&self, task: &TaskSpec, gpu: &crate::gpu::GpuSpec) -> Fingerprint {
         fingerprint::of_request(task, gpu, &self.coder, &self.judge, self.strategy, self.rounds)
     }
@@ -242,7 +254,9 @@ pub struct ServiceReport {
     pub mean_latency_s: f64,
     /// Mean simulated seconds executed flights waited for a GPU worker.
     pub mean_queue_wait_s: f64,
-    /// Deepest flight queue observed at any admission instant.
+    /// Deepest flight backlog observed across admission decisions (every
+    /// decision samples it — hits, joins, and sheds included, so a backlog
+    /// sitting at its maximum while work is shed still registers).
     pub peak_queue_depth: usize,
     /// Busy time / (sim_workers × makespan): how loaded the fleet was.
     pub utilization: f64,
@@ -265,6 +279,323 @@ pub struct ServiceReport {
     /// Simulated busy time across all runs (the fleet-size-free unit).
     pub gpu_hours: f64,
     pub requests_per_gpu_hour: f64,
+}
+
+/// Per-replay aggregates shared by the single-node and cluster replay
+/// loops: admission fills in hit latencies, the completion hook fills in
+/// everything priced per flight.
+pub(crate) struct ReplayStats {
+    /// `None` = not yet served (still in flight, or shed).
+    pub latencies: Vec<Option<f64>>,
+    pub api_spent: f64,
+    pub api_cold: f64,
+    pub flights_run: usize,
+    pub warm_started: usize,
+    pub warm_correct: usize,
+    pub shared: u64,
+    pub cold_rounds: Vec<f64>,
+    pub warm_rounds: Vec<f64>,
+}
+
+impl ReplayStats {
+    pub(crate) fn new(requests: usize) -> ReplayStats {
+        ReplayStats {
+            latencies: vec![None; requests],
+            api_spent: 0.0,
+            api_cold: 0.0,
+            flights_run: 0,
+            warm_started: 0,
+            warm_correct: 0,
+            shared: 0,
+            cold_rounds: Vec::new(),
+            warm_rounds: Vec::new(),
+        }
+    }
+}
+
+/// The per-flight accounting block shared by [`KernelService::replay`] and
+/// `cluster::ClusterService::replay` (previously hand-synced between the
+/// two; now they cannot drift): at the flight's simulated completion
+/// instant, settle every member's latency, price the per-fingerprint cold
+/// counterfactual, track warm-start convergence, and assemble the cache
+/// entry the producing node refills. The caller inserts the returned entry
+/// into whichever cache (shard) owns the fingerprint.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn settle_flight_completion(
+    config: &ServiceConfig,
+    stats: &mut ReplayStats,
+    cold_cost: &mut BTreeMap<Fingerprint, f64>,
+    task: &TaskSpec,
+    gpu_key: &str,
+    flight: &SimFlight,
+    done: SimCompletion,
+    warm: bool,
+    result: &TaskResult,
+) -> Option<CacheEntry> {
+    // No answer is faster than a cache hit: member latencies floor there (a
+    // follower can join moments before the flight lands).
+    for (seq, arrival) in &flight.members {
+        stats.latencies[*seq as usize] =
+            Some((done.completion_s - arrival).max(config.hit_latency_s));
+    }
+    stats.shared += (flight.members.len() - 1) as u64;
+    stats.flights_run += 1;
+    stats.api_spent += result.ledger.api_usd;
+    // Counterfactual pricing is per-fingerprint: a warm run stands in for
+    // the first measured cold run of the *same* fingerprint, or for itself
+    // when none exists. The source GPU's cold cost never leaks across
+    // fingerprints.
+    let cold_ref = if warm {
+        cold_cost.get(&flight.fingerprint).copied().unwrap_or(result.ledger.api_usd)
+    } else {
+        cold_cost.entry(flight.fingerprint).or_insert(result.ledger.api_usd);
+        result.ledger.api_usd
+    };
+    stats.api_cold += cold_ref * flight.members.len() as f64;
+    // Warm-start bookkeeping covers *executed* flights only, and
+    // correctness is tracked so a warm seed that stops converging is
+    // visible in the report.
+    if warm {
+        stats.warm_started += 1;
+        if result.correct {
+            stats.warm_correct += 1;
+        }
+    }
+    if let Some(r2b) = result.rounds_to_best() {
+        if warm {
+            stats.warm_rounds.push(r2b as f64);
+        } else {
+            stats.cold_rounds.push(r2b as f64);
+        }
+    }
+    CacheEntry::from_run(
+        flight.fingerprint,
+        task.id(),
+        gpu_key,
+        config.strategy.name(),
+        config.coder.name,
+        config.judge.name,
+        result,
+        cold_ref,
+    )
+}
+
+/// Per-priority latency/SLO aggregates over a replayed trace (shared by the
+/// single-node and cluster reports).
+pub(crate) fn per_priority_report(
+    trace: &[TrafficRequest],
+    latencies: &[Option<f64>],
+    slo: &SloTargets,
+    rejected_by_class: &[u64; 3],
+) -> Vec<PriorityClassReport> {
+    ALL_PRIORITIES
+        .iter()
+        .map(|p| {
+            let class: Vec<f64> = trace
+                .iter()
+                .zip(latencies)
+                .filter(|(r, _)| r.priority == *p)
+                .filter_map(|(_, l)| *l)
+                .collect();
+            let target = slo.target_s(*p);
+            let attainment = if class.is_empty() {
+                1.0
+            } else {
+                class.iter().filter(|l| **l <= target).count() as f64 / class.len() as f64
+            };
+            PriorityClassReport {
+                priority: *p,
+                requests: trace.iter().filter(|r| r.priority == *p).count(),
+                rejected: rejected_by_class[*p as usize],
+                p50_latency_s: percentile(&class, 50.0),
+                p95_latency_s: percentile(&class, 95.0),
+                p99_latency_s: percentile(&class, 99.0),
+                slo_target_s: target,
+                slo_attainment: attainment,
+            }
+        })
+        .collect()
+}
+
+/// Deterministic run memo. `run_task` is a pure function of its workflow,
+/// task, and oracle, so a result computed speculatively (window-batched on
+/// the OS-thread pool) stands in for the event-time run whenever the event
+/// loop derives the *identical* workflow. Purely a host-time optimization:
+/// reported numbers never depend on what is (or is not) memoized. Bounded
+/// by construction: the event loop *takes* an entry when it consumes it,
+/// and each window boundary prunes entries whose fingerprint no longer has
+/// a waiting or running flight (mispredicted speculations), so residency is
+/// the waiting backlog plus one window's speculation — never the trace.
+type MemoizedRuns = Vec<(Option<WarmStart>, TaskResult)>;
+
+#[derive(Default)]
+pub(crate) struct RunMemo {
+    runs: BTreeMap<Fingerprint, MemoizedRuns>,
+}
+
+impl RunMemo {
+    pub(crate) fn get(&self, fp: Fingerprint, warm: &Option<WarmStart>) -> Option<&TaskResult> {
+        self.runs.get(&fp)?.iter().find(|(w, _)| w == warm).map(|(_, r)| r)
+    }
+
+    /// Remove and return the memoized result for `(fp, warm)`. Consumption
+    /// is removal: a flight's result is used exactly once, at its start.
+    pub(crate) fn take(
+        &mut self,
+        fp: Fingerprint,
+        warm: &Option<WarmStart>,
+    ) -> Option<TaskResult> {
+        let runs = self.runs.get_mut(&fp)?;
+        let i = runs.iter().position(|(w, _)| w == warm)?;
+        let (_, result) = runs.swap_remove(i);
+        if runs.is_empty() {
+            self.runs.remove(&fp);
+        }
+        Some(result)
+    }
+
+    pub(crate) fn insert(&mut self, fp: Fingerprint, warm: Option<WarmStart>, result: TaskResult) {
+        let runs = self.runs.entry(fp).or_default();
+        if !runs.iter().any(|(w, _)| *w == warm) {
+            runs.push((warm, result));
+        }
+    }
+
+    /// Drop every entry whose fingerprint fails `keep` — the window-boundary
+    /// sweep that discards speculations that never became flights.
+    pub(crate) fn retain(&mut self, mut keep: impl FnMut(Fingerprint) -> bool) {
+        self.runs.retain(|fp, _| keep(*fp));
+    }
+}
+
+/// Speculatively batch-run an arrival window's predicted misses on the OS
+/// thread pool — `ServiceConfig::window` is purely this batching knob. The
+/// predictor returns the workflow a new flight for the request would run
+/// *if it were admitted right now*, or `None` when the request is predicted
+/// to hit the cache or join an existing flight. Mispredictions cost
+/// wall-clock only: the event loop re-runs them inline with the true
+/// event-time workflow.
+pub(crate) fn speculate_window(
+    memo: &mut RunMemo,
+    threads: usize,
+    tasks: &[TaskSpec],
+    oracle: &dyn CorrectnessOracle,
+    win: &[TrafficRequest],
+    config: &ServiceConfig,
+    mut predict: impl FnMut(Fingerprint, &TrafficRequest) -> Option<WorkflowConfig>,
+) {
+    let mut seen: BTreeSet<Fingerprint> = BTreeSet::new();
+    let mut spec: Vec<(Fingerprint, WorkflowConfig, usize)> = Vec::new();
+    for req in win {
+        let fp = config.fingerprint_of(&tasks[req.task_index], req.gpu);
+        if !seen.insert(fp) {
+            continue;
+        }
+        let Some(wf) = predict(fp, req) else { continue };
+        if memo.get(fp, &wf.warm_start).is_none() {
+            spec.push((fp, wf, req.task_index));
+        }
+    }
+    let results = run_indexed(spec.len(), threads, |i| {
+        run_task(&spec[i].1, &tasks[spec[i].2], oracle)
+    });
+    for ((fp, wf, _), r) in spec.into_iter().zip(results) {
+        memo.insert(fp, wf.warm_start, r);
+    }
+}
+
+/// A flight's run, carried from its start event to its completion event
+/// (shared by the single-node and cluster replay contexts).
+pub(crate) struct PendingRun {
+    pub(crate) result: TaskResult,
+    pub(crate) warm: bool,
+}
+
+/// The single-node replay context. Implements [`FleetHooks`]: start events
+/// pick the warm seed against event-time cache state and run (or look up)
+/// the workflow; completion events apply the flight's side effects at its
+/// completion instant via [`settle_flight_completion`].
+struct ServiceHooks<'a> {
+    config: &'a ServiceConfig,
+    trace: &'a [TrafficRequest],
+    tasks: &'a [TaskSpec],
+    oracle: &'a dyn CorrectnessOracle,
+    cache: &'a mut ResultCache,
+    cold_cost: &'a mut BTreeMap<Fingerprint, f64>,
+    stats: ReplayStats,
+    memo: RunMemo,
+    pending: BTreeMap<u64, PendingRun>,
+    /// Causality audit: the completion instant of each fingerprint's
+    /// producing flight *this replay* (absent = resident before the replay
+    /// started, available from t = 0).
+    visible_at: BTreeMap<Fingerprint, f64>,
+}
+
+impl FleetHooks for ServiceHooks<'_> {
+    fn on_start(&mut self, flight: &SimFlight, start_s: f64) -> f64 {
+        let req = &self.trace[flight.leader_seq as usize];
+        let task = &self.tasks[req.task_index];
+        let c = self.config;
+        let base = c.base_workflow(req.gpu);
+        let wf = match self.cache.warm_candidate(
+            &task.id(),
+            req.gpu.key,
+            c.strategy.name(),
+            c.coder.name,
+            c.judge.name,
+        ) {
+            Some(entry) => {
+                // The causality contract: a warm seed's producing flight
+                // completed no later than this flight's start.
+                if let Some(done) = self.visible_at.get(&entry.fingerprint) {
+                    debug_assert!(
+                        *done <= start_s,
+                        "warm seed {} completes at {done} > consumer start {start_s}",
+                        entry.fingerprint,
+                    );
+                }
+                c.warm_start_from(base, entry)
+            }
+            None => base,
+        };
+        let result = match self.memo.take(flight.fingerprint, &wf.warm_start) {
+            Some(r) => r,
+            // Speculation missed (e.g. an earlier completion changed the
+            // warm seed since the batch was predicted): run inline with the
+            // true event-time workflow.
+            None => run_task(&wf, task, self.oracle),
+        };
+        let service_s = result.ledger.wall_s;
+        self.pending.insert(
+            flight.leader_seq,
+            PendingRun { result, warm: wf.warm_start.is_some() },
+        );
+        service_s
+    }
+
+    fn on_complete(&mut self, flight: &SimFlight, done: SimCompletion) {
+        let run = self
+            .pending
+            .remove(&flight.leader_seq)
+            .expect("a completion follows its start");
+        let req = &self.trace[flight.leader_seq as usize];
+        let task = &self.tasks[req.task_index];
+        let entry = settle_flight_completion(
+            self.config,
+            &mut self.stats,
+            self.cold_cost,
+            task,
+            req.gpu.key,
+            flight,
+            done,
+            run.warm,
+            &run.result,
+        );
+        if let Some(e) = entry {
+            self.visible_at.insert(e.fingerprint, done.completion_s);
+            self.cache.insert(e);
+        }
+    }
 }
 
 /// The long-lived service: a cache plus the admission/dispatch loop.
@@ -299,28 +630,11 @@ impl KernelService {
         self.config.fingerprint_of(task, gpu)
     }
 
-    /// Prepare one flight's workflow, warm-starting from the best cached
-    /// cross-GPU kernel when one exists.
-    fn workflow_for(&self, req: &TrafficRequest, task: &TaskSpec) -> WorkflowConfig {
-        let c = &self.config;
-        let wf = c.base_workflow(req.gpu);
-        let warm = self.cache.warm_candidate(
-            &task.id(),
-            req.gpu.key,
-            c.strategy.name(),
-            c.coder.name,
-            c.judge.name,
-        );
-        match warm {
-            Some(entry) => c.warm_start_from(wf, entry),
-            None => wf,
-        }
-    }
-
     /// Replay a traffic trace through the service. `trace[i].task_index`
     /// indexes into `tasks`, and arrivals must be nondecreasing (as
     /// [`traffic::generate`] produces). Deterministic per (config, trace) —
-    /// the OS thread count changes wall-clock only.
+    /// the OS thread count and the `window` batch size change wall-clock
+    /// only.
     pub fn replay(
         &mut self,
         trace: &[TrafficRequest],
@@ -337,222 +651,149 @@ impl KernelService {
         // service replayed twice (e.g. after a snapshot restore) reports
         // each replay on its own.
         let stats0 = self.cache.stats;
+        let config = &self.config;
+        let cache = &mut self.cache;
+        let cold_cost = &mut self.cold_cost;
 
-        // `None` = not served (shed, or a bug the debug_assert below catches).
-        let mut latencies: Vec<Option<f64>> = vec![None; trace.len()];
-        // No answer is faster than a cache hit. This also floors followers
-        // whose flight — dispatched at window granularity — started before
-        // they arrived and finished quickly.
-        let hit_latency_s = self.config.hit_latency_s;
-        let mut api_spent = 0.0;
-        // The all-cold counterfactual: for every served request, what a cold
-        // run of its own fingerprint costs (hits, followers, and joins credit
-        // the producing flight's cold reference).
-        let mut api_cold = 0.0;
-        let mut flights_run = 0usize;
-        let mut warm_started = 0usize;
-        let mut warm_correct = 0usize;
-        let mut shared = 0u64;
         let mut rejected = 0u64;
         let mut rejected_by_class = [0u64; 3];
         let mut peak_depth = 0usize;
-        let mut cold_rounds: Vec<f64> = Vec::new();
-        let mut warm_rounds: Vec<f64> = Vec::new();
 
-        let mut queue = JobQueue::new();
         let mut fleet = FleetSim::new(sim_workers);
+        let mut hooks = ServiceHooks {
+            config,
+            trace,
+            tasks,
+            oracle,
+            cache,
+            cold_cost,
+            stats: ReplayStats::new(trace.len()),
+            memo: RunMemo::default(),
+            pending: BTreeMap::new(),
+            visible_at: BTreeMap::new(),
+        };
+
         for (w0, win) in trace.chunks(window).enumerate().map(|(i, w)| (i * window, w)) {
+            // ---- speculation: batch-run predicted misses on OS threads ---
+            {
+                let cache: &ResultCache = hooks.cache;
+                let fleet = &fleet;
+                // Sweep speculations that never became flights (their
+                // request hit, joined, or was shed) so the memo stays
+                // bounded by the backlog, not the trace.
+                hooks.memo.retain(|fp| fleet.is_waiting(fp) || fleet.is_running(fp));
+                speculate_window(
+                    &mut hooks.memo,
+                    config.threads,
+                    tasks,
+                    oracle,
+                    win,
+                    config,
+                    |fp, req| {
+                        if cache.peek(fp).is_some()
+                            || fleet.is_waiting(fp)
+                            || fleet.is_running(fp)
+                        {
+                            return None;
+                        }
+                        // A batch request arriving into a full backlog will
+                        // be shed — don't burn a speculative run on it.
+                        if req.priority == Priority::Batch
+                            && fleet.depth() >= config.queue_depth
+                        {
+                            return None;
+                        }
+                        let base = config.base_workflow(req.gpu);
+                        Some(
+                            match cache.warm_candidate(
+                                &tasks[req.task_index].id(),
+                                req.gpu.key,
+                                config.strategy.name(),
+                                config.coder.name,
+                                config.judge.name,
+                            ) {
+                                Some(entry) => config.warm_start_from(base, entry),
+                                None => base,
+                            },
+                        )
+                    },
+                );
+            }
+
             // ---- admission: event-driven, one arrival at a time ----------
             for (off, req) in win.iter().enumerate() {
                 let seq = (w0 + off) as u64;
                 let now = req.arrival_s;
-                // Serve every flight whose simulated start is due by `now`,
-                // settling the latency of each of its members.
-                fleet.advance(now, &mut |f, done| {
-                    for (s, arr) in &f.members {
-                        latencies[*s as usize] =
-                            Some((done.completion_s - arr).max(hit_latency_s));
-                    }
-                });
-                let fp = self.fingerprint_of(&tasks[req.task_index], req.gpu);
-                // Single-flight joins first: identical work queued or on a
+                // Fire every start and completion due by `now` first, so
+                // this arrival observes exactly the flights completed by its
+                // own instant — never results still being computed.
+                fleet.advance(now, &mut hooks);
+                let fp = config.fingerprint_of(&tasks[req.task_index], req.gpu);
+                // Single-flight joins first: identical work waiting or on a
                 // worker is shared, not redone (and a join can escalate a
-                // waiting flight's priority).
-                if let Some(cold_ref) = fleet.join_waiting(fp, seq, now, req.priority) {
-                    shared += 1;
-                    api_cold += cold_ref;
-                    continue;
-                }
-                if let Some((completion_s, cold_ref)) = fleet.in_flight(fp, now) {
-                    // The leader is mid-run: wait out its *remaining* time.
-                    latencies[seq as usize] = Some((completion_s - now).max(hit_latency_s));
-                    shared += 1;
-                    api_cold += cold_ref;
-                    continue;
-                }
-                if let Some(entry) = self.cache.get(fp) {
-                    latencies[seq as usize] = Some(self.config.hit_latency_s);
-                    api_cold += entry.cold_api_usd;
-                    continue;
-                }
-                // Miss: admission control, then queue (or coalesce).
-                let depth = fleet.depth() + queue.len();
-                if req.priority == Priority::Batch
-                    && depth >= self.config.queue_depth
-                    && !queue.contains(fp)
+                // waiting flight's priority). Joiners settle with the flight
+                // at its completion.
+                if fleet.join_waiting(fp, seq, now, req.priority)
+                    || fleet.join_running(fp, seq, now)
                 {
-                    queue.reject();
+                    // joined
+                } else if let Some(entry) = hooks.cache.get(fp) {
+                    if let Some(done) = hooks.visible_at.get(&fp) {
+                        debug_assert!(
+                            *done <= now,
+                            "cache hit on {fp}: producing flight completes at {done} > arrival {now}",
+                        );
+                    }
+                    hooks.stats.latencies[seq as usize] = Some(config.hit_latency_s);
+                    hooks.stats.api_cold += entry.cold_api_usd;
+                } else if req.priority == Priority::Batch && fleet.depth() >= config.queue_depth
+                {
+                    // Admission control: a new batch flight past the bound
+                    // is shed (a duplicate would have joined above, so this
+                    // request really would grow the backlog).
                     rejected += 1;
                     rejected_by_class[req.priority as usize] += 1;
-                    continue;
-                }
-                queue.push(Request {
-                    seq,
-                    fingerprint: fp,
-                    priority: req.priority,
-                    tenant: req.tenant,
-                });
-                peak_depth = peak_depth.max(fleet.depth() + queue.len());
-            }
-
-            // ---- dispatch: crunch the window's flights on OS threads -----
-            let flights = queue.drain();
-            let prepared: Vec<(WorkflowConfig, usize)> = flights
-                .iter()
-                .map(|f| {
-                    let req = &trace[f.leader_seq as usize];
-                    (self.workflow_for(req, &tasks[req.task_index]), req.task_index)
-                })
-                .collect();
-            let results: Vec<TaskResult> = pool::run_indexed(
-                prepared.len(),
-                self.config.threads,
-                |i| run_task(&prepared[i].0, &tasks[prepared[i].1], oracle),
-            );
-
-            // ---- accounting + cache refill + fleet submission ------------
-            for ((flight, (wf, task_index)), result) in
-                flights.iter().zip(&prepared).zip(&results)
-            {
-                flights_run += 1;
-                api_spent += result.ledger.api_usd;
-                let warm = wf.warm_start.is_some();
-                // Counterfactual pricing is per-fingerprint: a warm run
-                // stands in for the first measured cold run of the *same*
-                // fingerprint, or for itself when none exists. The source
-                // GPU's cold cost never leaks across fingerprints.
-                let cold_ref = if warm {
-                    self.cold_cost
-                        .get(&flight.fingerprint)
-                        .copied()
-                        .unwrap_or(result.ledger.api_usd)
                 } else {
-                    self.cold_cost
-                        .entry(flight.fingerprint)
-                        .or_insert(result.ledger.api_usd);
-                    result.ledger.api_usd
-                };
-                api_cold += cold_ref * flight.members() as f64;
-                shared += flight.follower_seqs.len() as u64;
-                // Warm-start bookkeeping covers *executed* flights only, and
-                // correctness is tracked so a warm seed that stops converging
-                // is visible in the report.
-                if warm {
-                    warm_started += 1;
-                    if result.correct {
-                        warm_correct += 1;
-                    }
+                    fleet.submit(SimFlight {
+                        fingerprint: fp,
+                        priority: req.priority,
+                        leader_seq: seq,
+                        tenant: req.tenant,
+                        arrival_s: now,
+                        members: vec![(seq, now)],
+                    });
                 }
-                if let Some(r2b) = result.rounds_to_best() {
-                    if warm {
-                        warm_rounds.push(r2b as f64);
-                    } else {
-                        cold_rounds.push(r2b as f64);
-                    }
-                }
-                if result.correct {
-                    if let Some(best_config) = result.best_config.clone() {
-                        let task = &tasks[*task_index];
-                        self.cache.insert(CacheEntry {
-                            fingerprint: flight.fingerprint,
-                            task_id: task.id(),
-                            gpu_key: wf.gpu.key.to_string(),
-                            strategy: self.config.strategy.name().to_string(),
-                            coder: self.config.coder.name.to_string(),
-                            judge: self.config.judge.name.to_string(),
-                            best_speedup: result.best_speedup,
-                            best_config,
-                            api_usd: result.ledger.api_usd,
-                            cold_api_usd: cold_ref,
-                            wall_s: result.ledger.wall_s,
-                            rounds_to_best: result.rounds_to_best().unwrap_or(0),
-                        });
-                    }
-                }
-                let leader_arrival = trace[flight.leader_seq as usize].arrival_s;
-                let mut members = Vec::with_capacity(flight.members());
-                members.push((flight.leader_seq, leader_arrival));
-                members.extend(
-                    flight
-                        .follower_seqs
-                        .iter()
-                        .map(|s| (*s, trace[*s as usize].arrival_s)),
-                );
-                fleet.submit(SimFlight {
-                    fingerprint: flight.fingerprint,
-                    priority: flight.priority,
-                    leader_seq: flight.leader_seq,
-                    tenant: flight.tenant,
-                    arrival_s: leader_arrival,
-                    service_s: result.ledger.wall_s,
-                    members,
-                    cold_ref,
-                });
+                // Every admission decision samples the backlog — including
+                // hits, joins, and sheds, so a backlog pinned at its
+                // maximum while work is shed still registers.
+                peak_depth = peak_depth.max(fleet.depth());
             }
         }
-        // Drain: serve everything still queued at end of trace.
-        fleet.advance(f64::INFINITY, &mut |f, done| {
-            for (s, arr) in &f.members {
-                latencies[*s as usize] = Some((done.completion_s - arr).max(hit_latency_s));
-            }
-        });
+        // Drain: serve everything still waiting or running at end of trace.
+        fleet.advance(f64::INFINITY, &mut hooks);
+        debug_assert!(hooks.pending.is_empty(), "every started flight completed");
 
+        let ReplayStats {
+            latencies,
+            api_spent,
+            api_cold,
+            flights_run,
+            warm_started,
+            warm_correct,
+            shared,
+            cold_rounds,
+            warm_rounds,
+        } = hooks.stats;
         let served: Vec<f64> = latencies.iter().filter_map(|l| *l).collect();
         debug_assert_eq!(
             served.len() + rejected as usize,
             trace.len(),
             "every request is served or rejected"
         );
-        let per_priority: Vec<PriorityClassReport> = ALL_PRIORITIES
-            .iter()
-            .map(|p| {
-                let class: Vec<f64> = trace
-                    .iter()
-                    .zip(&latencies)
-                    .filter(|(r, _)| r.priority == *p)
-                    .filter_map(|(_, l)| *l)
-                    .collect();
-                let target = self.config.slo.target_s(*p);
-                let attainment = if class.is_empty() {
-                    1.0
-                } else {
-                    class.iter().filter(|l| **l <= target).count() as f64 / class.len() as f64
-                };
-                PriorityClassReport {
-                    priority: *p,
-                    requests: trace.iter().filter(|r| r.priority == *p).count(),
-                    rejected: rejected_by_class[*p as usize],
-                    p50_latency_s: percentile(&class, 50.0),
-                    p95_latency_s: percentile(&class, 95.0),
-                    p99_latency_s: percentile(&class, 99.0),
-                    slo_target_s: target,
-                    slo_attainment: attainment,
-                }
-            })
-            .collect();
+        let per_priority = per_priority_report(trace, &latencies, &config.slo, &rejected_by_class);
 
-        let hits = self.cache.stats.hits - stats0.hits;
-        let evictions = self.cache.stats.evictions - stats0.evictions;
+        let hits = hooks.cache.stats.hits - stats0.hits;
+        let evictions = hooks.cache.stats.evictions - stats0.evictions;
         let gpu_hours = fleet.busy_s() / 3600.0;
         let makespan = fleet.makespan_s();
         ServiceReport {
@@ -743,7 +984,9 @@ mod tests {
             one_worker.p95_latency_s
         );
         assert!(one_worker.mean_queue_wait_s > 0.0);
-        assert!(one_worker.peak_queue_depth >= 4);
+        // The first flight starts at its arrival instant (event-driven
+        // dispatch), so the deepest observed backlog is the other three.
+        assert!(one_worker.peak_queue_depth >= 3);
 
         // With a worker per flight nothing queues: every latency is a bare
         // service time again, so the tail falls back to <= the max run.
@@ -784,6 +1027,9 @@ mod tests {
         assert_eq!(by_class(Priority::Interactive), 0);
         assert_eq!(by_class(Priority::Standard), 0);
         assert_eq!(by_class(Priority::Batch), r.rejected);
+        // The backlog sat at its maximum while batch work was shed — the
+        // shed decisions themselves sample the peak.
+        assert!(r.peak_queue_depth >= 2);
 
         // Unbounded queue, same traffic: nothing is shed.
         let mut open = KernelService::new(ServiceConfig {
@@ -798,24 +1044,20 @@ mod tests {
     #[test]
     fn warm_chain_counterfactual_is_priced_per_fingerprint() {
         // A 3-GPU warm chain: cold on rtx6000, then warm on a100 (seeded
-        // from rtx6000), then warm on h100. The old accounting inherited the
-        // *source GPU's* cold cost transitively, inventing savings; the fix
-        // prices each fingerprint against its own cold run, falling back to
-        // the run's own spend.
+        // from rtx6000), then warm on h100. Arrivals are spaced far beyond
+        // any run's service time, so each link's producing flight completes
+        // before the next starts — the chain is causally possible. The old
+        // accounting inherited the *source GPU's* cold cost transitively,
+        // inventing savings; the fix prices each fingerprint against its
+        // own cold run, falling back to the run's own spend.
         let suite = tasks::kernelbench();
-        let config = ServiceConfig {
-            threads: 1,
-            window: 1, // each request its own window, so warm starts chain
-            ..ServiceConfig::default()
-        };
+        let config = ServiceConfig { threads: 1, ..ServiceConfig::default() };
         // Deterministically pick a task whose cold rtx6000 run caches a
         // usable kernel (correct, speedup > 0) under this config, so the
         // chain is guaranteed to warm-start.
-        let probe = KernelService::new(config.clone());
         let anchor = (0..suite.len())
             .find(|i| {
-                let req = req_at(*i, "rtx6000", Priority::Standard, 0.0);
-                let wf = probe.workflow_for(&req, &suite[*i]);
+                let wf = config.base_workflow(gpu::by_key("rtx6000").unwrap());
                 let r = run_task(&wf, &suite[*i], &NoOracle);
                 r.correct && r.best_speedup > 0.0 && r.best_config.is_some()
             })
@@ -823,8 +1065,8 @@ mod tests {
 
         let trace = vec![
             req_at(anchor, "rtx6000", Priority::Standard, 0.0),
-            req_at(anchor, "a100", Priority::Standard, 10.0),
-            req_at(anchor, "h100", Priority::Standard, 20.0),
+            req_at(anchor, "a100", Priority::Standard, 100_000.0),
+            req_at(anchor, "h100", Priority::Standard, 200_000.0),
         ];
         let mut svc = KernelService::new(config);
         let r = svc.replay(&trace, &suite, &NoOracle);
@@ -857,7 +1099,7 @@ mod tests {
 
         // A repeat of the cold fingerprint is a hit credited at the true
         // cold price — real savings now appear.
-        let again = vec![req_at(anchor, "rtx6000", Priority::Standard, 30.0)];
+        let again = vec![req_at(anchor, "rtx6000", Priority::Standard, 300_000.0)];
         let r2 = svc.replay(&again, &suite, &NoOracle);
         assert_eq!(r2.cache_hits, 1);
         assert!(r2.api_usd_saved > 0.0);

@@ -11,6 +11,19 @@
 //!   sizes this fleet; queue wait, completion times, and therefore every
 //!   latency percentile in a `ServiceReport` come from it.
 //!
+//! The fleet is fully event-driven: a flight is submitted *without* a
+//! service time, and the two [`FleetHooks`] callbacks fire at the flight's
+//! simulated start (where the hook runs the workflow and returns the
+//! service time) and at its simulated completion (where the hook applies
+//! the flight's side effects — latency settlement, cache refill, cold-ref
+//! recording). Completions are drained in timestamp order, interleaved with
+//! starts, so a flight starting at instant `t` observes exactly the side
+//! effects of flights whose completion is `<= t` — the dispatch-time
+//! causality contract the service layer's warm starts and cache hits rely
+//! on. Finished flights are pruned as their completion event fires, so the
+//! in-flight index stays bounded by the number of workers, not the length
+//! of the trace.
+//!
 //! tokio is unavailable offline (DESIGN.md §2), so `run_indexed` is
 //! std::thread with an atomic work counter: workers claim indices until the
 //! list is exhausted, and results land in their slot regardless of which
@@ -58,8 +71,10 @@ where
         .collect()
 }
 
-/// One unit of simulated work: a drained flight whose workflow result (and
-/// therefore service time) is already known, waiting for a simulated worker.
+/// One unit of simulated work: a single-flight group (leader plus coalesced
+/// followers) waiting for, or running on, a simulated GPU worker. The
+/// flight's service time is unknown until it starts — the workflow runs at
+/// the start event, not at submission.
 #[derive(Clone, Debug)]
 pub struct SimFlight {
     pub fingerprint: Fingerprint,
@@ -73,13 +88,11 @@ pub struct SimFlight {
     pub tenant: usize,
     /// Simulated instant the flight exists from (its leader's arrival).
     pub arrival_s: f64,
-    /// Seconds one simulated worker needs to serve it (the run's wall time).
-    pub service_s: f64,
     /// `(seq, arrival_s)` of every member — leader first, then followers in
-    /// join order. Each member's latency is `completion - its own arrival`.
+    /// join order (followers may join while the flight waits *or* while it
+    /// runs). Each member's latency is `completion - its own arrival`,
+    /// settled by the completion hook.
     pub members: Vec<(u64, f64)>,
-    /// Cold-counterfactual dollars each member credits (see `replay`).
-    pub cold_ref: f64,
 }
 
 /// When a flight started and finished on the simulated fleet.
@@ -87,6 +100,33 @@ pub struct SimFlight {
 pub struct SimCompletion {
     pub start_s: f64,
     pub completion_s: f64,
+}
+
+/// The fleet's two event callbacks. One trait rather than two closures so a
+/// single mutable replay context (cache, cold-cost registry, counters) can
+/// serve both without aliasing `&mut` borrows.
+pub trait FleetHooks {
+    /// A worker picked up `flight` at `start_s`: run (or look up) its
+    /// workflow and return the service time in simulated seconds. Every
+    /// completion with instant `<= start_s` has already been applied.
+    fn on_start(&mut self, flight: &SimFlight, start_s: f64) -> f64;
+    /// `flight`'s completion instant was reached: apply its side effects
+    /// (settle member latencies, refill the cache, record the cold ref).
+    fn on_complete(&mut self, flight: &SimFlight, done: SimCompletion);
+}
+
+/// A flight on a worker, keyed in the completion-event queue.
+struct RunningFlight {
+    flight: SimFlight,
+    start_s: f64,
+}
+
+/// The fleet's next internal event (used to interleave events in global
+/// timestamp order, completions before starts at ties).
+enum PendingEvent {
+    /// Key into `running`: `(completion bits, leader_seq)`.
+    Completion((u64, u64)),
+    Start(f64),
 }
 
 /// Discrete-event simulation of a finite GPU-worker fleet serving
@@ -100,18 +140,23 @@ pub struct FleetSim {
     /// Next-free instant per worker. Min-heap over `f64::to_bits`, which
     /// orders like the values because simulated times are finite and >= 0.
     free_at: BinaryHeap<Reverse<u64>>,
-    /// The per-priority queues: flights waiting for a worker, drained in
+    /// The per-priority queues: flights waiting for a worker, started in
     /// (priority, leader arrival) order.
     waiting: BTreeMap<(Priority, u64), SimFlight>,
     /// fingerprint -> key in `waiting`, for single-flight joins.
     waiting_by_fp: BTreeMap<Fingerprint, (Priority, u64)>,
     /// `(arrival_s bits, leader_seq)` of every waiting flight — the first
-    /// element is the earliest arrival, so the per-arrival `advance` probe
-    /// is O(log n) instead of a scan over the whole backlog.
+    /// element is the earliest arrival, so the next-start probe is O(log n)
+    /// instead of a scan over the whole backlog.
     arrivals: BTreeSet<(u64, u64)>,
-    /// fingerprint -> (completion_s, cold_ref) of the most recently started
-    /// flight, for joins onto work already on a worker.
-    started: BTreeMap<Fingerprint, (f64, f64)>,
+    /// The completion-event queue: flights on a worker, keyed by
+    /// `(completion bits, leader_seq)` so draining the map front replays
+    /// completions in timestamp order. Entries are removed as their
+    /// completion fires — finished flights never accumulate.
+    running: BTreeMap<(u64, u64), RunningFlight>,
+    /// fingerprint -> key in `running`, for joins onto work already on a
+    /// worker. Pruned with `running`, so the probe stays O(log workers).
+    running_by_fp: BTreeMap<Fingerprint, (u64, u64)>,
     queue_wait_s: f64,
     served: usize,
     busy_s: f64,
@@ -128,7 +173,8 @@ impl FleetSim {
             waiting: BTreeMap::new(),
             waiting_by_fp: BTreeMap::new(),
             arrivals: BTreeSet::new(),
-            started: BTreeMap::new(),
+            running: BTreeMap::new(),
+            running_by_fp: BTreeMap::new(),
             queue_wait_s: 0.0,
             served: 0,
             busy_s: 0.0,
@@ -145,10 +191,30 @@ impl FleetSim {
         self.waiting.len()
     }
 
-    /// Enqueue a flight. Any previous flight for the same fingerprint must
-    /// already have started (single-flight: a waiting duplicate would have
-    /// been joined instead).
+    /// Whether a flight for `fp` is waiting for a worker.
+    pub fn is_waiting(&self, fp: Fingerprint) -> bool {
+        self.waiting_by_fp.contains_key(&fp)
+    }
+
+    /// Whether a flight for `fp` is on a worker right now.
+    pub fn is_running(&self, fp: Fingerprint) -> bool {
+        self.running_by_fp.contains_key(&fp)
+    }
+
+    /// Completion instant of the running flight for `fp`, if one is on a
+    /// worker (introspection/tests; joiners use [`FleetSim::join_running`]).
+    pub fn in_flight(&self, fp: Fingerprint) -> Option<f64> {
+        self.running_by_fp.get(&fp).map(|(bits, _)| f64::from_bits(*bits))
+    }
+
+    /// Enqueue a new flight. Single-flight: the caller must have tried
+    /// [`FleetSim::join_waiting`] / [`FleetSim::join_running`] first, so no
+    /// duplicate for the fingerprint exists.
     pub fn submit(&mut self, flight: SimFlight) {
+        debug_assert!(
+            !self.is_waiting(flight.fingerprint) && !self.is_running(flight.fingerprint),
+            "single-flight: a duplicate would have been joined"
+        );
         let key = (flight.priority, flight.leader_seq);
         self.waiting_by_fp.insert(flight.fingerprint, key);
         self.arrivals.insert((flight.arrival_s.to_bits(), flight.leader_seq));
@@ -156,70 +222,133 @@ impl FleetSim {
     }
 
     /// Join a *waiting* flight for `fp` as a follower, escalating its
-    /// priority if the joiner is more urgent. Returns the flight's cold
-    /// counterfactual when the join happened, `None` when nothing waits.
+    /// priority if the joiner is more urgent. Returns whether a flight was
+    /// waiting to join.
     pub fn join_waiting(
         &mut self,
         fp: Fingerprint,
         seq: u64,
         arrival_s: f64,
         priority: Priority,
-    ) -> Option<f64> {
-        let key = *self.waiting_by_fp.get(&fp)?;
+    ) -> bool {
+        let Some(key) = self.waiting_by_fp.get(&fp).copied() else {
+            return false;
+        };
         let mut flight = self.waiting.remove(&key).expect("waiting_by_fp tracks waiting");
         flight.members.push((seq, arrival_s));
         flight.priority = flight.priority.min(priority);
         let new_key = (flight.priority, flight.leader_seq);
-        let cold_ref = flight.cold_ref;
         self.waiting_by_fp.insert(fp, new_key);
         self.waiting.insert(new_key, flight);
-        Some(cold_ref)
+        true
     }
 
-    /// `(completion_s, cold_ref)` of a flight for `fp` that is on a worker
-    /// at `now` — started, not yet finished. A joiner's latency is the
-    /// *remaining* time, `completion_s - now`.
-    pub fn in_flight(&self, fp: Fingerprint, now: f64) -> Option<(f64, f64)> {
-        self.started.get(&fp).copied().filter(|(done, _)| *done > now)
+    /// Join a *running* flight for `fp` as a follower: the joiner's answer
+    /// is the leader's remaining time, settled with every other member at
+    /// the completion event. Returns whether a flight was running to join.
+    pub fn join_running(&mut self, fp: Fingerprint, seq: u64, arrival_s: f64) -> bool {
+        let Some(key) = self.running_by_fp.get(&fp).copied() else {
+            return false;
+        };
+        let rf = self.running.get_mut(&key).expect("running_by_fp tracks running");
+        rf.flight.members.push((seq, arrival_s));
+        true
     }
 
-    /// Process every service start due by `now`, invoking `on_served` per
-    /// flight in start order. Call with `f64::INFINITY` to drain.
-    pub fn advance(&mut self, now: f64, on_served: &mut dyn FnMut(&SimFlight, SimCompletion)) {
-        while !self.waiting.is_empty() {
+    /// The fleet's next event instant, if any: `(instant, is_completion)`.
+    /// Completions order before starts at equal instants, so a flight
+    /// starting at `t` sees everything that completed by `t`. The cluster
+    /// layer uses this to interleave N node fleets in global event order.
+    pub fn next_event(&self) -> Option<(f64, bool)> {
+        self.peek_event().map(|e| match e {
+            PendingEvent::Completion((bits, _)) => (f64::from_bits(bits), true),
+            PendingEvent::Start(s) => (s, false),
+        })
+    }
+
+    fn peek_event(&self) -> Option<PendingEvent> {
+        let completion = self.running.keys().next().copied();
+        let start = if self.waiting.is_empty() {
+            None
+        } else {
             let free = f64::from_bits(self.free_at.peek().expect("fleet has workers").0);
-            let earliest_arrival = f64::from_bits(
+            let earliest = f64::from_bits(
                 self.arrivals.first().expect("arrivals mirrors waiting").0,
             );
             // The next start: a worker is free and at least one flight has
             // arrived. Non-clairvoyant — the worker takes the best flight
             // available at that instant, not one still in the future.
-            let start = free.max(earliest_arrival);
-            if start > now {
-                break;
+            Some(free.max(earliest))
+        };
+        match (completion, start) {
+            (None, None) => None,
+            (None, Some(s)) => Some(PendingEvent::Start(s)),
+            (Some(key), s) => {
+                // Completions win ties: side effects at `t` are visible to a
+                // flight starting at `t`.
+                match s {
+                    Some(start_s) if start_s < f64::from_bits(key.0) => {
+                        Some(PendingEvent::Start(start_s))
+                    }
+                    _ => Some(PendingEvent::Completion(key)),
+                }
             }
-            // Worst-case O(waiting), but early-exits at the first eligible
-            // key; under backlog (`free >= every arrival`) that is the head
-            // of the map, so the common overload case selects in O(log n).
-            let key = *self
-                .waiting
-                .iter()
-                .find(|(_, f)| f.arrival_s <= start)
-                .expect("a flight has arrived by the start instant")
-                .0;
-            let flight = self.waiting.remove(&key).expect("key taken from the map");
-            self.waiting_by_fp.remove(&flight.fingerprint);
-            self.arrivals.remove(&(flight.arrival_s.to_bits(), flight.leader_seq));
-            self.free_at.pop();
-            let completion = start + flight.service_s;
-            self.free_at.push(Reverse(completion.to_bits()));
-            self.started.insert(flight.fingerprint, (completion, flight.cold_ref));
-            self.queue_wait_s += start - flight.arrival_s;
-            self.busy_s += flight.service_s;
-            self.served += 1;
-            self.makespan_s = self.makespan_s.max(completion);
-            on_served(&flight, SimCompletion { start_s: start, completion_s: completion });
         }
+    }
+
+    /// Process the single next event if it is due by `now`. Returns whether
+    /// one fired.
+    pub fn step(&mut self, now: f64, hooks: &mut dyn FleetHooks) -> bool {
+        match self.peek_event() {
+            Some(PendingEvent::Completion(key)) if f64::from_bits(key.0) <= now => {
+                let rf = self.running.remove(&key).expect("peeked key is resident");
+                self.running_by_fp.remove(&rf.flight.fingerprint);
+                hooks.on_complete(
+                    &rf.flight,
+                    SimCompletion { start_s: rf.start_s, completion_s: f64::from_bits(key.0) },
+                );
+                true
+            }
+            Some(PendingEvent::Start(start)) if start <= now => {
+                // Worst-case O(waiting), but early-exits at the first
+                // eligible key; under backlog (`free >= every arrival`) that
+                // is the head of the map, so the common overload case
+                // selects in O(log n).
+                let key = *self
+                    .waiting
+                    .iter()
+                    .find(|(_, f)| f.arrival_s <= start)
+                    .expect("a flight has arrived by the start instant")
+                    .0;
+                let flight = self.waiting.remove(&key).expect("key taken from the map");
+                self.waiting_by_fp.remove(&flight.fingerprint);
+                self.arrivals.remove(&(flight.arrival_s.to_bits(), flight.leader_seq));
+                self.free_at.pop();
+                let service_s = hooks.on_start(&flight, start);
+                debug_assert!(
+                    service_s.is_finite() && service_s >= 0.0,
+                    "service time must be finite and non-negative, got {service_s}"
+                );
+                let completion = start + service_s;
+                self.free_at.push(Reverse(completion.to_bits()));
+                self.queue_wait_s += start - flight.arrival_s;
+                self.busy_s += service_s;
+                self.served += 1;
+                self.makespan_s = self.makespan_s.max(completion);
+                let run_key = (completion.to_bits(), flight.leader_seq);
+                self.running_by_fp.insert(flight.fingerprint, run_key);
+                self.running.insert(run_key, RunningFlight { flight, start_s: start });
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Process every start and completion due by `now`, in timestamp order
+    /// (completions before starts at ties). Call with `f64::INFINITY` to
+    /// drain.
+    pub fn advance(&mut self, now: f64, hooks: &mut dyn FleetHooks) {
+        while self.step(now, hooks) {}
     }
 
     /// Total simulated worker-busy seconds across served flights.
@@ -282,35 +411,62 @@ mod tests {
         assert_eq!(a, b);
     }
 
-    fn flight(fp: u64, seq: u64, arrival_s: f64, service_s: f64, p: Priority) -> SimFlight {
+    fn flight(fp: u64, seq: u64, arrival_s: f64, p: Priority) -> SimFlight {
         SimFlight {
             fingerprint: Fingerprint(fp),
             priority: p,
             leader_seq: seq,
             tenant: 0,
             arrival_s,
-            service_s,
             members: vec![(seq, arrival_s)],
-            cold_ref: 0.30,
         }
     }
 
-    fn drain_completions(sim: &mut FleetSim) -> Vec<(u64, SimCompletion)> {
-        let mut out = Vec::new();
-        sim.advance(f64::INFINITY, &mut |f, c| out.push((f.leader_seq, c)));
-        out
+    /// Test hooks: a fixed service time per leader seq, with every start,
+    /// completion, and member list recorded in firing order.
+    struct Script {
+        service: BTreeMap<u64, f64>,
+        starts: Vec<(u64, f64)>,
+        completions: Vec<(u64, SimCompletion)>,
+        members: Vec<Vec<u64>>,
+    }
+
+    impl Script {
+        fn new(service: &[(u64, f64)]) -> Script {
+            Script {
+                service: service.iter().copied().collect(),
+                starts: Vec::new(),
+                completions: Vec::new(),
+                members: Vec::new(),
+            }
+        }
+    }
+
+    impl FleetHooks for Script {
+        fn on_start(&mut self, f: &SimFlight, start_s: f64) -> f64 {
+            self.starts.push((f.leader_seq, start_s));
+            self.service[&f.leader_seq]
+        }
+        fn on_complete(&mut self, f: &SimFlight, done: SimCompletion) {
+            self.completions.push((f.leader_seq, done));
+            self.members.push(f.members.iter().map(|(s, _)| *s).collect());
+        }
     }
 
     #[test]
     fn one_worker_serializes_and_charges_queue_wait() {
         let mut sim = FleetSim::new(1);
-        sim.submit(flight(1, 0, 0.0, 100.0, Priority::Standard));
-        sim.submit(flight(2, 1, 10.0, 50.0, Priority::Standard));
-        let done = drain_completions(&mut sim);
-        assert_eq!(done[0], (0, SimCompletion { start_s: 0.0, completion_s: 100.0 }));
+        let mut hooks = Script::new(&[(0, 100.0), (1, 50.0)]);
+        sim.submit(flight(1, 0, 0.0, Priority::Standard));
+        sim.submit(flight(2, 1, 10.0, Priority::Standard));
+        sim.advance(f64::INFINITY, &mut hooks);
+        assert_eq!(
+            hooks.completions[0],
+            (0, SimCompletion { start_s: 0.0, completion_s: 100.0 })
+        );
         // The second flight waited 90s for the worker, then ran 50s.
-        assert_eq!(done[1].1.start_s, 100.0);
-        assert_eq!(done[1].1.completion_s, 150.0);
+        assert_eq!(hooks.completions[1].1.start_s, 100.0);
+        assert_eq!(hooks.completions[1].1.completion_s, 150.0);
         assert!((sim.mean_queue_wait_s() - 45.0).abs() < 1e-12);
         assert_eq!(sim.busy_s(), 150.0);
         assert_eq!(sim.makespan_s(), 150.0);
@@ -319,10 +475,11 @@ mod tests {
     #[test]
     fn two_workers_run_in_parallel() {
         let mut sim = FleetSim::new(2);
-        sim.submit(flight(1, 0, 0.0, 100.0, Priority::Standard));
-        sim.submit(flight(2, 1, 10.0, 50.0, Priority::Standard));
-        let done = drain_completions(&mut sim);
-        assert_eq!(done[1].1.start_s, 10.0, "second worker picks it up at arrival");
+        let mut hooks = Script::new(&[(0, 100.0), (1, 50.0)]);
+        sim.submit(flight(1, 0, 0.0, Priority::Standard));
+        sim.submit(flight(2, 1, 10.0, Priority::Standard));
+        sim.advance(f64::INFINITY, &mut hooks);
+        assert_eq!(hooks.starts[1], (1, 10.0), "second worker picks it up at arrival");
         assert_eq!(sim.mean_queue_wait_s(), 0.0);
         assert_eq!(sim.makespan_s(), 100.0);
     }
@@ -330,10 +487,12 @@ mod tests {
     #[test]
     fn urgent_flights_jump_the_queue_but_never_preempt() {
         let mut sim = FleetSim::new(1);
-        sim.submit(flight(1, 0, 0.0, 100.0, Priority::Batch));
-        sim.submit(flight(2, 1, 5.0, 10.0, Priority::Batch));
-        sim.submit(flight(3, 2, 6.0, 10.0, Priority::Interactive));
-        let order: Vec<u64> = drain_completions(&mut sim).iter().map(|(s, _)| *s).collect();
+        let mut hooks = Script::new(&[(0, 100.0), (1, 10.0), (2, 10.0)]);
+        sim.submit(flight(1, 0, 0.0, Priority::Batch));
+        sim.submit(flight(2, 1, 5.0, Priority::Batch));
+        sim.submit(flight(3, 2, 6.0, Priority::Interactive));
+        sim.advance(f64::INFINITY, &mut hooks);
+        let order: Vec<u64> = hooks.starts.iter().map(|(s, _)| *s).collect();
         // Flight 0 was already running when 2 arrived (no preemption); the
         // interactive flight then overtakes the earlier batch flight.
         assert_eq!(order, vec![0, 2, 1]);
@@ -342,40 +501,90 @@ mod tests {
     #[test]
     fn workers_do_not_serve_flights_from_the_future() {
         let mut sim = FleetSim::new(1);
-        sim.submit(flight(1, 0, 50.0, 10.0, Priority::Batch));
-        sim.submit(flight(2, 1, 80.0, 10.0, Priority::Interactive));
-        let done = drain_completions(&mut sim);
+        let mut hooks = Script::new(&[(0, 10.0), (1, 10.0)]);
+        sim.submit(flight(1, 0, 50.0, Priority::Batch));
+        sim.submit(flight(2, 1, 80.0, Priority::Interactive));
+        sim.advance(f64::INFINITY, &mut hooks);
         // The batch flight starts at its own arrival — the worker does not
         // idle until 80 just because something more urgent arrives later.
-        assert_eq!(done[0], (0, SimCompletion { start_s: 50.0, completion_s: 60.0 }));
-        assert_eq!(done[1].1.start_s, 80.0);
+        assert_eq!(
+            hooks.completions[0],
+            (0, SimCompletion { start_s: 50.0, completion_s: 60.0 })
+        );
+        assert_eq!(hooks.completions[1].1.start_s, 80.0);
+    }
+
+    #[test]
+    fn completions_fire_before_starts_and_interleave_with_them() {
+        // Worker frees at 100 (flight 0 completes); flight 1 arrived at 10.
+        // Advancing to 120 must fire 0's completion, then 1's start at 100 —
+        // in that order, so a start at `t` sees completions `<= t`.
+        let mut sim = FleetSim::new(1);
+        let mut hooks = Script::new(&[(0, 100.0), (1, 5.0)]);
+        sim.submit(flight(1, 0, 0.0, Priority::Standard));
+        sim.submit(flight(2, 1, 10.0, Priority::Standard));
+        sim.advance(120.0, &mut hooks);
+        assert_eq!(hooks.completions.len(), 2, "105 <= 120: both completions fired");
+        assert_eq!(hooks.starts.len(), 2);
+        assert_eq!(hooks.starts[1], (1, 100.0));
+        // Advance stops at `now`: nothing in the future fired.
+        let mut sim = FleetSim::new(1);
+        let mut hooks = Script::new(&[(0, 100.0), (1, 5.0)]);
+        sim.submit(flight(1, 0, 0.0, Priority::Standard));
+        sim.submit(flight(2, 1, 10.0, Priority::Standard));
+        sim.advance(99.0, &mut hooks);
+        assert_eq!(hooks.starts.len(), 1, "flight 1's start at 100 is not due yet");
+        assert!(hooks.completions.is_empty());
+        assert_eq!(sim.next_event(), Some((100.0, true)), "completion wins the t=100 tie");
+    }
+
+    #[test]
+    fn finished_flights_are_pruned_from_the_inflight_index() {
+        let mut sim = FleetSim::new(1);
+        let mut hooks = Script::new(&[(0, 100.0)]);
+        sim.submit(flight(7, 0, 0.0, Priority::Standard));
+        sim.advance(0.0, &mut hooks);
+        assert!(sim.is_running(Fingerprint(7)));
+        assert_eq!(sim.in_flight(Fingerprint(7)), Some(100.0));
+        // A long trace of probes after the completion must find nothing —
+        // the old implementation kept every finished flight forever.
+        sim.advance(100.0, &mut hooks);
+        assert!(!sim.is_running(Fingerprint(7)), "pruned at its completion event");
+        assert_eq!(sim.in_flight(Fingerprint(7)), None);
+        assert_eq!(hooks.completions.len(), 1);
     }
 
     #[test]
     fn joins_escalate_priority_and_share_completion() {
         let mut sim = FleetSim::new(1);
-        sim.submit(flight(1, 0, 0.0, 100.0, Priority::Standard));
-        sim.submit(flight(2, 1, 1.0, 10.0, Priority::Batch));
-        sim.submit(flight(3, 2, 2.0, 10.0, Priority::Standard));
-        assert_eq!(sim.depth(), 3);
+        let mut hooks = Script::new(&[(0, 100.0), (1, 10.0), (2, 10.0)]);
+        sim.submit(flight(1, 0, 0.0, Priority::Standard));
+        sim.advance(0.5, &mut hooks); // flight 0 starts; 1 and 2 arrive later
+        sim.submit(flight(2, 1, 1.0, Priority::Batch));
+        sim.submit(flight(3, 2, 2.0, Priority::Standard));
+        assert_eq!(sim.depth(), 2);
         // An interactive join on the batch flight escalates it past seq 2.
-        assert_eq!(sim.join_waiting(Fingerprint(2), 3, 3.0, Priority::Interactive), Some(0.30));
-        assert_eq!(sim.join_waiting(Fingerprint(99), 4, 3.0, Priority::Batch), None);
-        assert_eq!(sim.depth(), 3, "a join adds no new flight");
+        assert!(sim.join_waiting(Fingerprint(2), 3, 3.0, Priority::Interactive));
+        assert!(!sim.join_waiting(Fingerprint(99), 4, 3.0, Priority::Batch));
+        assert_eq!(sim.depth(), 2, "a join adds no new flight");
 
-        let mut members: Vec<Vec<u64>> = Vec::new();
-        sim.advance(f64::INFINITY, &mut |f, _| {
-            members.push(f.members.iter().map(|(s, _)| *s).collect())
-        });
-        assert_eq!(members[1], vec![1, 3], "follower rides the escalated flight");
+        sim.advance(f64::INFINITY, &mut hooks);
+        assert_eq!(hooks.members[1], vec![1, 3], "follower rides the escalated flight");
+        let order: Vec<u64> = hooks.starts.iter().map(|(s, _)| *s).collect();
+        assert_eq!(order, vec![0, 1, 2], "escalated flight starts before seq 2");
+    }
 
-        // Once started, the flight is joinable as in-flight work instead.
-        let mut sim2 = FleetSim::new(1);
-        sim2.submit(flight(7, 0, 0.0, 100.0, Priority::Standard));
-        sim2.advance(0.0, &mut |_, _| {});
-        assert_eq!(sim2.depth(), 0);
-        assert_eq!(sim2.in_flight(Fingerprint(7), 40.0), Some((100.0, 0.30)));
-        assert_eq!(sim2.in_flight(Fingerprint(7), 100.0), None, "finished by then");
-        assert_eq!(sim2.join_waiting(Fingerprint(7), 1, 40.0, Priority::Standard), None);
+    #[test]
+    fn running_joins_ride_the_flight_to_its_completion() {
+        let mut sim = FleetSim::new(1);
+        let mut hooks = Script::new(&[(0, 100.0)]);
+        sim.submit(flight(7, 0, 0.0, Priority::Standard));
+        sim.advance(40.0, &mut hooks);
+        assert!(sim.join_running(Fingerprint(7), 1, 40.0));
+        assert!(!sim.join_running(Fingerprint(9), 2, 40.0));
+        sim.advance(f64::INFINITY, &mut hooks);
+        assert_eq!(hooks.members[0], vec![0, 1]);
+        // Once completed, the fingerprint is joinable no more.
+        assert!(!sim.join_running(Fingerprint(7), 3, 200.0));
     }
 }

@@ -1,18 +1,21 @@
-//! Job queue: request admission, priorities, and single-flight dedup.
+//! Request priority classes.
 //!
-//! Requests that miss the cache are admitted here. Concurrent requests for
-//! the same fingerprint coalesce into one *flight*: the first arrival is the
-//! leader and actually runs the workflow; later arrivals become followers
-//! and share the leader's result (and its cost) when it lands. A flight's
-//! priority is the most urgent priority among its members, so a batch
-//! request that later attracts an interactive follower jumps the line.
+//! Earlier revisions also kept a standalone `JobQueue` here: requests were
+//! admitted into it during an arrival window and handed to the simulated
+//! fleet in a batch at the window boundary. That two-stage shape was the
+//! window-granularity causality bug — a flight could not start (or become
+//! visible to later arrivals) until its window drained. Single-flight
+//! coalescing, priority escalation, and the waiting backlog now live
+//! directly on [`crate::service::pool::FleetSim`], where they are
+//! event-driven: a flight exists from its leader's arrival instant and its
+//! side effects land at its simulated completion instant. What remains here
+//! is the vocabulary both layers share: the priority classes and their
+//! drain order.
 //!
-//! Draining is deterministic: flights come out ordered by (priority,
-//! arrival sequence), never by map iteration order.
-
-use std::collections::BTreeMap;
-
-use crate::service::fingerprint::Fingerprint;
+//! Flights drain most-urgent-first, ties by leader arrival order — and a
+//! flight's priority is the most urgent priority among its members, so a
+//! batch request that later attracts an interactive follower jumps the
+//! line.
 
 /// Request urgency classes (lower = more urgent).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -38,188 +41,19 @@ impl Priority {
     }
 }
 
-/// One admitted request (already known to miss the cache).
-#[derive(Clone, Debug)]
-pub struct Request {
-    /// Arrival sequence number — the caller's index into its trace.
-    pub seq: u64,
-    pub fingerprint: Fingerprint,
-    pub priority: Priority,
-    /// Tenant index of the requester (0 in the single-tenant world). The
-    /// cluster layer attributes each flight's backlog slot to its leader's
-    /// tenant when metering fair-share quotas.
-    pub tenant: usize,
-}
-
-/// One unit of actual work: a leader plus the followers sharing its flight.
-#[derive(Clone, Debug)]
-pub struct Flight {
-    pub fingerprint: Fingerprint,
-    /// Arrival seq of the leader (first admitted request).
-    pub leader_seq: u64,
-    /// Arrival seqs of coalesced followers, in arrival order.
-    pub follower_seqs: Vec<u64>,
-    /// Most urgent priority across all members.
-    pub priority: Priority,
-    /// The *leader's* tenant — the flight's backlog slot is charged to
-    /// whoever opened it, not to followers who coalesce onto it.
-    pub tenant: usize,
-}
-
-impl Flight {
-    pub fn members(&self) -> usize {
-        1 + self.follower_seqs.len()
-    }
-}
-
-/// Queue counters.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
-pub struct QueueStats {
-    /// Requests admitted (leaders + followers).
-    pub admitted: u64,
-    /// Requests that coalesced onto an existing flight.
-    pub coalesced: u64,
-    /// Flights handed to the scheduler.
-    pub dispatched: u64,
-    /// Requests shed by admission control instead of being admitted.
-    pub rejected: u64,
-}
-
-/// The pending-flight set. `BTreeMap` keyed by fingerprint keeps membership
-/// checks O(log n) and every scan deterministic.
-#[derive(Default)]
-pub struct JobQueue {
-    pending: BTreeMap<Fingerprint, Flight>,
-    pub stats: QueueStats,
-}
-
-impl JobQueue {
-    pub fn new() -> JobQueue {
-        JobQueue::default()
-    }
-
-    pub fn len(&self) -> usize {
-        self.pending.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.pending.is_empty()
-    }
-
-    /// Whether a pending flight for `fp` exists — i.e. whether a push would
-    /// coalesce instead of opening a new flight. Admission control only
-    /// sheds requests that would *grow* the queue.
-    pub fn contains(&self, fp: Fingerprint) -> bool {
-        self.pending.contains_key(&fp)
-    }
-
-    /// Record a request shed by admission control (never admitted).
-    pub fn reject(&mut self) {
-        self.stats.rejected += 1;
-    }
-
-    /// Admit a request. Returns `true` when it opened a new flight, `false`
-    /// when it coalesced onto an in-flight duplicate (single-flight dedup).
-    pub fn push(&mut self, req: Request) -> bool {
-        self.stats.admitted += 1;
-        match self.pending.get_mut(&req.fingerprint) {
-            Some(flight) => {
-                flight.follower_seqs.push(req.seq);
-                flight.priority = flight.priority.min(req.priority);
-                self.stats.coalesced += 1;
-                false
-            }
-            None => {
-                self.pending.insert(
-                    req.fingerprint,
-                    Flight {
-                        fingerprint: req.fingerprint,
-                        leader_seq: req.seq,
-                        follower_seqs: Vec::new(),
-                        priority: req.priority,
-                        tenant: req.tenant,
-                    },
-                );
-                true
-            }
-        }
-    }
-
-    /// Take every pending flight, most urgent first (ties by arrival order).
-    pub fn drain(&mut self) -> Vec<Flight> {
-        let mut flights: Vec<Flight> = std::mem::take(&mut self.pending)
-            .into_values()
-            .collect();
-        flights.sort_by_key(|f| (f.priority, f.leader_seq));
-        self.stats.dispatched += flights.len() as u64;
-        flights
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn req(seq: u64, fp: u64, p: Priority) -> Request {
-        Request { seq, fingerprint: Fingerprint(fp), priority: p, tenant: 0 }
-    }
-
     #[test]
-    fn flight_keeps_the_leaders_tenant() {
-        let mut q = JobQueue::new();
-        q.push(Request { seq: 0, fingerprint: Fingerprint(1), priority: Priority::Batch, tenant: 2 });
-        // A follower from another tenant coalesces but does not take over
-        // the backlog attribution.
-        q.push(Request { seq: 1, fingerprint: Fingerprint(1), priority: Priority::Batch, tenant: 0 });
-        let flights = q.drain();
-        assert_eq!(flights.len(), 1);
-        assert_eq!(flights[0].tenant, 2);
-        assert_eq!(flights[0].follower_seqs, vec![1]);
-    }
-
-    #[test]
-    fn single_flight_dedups_identical_requests() {
-        let mut q = JobQueue::new();
-        assert!(q.push(req(0, 7, Priority::Standard)));
-        assert!(q.contains(Fingerprint(7)));
-        assert!(!q.contains(Fingerprint(9)));
-        assert!(!q.push(req(1, 7, Priority::Standard)));
-        assert!(!q.push(req(2, 7, Priority::Batch)));
-        assert!(q.push(req(3, 9, Priority::Standard)));
-        assert_eq!(q.len(), 2);
-        assert_eq!(q.stats.admitted, 4);
-        assert_eq!(q.stats.coalesced, 2);
-
-        let flights = q.drain();
-        assert_eq!(flights.len(), 2);
-        let f7 = flights.iter().find(|f| f.fingerprint == Fingerprint(7)).unwrap();
-        assert_eq!(f7.leader_seq, 0);
-        assert_eq!(f7.follower_seqs, vec![1, 2]);
-        assert_eq!(f7.members(), 3);
-        assert_eq!(q.stats.dispatched, 2);
-        assert!(q.is_empty());
-    }
-
-    #[test]
-    fn followers_escalate_flight_priority() {
-        let mut q = JobQueue::new();
-        q.push(req(0, 1, Priority::Batch));
-        q.push(req(1, 2, Priority::Standard));
-        q.push(req(2, 1, Priority::Interactive)); // escalates flight 1
-        let flights = q.drain();
-        assert_eq!(flights[0].fingerprint, Fingerprint(1));
-        assert_eq!(flights[0].priority, Priority::Interactive);
-        assert_eq!(flights[1].fingerprint, Fingerprint(2));
-    }
-
-    #[test]
-    fn drain_orders_by_priority_then_arrival() {
-        let mut q = JobQueue::new();
-        q.push(req(0, 10, Priority::Batch));
-        q.push(req(1, 11, Priority::Interactive));
-        q.push(req(2, 12, Priority::Standard));
-        q.push(req(3, 13, Priority::Interactive));
-        let order: Vec<u64> = q.drain().iter().map(|f| f.leader_seq).collect();
-        assert_eq!(order, vec![1, 3, 2, 0]);
+    fn priorities_order_most_urgent_first() {
+        assert!(Priority::Interactive < Priority::Standard);
+        assert!(Priority::Standard < Priority::Batch);
+        // Escalation takes the most urgent of two classes.
+        assert_eq!(Priority::Batch.min(Priority::Interactive), Priority::Interactive);
+        assert_eq!(
+            ALL_PRIORITIES.map(|p| p.name()),
+            ["interactive", "standard", "batch"]
+        );
     }
 }

@@ -107,7 +107,9 @@ impl Strategy {
 /// (the service layer's warm-start path). When `source_gpu` differs from the
 /// run's target GPU this is the cross-GPU transfer case: the Coder adapts a
 /// kernel tuned for one part onto another.
-#[derive(Clone, Debug)]
+// `PartialEq` so the service layer's run memo can recognize that two flights
+// would execute the identical workflow (fingerprints cover everything else).
+#[derive(Clone, Debug, PartialEq)]
 pub struct WarmStart {
     /// Best known correct config for this task (possibly from another GPU).
     pub config: KernelConfig,

@@ -1,9 +1,11 @@
-//! Integration: the sharded multi-tenant cluster layer — the two
-//! determinism contracts (a 1-node single-tenant cluster is bit-identical
-//! to the single-node service, and cluster reports are bit-identical across
-//! OS thread counts), plus the cluster-only behaviours: node failure with
-//! rebalance accounting, fair-share tenant quotas under overload, and
-//! cross-node warm-start routing with its transfer latency.
+//! Integration: the sharded multi-tenant cluster layer — the determinism
+//! contracts (a 1-node single-tenant cluster is bit-identical to the
+//! single-node service, and cluster reports are bit-identical across OS
+//! thread counts *and* across the host-side `window` batch size), plus the
+//! cluster-only behaviours: node failure with rebalance accounting,
+//! fair-share tenant quotas under overload, and cross-node warm-start
+//! routing with its transfer latency — all on the global event loop, where
+//! a warm seed must come from a flight already completed in simulated time.
 
 use cudaforge::cluster::{ClusterConfig, ClusterReport, ClusterService, Router, TenantSpec};
 use cudaforge::gpu;
@@ -86,7 +88,7 @@ fn one_node_single_tenant_cluster_is_bit_identical_to_the_service() {
     assert_eq!(cluster.replay(&burst, &suite, &NoOracle).overall, expected);
 }
 
-fn sharded_replay(threads: usize, seed: u64) -> ClusterReport {
+fn sharded_replay(threads: usize, seed: u64, window: usize) -> ClusterReport {
     let suite = tasks::kernelbench();
     let trace = generate(
         suite.len(),
@@ -108,7 +110,7 @@ fn sharded_replay(threads: usize, seed: u64) -> ClusterReport {
         fail_node_at: Some((1, fail_at)),
         service: ServiceConfig {
             threads,
-            window: 16,
+            window,
             sim_workers: 2,
             queue_depth: 8,
             seed,
@@ -123,14 +125,28 @@ fn cluster_report_identical_regardless_of_worker_count() {
     // The existing single-node assertion, extended to the cluster: the full
     // ClusterReport — per-node, per-tenant, and rebalance views included —
     // is bit-identical whether 1, 2, or 8 OS threads crunch the flights.
-    let a = sharded_replay(1, 7);
-    let b = sharded_replay(2, 7);
-    let c = sharded_replay(8, 7);
+    let a = sharded_replay(1, 7, 16);
+    let b = sharded_replay(2, 7, 16);
+    let c = sharded_replay(8, 7, 16);
     assert_eq!(a, b);
     assert_eq!(a, c);
     // ...and seeds actually matter.
-    let d = sharded_replay(2, 8);
+    let d = sharded_replay(2, 8, 16);
     assert_ne!(a, d);
+}
+
+#[test]
+fn cluster_window_batch_size_never_changes_the_report() {
+    // `window` only batches the host-side speculative runs; the cluster's
+    // global event loop is window-free. Replaying the full feature mix
+    // (sharding + quotas + failure + cross-node warms) over several seeds
+    // also drives the causality debug_asserts — every warm seed's producing
+    // flight completed by its consumer's start, on every node.
+    for seed in [7u64, 11, 23] {
+        let a = sharded_replay(2, seed, 1);
+        let b = sharded_replay(2, seed, 64);
+        assert_eq!(a, b, "seed {seed}: window 1 vs 64 must be bit-identical");
+    }
 }
 
 #[test]
@@ -256,9 +272,12 @@ fn cross_node_warm_starts_pay_the_transfer_latency() {
     }
     let (anchor, other_gpu) = found.expect("some warm pair shards across the two nodes");
 
+    // The second arrival lands far after the first flight's completion:
+    // under dispatch-time causality a still-running flight can no longer
+    // donate a warm seed (the old window-batched replay let it).
     let trace = vec![
         req_at(anchor, "rtx6000", Priority::Standard, 0, 0.0),
-        req_at(anchor, other_gpu, Priority::Standard, 0, 10.0),
+        req_at(anchor, other_gpu, Priority::Standard, 0, 100_000.0),
     ];
     let run = |transfer_latency_s: f64| {
         let mut svc = ClusterService::new(ClusterConfig {
