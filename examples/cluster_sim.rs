@@ -1,14 +1,17 @@
 //! Cluster-layer walkthrough: replay Zipf traffic from two tenants over a
-//! sharded 4-node cluster, then answer the two operational questions the
-//! simulation exists for — what does a node failure cost, and do fair-share
-//! quotas actually protect the light tenant when a heavy tenant floods the
-//! queue? All node fleets advance through one global event loop, so a
-//! cross-node warm start only ever seeds from an entry whose producing
-//! flight has already completed in simulated time.
+//! sharded 4-node cluster, then answer the operational questions the
+//! simulation exists for — what does a node failure cost, what does
+//! *recovering* the node cost (the planned rebalance that warm-refills its
+//! keys), can a warm cluster survive a restart through a shard-aware
+//! snapshot, and do fair-share quotas actually protect the light tenant
+//! when a heavy tenant floods the queue? All node fleets advance through
+//! one global event loop, so a cross-node warm start only ever seeds from
+//! an entry whose producing flight has already completed — and a rebalance
+//! refill is only visible once its transfer has landed — in simulated time.
 //!
 //!     cargo run --release --example cluster_sim
 
-use cudaforge::cluster::{ClusterConfig, ClusterService, TenantSpec};
+use cudaforge::cluster::{ClusterConfig, ClusterService, MembershipEvent, TenantSpec};
 use cudaforge::report::cluster_table;
 use cudaforge::service::traffic::{generate, TrafficConfig};
 use cudaforge::service::ServiceConfig;
@@ -21,6 +24,7 @@ fn base_config() -> ClusterConfig {
         tenants: vec![TenantSpec::new("alpha", 3.0), TenantSpec::new("beta", 1.0)],
         tenant_quotas: true,
         transfer_latency_s: 30.0,
+        warm_locality_margin: 0.25,
         service: ServiceConfig {
             window: 32,
             sim_workers: 2,
@@ -28,7 +32,7 @@ fn base_config() -> ClusterConfig {
             queue_depth: 16,
             ..ServiceConfig::default()
         },
-        fail_node_at: None,
+        events: Vec::new(),
     }
 }
 
@@ -55,29 +59,82 @@ fn main() {
         healthy.quota_shed,
     );
 
-    // ---- node failure mid-replay ------------------------------------------
+    // ---- node failure + planned recovery mid-replay -----------------------
     // Drop node 1 a third of the way into the trace: its shard is lost, its
     // keys rehash to survivors, and every lost key that comes back re-runs
-    // a workflow the cluster had already paid for.
+    // a workflow the cluster had already paid for. Two thirds in, the node
+    // *rejoins* empty: the inverse movement is a planned rebalance — every
+    // surviving-shard entry the newcomer owns is warm-refilled to it,
+    // priced like a cross-node transfer instead of a re-run.
     let fail_at = trace[trace.len() / 3].arrival_s;
+    let rejoin_at = trace[2 * trace.len() / 3].arrival_s;
     let mut degraded_cfg = base_config();
-    degraded_cfg.fail_node_at = Some((1, fail_at));
+    degraded_cfg.events =
+        vec![MembershipEvent::fail(1, fail_at), MembershipEvent::join(1, rejoin_at)];
     let mut degraded_svc = ClusterService::new(degraded_cfg);
     let degraded = degraded_svc.replay(&trace, &suite, &NoOracle);
-    let rb = degraded.rebalance.as_ref().expect("failure fired");
+    for rb in &degraded.rebalances {
+        match rb.kind {
+            cudaforge::cluster::RebalanceKind::NodeFailure => println!(
+                "failure: node {} dropped at t={:.0}s — {} cached entries lost, {} \
+                 requests rehashed, {} lost keys re-ran cold (${:.2} re-spent)",
+                rb.node,
+                rb.at_s,
+                rb.cache_entries_lost,
+                rb.rehashed_requests,
+                rb.remissed_flights,
+                rb.remiss_api_usd,
+            ),
+            cudaforge::cluster::RebalanceKind::NodeJoin => println!(
+                "recovery: node {} rejoined at t={:.0}s — {} entries warm-refilled \
+                 ({:.0}s transfer spend), {} keys re-ran inside the gap (${:.2})",
+                rb.node,
+                rb.at_s,
+                rb.entries_moved,
+                rb.transfer_s,
+                rb.remissed_flights,
+                rb.remiss_api_usd,
+            ),
+            cudaforge::cluster::RebalanceKind::SnapshotRestore => {}
+        }
+    }
     println!(
-        "failure: node {} dropped at t={:.0}s — {} cached entries lost, {} requests \
-         rehashed, {} lost keys re-ran cold (${:.2} re-spent)",
-        rb.failed_node,
-        rb.failed_at_s,
-        rb.cache_entries_lost,
-        rb.rehashed_requests,
-        rb.remissed_flights,
-        rb.remiss_api_usd,
+        "failure tax on spend: ${:.2} (degraded) vs ${:.2} (healthy); membership \
+         epoch ended at {}\n",
+        degraded.overall.api_usd_spent, healthy.overall.api_usd_spent, degraded.epoch,
     );
+
+    // ---- shard-aware snapshot: a warm restart survives ---------------------
+    // Persist the healthy cluster, restore it, and replay fresh traffic
+    // through both: the restored cluster serves it bit-identically — the
+    // manifest carries the epoch and per-shard files, recency and the
+    // cold-cost registry included.
+    let snap_dir = std::env::temp_dir().join("cudaforge_cluster_sim_snapshot");
+    let _ = std::fs::remove_dir_all(&snap_dir);
+    let manifest = svc.snapshot(&snap_dir).expect("snapshot");
+    let (mut restored, moved) =
+        ClusterService::restore(base_config(), &snap_dir).expect("restore");
+    let day2 = generate(
+        suite.len(),
+        &TrafficConfig {
+            requests: 600,
+            seed: 13,
+            tenant_mix: vec![("alpha".to_string(), 3.0), ("beta".to_string(), 1.0)],
+            ..TrafficConfig::default()
+        },
+    );
+    let warm_day2 = restored.replay(&day2, &suite, &NoOracle);
+    let same_day2 = svc.replay(&day2, &suite, &NoOracle);
     println!(
-        "failure tax on spend: ${:.2} (degraded) vs ${:.2} (healthy)\n",
-        degraded.overall.api_usd_spent, healthy.overall.api_usd_spent,
+        "snapshot: {} entries across {} shards (epoch {}); restored replay \
+         bit-identical to the warm original: {} (hit rate {:.1}%, moved on \
+         restore: {})\n",
+        manifest.shards.iter().map(|s| s.entries).sum::<usize>(),
+        manifest.nodes,
+        manifest.epoch,
+        warm_day2 == same_day2,
+        warm_day2.overall.hit_rate * 100.0,
+        moved.map(|m| m.entries_moved).unwrap_or(0),
     );
 
     // ---- tenant overload: quotas on vs off --------------------------------

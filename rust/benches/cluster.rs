@@ -1,11 +1,13 @@
 //! Bench: the cluster layer's hot paths — rendezvous routing (once per
 //! request at admission time, so it must stay in the tens-of-nanoseconds
-//! regime), the fair-share quota derivation, and an end-to-end sharded
-//! replay (the global event loop interleaving all node fleets in timestamp
-//! order) compared against the same traffic on one node.
+//! regime), the fair-share quota derivation, an end-to-end sharded replay
+//! (the global event loop interleaving all node fleets in timestamp
+//! order), the same replay through a fail + rejoin membership cycle (the
+//! planned-rebalance path), and a shard-aware snapshot save/restore round
+//! trip.
 
 use cudaforge::cluster::{
-    fair_share_quotas, ClusterConfig, ClusterService, Router, TenantSpec,
+    fair_share_quotas, ClusterConfig, ClusterService, MembershipEvent, Router, TenantSpec,
 };
 use cudaforge::service::fingerprint::Fingerprint;
 use cudaforge::service::traffic::{generate, TrafficConfig};
@@ -49,20 +51,45 @@ fn main() {
             ..TrafficConfig::default()
         },
     );
+    let base = || ClusterConfig {
+        nodes: 4,
+        tenants: vec![TenantSpec::new("alpha", 3.0), TenantSpec::new("beta", 1.0)],
+        tenant_quotas: true,
+        service: ServiceConfig {
+            threads: 1,
+            window: 16,
+            sim_workers: 2,
+            queue_depth: 16,
+            ..ServiceConfig::default()
+        },
+        ..ClusterConfig::default()
+    };
     bench("cluster::replay 200 Zipf requests over 4 nodes (e2e)", 200, || {
-        let mut svc = ClusterService::new(ClusterConfig {
-            nodes: 4,
-            tenants: vec![TenantSpec::new("alpha", 3.0), TenantSpec::new("beta", 1.0)],
-            tenant_quotas: true,
-            service: ServiceConfig {
-                threads: 1,
-                window: 16,
-                sim_workers: 2,
-                queue_depth: 16,
-                ..ServiceConfig::default()
-            },
-            ..ClusterConfig::default()
-        });
+        let mut svc = ClusterService::new(base());
         black_box(svc.replay(&trace, &suite, &NoOracle));
+    });
+
+    // The elastic-membership path: a node dies a third of the way in and
+    // rejoins (empty) two thirds in — the replay pays shard loss, re-miss
+    // re-runs, and the join's planned-rebalance refills.
+    let fail_at = trace[trace.len() / 3].arrival_s;
+    let rejoin_at = trace[2 * trace.len() / 3].arrival_s;
+    bench("cluster::replay with fail + rejoin (planned rebalance)", 200, || {
+        let mut cfg = base();
+        cfg.events =
+            vec![MembershipEvent::fail(1, fail_at), MembershipEvent::join(1, rejoin_at)];
+        let mut svc = ClusterService::new(cfg);
+        black_box(svc.replay(&trace, &suite, &NoOracle));
+    });
+
+    // Shard-aware snapshot round trip: manifest + N shard files + the
+    // cold-cost registry, written and cross-checked back in.
+    let mut warm = ClusterService::new(base());
+    warm.replay(&trace, &suite, &NoOracle);
+    let dir = std::env::temp_dir().join("cudaforge_cluster_bench_snapshot");
+    let _ = std::fs::remove_dir_all(&dir);
+    bench("cluster::snapshot save + restore (4 shards)", 50, || {
+        warm.snapshot(&dir).expect("snapshot");
+        black_box(ClusterService::restore(base(), &dir).expect("restore"));
     });
 }

@@ -5,13 +5,16 @@
 //! simulated GPU fleet. The ROADMAP's target — serving millions of users —
 //! is a *cluster* of such nodes, and the questions that matter at that
 //! scale are cluster questions: how evenly do fingerprints shard, what does
-//! a node failure cost, which tenant starves under overload, and when is it
-//! worth fetching a warm-start seed from another node's shard. This module
-//! answers them with the same discrete-event discipline as the single-node
-//! layer:
+//! a node failure cost, what does bringing a node (back) *in* cost, which
+//! tenant starves under overload, and when is it worth fetching a
+//! warm-start seed from another node's shard. This module answers them with
+//! the same discrete-event discipline as the single-node layer:
 //!
 //! - [`router`] — rendezvous (highest-random-weight) hashing routes each
-//!   fingerprint to one alive node; a node's death moves only its own keys.
+//!   fingerprint to one alive node; a node's death moves only its own keys,
+//!   and a node's join moves exactly those keys back. [`Membership`] tracks
+//!   the alive set plus a monotonically increasing **epoch** counting
+//!   membership changes.
 //! - Each simulated node owns its **own** `ResultCache` shard and
 //!   `FleetSim` worker slice — there is no shared cache, so a request
 //!   hitting the "wrong" node's shard is impossible by construction.
@@ -21,28 +24,47 @@
 //!   hold at most `queue_depth * weight_i / total_weight` backlog slots.
 //!   Quota sheds are counted per tenant — the old global batch-shed is no
 //!   longer the only admission knob (it still applies first).
-//! - **Failure/rebalance.** A configured node drops mid-replay: its cache
-//!   shard is lost (entries counted), accepted work drains gracefully, and
-//!   subsequent requests for its keys rehash to surviving nodes where they
-//!   re-miss — the re-run flights and their API dollars are accounted in
-//!   [`RebalanceReport`].
-//! - **Cross-node warm starts.** A miss on node A may seed from the best
-//!   hit-adjacent entry owned by node B, paying a configurable transfer
-//!   latency on top of the run's service time.
+//! - **Membership events.** [`ClusterConfig::events`] schedules failures
+//!   *and* joins at simulated instants. A failure drops the node's shard
+//!   (entries counted lost; later requests for its keys rehash to
+//!   survivors and re-miss). A join is the inverse movement as a *planned
+//!   rebalance*: the joining node returns empty, and every surviving-shard
+//!   entry whose key the newcomer now owns is moved to it, landing one
+//!   [`ClusterConfig::transfer_latency_s`] after the join instant — the
+//!   movement and its transfer spend are itemized in [`RebalanceReport`],
+//!   and requests that slip into the transfer gap re-miss (also itemized).
+//!   A node whose *first* scheduled event is a join starts outside the
+//!   cluster (the "new capacity arrives mid-trace" scenario); fail-then-
+//!   join models recovery.
+//! - **Cross-node warm starts, locality-aware.** A miss on node A may seed
+//!   from a hit-adjacent entry owned by node B, paying
+//!   `transfer_latency_s` on top of the run's service time — but only when
+//!   the remote seed beats the best own-shard seed by more than
+//!   [`ClusterConfig::warm_locality_margin`] (relative speedup). Otherwise
+//!   the own-shard candidate wins and the transfer is not paid.
+//! - **Shard-aware snapshots.** [`ClusterService::snapshot`] persists every
+//!   shard, the cluster-wide cold-cost registry, and a manifest declaring
+//!   the rendezvous epoch and node count (see [`snapshot`]);
+//!   [`ClusterService::restore`] rebuilds a warm cluster from it, rehashing
+//!   keys through the router — and accounting the movement in a
+//!   [`RebalanceReport`] — when the node count changed since the save.
 //!
 //! # Determinism and causality
 //!
 //! The replay drives every node fleet through one *global* event loop:
-//! starts and completions fire in cluster-wide timestamp order (completions
-//! before starts at ties, then node index), interleaved with arrivals. A
-//! flight starting on any node therefore observes exactly the cache
-//! entries — its own shard's and other shards' warm-start donors — whose
-//! producing flights completed by its start instant, never a result still
-//! being computed. Everything reported is simulated-time or request-count
-//! arithmetic accumulated in that event order; OS `threads` and the
-//! `window` speculation batch size only change how fast the host crunches
-//! workflow runs. A [`ClusterReport`] is bit-identical across thread
-//! counts, and a 1-node single-tenant cluster replay is bit-identical to
+//! starts, completions, and rebalance refill landings fire in cluster-wide
+//! timestamp order (refill landings first at an instant, then completions,
+//! then starts, then node index), interleaved with arrivals; membership
+//! events apply after everything due by their instant has fired. A flight
+//! starting on any node therefore observes exactly the cache entries —
+//! its own shard's and other shards' warm-start donors — whose producing
+//! flights completed (or whose rebalance transfers landed) by its start
+//! instant, never a result still being computed or still in transit.
+//! Everything reported is simulated-time or request-count arithmetic
+//! accumulated in that event order; OS `threads` and the `window`
+//! speculation batch size only change how fast the host crunches workflow
+//! runs. A [`ClusterReport`] is bit-identical across thread counts, and a
+//! 1-node single-tenant cluster replay is bit-identical to
 //! [`KernelService::replay`]'s `ServiceReport` — both invariants are
 //! asserted by `tests/integration_cluster.rs`, and the per-flight
 //! accounting itself is one shared helper
@@ -51,8 +73,12 @@
 //! [`KernelService::replay`]: crate::service::KernelService::replay
 
 pub mod router;
+pub mod snapshot;
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use anyhow::Result;
 
 use crate::service::cache::{CacheEntry, ResultCache};
 use crate::service::fingerprint::Fingerprint;
@@ -67,11 +93,12 @@ use crate::tasks::TaskSpec;
 use crate::util::stats::percentile;
 use crate::workflow::{run_task, CorrectnessOracle};
 
-pub use router::Router;
+pub use router::{Membership, Router};
 
 /// One tenant of the cluster: a name for reporting and a fair-share weight.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TenantSpec {
+    /// Display name (reports and the `--tenants` CLI syntax).
     pub name: String,
     /// Relative share of each node's flight backlog this tenant may hold
     /// under overload (see [`fair_share_quotas`]). Non-positive weights get
@@ -80,8 +107,49 @@ pub struct TenantSpec {
 }
 
 impl TenantSpec {
+    /// A tenant with the given name and fair-share weight.
     pub fn new(name: impl Into<String>, weight: f64) -> TenantSpec {
         TenantSpec { name: name.into(), weight }
+    }
+}
+
+/// What a scheduled membership event does to its node slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum MembershipChange {
+    /// The node drops out: its cache shard is lost and its keys rehash to
+    /// survivors.
+    Fail,
+    /// The node (re)enters empty: the keys it owns move back from the
+    /// surviving shards as a planned rebalance.
+    Join,
+}
+
+/// One scheduled membership change, applied the first time simulated time
+/// reaches `at_s` (at an arrival, or during the final drain if the instant
+/// falls after the last arrival). Events whose node index is out of range,
+/// or that would not change the node's state (failing a dead node, joining
+/// an alive one), are no-ops.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MembershipEvent {
+    /// The node slot the event concerns.
+    pub node: usize,
+    /// Simulated instant the change applies (clamped to `>= 0` when the
+    /// replay consumes it; NaN clamps to 0 rather than never firing).
+    pub at_s: f64,
+    /// Whether the node fails or joins.
+    pub change: MembershipChange,
+}
+
+impl MembershipEvent {
+    /// Fail `node` at `at_s`.
+    pub fn fail(node: usize, at_s: f64) -> MembershipEvent {
+        MembershipEvent { node, at_s, change: MembershipChange::Fail }
+    }
+
+    /// Join `node` (empty) at `at_s`. When this is the node's first
+    /// scheduled event, the node starts outside the cluster.
+    pub fn join(node: usize, at_s: f64) -> MembershipEvent {
+        MembershipEvent { node, at_s, change: MembershipChange::Join }
     }
 }
 
@@ -92,8 +160,9 @@ impl TenantSpec {
 /// with no effect on reported numbers).
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
+    /// The per-node service parameter block.
     pub service: ServiceConfig,
-    /// Simulated nodes (clamped to at least 1).
+    /// Simulated node slots (clamped to at least 1).
     pub nodes: usize,
     /// The tenant population. `TrafficRequest::tenant` indexes this list
     /// (out-of-range indices clamp to the last tenant).
@@ -102,14 +171,20 @@ pub struct ClusterConfig {
     /// a 1-node, 1-tenant cluster reproduces the single-node service's
     /// admission behaviour exactly (only batch work is shed at the bound).
     pub tenant_quotas: bool,
-    /// Simulated seconds to fetch a warm-start seed kernel from another
-    /// node's shard, added to the run's service time.
+    /// Simulated seconds to move a kernel between nodes — paid by each
+    /// cross-node warm-start seed fetch (on the flight's service time) and
+    /// by each entry a join's planned rebalance refills (the refill lands
+    /// this long after the join instant).
     pub transfer_latency_s: f64,
-    /// Fail node `.0` the first time simulated time reaches `.1` seconds
-    /// (at an arrival, or during the final drain if the instant falls after
-    /// the last arrival): its cache shard is lost and later requests for
-    /// its keys rehash.
-    pub fail_node_at: Option<(usize, f64)>,
+    /// Relative speedup margin a *remote* warm-start seed must beat the
+    /// best own-shard seed by before the transfer is worth paying: remote
+    /// wins only when `remote_speedup > own_speedup * (1 + margin)`.
+    /// 0 (the default) prefers the own shard on anything but a strictly
+    /// faster remote; negative values are clamped to 0.
+    pub warm_locality_margin: f64,
+    /// Scheduled membership changes, applied at their simulated instants
+    /// in `(at_s, node, change)` order.
+    pub events: Vec<MembershipEvent>,
 }
 
 impl Default for ClusterConfig {
@@ -120,7 +195,8 @@ impl Default for ClusterConfig {
             tenants: vec![TenantSpec::new("default", 1.0)],
             tenant_quotas: false,
             transfer_latency_s: 30.0,
-            fail_node_at: None,
+            warm_locality_margin: 0.0,
+            events: Vec::new(),
         }
     }
 }
@@ -147,19 +223,27 @@ pub fn fair_share_quotas(queue_depth: usize, tenants: &[TenantSpec]) -> Vec<usiz
 /// utilization aggregates for the replay.
 #[derive(Clone, Debug, PartialEq)]
 pub struct NodeReport {
+    /// Node slot index.
     pub node: usize,
-    /// False once the failure event killed this node.
+    /// Whether the node is alive at the end of the replay.
     pub alive: bool,
     /// Requests routed to this node (hits + joins + flights + sheds).
     pub requests: usize,
+    /// Requests this shard answered from cache.
     pub cache_hits: u64,
+    /// Requests served by joining one of this node's in-flight duplicates.
     pub shared: u64,
+    /// Workflow runs this node executed.
     pub flights_run: usize,
+    /// Requests this node's admission control shed.
     pub rejected: u64,
+    /// Entries this shard evicted under capacity pressure.
     pub evictions: u64,
+    /// `(cache_hits + shared) / requests` for this node.
     pub hit_rate: f64,
     /// Busy time / (node workers × node makespan).
     pub utilization: f64,
+    /// Deepest flight backlog observed at this node's admission decisions.
     pub peak_queue_depth: usize,
     /// Entries resident in this node's shard after the replay.
     pub cache_entries: usize,
@@ -170,8 +254,11 @@ pub struct NodeReport {
 /// target).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TenantReport {
+    /// Tenant name (from [`ClusterConfig::tenants`]).
     pub tenant: String,
+    /// The tenant's fair-share weight.
     pub weight: f64,
+    /// Requests this tenant sent.
     pub requests: usize,
     /// Requests that got an answer (requests − rejected).
     pub served: usize,
@@ -180,25 +267,60 @@ pub struct TenantReport {
     /// The subset of `rejected` shed specifically by this tenant exceeding
     /// its fair-share quota.
     pub quota_shed: u64,
+    /// Median latency over this tenant's served requests, seconds.
     pub p50_latency_s: f64,
+    /// 95th-percentile latency over this tenant's served requests, seconds.
     pub p95_latency_s: f64,
+    /// 99th-percentile latency over this tenant's served requests, seconds.
     pub p99_latency_s: f64,
     /// Fraction of served requests within their priority class's SLO
     /// target (1.0 when nothing was served — a vacuous SLO holds).
     pub slo_attainment: f64,
 }
 
-/// What the configured node failure cost.
+/// Why keys moved between shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RebalanceKind {
+    /// A node dropped out mid-replay: its shard was lost.
+    NodeFailure,
+    /// A node joined (empty) mid-replay: its keys moved back to it as a
+    /// planned rebalance.
+    NodeJoin,
+    /// A snapshot was restored under a membership its manifest did not
+    /// describe (different node count, or entries mis-placed relative to
+    /// the initial membership), so keys rehashed at restore time.
+    SnapshotRestore,
+}
+
+/// What one rebalance — a failure, a join, or a snapshot restore under
+/// changed membership — cost.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RebalanceReport {
-    pub failed_node: usize,
-    pub failed_at_s: f64,
-    /// Cache entries the dead node's shard held — all lost.
+    /// What triggered the movement.
+    pub kind: RebalanceKind,
+    /// The failed/joined node; for [`RebalanceKind::SnapshotRestore`], the
+    /// node count the snapshot was laid out for.
+    pub node: usize,
+    /// Simulated instant the event applied (0 for a restore, which happens
+    /// before the replay's clock starts).
+    pub at_s: f64,
+    /// Cache entries lost outright — a failure loses its whole shard plus
+    /// any refills still in transit to it; a restore loses entries when no
+    /// alive node can own them, or when the rehash overflows a target
+    /// shard's capacity.
     pub cache_entries_lost: usize,
-    /// Post-failure requests whose rendezvous owner *would have been* the
-    /// dead node — the traffic that rehashed to survivors.
+    /// Entries moved between shards (a join's planned refill, or a
+    /// restore's rehash) rather than lost.
+    pub entries_moved: usize,
+    /// Total simulated transfer seconds those moves spent
+    /// (`entries_moved × transfer_latency_s`).
+    pub transfer_s: f64,
+    /// Requests displaced by this event: traffic the dead node would have
+    /// owned (failure), or traffic the joined node now owns (join).
     pub rehashed_requests: usize,
-    /// Lost keys that had to re-run a full workflow on a surviving node.
+    /// Flights opened to re-run work this event made unreachable — a lost
+    /// key coming back cold, or a moved key requested inside its transfer
+    /// gap.
     pub remissed_flights: usize,
     /// API dollars those re-runs spent — work the cluster had already paid
     /// for once.
@@ -211,44 +333,62 @@ pub struct RebalanceReport {
 /// what the sharded deployment adds.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClusterReport {
+    /// The cluster-wide aggregates, shaped like a single-node report.
     pub overall: ServiceReport,
+    /// Node slots in the deployment.
     pub nodes: usize,
+    /// Rendezvous epoch after the replay: membership changes applied over
+    /// the cluster's lifetime, including history a snapshot restore
+    /// resumed.
+    pub epoch: u64,
+    /// Per-node serving/caching breakdown.
     pub per_node: Vec<NodeReport>,
+    /// Per-tenant traffic/SLO/shedding breakdown.
     pub per_tenant: Vec<TenantReport>,
     /// Executed misses that warm-started from an entry owned by a
     /// *different* node (each paid `transfer_latency_s`).
     pub cross_node_warm: usize,
     /// Total quota-exceeded sheds across tenants.
     pub quota_shed: u64,
-    /// Present when `fail_node_at` fired during the replay.
-    pub rebalance: Option<RebalanceReport>,
+    /// One entry per rebalance, in event order. The first replay after a
+    /// [`ClusterService::restore`] that moved keys leads with that
+    /// restore's movement; membership events applied during the replay
+    /// follow.
+    pub rebalances: Vec<RebalanceReport>,
 }
 
-/// Best warm-start candidate across every *alive* shard, with its owning
-/// node (a dead node's entries are unreachable, not warm-start donors).
-/// Ties break on (speedup, fingerprint, node) so the scan order can never
-/// change the pick.
+/// Locality-aware warm-start pick across every *alive* shard, with the
+/// owning node (a dead node's entries are unreachable, not warm-start
+/// donors). The best candidate on the requester's own shard (`own`) wins
+/// unless the best remote candidate beats it by more than
+/// `locality_margin` (relative speedup) — fetching a marginally better
+/// seed is not worth the transfer. Remote ties break on
+/// (speedup, fingerprint, node) so the scan order can never change the
+/// pick.
 fn warm_candidate_across<'c>(
     caches: &'c [ResultCache],
     c: &ServiceConfig,
     task_id: &str,
     gpu_key: &str,
     alive: &[bool],
+    own: usize,
+    locality_margin: f64,
 ) -> Option<(usize, &'c CacheEntry)> {
-    let mut best: Option<(usize, &CacheEntry)> = None;
+    let probe = |cache: &'c ResultCache| {
+        cache.warm_candidate(task_id, gpu_key, c.strategy.name(), c.coder.name, c.judge.name)
+    };
+    let own_best = if alive.get(own).copied().unwrap_or(false) {
+        probe(&caches[own])
+    } else {
+        None
+    };
+    let mut remote: Option<(usize, &CacheEntry)> = None;
     for (node, cache) in caches.iter().enumerate() {
-        if !alive.get(node).copied().unwrap_or(false) {
+        if node == own || !alive.get(node).copied().unwrap_or(false) {
             continue;
         }
-        let cand = cache.warm_candidate(
-            task_id,
-            gpu_key,
-            c.strategy.name(),
-            c.coder.name,
-            c.judge.name,
-        );
-        if let Some(e) = cand {
-            let better = match best {
+        if let Some(e) = probe(cache) {
+            let better = match remote {
                 None => true,
                 Some((bn, b)) => e
                     .best_speedup
@@ -258,11 +398,22 @@ fn warm_candidate_across<'c>(
                     .is_gt(),
             };
             if better {
-                best = Some((node, e));
+                remote = Some((node, e));
             }
         }
     }
-    best
+    match (own_best, remote) {
+        (None, None) => None,
+        (Some(o), None) => Some((own, o)),
+        (None, Some(r)) => Some(r),
+        (Some(o), Some((rn, r))) => {
+            if r.best_speedup > o.best_speedup * (1.0 + locality_margin.max(0.0)) {
+                Some((rn, r))
+            } else {
+                Some((own, o))
+            }
+        }
+    }
 }
 
 /// Per-node admission/serving counters for one replay.
@@ -279,9 +430,18 @@ struct NodeCounters {
     backlog_by_tenant: Vec<usize>,
     /// This node's cache eviction counter at replay start (delta basis).
     evictions0: u64,
-    /// Evictions accumulated before the cache shard was dropped by the
+    /// Evictions accumulated before the cache shard was dropped by a
     /// failure event (the replacement cache restarts its counter).
     evictions_carry: u64,
+}
+
+/// A rebalance being accounted during the replay: its report plus the keys
+/// it made temporarily unreachable (lost by a failure, or in transit during
+/// a join's refill). A new flight opened for a tracked key is that
+/// rebalance's re-miss; a refill landing un-tracks its key.
+struct ActiveRebalance {
+    report: RebalanceReport,
+    tracked: BTreeSet<Fingerprint>,
 }
 
 /// The cluster replay context. Implements [`FleetHooks`] for whichever node
@@ -294,21 +454,74 @@ struct ClusterHooks<'a> {
     trace: &'a [TrafficRequest],
     tasks: &'a [TaskSpec],
     oracle: &'a dyn CorrectnessOracle,
+    router: Router,
     caches: &'a mut Vec<ResultCache>,
     cold_cost: &'a mut BTreeMap<Fingerprint, f64>,
     stats: ReplayStats,
     memo: RunMemo,
     pending: BTreeMap<u64, PendingRun>,
-    /// Causality audit: the completion instant of each fingerprint's
-    /// producing flight *this replay* (absent = resident before it started).
+    /// Causality audit: the completion (or refill-landing) instant of each
+    /// fingerprint's producing event *this replay* (absent = resident
+    /// before it started).
     visible_at: BTreeMap<Fingerprint, f64>,
     per_node: Vec<NodeCounters>,
-    alive: Vec<bool>,
+    membership: Membership,
     /// The node whose fleet is currently stepping.
     node: usize,
     cross_node_warm: usize,
-    rebalance: Option<RebalanceReport>,
-    lost_keys: BTreeSet<Fingerprint>,
+    rebalances: Vec<ActiveRebalance>,
+    /// Tracked keys whose re-run flight is open: fingerprint → index into
+    /// `rebalances`, settled (remiss counted, spend added) at completion.
+    remiss_open: BTreeMap<Fingerprint, usize>,
+    /// Planned-rebalance refills in transit: `(landing bits, seq)` →
+    /// `(destination node, entry)`. Fired by the global event loop in
+    /// timestamp order, before fleet events at the same instant.
+    pending_refills: BTreeMap<(u64, u64), (usize, CacheEntry)>,
+    refill_seq: u64,
+}
+
+impl ClusterHooks<'_> {
+    /// Count this arrival against every rebalance that displaced it: a
+    /// failure displaces requests its dead node would own were it alive; a
+    /// join displaces requests its node now owns (pre-join they routed to a
+    /// survivor). Restores count nothing (their movement is fully planned,
+    /// before traffic).
+    fn count_rehashed(&mut self, fp: Fingerprint) {
+        let membership = &self.membership;
+        let router = self.router;
+        for rb in self.rebalances.iter_mut() {
+            let node = rb.report.node;
+            let displaced = match rb.report.kind {
+                RebalanceKind::NodeFailure => {
+                    if membership.is_alive(node) {
+                        false // it rejoined since; nothing is displaced now
+                    } else {
+                        let mut revived = membership.alive().to_vec();
+                        revived[node] = true;
+                        router.route(fp, &revived) == Some(node)
+                    }
+                }
+                RebalanceKind::NodeJoin => {
+                    membership.is_alive(node)
+                        && router.route(fp, membership.alive()) == Some(node)
+                }
+                RebalanceKind::SnapshotRestore => false,
+            };
+            if displaced {
+                rb.report.rehashed_requests += 1;
+            }
+        }
+    }
+
+    /// If `fp` is a key some rebalance made unreachable, charge the new
+    /// flight being opened for it to that rebalance (settled at the
+    /// flight's completion).
+    fn charge_if_tracked(&mut self, fp: Fingerprint) {
+        if let Some(idx) = self.rebalances.iter().position(|rb| rb.tracked.contains(&fp)) {
+            self.rebalances[idx].tracked.remove(&fp);
+            self.remiss_open.insert(fp, idx);
+        }
+    }
 }
 
 impl FleetHooks for ClusterHooks<'_> {
@@ -326,7 +539,9 @@ impl FleetHooks for ClusterHooks<'_> {
             c,
             &task.id(),
             req.gpu.key,
-            &self.alive,
+            self.membership.alive(),
+            self.node,
+            self.config.warm_locality_margin,
         ) {
             Some((owner, entry)) => {
                 // The causality contract: a warm seed's producing flight —
@@ -383,74 +598,54 @@ impl FleetHooks for ClusterHooks<'_> {
         let nc = &mut self.per_node[self.node];
         nc.flights_run += 1;
         nc.shared += (flight.members.len() - 1) as u64;
-        if let Some(rb) = self.rebalance.as_mut() {
-            // A lost key's first re-run is the failure's re-miss cost: work
-            // the dead shard had already paid for.
-            if self.lost_keys.remove(&flight.fingerprint) {
-                rb.remissed_flights += 1;
-                rb.remiss_api_usd += run.result.ledger.api_usd;
-            }
+        // A flight opened to re-run work a failure lost (or a rebalance had
+        // in transit) settles that rebalance's re-miss bill here, at its
+        // own completion instant.
+        if let Some(idx) = self.remiss_open.remove(&flight.fingerprint) {
+            let rb = &mut self.rebalances[idx].report;
+            rb.remissed_flights += 1;
+            rb.remiss_api_usd += run.result.ledger.api_usd;
         }
-        // A dead node's draining flights still answer their members, but
-        // their results must not repopulate the unreachable shard (the
-        // router will never send a request there again).
-        if self.alive[self.node] {
-            if let Some(e) = entry {
-                self.visible_at.insert(e.fingerprint, done.completion_s);
-                self.caches[self.node].insert(e);
+        // The result refills the shard that owns the key *now*: a draining
+        // dead node's flight still answers its members, and its result
+        // ships to the key's surviving (or newly joined) owner instead of
+        // dying with the unreachable shard. When the owner changed while
+        // the flight ran (a membership event mid-flight), the result
+        // crosses nodes like any other kernel — it lands one transfer
+        // latency after the completion, through the same refill machinery,
+        // never instantly.
+        if let Some(e) = entry {
+            if let Some(owner) = self.router.route(e.fingerprint, self.membership.alive()) {
+                if owner == self.node {
+                    self.visible_at.insert(e.fingerprint, done.completion_s);
+                    self.caches[owner].insert(e);
+                } else {
+                    let land_at = done.completion_s + self.config.transfer_latency_s;
+                    self.refill_seq += 1;
+                    self.pending_refills.insert((land_at.to_bits(), self.refill_seq), (owner, e));
+                }
             }
         }
     }
 }
 
-/// Apply the configured node failure if simulated time has reached it: fire
-/// everything due strictly by `ftime` first (the shard is alive for those
-/// events), then drop the shard and record the loss. Consulted at every
-/// arrival *and* before the final drain, so the failure lands at its own
-/// instant even when it falls after the last arrival.
-fn apply_failure_if_due(
-    config: &ClusterConfig,
-    nodes: usize,
-    now: f64,
-    fleets: &mut [FleetSim],
-    hooks: &mut ClusterHooks,
-) {
-    let Some((fnode, ftime)) = config.fail_node_at else { return };
-    if fnode >= nodes || !hooks.alive[fnode] || now < ftime {
-        return;
-    }
-    advance_fleets(fleets, ftime, hooks);
-    hooks.alive[fnode] = false;
-    let lost: Vec<Fingerprint> = hooks.caches[fnode]
-        .entries_coldest_first()
-        .map(|e| e.fingerprint)
-        .collect();
-    hooks.lost_keys.extend(lost);
-    let carry = hooks.caches[fnode].stats.evictions;
-    hooks.caches[fnode] = ResultCache::new(config.service.capacity);
-    let nc = &mut hooks.per_node[fnode];
-    nc.evictions_carry = carry - nc.evictions0;
-    nc.evictions0 = 0;
-    hooks.rebalance = Some(RebalanceReport {
-        failed_node: fnode,
-        failed_at_s: ftime,
-        cache_entries_lost: hooks.lost_keys.len(),
-        rehashed_requests: 0,
-        remissed_flights: 0,
-        remiss_api_usd: 0.0,
-    });
-}
-
-/// Fire every start/completion due by `now` across all node fleets, in
-/// global timestamp order — completions before starts at equal instants,
-/// then node index — so a flight starting on node A at instant `t` observes
-/// exactly the side effects of every flight, on any node, completed by `t`.
-fn advance_fleets(fleets: &mut [FleetSim], now: f64, hooks: &mut ClusterHooks) {
+/// Fire every refill landing, start, and completion due by `now` across all
+/// node fleets, in global timestamp order — refill landings before fleet
+/// events at equal instants, then completions before starts, then node
+/// index — so a flight starting on node A at instant `t` observes exactly
+/// the side effects of every flight completed, and every transfer landed,
+/// by `t`.
+fn advance_cluster(fleets: &mut [FleetSim], now: f64, hooks: &mut ClusterHooks) {
     loop {
+        // (instant, kind, node): kind 0 = refill landing, 1 = completion,
+        // 2 = start.
         let mut best: Option<(f64, u8, usize)> = None;
+        if let Some(((bits, _), _)) = hooks.pending_refills.first_key_value() {
+            best = Some((f64::from_bits(*bits), 0, 0));
+        }
         for (ni, fleet) in fleets.iter().enumerate() {
             if let Some((t, is_completion)) = fleet.next_event() {
-                let key = (t, u8::from(!is_completion), ni);
+                let key = (t, if is_completion { 1 } else { 2 }, ni);
                 let earlier = match best {
                     None => true,
                     Some(b) => key < b,
@@ -461,6 +656,21 @@ fn advance_fleets(fleets: &mut [FleetSim], now: f64, hooks: &mut ClusterHooks) {
             }
         }
         match best {
+            Some((t, 0, _)) if t <= now => {
+                let ((bits, _), (node, entry)) = hooks
+                    .pending_refills
+                    .pop_first()
+                    .expect("the peeked refill is resident");
+                let fp = entry.fingerprint;
+                // The transfer completed: the key is no longer re-missable.
+                for rb in hooks.rebalances.iter_mut() {
+                    rb.tracked.remove(&fp);
+                }
+                if hooks.membership.is_alive(node) {
+                    hooks.visible_at.insert(fp, f64::from_bits(bits));
+                    hooks.caches[node].insert(entry);
+                }
+            }
             Some((t, _, ni)) if t <= now => {
                 hooks.node = ni;
                 let fired = fleets[ni].step(now, &mut *hooks);
@@ -471,29 +681,222 @@ fn advance_fleets(fleets: &mut [FleetSim], now: f64, hooks: &mut ClusterHooks) {
     }
 }
 
-/// The long-lived cluster: a router plus N cache shards and the
-/// cluster-wide cold-cost registry (counterfactual pricing is a property of
-/// fingerprints, not of which shard served them).
+/// Drop `ev.node`'s shard: entries are lost (and tracked so their re-runs
+/// are billed to this failure), accepted work keeps draining, refills in
+/// transit to the dead node die with it. A no-op when the node is already
+/// dead or out of range.
+fn apply_failure(config: &ClusterConfig, ev: MembershipEvent, hooks: &mut ClusterHooks) {
+    if !hooks.membership.set_alive(ev.node, false) {
+        return;
+    }
+    let mut lost: BTreeSet<Fingerprint> = hooks.caches[ev.node]
+        .entries_coldest_first()
+        .map(|e| e.fingerprint)
+        .collect();
+    // Refills still in transit to the dying node are destroyed with it:
+    // they are resident nowhere, so they count among this failure's losses,
+    // and their eventual re-runs bill the failure — not the join that
+    // moved them.
+    hooks.pending_refills.retain(|_, (node, entry)| {
+        if *node == ev.node {
+            lost.insert(entry.fingerprint);
+            false
+        } else {
+            true
+        }
+    });
+    // A key is tracked by at most one rebalance: take the destroyed
+    // transit keys away from their join before this failure claims them.
+    for rb in hooks.rebalances.iter_mut() {
+        for fp in &lost {
+            rb.tracked.remove(fp);
+        }
+    }
+    let carry = hooks.caches[ev.node].stats.evictions;
+    hooks.caches[ev.node] = ResultCache::new(config.service.capacity);
+    let nc = &mut hooks.per_node[ev.node];
+    nc.evictions_carry += carry - nc.evictions0;
+    nc.evictions0 = 0;
+    hooks.rebalances.push(ActiveRebalance {
+        report: RebalanceReport {
+            kind: RebalanceKind::NodeFailure,
+            node: ev.node,
+            at_s: ev.at_s,
+            cache_entries_lost: lost.len(),
+            entries_moved: 0,
+            transfer_s: 0.0,
+            rehashed_requests: 0,
+            remissed_flights: 0,
+            remiss_api_usd: 0.0,
+        },
+        tracked: lost,
+    });
+}
+
+/// Bring `ev.node` (back) in, empty, and start the planned rebalance: every
+/// surviving-shard entry whose key the newcomer now owns is moved out
+/// immediately and lands on the joined node one transfer latency later.
+/// Until a key's refill lands it is tracked — a request for it in the gap
+/// re-misses, billed to this join. A no-op when the node is already alive
+/// or out of range.
+fn apply_join(config: &ClusterConfig, ev: MembershipEvent, hooks: &mut ClusterHooks) {
+    if !hooks.membership.set_alive(ev.node, true) {
+        return;
+    }
+    let alive: Vec<bool> = hooks.membership.alive().to_vec();
+    let router = hooks.router;
+    let land_at = ev.at_s + config.transfer_latency_s.max(0.0);
+    let mut tracked = BTreeSet::new();
+    let mut moved = 0usize;
+    for ni in 0..hooks.caches.len() {
+        if ni == ev.node || !alive[ni] {
+            continue;
+        }
+        let owned: Vec<Fingerprint> = hooks.caches[ni]
+            .entries_coldest_first()
+            .filter(|e| router.route(e.fingerprint, &alive) == Some(ev.node))
+            .map(|e| e.fingerprint)
+            .collect();
+        for fp in owned {
+            if let Some(entry) = hooks.caches[ni].remove(fp) {
+                hooks.refill_seq += 1;
+                hooks
+                    .pending_refills
+                    .insert((land_at.to_bits(), hooks.refill_seq), (ev.node, entry));
+                tracked.insert(fp);
+                moved += 1;
+            }
+        }
+    }
+    hooks.rebalances.push(ActiveRebalance {
+        report: RebalanceReport {
+            kind: RebalanceKind::NodeJoin,
+            node: ev.node,
+            at_s: ev.at_s,
+            cache_entries_lost: 0,
+            entries_moved: moved,
+            transfer_s: moved as f64 * config.transfer_latency_s.max(0.0),
+            rehashed_requests: 0,
+            remissed_flights: 0,
+            remiss_api_usd: 0.0,
+        },
+        tracked,
+    });
+}
+
+/// Apply every scheduled membership event due by `now`, each at its own
+/// instant: everything due strictly by the event instant fires first (the
+/// shard is alive for those events), then the change lands. Consulted at
+/// every arrival *and* before the final drain, so an event past the last
+/// arrival still fires.
+fn apply_membership_due(
+    events: &[MembershipEvent],
+    next: &mut usize,
+    config: &ClusterConfig,
+    now: f64,
+    fleets: &mut [FleetSim],
+    hooks: &mut ClusterHooks,
+) {
+    while *next < events.len() && events[*next].at_s <= now {
+        let ev = events[*next];
+        *next += 1;
+        advance_cluster(fleets, ev.at_s, hooks);
+        match ev.change {
+            MembershipChange::Fail => apply_failure(config, ev, hooks),
+            MembershipChange::Join => apply_join(config, ev, hooks),
+        }
+    }
+}
+
+/// Clamp/normalize a config the way every constructor needs it.
+fn normalized(mut config: ClusterConfig) -> ClusterConfig {
+    config.nodes = config.nodes.max(1);
+    if config.tenants.is_empty() {
+        config.tenants.push(TenantSpec::new("default", 1.0));
+    }
+    // f64::max sends NaN to 0 too, so a poisoned latency or margin cannot
+    // produce NaN completion instants (which would never fire as events).
+    config.warm_locality_margin = config.warm_locality_margin.max(0.0);
+    config.transfer_latency_s = config.transfer_latency_s.max(0.0);
+    config
+}
+
+/// Sorted copy of the config's in-range membership events, instants
+/// clamped to `>= 0` (`f64::max` sends NaN to 0 as well — a poisoned
+/// instant must fire at the epoch start, not silently never).
+fn sorted_events(config: &ClusterConfig) -> Vec<MembershipEvent> {
+    let mut events: Vec<MembershipEvent> = config
+        .events
+        .iter()
+        .copied()
+        .filter(|e| e.node < config.nodes)
+        .map(|mut e| {
+            e.at_s = e.at_s.max(0.0);
+            e
+        })
+        .collect();
+    events.sort_by(|a, b| {
+        a.at_s
+            .total_cmp(&b.at_s)
+            .then(a.node.cmp(&b.node))
+            .then(a.change.cmp(&b.change))
+    });
+    events
+}
+
+/// The membership a cluster starts from at `epoch`: every slot alive,
+/// except nodes whose *first* scheduled event is a join — they start
+/// outside the cluster, entering at their event's instant.
+fn initial_membership(config: &ClusterConfig, epoch: u64) -> Membership {
+    let mut first: BTreeMap<usize, MembershipChange> = BTreeMap::new();
+    for ev in sorted_events(config) {
+        first.entry(ev.node).or_insert(ev.change);
+    }
+    let start_dead: Vec<usize> = first
+        .into_iter()
+        .filter(|(_, c)| *c == MembershipChange::Join)
+        .map(|(n, _)| n)
+        .collect();
+    Membership::with_dead(config.nodes, &start_dead, epoch)
+}
+
+/// The long-lived cluster: a router plus N cache shards, the cluster-wide
+/// cold-cost registry (counterfactual pricing is a property of
+/// fingerprints, not of which shard served them), and the membership whose
+/// epoch versions it all.
 pub struct ClusterService {
+    /// The deployment parameters the service was built with.
     pub config: ClusterConfig,
     router: Router,
     caches: Vec<ResultCache>,
     cold_cost: BTreeMap<Fingerprint, f64>,
+    membership: Membership,
+    /// A restore-time rebalance not yet surfaced in a replay report: the
+    /// first replay after [`ClusterService::restore`] leads with it.
+    restore_rebalance: Option<RebalanceReport>,
 }
 
 impl ClusterService {
-    pub fn new(mut config: ClusterConfig) -> ClusterService {
-        config.nodes = config.nodes.max(1);
-        if config.tenants.is_empty() {
-            config.tenants.push(TenantSpec::new("default", 1.0));
-        }
+    /// A cold cluster under `config` (normalized: at least one node and one
+    /// tenant, non-negative locality margin).
+    pub fn new(config: ClusterConfig) -> ClusterService {
+        let config = normalized(config);
         let caches = (0..config.nodes)
             .map(|_| ResultCache::new(config.service.capacity))
             .collect();
         let router = Router::new(config.nodes);
-        ClusterService { config, router, caches, cold_cost: BTreeMap::new() }
+        let membership = initial_membership(&config, 0);
+        ClusterService {
+            config,
+            router,
+            caches,
+            cold_cost: BTreeMap::new(),
+            membership,
+            restore_rebalance: None,
+        }
     }
 
+    /// The stateless rendezvous router.
     pub fn router(&self) -> &Router {
         &self.router
     }
@@ -503,10 +906,136 @@ impl ClusterService {
         &self.caches[n]
     }
 
+    /// The current membership (alive set + epoch).
+    pub fn membership(&self) -> &Membership {
+        &self.membership
+    }
+
+    /// Rendezvous epoch of the current membership.
+    pub fn epoch(&self) -> u64 {
+        self.membership.epoch()
+    }
+
+    /// Persist the cluster — every shard, the cold-cost registry, and a
+    /// manifest declaring the epoch and node count — into `dir` (created if
+    /// absent; see [`crate::cluster::snapshot`] for the layout). Returns
+    /// the manifest that was written.
+    pub fn snapshot(&self, dir: impl AsRef<Path>) -> Result<snapshot::Manifest> {
+        snapshot::save(dir, &self.caches, &self.cold_cost, self.membership.epoch())
+    }
+
+    /// Rebuild a warm cluster from a snapshot directory. With the manifest's
+    /// node count and an all-alive initial membership, shards load exactly
+    /// as saved and the restored cluster replays bit-identically to the one
+    /// that was snapshotted. Under a *different* node count (or an initial
+    /// membership that keeps some node out), every entry rehashes through
+    /// the router — relative recency is preserved per shard, shards
+    /// concatenating in index order — and the movement is accounted in the
+    /// returned [`RebalanceReport`] (`None` when nothing moved). The
+    /// restored membership resumes the manifest's epoch, +1 when the node
+    /// count changed (that change is itself a membership event).
+    pub fn restore(
+        config: ClusterConfig,
+        dir: impl AsRef<Path>,
+    ) -> Result<(ClusterService, Option<RebalanceReport>)> {
+        let config = normalized(config);
+        let (manifest, shard_caches, cold_cost) =
+            snapshot::load(&dir, config.service.capacity)?;
+        let epoch0 = manifest.epoch + u64::from(manifest.nodes != config.nodes);
+        let membership = initial_membership(&config, epoch0);
+        let router = Router::new(config.nodes);
+        let alive: Vec<bool> = membership.alive().to_vec();
+
+        let mut moved = 0usize;
+        // Entries the per-shard load itself had to drop (a restore capacity
+        // below the snapshot's entry counts) are gone before any rehash.
+        let mut lost: usize =
+            shard_caches.iter().map(|c| c.stats.evictions as usize).sum();
+        let same_layout =
+            manifest.nodes == config.nodes && membership.alive_count() == config.nodes;
+        let caches: Vec<ResultCache> = if same_layout {
+            let mut shards = shard_caches;
+            // Misplaced entries (e.g. a snapshot taken after a failure-era
+            // replay re-homed keys onto survivors) move to their owner.
+            let evictions0: u64 = shards.iter().map(|c| c.stats.evictions).sum();
+            for i in 0..shards.len() {
+                let misplaced: Vec<Fingerprint> = shards[i]
+                    .entries_coldest_first()
+                    .filter(|e| router.route(e.fingerprint, &alive) != Some(i))
+                    .map(|e| e.fingerprint)
+                    .collect();
+                for fp in misplaced {
+                    if let Some(entry) = shards[i].remove(fp) {
+                        let owner = router
+                            .route(fp, &alive)
+                            .expect("an all-alive membership routes every key");
+                        shards[owner].insert(entry);
+                        moved += 1;
+                    }
+                }
+            }
+            // A move can overflow the target shard's capacity: the evicted
+            // entries are genuinely gone, so they count as losses, not as
+            // successful moves.
+            let squeezed: u64 =
+                shards.iter().map(|c| c.stats.evictions).sum::<u64>() - evictions0;
+            lost += squeezed as usize;
+            shards
+        } else {
+            let mut fresh: Vec<ResultCache> = (0..config.nodes)
+                .map(|_| ResultCache::new(config.service.capacity))
+                .collect();
+            for (i, shard) in shard_caches.iter().enumerate() {
+                for e in shard.entries_coldest_first() {
+                    match router.route(e.fingerprint, &alive) {
+                        Some(owner) => {
+                            if owner != i {
+                                moved += 1;
+                            }
+                            fresh[owner].insert(e.clone());
+                        }
+                        None => lost += 1,
+                    }
+                }
+            }
+            // Rehashing into fewer (or fuller) shards can exceed capacity:
+            // whatever the LRU dropped on the way in was not preserved.
+            let squeezed: u64 = fresh.iter().map(|c| c.stats.evictions).sum();
+            lost += squeezed as usize;
+            fresh
+        };
+
+        let report = if moved > 0 || lost > 0 || manifest.nodes != config.nodes {
+            Some(RebalanceReport {
+                kind: RebalanceKind::SnapshotRestore,
+                node: manifest.nodes,
+                at_s: 0.0,
+                cache_entries_lost: lost,
+                entries_moved: moved,
+                transfer_s: moved as f64 * config.transfer_latency_s.max(0.0),
+                rehashed_requests: 0,
+                remissed_flights: 0,
+                remiss_api_usd: 0.0,
+            })
+        } else {
+            None
+        };
+        let svc = ClusterService {
+            config,
+            router,
+            caches,
+            cold_cost,
+            membership,
+            restore_rebalance: report.clone(),
+        };
+        Ok((svc, report))
+    }
+
     /// Replay a traffic trace through the cluster. One event-driven loop
     /// mirrors [`crate::service::KernelService::replay`] per node —
     /// per-arrival admission, single-flight joins, completion-instant side
-    /// effects — plus routing, tenancy, failure, and cross-node warm
+    /// effects — plus routing, tenancy, membership events (failures and
+    /// joins with planned rebalance), and locality-aware cross-node warm
     /// starts. Deterministic per (config, trace); OS `threads` and the
     /// `window` batch size change wall-clock only.
     pub fn replay(
@@ -533,9 +1062,14 @@ impl ClusterService {
         // before the caches are mutably loaned to the hooks.
         let evictions0: Vec<u64> = self.caches.iter().map(|c| c.stats.evictions).collect();
         let config = &self.config;
-        let router = &self.router;
+        let router = self.router;
         let caches = &mut self.caches;
         let cold_cost = &mut self.cold_cost;
+        let events = sorted_events(config);
+        let mut next_event = 0usize;
+        // A restore-time rebalance surfaces in the first replay's report
+        // (its keys are all placed, so nothing is tracked as re-missable).
+        let restore_rb = self.restore_rebalance.take();
 
         let mut fleets: Vec<FleetSim> =
             (0..nodes).map(|_| FleetSim::new(sim_workers)).collect();
@@ -550,6 +1084,7 @@ impl ClusterService {
             trace,
             tasks,
             oracle,
+            router,
             caches,
             cold_cost,
             stats: ReplayStats::new(trace.len()),
@@ -569,20 +1104,26 @@ impl ClusterService {
                     evictions_carry: 0,
                 })
                 .collect(),
-            alive: vec![true; nodes],
+            membership: self.membership.clone(),
             node: 0,
             cross_node_warm: 0,
-            rebalance: None,
-            lost_keys: BTreeSet::new(),
+            rebalances: Vec::new(),
+            remiss_open: BTreeMap::new(),
+            pending_refills: BTreeMap::new(),
+            refill_seq: 0,
         };
+        if let Some(rb) = restore_rb {
+            hooks.rebalances.push(ActiveRebalance { report: rb, tracked: BTreeSet::new() });
+        }
 
         for (w0, win) in trace.chunks(window).enumerate().map(|(i, w)| (i * window, w)) {
             // ---- speculation: batch-run predicted misses on OS threads ---
             {
                 let caches: &[ResultCache] = hooks.caches;
-                let alive = &hooks.alive;
+                let alive: Vec<bool> = hooks.membership.alive().to_vec();
                 let fleets = &fleets;
                 let c = &config.service;
+                let margin = config.warm_locality_margin;
                 // Sweep speculations that never became flights (their
                 // request hit, joined, or was shed) so the memo stays
                 // bounded by the backlog, not the trace.
@@ -590,7 +1131,7 @@ impl ClusterService {
                     fleets.iter().any(|f| f.is_waiting(fp) || f.is_running(fp))
                 });
                 speculate_window(&mut hooks.memo, threads, tasks, oracle, win, c, |fp, req| {
-                    let ni = router.route(fp, alive)?;
+                    let ni = router.route(fp, &alive)?;
                     if caches[ni].peek(fp).is_some()
                         || fleets[ni].is_waiting(fp)
                         || fleets[ni].is_running(fp)
@@ -609,7 +1150,9 @@ impl ClusterService {
                             c,
                             &tasks[req.task_index].id(),
                             req.gpu.key,
-                            alive,
+                            &alive,
+                            ni,
+                            margin,
                         ) {
                             Some((_, entry)) => c.warm_start_from(base, entry),
                             None => base,
@@ -623,26 +1166,29 @@ impl ClusterService {
                 let seq = (w0 + off) as u64;
                 let now = req.arrival_s;
                 let t = req.tenant.min(n_tenants - 1);
-                // The failure event: drop the node's shard at its own
-                // instant, remember its keys, keep serving its accepted
-                // work (graceful drain). Starts between the failure and
-                // this arrival already see the node dead.
-                apply_failure_if_due(config, nodes, now, &mut fleets, &mut hooks);
-                // Fire every start/completion due by `now`, cluster-wide,
-                // so this arrival observes exactly the flights completed by
-                // its own instant.
-                advance_fleets(&mut fleets, now, &mut hooks);
+                // Membership events due by this arrival land at their own
+                // instants (graceful drain for a failing node's accepted
+                // work; refills in flight for a joining one). Starts between
+                // an event and this arrival already see the new membership.
+                apply_membership_due(
+                    &events,
+                    &mut next_event,
+                    config,
+                    now,
+                    &mut fleets,
+                    &mut hooks,
+                );
+                // Fire every refill/start/completion due by `now`,
+                // cluster-wide, so this arrival observes exactly the events
+                // landed by its own instant.
+                advance_cluster(&mut fleets, now, &mut hooks);
                 let fp = config.service.fingerprint_of(&tasks[req.task_index], req.gpu);
-                if let Some(rb) = hooks.rebalance.as_mut() {
-                    if router.route_any(fp) == rb.failed_node {
-                        rb.rehashed_requests += 1;
-                    }
-                }
+                hooks.count_rehashed(fp);
                 // Every arrival is this tenant's traffic, even one the
                 // cluster cannot route (served + rejected == requests must
                 // hold per tenant).
                 tenant_requests[t] += 1;
-                let ni = match router.route(fp, &hooks.alive) {
+                let ni = match router.route(fp, hooks.membership.alive()) {
                     Some(n) => n,
                     None => {
                         // Every node is dead: shed unconditionally.
@@ -693,6 +1239,9 @@ impl ClusterService {
                         tenant_rejected[t] += 1;
                         tenant_quota_shed[t] += 1;
                     } else {
+                        // A new flight for a key some rebalance made
+                        // unreachable is that rebalance's re-miss.
+                        hooks.charge_if_tracked(fp);
                         fleet.submit(SimFlight {
                             fingerprint: fp,
                             priority: req.priority,
@@ -710,12 +1259,20 @@ impl ClusterService {
                 nc.peak_depth = nc.peak_depth.max(fleet.depth());
             }
         }
-        // Drain: serve everything still waiting or running at end of trace.
-        // A failure instant past the last arrival still fires here — the
-        // drain advances simulated time through it.
-        apply_failure_if_due(config, nodes, f64::INFINITY, &mut fleets, &mut hooks);
-        advance_fleets(&mut fleets, f64::INFINITY, &mut hooks);
+        // Drain: serve everything still waiting, running, or in transit at
+        // end of trace. A membership event past the last arrival still
+        // fires here — the drain advances simulated time through it.
+        apply_membership_due(
+            &events,
+            &mut next_event,
+            config,
+            f64::INFINITY,
+            &mut fleets,
+            &mut hooks,
+        );
+        advance_cluster(&mut fleets, f64::INFINITY, &mut hooks);
         debug_assert!(hooks.pending.is_empty(), "every started flight completed");
+        debug_assert!(hooks.pending_refills.is_empty(), "every refill landed");
 
         let ReplayStats {
             latencies,
@@ -759,7 +1316,7 @@ impl ClusterService {
                 let node_makespan = fleets[i].makespan_s();
                 NodeReport {
                     node: i,
-                    alive: hooks.alive[i],
+                    alive: hooks.membership.is_alive(i),
                     requests: s.requests,
                     cache_hits: s.hits,
                     shared: s.shared,
@@ -863,14 +1420,17 @@ impl ClusterService {
             },
         };
 
+        let epoch = hooks.membership.epoch();
+        self.membership = hooks.membership.clone();
         ClusterReport {
             overall,
             nodes,
+            epoch,
             per_node,
             per_tenant,
             cross_node_warm: hooks.cross_node_warm,
             quota_shed: tenant_quota_shed.iter().sum(),
-            rebalance: hooks.rebalance,
+            rebalances: hooks.rebalances.into_iter().map(|rb| rb.report).collect(),
         }
     }
 }
@@ -879,6 +1439,7 @@ impl ClusterService {
 mod tests {
     use super::*;
     use crate::gpu;
+    use crate::kernel::KernelConfig;
     use crate::service::traffic::{generate, TrafficConfig};
     use crate::tasks;
     use crate::workflow::NoOracle;
@@ -947,7 +1508,8 @@ mod tests {
             r.overall.requests as u64,
             "every request is a hit, a follower, a flight, or shed"
         );
-        assert!(r.rebalance.is_none());
+        assert!(r.rebalances.is_empty());
+        assert_eq!(r.epoch, 0, "no membership event fired");
         assert_eq!(r.quota_shed, 0, "quotas are off by default");
     }
 
@@ -976,15 +1538,18 @@ mod tests {
         let mut cluster = ClusterService::new(ClusterConfig {
             nodes: 1,
             // Long after the lone flight completes (~26 simulated minutes).
-            fail_node_at: Some((0, 100_000.0)),
+            events: vec![MembershipEvent::fail(0, 100_000.0)],
             service: probe_cfg,
             ..ClusterConfig::default()
         });
         let r = cluster.replay(&trace, &suite, &NoOracle);
         assert_eq!(r.overall.flights_run, 1, "the pre-failure flight served normally");
-        let rb = r.rebalance.expect("the drain reaches the failure instant");
-        assert_eq!(rb.failed_node, 0);
+        assert_eq!(r.rebalances.len(), 1, "the drain reaches the failure instant");
+        let rb = &r.rebalances[0];
+        assert_eq!(rb.kind, RebalanceKind::NodeFailure);
+        assert_eq!(rb.node, 0);
         assert_eq!(rb.cache_entries_lost, 1, "the completed flight's entry was resident");
+        assert_eq!(r.epoch, 1);
         assert!(!r.per_node[0].alive);
         assert_eq!(r.per_node[0].cache_entries, 0);
     }
@@ -1001,7 +1566,7 @@ mod tests {
         }];
         let mut cluster = ClusterService::new(ClusterConfig {
             nodes: 1,
-            fail_node_at: Some((0, 0.0)),
+            events: vec![MembershipEvent::fail(0, 0.0)],
             service: ServiceConfig { threads: 1, ..ServiceConfig::default() },
             ..ClusterConfig::default()
         });
@@ -1013,5 +1578,80 @@ mod tests {
         assert_eq!(r.per_tenant[0].requests, 1);
         assert_eq!(r.per_tenant[0].rejected, 1);
         assert_eq!(r.per_tenant[0].served, 0);
+    }
+
+    #[test]
+    fn a_node_whose_first_event_is_a_join_starts_outside_the_cluster() {
+        let config = normalized(ClusterConfig {
+            nodes: 3,
+            events: vec![
+                MembershipEvent::join(2, 500.0),
+                MembershipEvent::fail(1, 100.0),
+                MembershipEvent::join(1, 900.0),
+            ],
+            ..ClusterConfig::default()
+        });
+        let m = initial_membership(&config, 0);
+        assert!(m.is_alive(0));
+        assert!(m.is_alive(1), "node 1 fails first, so it starts alive");
+        assert!(!m.is_alive(2), "node 2's first event is a join: it starts out");
+        assert_eq!(m.epoch(), 0, "initial deadness is not a membership change");
+        // Out-of-range events are ignored entirely.
+        let config = normalized(ClusterConfig {
+            nodes: 2,
+            events: vec![MembershipEvent::join(9, 1.0)],
+            ..ClusterConfig::default()
+        });
+        assert_eq!(initial_membership(&config, 0).alive_count(), 2);
+    }
+
+    fn locality_entry(fp: u64, gpu: &str, speedup: f64) -> CacheEntry {
+        CacheEntry {
+            fingerprint: Fingerprint(fp),
+            task_id: "L1-95".to_string(),
+            gpu_key: gpu.to_string(),
+            strategy: "CudaForge".to_string(),
+            coder: "OpenAI-o3".to_string(),
+            judge: "OpenAI-o3".to_string(),
+            best_speedup: speedup,
+            best_config: KernelConfig::naive(),
+            api_usd: 0.30,
+            cold_api_usd: 0.30,
+            wall_s: 1590.0,
+            rounds_to_best: 6,
+        }
+    }
+
+    #[test]
+    fn locality_margin_keeps_marginally_better_seeds_local() {
+        let c = ServiceConfig::default();
+        let mut own = ResultCache::new(8);
+        own.insert(locality_entry(1, "a100", 2.0));
+        let mut remote = ResultCache::new(8);
+        remote.insert(locality_entry(2, "h100", 2.2));
+        let caches = vec![own, remote];
+        let alive = [true, true];
+
+        // Margin 0: any strictly faster remote wins the transfer.
+        let (node, e) =
+            warm_candidate_across(&caches, &c, "L1-95", "rtx6000", &alive, 0, 0.0).unwrap();
+        assert_eq!((node, e.fingerprint), (1, Fingerprint(2)));
+        // A 25% margin: 2.2 < 2.0 * 1.25, so the own-shard seed wins.
+        let (node, e) =
+            warm_candidate_across(&caches, &c, "L1-95", "rtx6000", &alive, 0, 0.25).unwrap();
+        assert_eq!((node, e.fingerprint), (0, Fingerprint(1)));
+        // From the other node's perspective its own seed is the fast one:
+        // locality never pays the transfer.
+        let (node, _) =
+            warm_candidate_across(&caches, &c, "L1-95", "rtx6000", &alive, 1, 0.25).unwrap();
+        assert_eq!(node, 1);
+        // A dead own shard cannot donate: the remote wins regardless.
+        let (node, _) =
+            warm_candidate_across(&caches, &c, "L1-95", "rtx6000", &[false, true], 0, 9.0)
+                .unwrap();
+        assert_eq!(node, 1);
+        // No candidate anywhere.
+        assert!(warm_candidate_across(&caches, &c, "L9-99", "rtx6000", &alive, 0, 0.0)
+            .is_none());
     }
 }

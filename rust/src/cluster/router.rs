@@ -15,8 +15,93 @@
 //!
 //! Scores are compared as `(score, node)` so even a (vanishingly unlikely)
 //! 64-bit score tie breaks deterministically.
+//!
+//! [`Membership`] is the mutable half of routing: which node slots are
+//! currently alive, plus a monotonically increasing **epoch** that counts
+//! membership changes. The epoch never affects where a key routes (routing
+//! is a pure function of the alive set); it exists so that *state derived
+//! from a membership* — most importantly shard snapshots — can declare
+//! which membership history produced it, and so operators can see at a
+//! glance whether two cluster states are comparable.
 
 use crate::service::fingerprint::{fnv_extend, Fingerprint, FNV_OFFSET};
+
+/// The cluster's mutable membership: per-slot aliveness plus an epoch
+/// counter bumped by every applied change. Node *slots* are fixed at
+/// construction (the router hashes over slot indices); membership only
+/// toggles which slots currently serve traffic.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Membership {
+    alive: Vec<bool>,
+    epoch: u64,
+}
+
+impl Membership {
+    /// A fresh membership with every one of `nodes` slots alive, at epoch 0
+    /// (`nodes` is clamped to at least 1).
+    pub fn all_alive(nodes: usize) -> Membership {
+        Membership { alive: vec![true; nodes.max(1)], epoch: 0 }
+    }
+
+    /// Rebuild a membership at an explicit epoch — how a snapshot restore
+    /// resumes the epoch history its manifest recorded.
+    pub fn with_epoch(nodes: usize, epoch: u64) -> Membership {
+        Membership { epoch, ..Membership::all_alive(nodes) }
+    }
+
+    /// [`Membership::with_epoch`], with the listed slots starting dead.
+    /// Starting state is not a membership *change*, so the epoch is taken
+    /// as given (out-of-range slots in `dead` are ignored).
+    pub fn with_dead(nodes: usize, dead: &[usize], epoch: u64) -> Membership {
+        let mut m = Membership::with_epoch(nodes, epoch);
+        for n in dead {
+            if let Some(slot) = m.alive.get_mut(*n) {
+                *slot = false;
+            }
+        }
+        m
+    }
+
+    /// Total node slots (alive or not).
+    pub fn nodes(&self) -> usize {
+        self.alive.len()
+    }
+
+    /// The alive mask, in the shape [`Router::route`] consumes.
+    pub fn alive(&self) -> &[bool] {
+        &self.alive
+    }
+
+    /// Whether slot `node` is currently alive (out-of-range slots are not).
+    pub fn is_alive(&self, node: usize) -> bool {
+        self.alive.get(node).copied().unwrap_or(false)
+    }
+
+    /// How many slots are currently alive.
+    pub fn alive_count(&self) -> usize {
+        self.alive.iter().filter(|a| **a).count()
+    }
+
+    /// Membership changes applied so far (including any history a snapshot
+    /// restore resumed).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Mark slot `node` alive or dead. A no-op change (already in that
+    /// state, or out of range) returns `false` and does *not* bump the
+    /// epoch; an applied change returns `true` and does.
+    pub fn set_alive(&mut self, node: usize, alive: bool) -> bool {
+        match self.alive.get_mut(node) {
+            Some(slot) if *slot != alive => {
+                *slot = alive;
+                self.epoch += 1;
+                true
+            }
+            _ => false,
+        }
+    }
+}
 
 /// Stateless rendezvous router over `nodes` simulated nodes.
 #[derive(Clone, Copy, Debug)]
@@ -30,6 +115,7 @@ impl Router {
         Router { nodes: nodes.max(1) }
     }
 
+    /// Node slots this router hashes over.
     pub fn nodes(&self) -> usize {
         self.nodes
     }
@@ -110,6 +196,24 @@ mod tests {
                 assert_eq!(before, after, "keys on surviving nodes never move");
             }
         }
+    }
+
+    #[test]
+    fn membership_epoch_counts_only_applied_changes() {
+        let mut m = Membership::all_alive(3);
+        assert_eq!((m.nodes(), m.alive_count(), m.epoch()), (3, 3, 0));
+        assert!(m.set_alive(1, false), "killing an alive node is a change");
+        assert_eq!(m.epoch(), 1);
+        assert!(!m.is_alive(1));
+        assert!(!m.set_alive(1, false), "already dead: no-op, no epoch bump");
+        assert_eq!(m.epoch(), 1);
+        assert!(m.set_alive(1, true), "rejoin is a change");
+        assert_eq!(m.epoch(), 2);
+        assert!(!m.set_alive(7, false), "out-of-range slots are untouchable");
+        assert_eq!(m.epoch(), 2);
+        // A restored membership resumes its manifest's epoch history.
+        let r = Membership::with_epoch(2, 9);
+        assert_eq!((r.nodes(), r.epoch(), r.alive_count()), (2, 9, 2));
     }
 
     #[test]

@@ -1,0 +1,475 @@
+//! Shard-aware cluster snapshots: a manifest plus one JSONL file per shard.
+//!
+//! The single-node service snapshots its one cache as one JSONL file; a
+//! cluster's state is N per-shard caches **plus** the membership history
+//! that placed every key — restoring shard files under a different node
+//! count silently mis-places every moved key unless the restore knows what
+//! it is looking at. The on-disk layout therefore separates *data* from
+//! *description*:
+//!
+//! - `manifest.json` — format version, the cache wire version
+//!   ([`crate::service::cache::SNAPSHOT_VERSION`]), the rendezvous
+//!   **epoch** (how many membership changes produced this state), the node
+//!   count, and the file name + entry count of every shard file and of the
+//!   cold-cost registry.
+//! - `shard-<i>.jsonl` — node `i`'s cache in the single-node wire format,
+//!   its header stamped with `{epoch, shard, nodes}` so each file declares
+//!   which manifest it belongs to.
+//! - `cold-cost.jsonl` — the cluster-wide per-fingerprint cold-run spend
+//!   registry. Counterfactual pricing is cluster state, not shard state:
+//!   without it a restored cluster would re-price warm runs against their
+//!   own spend and a restored replay could not be bit-identical.
+//!
+//! Restores are **paranoid by design**: a manifest whose declared shard
+//! count, epoch, or entry counts disagree with the files it names is
+//! rejected with the offending path in the error chain — a half-copied or
+//! hand-edited snapshot directory must fail loudly, not serve a cluster
+//! whose shards disagree about history. See `docs/snapshots.md` for the
+//! schema and compatibility rules.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::service::cache::{ResultCache, SNAPSHOT_VERSION};
+use crate::service::fingerprint::Fingerprint;
+use crate::util::json::Json;
+
+/// Manifest wire-format version (the first thing `restore` checks).
+pub const MANIFEST_VERSION: u32 = 1;
+
+/// File name of the manifest inside a snapshot directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// One data file the manifest describes: its name (relative to the
+/// snapshot directory) and how many entry lines it holds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardFile {
+    /// File name relative to the snapshot directory.
+    pub file: String,
+    /// Entry lines the file holds (excluding its header line).
+    pub entries: usize,
+}
+
+impl ShardFile {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("file", Json::str(self.file.clone())),
+            ("entries", Json::num(self.entries as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Option<ShardFile> {
+        Some(ShardFile {
+            file: v.get("file")?.as_str()?.to_string(),
+            entries: v.get("entries")?.as_usize()?,
+        })
+    }
+}
+
+/// The snapshot directory's self-description. Everything `restore` needs to
+/// decide whether the files are loadable, and how much key movement a
+/// membership change since the save implies.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    /// [`MANIFEST_VERSION`] at save time.
+    pub manifest_version: u32,
+    /// The cache wire version ([`SNAPSHOT_VERSION`]) the shard files use.
+    pub snapshot_version: u32,
+    /// Rendezvous epoch of the membership that produced this state.
+    pub epoch: u64,
+    /// Node count the shards were laid out for.
+    pub nodes: usize,
+    /// Per-shard data files, index-aligned with node slots.
+    pub shards: Vec<ShardFile>,
+    /// The cluster-wide cold-cost registry file.
+    pub cold_cost: ShardFile,
+}
+
+impl Manifest {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("manifest_version", Json::num(self.manifest_version as f64)),
+            ("snapshot_version", Json::num(self.snapshot_version as f64)),
+            ("epoch", Json::num(self.epoch as f64)),
+            ("nodes", Json::num(self.nodes as f64)),
+            (
+                "shards",
+                Json::Arr(self.shards.iter().map(ShardFile::to_json).collect()),
+            ),
+            ("cold_cost", self.cold_cost.to_json()),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Option<Manifest> {
+        Some(Manifest {
+            manifest_version: v.get("manifest_version")?.as_usize()? as u32,
+            snapshot_version: v.get("snapshot_version")?.as_usize()? as u32,
+            epoch: v.get("epoch")?.as_f64()? as u64,
+            nodes: v.get("nodes")?.as_usize()?,
+            shards: v
+                .get("shards")?
+                .as_arr()?
+                .iter()
+                .map(ShardFile::from_json)
+                .collect::<Option<Vec<_>>>()?,
+            cold_cost: ShardFile::from_json(v.get("cold_cost")?)?,
+        })
+    }
+}
+
+/// Whether `dir` looks like a snapshot directory (its manifest exists).
+pub fn exists(dir: impl AsRef<Path>) -> bool {
+    dir.as_ref().join(MANIFEST_FILE).exists()
+}
+
+/// Read and structurally validate `dir`'s manifest: version gates, and the
+/// declared shard list must be self-consistent (`shards.len() == nodes`).
+/// File-level cross-checks happen in [`load`].
+pub fn read_manifest(dir: impl AsRef<Path>) -> Result<Manifest> {
+    let path = dir.as_ref().join(MANIFEST_FILE);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading cluster manifest {}", path.display()))?;
+    let v = Json::parse(&text)
+        .map_err(|e| anyhow!("cluster manifest {}: {e}", path.display()))?;
+    let m = Manifest::from_json(&v)
+        .ok_or_else(|| anyhow!("cluster manifest {}: missing fields", path.display()))?;
+    if m.manifest_version != MANIFEST_VERSION {
+        bail!(
+            "cluster manifest {} has manifest_version {} unsupported by this build \
+             (which reads {MANIFEST_VERSION}) — delete the snapshot and re-warm",
+            path.display(),
+            m.manifest_version
+        );
+    }
+    if m.snapshot_version != SNAPSHOT_VERSION {
+        bail!(
+            "cluster manifest {} declares cache snapshot_version {} but this build \
+             reads {SNAPSHOT_VERSION} (fingerprints would never hit) — delete the \
+             snapshot and re-warm",
+            path.display(),
+            m.snapshot_version
+        );
+    }
+    if m.nodes == 0 {
+        bail!("cluster manifest {} declares zero nodes", path.display());
+    }
+    if m.shards.len() != m.nodes {
+        bail!(
+            "cluster manifest {} declares {} nodes but lists {} shard files — \
+             the manifest disagrees with its own file list",
+            path.display(),
+            m.nodes,
+            m.shards.len()
+        );
+    }
+    Ok(m)
+}
+
+/// Read `path` once, parse its JSONL header line, and count its entry
+/// lines — the cross-check half of a shard restore, run *before* the cache
+/// rebuild so a mismatched file is named without partially loading it. The
+/// full text is returned so the rebuild consumes the same single read.
+fn audit_jsonl(path: &Path) -> Result<(Json, usize, String)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading snapshot file {}", path.display()))?;
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header_line = lines
+        .next()
+        .ok_or_else(|| anyhow!("snapshot file {} is empty", path.display()))?;
+    let header = Json::parse(header_line)
+        .map_err(|e| anyhow!("snapshot file {} header: {e}", path.display()))?;
+    let entries = lines.count();
+    Ok((header, entries, text))
+}
+
+/// Verify one stamped header field against the manifest's declaration.
+fn check_header_field(path: &Path, header: &Json, name: &str, want: f64) -> Result<()> {
+    match header.get(name).and_then(|v| v.as_f64()) {
+        Some(got) if got == want => Ok(()),
+        Some(got) => bail!(
+            "snapshot shard {} declares {name} {got} but the manifest says {want} — \
+             the manifest disagrees with its own file list",
+            path.display()
+        ),
+        None => bail!(
+            "snapshot shard {} has no {name} stamp (not written by a cluster \
+             snapshot, or truncated)",
+            path.display()
+        ),
+    }
+}
+
+/// Write the cluster's shards, cold-cost registry, and manifest into `dir`
+/// (created if absent). The manifest is written **last**, so an interrupted
+/// save leaves a directory [`exists`] rejects rather than a plausible but
+/// incomplete snapshot. Returns the manifest that was written.
+pub fn save(
+    dir: impl AsRef<Path>,
+    caches: &[ResultCache],
+    cold_cost: &BTreeMap<Fingerprint, f64>,
+    epoch: u64,
+) -> Result<Manifest> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating snapshot directory {}", dir.display()))?;
+    let nodes = caches.len();
+    let mut shards = Vec::with_capacity(nodes);
+    for (i, cache) in caches.iter().enumerate() {
+        let file = format!("shard-{i}.jsonl");
+        cache.snapshot_with_header(
+            dir.join(&file),
+            vec![
+                ("epoch", Json::num(epoch as f64)),
+                ("shard", Json::num(i as f64)),
+                ("nodes", Json::num(nodes as f64)),
+            ],
+        )?;
+        shards.push(ShardFile { file, entries: cache.len() });
+    }
+
+    let cold_file = "cold-cost.jsonl".to_string();
+    let cold_path = dir.join(&cold_file);
+    let mut out = Json::obj(vec![
+        ("snapshot_version", Json::num(SNAPSHOT_VERSION as f64)),
+        ("epoch", Json::num(epoch as f64)),
+    ])
+    .to_string();
+    out.push('\n');
+    for (fp, usd) in cold_cost {
+        out.push_str(
+            &Json::obj(vec![
+                ("fingerprint", Json::str(fp.to_string())),
+                ("cold_api_usd", Json::num(*usd)),
+            ])
+            .to_string(),
+        );
+        out.push('\n');
+    }
+    std::fs::write(&cold_path, out)
+        .with_context(|| format!("writing cold-cost registry {}", cold_path.display()))?;
+
+    let manifest = Manifest {
+        manifest_version: MANIFEST_VERSION,
+        snapshot_version: SNAPSHOT_VERSION,
+        epoch,
+        nodes,
+        shards,
+        cold_cost: ShardFile { file: cold_file, entries: cold_cost.len() },
+    };
+    let mpath = dir.join(MANIFEST_FILE);
+    std::fs::write(&mpath, format!("{}\n", manifest.to_json()))
+        .with_context(|| format!("writing cluster manifest {}", mpath.display()))?;
+    Ok(manifest)
+}
+
+/// Load a snapshot directory back into per-shard caches (each restored at
+/// `capacity`) plus the cold-cost registry, cross-checking every file
+/// against the manifest: each shard's stamped epoch / shard index / node
+/// count and its entry count must match what the manifest declares, with
+/// the offending path in the error chain otherwise. Shard *placement* is
+/// exactly as saved — rehashing keys for a different node count is the
+/// caller's job (`ClusterService::restore`), which is also where the
+/// movement gets accounted.
+pub fn load(
+    dir: impl AsRef<Path>,
+    capacity: usize,
+) -> Result<(Manifest, Vec<ResultCache>, BTreeMap<Fingerprint, f64>)> {
+    let dir = dir.as_ref();
+    let manifest = read_manifest(dir)?;
+    let mut caches = Vec::with_capacity(manifest.nodes);
+    for (i, shard) in manifest.shards.iter().enumerate() {
+        let path: PathBuf = dir.join(&shard.file);
+        let (header, n_entries, text) = audit_jsonl(&path)?;
+        check_header_field(&path, &header, "epoch", manifest.epoch as f64)?;
+        check_header_field(&path, &header, "shard", i as f64)?;
+        check_header_field(&path, &header, "nodes", manifest.nodes as f64)?;
+        if n_entries != shard.entries {
+            bail!(
+                "snapshot shard {} holds {n_entries} entries but the manifest \
+                 declares {} — the manifest disagrees with its own file list",
+                path.display(),
+                shard.entries
+            );
+        }
+        caches.push(ResultCache::restore_from_str(&text, capacity, &path)?);
+    }
+
+    let cold_path = dir.join(&manifest.cold_cost.file);
+    let (header, n_entries, text) = audit_jsonl(&cold_path)?;
+    check_header_field(&cold_path, &header, "epoch", manifest.epoch as f64)?;
+    if n_entries != manifest.cold_cost.entries {
+        bail!(
+            "cold-cost registry {} holds {n_entries} entries but the manifest \
+             declares {} — the manifest disagrees with its own file list",
+            cold_path.display(),
+            manifest.cold_cost.entries
+        );
+    }
+    let mut cold_cost = BTreeMap::new();
+    for (i, line) in text.lines().enumerate().skip(1) {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| {
+            anyhow!("cold-cost registry {} line {}: {e}", cold_path.display(), i + 1)
+        })?;
+        let fp = v
+            .get("fingerprint")
+            .and_then(|x| x.as_str())
+            .and_then(Fingerprint::parse);
+        let usd = v.get("cold_api_usd").and_then(|x| x.as_f64());
+        match (fp, usd) {
+            (Some(fp), Some(usd)) => {
+                cold_cost.insert(fp, usd);
+            }
+            _ => bail!(
+                "cold-cost registry {} line {}: missing fields",
+                cold_path.display(),
+                i + 1
+            ),
+        }
+    }
+    Ok((manifest, caches, cold_cost))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::KernelConfig;
+    use crate::service::cache::CacheEntry;
+
+    fn entry(fp: u64, task: &str, gpu: &str) -> CacheEntry {
+        CacheEntry {
+            fingerprint: Fingerprint(fp),
+            task_id: task.to_string(),
+            gpu_key: gpu.to_string(),
+            strategy: "CudaForge".to_string(),
+            coder: "OpenAI-o3".to_string(),
+            judge: "OpenAI-o3".to_string(),
+            best_speedup: 1.5,
+            best_config: KernelConfig::naive(),
+            api_usd: 0.30,
+            cold_api_usd: 0.30,
+            wall_s: 1590.0,
+            rounds_to_best: 6,
+        }
+    }
+
+    fn fresh_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn two_shards() -> (Vec<ResultCache>, BTreeMap<Fingerprint, f64>) {
+        let mut a = ResultCache::new(8);
+        a.insert(entry(1, "L1-1", "rtx6000"));
+        a.insert(entry(2, "L1-2", "rtx6000"));
+        let mut b = ResultCache::new(8);
+        b.insert(entry(3, "L1-3", "a100"));
+        let mut cold = BTreeMap::new();
+        cold.insert(Fingerprint(1), 0.31);
+        cold.insert(Fingerprint(3), 0.28);
+        (vec![a, b], cold)
+    }
+
+    #[test]
+    fn save_load_round_trips_shards_and_cold_cost() {
+        let dir = fresh_dir("cudaforge_snapdir_roundtrip");
+        let (caches, cold) = two_shards();
+        let m = save(&dir, &caches, &cold, 5).unwrap();
+        assert_eq!(m.epoch, 5);
+        assert_eq!(m.nodes, 2);
+        assert_eq!(m.shards[0].entries, 2);
+        assert_eq!(m.shards[1].entries, 1);
+        assert_eq!(m.cold_cost.entries, 2);
+        assert!(exists(&dir));
+
+        let (m2, restored, cold2) = load(&dir, 8).unwrap();
+        assert_eq!(m2, m);
+        assert_eq!(restored.len(), 2);
+        assert_eq!(restored[0].len(), 2);
+        assert_eq!(restored[1].len(), 1);
+        assert_eq!(restored[0].peek(Fingerprint(2)), caches[0].peek(Fingerprint(2)));
+        assert_eq!(restored[1].peek(Fingerprint(3)), caches[1].peek(Fingerprint(3)));
+        assert_eq!(cold2, cold);
+    }
+
+    #[test]
+    fn manifest_node_count_must_match_its_shard_list() {
+        let dir = fresh_dir("cudaforge_snapdir_nodecount");
+        let (caches, cold) = two_shards();
+        let mut m = save(&dir, &caches, &cold, 0).unwrap();
+        // Corrupt: claim three nodes while listing two shard files.
+        m.nodes = 3;
+        std::fs::write(dir.join(MANIFEST_FILE), format!("{}\n", m.to_json())).unwrap();
+        let err = format!("{:#}", load(&dir, 8).unwrap_err());
+        assert!(err.contains("manifest.json"), "{err}");
+        assert!(err.contains("disagrees with its own file list"), "{err}");
+    }
+
+    #[test]
+    fn shard_epoch_stamp_must_match_the_manifest() {
+        let dir = fresh_dir("cudaforge_snapdir_epoch");
+        let (caches, cold) = two_shards();
+        save(&dir, &caches, &cold, 4).unwrap();
+        // Re-stamp shard 1 as if it came from a different epoch's save.
+        caches[1]
+            .snapshot_with_header(
+                dir.join("shard-1.jsonl"),
+                vec![
+                    ("epoch", Json::num(9.0)),
+                    ("shard", Json::num(1.0)),
+                    ("nodes", Json::num(2.0)),
+                ],
+            )
+            .unwrap();
+        let err = format!("{:#}", load(&dir, 8).unwrap_err());
+        assert!(err.contains("shard-1.jsonl"), "offending path named: {err}");
+        assert!(err.contains("epoch"), "{err}");
+    }
+
+    #[test]
+    fn entry_count_mismatch_names_the_shard_file() {
+        let dir = fresh_dir("cudaforge_snapdir_entrycount");
+        let (caches, cold) = two_shards();
+        save(&dir, &caches, &cold, 0).unwrap();
+        // Truncate shard 0 to its header plus one entry (manifest says 2).
+        let text = std::fs::read_to_string(dir.join("shard-0.jsonl")).unwrap();
+        let kept: Vec<&str> = text.lines().take(2).collect();
+        std::fs::write(dir.join("shard-0.jsonl"), format!("{}\n", kept.join("\n"))).unwrap();
+        let err = format!("{:#}", load(&dir, 8).unwrap_err());
+        assert!(err.contains("shard-0.jsonl"), "{err}");
+        assert!(err.contains("declares 2"), "{err}");
+    }
+
+    #[test]
+    fn missing_files_and_versions_fail_loudly() {
+        let dir = fresh_dir("cudaforge_snapdir_missing");
+        assert!(!exists(&dir));
+        assert!(read_manifest(&dir).is_err(), "no manifest at all");
+
+        let (caches, cold) = two_shards();
+        let mut m = save(&dir, &caches, &cold, 0).unwrap();
+        std::fs::remove_file(dir.join("shard-1.jsonl")).unwrap();
+        let err = format!("{:#}", load(&dir, 8).unwrap_err());
+        assert!(err.contains("shard-1.jsonl"), "{err}");
+
+        // A future manifest version is rejected up front.
+        m.manifest_version = MANIFEST_VERSION + 1;
+        std::fs::write(dir.join(MANIFEST_FILE), format!("{}\n", m.to_json())).unwrap();
+        let err = format!("{:#}", read_manifest(&dir).unwrap_err());
+        assert!(err.contains("manifest_version"), "{err}");
+
+        // A cache wire-format mismatch is diagnosed at the manifest, before
+        // any shard file is touched.
+        m.manifest_version = MANIFEST_VERSION;
+        m.snapshot_version = SNAPSHOT_VERSION + 1;
+        std::fs::write(dir.join(MANIFEST_FILE), format!("{}\n", m.to_json())).unwrap();
+        let err = format!("{:#}", read_manifest(&dir).unwrap_err());
+        assert!(err.contains("snapshot_version"), "{err}");
+    }
+}

@@ -10,8 +10,10 @@
 //! - L5 (`cluster`): the sharded multi-tenant cluster simulation — a
 //!   rendezvous-hash router over N simulated nodes, each owning its own
 //!   cache shard / single-flight queue / GPU-fleet slice, with weighted
-//!   per-tenant fair-share quotas under overload, node-failure/rebalance
-//!   accounting, and cross-node warm-start routing.
+//!   per-tenant fair-share quotas under overload, elastic membership
+//!   (scheduled node failures *and* joins with planned-rebalance
+//!   accounting, epoch-versioned), shard-aware snapshot/restore, and
+//!   locality-aware cross-node warm-start routing.
 //! - L4 (`service`): the kernel-optimization service layer (one node of
 //!   the cluster) — content-addressed result cache, single-flight job
 //!   queue, warm-start scheduling, and a discrete-event queueing simulation
@@ -27,6 +29,10 @@
 //!   the `pjrt` cargo feature + the vendored `xla` crate).
 
 pub mod agents;
+// The two production-facing subsystems keep their rustdoc complete — every
+// public item documented — so `docs/` and the operator surface never drift
+// from the code.
+#[warn(missing_docs)]
 pub mod cluster;
 pub mod coordinator;
 pub mod cost;
@@ -35,6 +41,7 @@ pub mod kernel;
 pub mod metrics;
 pub mod report;
 pub mod runtime;
+#[warn(missing_docs)]
 pub mod service;
 pub mod sim;
 pub mod tasks;

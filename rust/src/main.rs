@@ -23,10 +23,19 @@
 //!               --snapshot PATH (restore before / save after the replay)
 //! Cluster flags: serve flags (capacity/sim-workers/queue-depth are *per
 //!               node*) plus --nodes N --tenants NAME:W,NAME:W --no-quotas
-//!               --transfer-latency SECS --fail-node N --fail-at SECS
+//!               --transfer-latency SECS --warm-locality-margin M
+//!               --fail-node N --fail-at SECS (node N drops at SECS)
+//!               --join-node N --join-at SECS (node N enters, empty, at
+//!               SECS; with no prior --fail-node N it starts outside the
+//!               cluster)
+//!               --snapshot DIR (shard-aware snapshot directory: restore
+//!               before the replay if its manifest exists, save after)
 
 use cudaforge::agents::profiles;
-use cudaforge::cluster::{ClusterConfig, ClusterService, TenantSpec};
+use cudaforge::cluster::{
+    snapshot as cluster_snapshot, ClusterConfig, ClusterService, MembershipEvent,
+    RebalanceKind, TenantSpec,
+};
 use cudaforge::coordinator::{default_threads, run_suite};
 use cudaforge::gpu;
 use cudaforge::report::{self, Ctx};
@@ -158,15 +167,6 @@ fn tenants_from(arg: &str) -> Vec<TenantSpec> {
 }
 
 fn cluster(args: &Args) {
-    if args.get("snapshot").is_some() {
-        // The JSONL snapshot format is single-cache; a per-shard manifest is
-        // a ROADMAP item ("Shard-aware snapshot format").
-        eprintln!(
-            "warning: --snapshot is not supported by `cluster` yet (per-shard \
-             snapshots are unimplemented); the replay runs cold and nothing \
-             will be persisted"
-        );
-    }
     let oracle = build_oracle(args);
     let suite = tasks::kernelbench();
     let seed = args.get_u64("seed", 7);
@@ -206,28 +206,48 @@ fn cluster(args: &Args) {
         });
     }
     let nodes = args.get_usize("nodes", 4).max(1);
-    let fail_node_at = args.get("fail-node").map(|v| {
-        let node: usize = v.parse().unwrap_or_else(|_| {
-            eprintln!("error: --fail-node wants a node index, got '{v}'");
-            std::process::exit(2);
-        });
-        if node >= nodes {
-            eprintln!(
-                "error: --fail-node {node} is out of range for --nodes {nodes} \
-                 (valid indices: 0..{})",
-                nodes - 1
-            );
+    let node_arg = |flag: &str| -> Option<usize> {
+        args.get(flag).map(|v| {
+            let node: usize = v.parse().unwrap_or_else(|_| {
+                eprintln!("error: --{flag} wants a node index, got '{v}'");
+                std::process::exit(2);
+            });
+            if node >= nodes {
+                eprintln!(
+                    "error: --{flag} {node} is out of range for --nodes {nodes} \
+                     (valid indices: 0..{})",
+                    nodes - 1
+                );
+                std::process::exit(2);
+            }
+            node
+        })
+    };
+    // Simulated times and margins must be finite and non-negative: a NaN
+    // instant would never fire as an event, silently dropping the scenario.
+    let nonneg_arg = |flag: &str, default: f64| -> f64 {
+        let v = args.get_f64(flag, default);
+        if !v.is_finite() || v < 0.0 {
+            eprintln!("error: --{flag} must be a finite value >= 0, got {v}");
             std::process::exit(2);
         }
-        (node, args.get_f64("fail-at", 0.0))
-    });
+        v
+    };
+    let mut events = Vec::new();
+    if let Some(node) = node_arg("fail-node") {
+        events.push(MembershipEvent::fail(node, nonneg_arg("fail-at", 0.0)));
+    }
+    if let Some(node) = node_arg("join-node") {
+        events.push(MembershipEvent::join(node, nonneg_arg("join-at", 0.0)));
+    }
     let config = ClusterConfig {
         service,
         nodes,
         tenants: tenants.clone(),
         tenant_quotas: !args.flag("no-quotas"),
-        transfer_latency_s: args.get_f64("transfer-latency", 30.0),
-        fail_node_at,
+        transfer_latency_s: nonneg_arg("transfer-latency", 30.0),
+        warm_locality_margin: nonneg_arg("warm-locality-margin", 0.0),
+        events,
     };
     println!(
         "cluster: {} nodes x {} sim GPUs | {} tenants (quotas {}) | cache {}/shard | \
@@ -242,15 +262,66 @@ fn cluster(args: &Args) {
         traffic.zipf_s,
         seed,
     );
-    if let Some((n, at)) = config.fail_node_at {
-        println!("  [failure scheduled: node {n} drops at t={at}s]");
+    for ev in &config.events {
+        match ev.change {
+            cudaforge::cluster::MembershipChange::Fail => {
+                println!("  [failure scheduled: node {} drops at t={}s]", ev.node, ev.at_s)
+            }
+            cudaforge::cluster::MembershipChange::Join => println!(
+                "  [join scheduled: node {} enters (empty) at t={}s]",
+                ev.node, ev.at_s
+            ),
+        }
     }
     let trace = try_generate(suite.len(), &traffic).unwrap_or_else(|e| {
         eprintln!("error: {e}");
         std::process::exit(2);
     });
+    let snapshot_dir = args.get("snapshot").map(|s| s.to_string());
+    let mut svc = match &snapshot_dir {
+        Some(dir) if cluster_snapshot::exists(dir) => {
+            match ClusterService::restore(config, dir) {
+                Ok((svc, restore_rb)) => {
+                    let entries: usize =
+                        (0..svc.config.nodes).map(|i| svc.cache(i).len()).sum();
+                    eprintln!(
+                        "[restored {entries} cached results across {} shards from \
+                         {dir} (epoch {})]",
+                        svc.config.nodes,
+                        svc.epoch()
+                    );
+                    if let Some(rb) = restore_rb {
+                        println!(
+                            "restore rebalance: snapshot was laid out for {} nodes; \
+                             {} entries moved to their new owners ({:.0}s transfer \
+                             spend), {} unplaceable",
+                            rb.node, rb.entries_moved, rb.transfer_s, rb.cache_entries_lost,
+                        );
+                    }
+                    svc
+                }
+                Err(e) => {
+                    // Print the whole anyhow chain: the io error behind an
+                    // unreadable file, or the manifest cross-check naming
+                    // the offending path. Match the restore error's own
+                    // remediation phrase to decide whether the version hint
+                    // applies.
+                    let chain = format!("{e:#}");
+                    eprintln!("error: cannot restore cluster snapshot: {chain}");
+                    if chain.contains("delete the snapshot and re-warm") {
+                        eprintln!(
+                            "hint: {dir} was written under an incompatible snapshot \
+                             format; delete the directory (the cluster re-warms from \
+                             traffic) or rerun with a matching build"
+                        );
+                    }
+                    std::process::exit(2);
+                }
+            }
+        }
+        _ => ClusterService::new(config),
+    };
     let t0 = std::time::Instant::now();
-    let mut svc = ClusterService::new(config);
     let report = svc.replay(&trace, &suite, oracle.as_ref());
     let ctx = Ctx {
         seed,
@@ -269,17 +340,44 @@ fn cluster(args: &Args) {
         report.quota_shed,
         report.cross_node_warm,
     );
-    if let Some(rb) = &report.rebalance {
-        println!(
-            "node {} failed at {}s: lost {} cached entries; {} requests rehashed to \
-             survivors; {} lost keys re-ran cold (${:.2} re-spent)",
-            rb.failed_node,
-            rb.failed_at_s,
-            rb.cache_entries_lost,
-            rb.rehashed_requests,
-            rb.remissed_flights,
-            rb.remiss_api_usd,
-        );
+    for rb in &report.rebalances {
+        match rb.kind {
+            RebalanceKind::NodeFailure => println!(
+                "node {} failed at {}s: lost {} cached entries; {} requests rehashed \
+                 to survivors; {} lost keys re-ran cold (${:.2} re-spent)",
+                rb.node,
+                rb.at_s,
+                rb.cache_entries_lost,
+                rb.rehashed_requests,
+                rb.remissed_flights,
+                rb.remiss_api_usd,
+            ),
+            RebalanceKind::NodeJoin => println!(
+                "node {} joined at {}s: {} entries warm-refilled from surviving \
+                 shards ({:.0}s transfer spend); {} requests rehashed to it; {} keys \
+                 re-ran inside the transfer gap (${:.2} re-spent)",
+                rb.node,
+                rb.at_s,
+                rb.entries_moved,
+                rb.transfer_s,
+                rb.rehashed_requests,
+                rb.remissed_flights,
+                rb.remiss_api_usd,
+            ),
+            // Restore-time movement was printed when the snapshot loaded.
+            RebalanceKind::SnapshotRestore => {}
+        }
+    }
+    if let Some(dir) = &snapshot_dir {
+        match svc.snapshot(dir) {
+            Ok(m) => eprintln!(
+                "[snapshot: {} entries across {} shards -> {dir} (epoch {})]",
+                m.shards.iter().map(|s| s.entries).sum::<usize>(),
+                m.nodes,
+                m.epoch,
+            ),
+            Err(e) => eprintln!("warning: cluster snapshot not saved: {e:#}"),
+        }
     }
 }
 
@@ -419,7 +517,10 @@ fn usage() {
     println!("         [--interarrival 90 --sim-workers 8 --queue-depth N --slo 120,7200,86400]");
     println!("         [--snapshot cache.jsonl]");
     println!("  cluster [serve flags, per node] [--nodes 4 --tenants alpha:3,beta:1]");
-    println!("         [--no-quotas --transfer-latency 30 --fail-node N --fail-at SECS]");
+    println!("         [--no-quotas --transfer-latency 30 --warm-locality-margin 0.25]");
+    println!("         [--fail-node N --fail-at SECS (node N drops at SECS)]");
+    println!("         [--join-node N --join-at SECS (node N enters, empty, at SECS)]");
+    println!("         [--snapshot DIR (shard-aware: restore before / save after)]");
     println!("  bench  --exp <table1|table2|table3|table4|table5|fig4..fig9|table6|table8|all> [--quick]");
     println!("  select [--iterations 100]");
     println!("  verify [--artifacts artifacts]   (needs --features pjrt)");

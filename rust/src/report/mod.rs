@@ -504,6 +504,7 @@ pub fn cluster_table(r: &crate::cluster::ClusterReport) -> Table {
     );
     let mut rows: Vec<(String, String)> = vec![
         ("Nodes".into(), r.nodes.to_string()),
+        ("Membership epoch".into(), r.epoch.to_string()),
         ("Requests".into(), o.requests.to_string()),
         ("Workflow runs (cache misses)".into(), o.flights_run.to_string()),
         ("Cache hits".into(), o.cache_hits.to_string()),
@@ -554,17 +555,41 @@ pub fn cluster_table(r: &crate::cluster::ClusterReport) -> Table {
             ),
         ));
     }
-    if let Some(rb) = &r.rebalance {
-        rows.push((
-            format!("rebalance: node {} failed @{}s", rb.failed_node, rb.failed_at_s),
-            format!(
-                "{} entries lost | {} reqs rehashed | {} re-missed flights (${} re-spent)",
-                rb.cache_entries_lost,
-                rb.rehashed_requests,
-                rb.remissed_flights,
-                f2(rb.remiss_api_usd)
+    for rb in &r.rebalances {
+        let (label, detail) = match rb.kind {
+            crate::cluster::RebalanceKind::NodeFailure => (
+                format!("rebalance: node {} failed @{}s", rb.node, rb.at_s),
+                format!(
+                    "{} entries lost | {} reqs rehashed | {} re-missed flights (${} re-spent)",
+                    rb.cache_entries_lost,
+                    rb.rehashed_requests,
+                    rb.remissed_flights,
+                    f2(rb.remiss_api_usd)
+                ),
             ),
-        ));
+            crate::cluster::RebalanceKind::NodeJoin => (
+                format!("rebalance: node {} joined @{}s", rb.node, rb.at_s),
+                format!(
+                    "{} entries refilled ({}s transfer) | {} reqs rehashed | \
+                     {} re-missed flights (${} re-spent)",
+                    rb.entries_moved,
+                    f2(rb.transfer_s),
+                    rb.rehashed_requests,
+                    rb.remissed_flights,
+                    f2(rb.remiss_api_usd)
+                ),
+            ),
+            crate::cluster::RebalanceKind::SnapshotRestore => (
+                format!("rebalance: snapshot restore (was {} nodes)", rb.node),
+                format!(
+                    "{} entries moved ({}s transfer) | {} unplaceable",
+                    rb.entries_moved,
+                    f2(rb.transfer_s),
+                    rb.cache_entries_lost
+                ),
+            ),
+        };
+        rows.push((label, detail));
     }
     for (k, v) in rows {
         t.row(vec![k, v]);

@@ -31,13 +31,21 @@ pub const SNAPSHOT_VERSION: u32 = 2;
 /// One cached optimization result.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CacheEntry {
+    /// Content address of the request this entry answers.
     pub fingerprint: Fingerprint,
+    /// Task identifier (e.g. `L1-95`) — the warm-candidate scan matches it.
     pub task_id: String,
+    /// GPU the producing run tuned on.
     pub gpu_key: String,
+    /// Strategy name of the producing run.
     pub strategy: String,
+    /// Coder model name of the producing run.
     pub coder: String,
+    /// Judge model name of the producing run.
     pub judge: String,
+    /// Best speedup the producing run measured.
     pub best_speedup: f64,
+    /// The best kernel configuration found — what a warm start seeds from.
     pub best_config: KernelConfig,
     /// API dollars the producing run actually spent (a warm-started run
     /// spends less than a cold one).
@@ -89,6 +97,7 @@ impl CacheEntry {
         })
     }
 
+    /// Serialize as one snapshot JSONL line.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("fingerprint", Json::str(self.fingerprint.to_string())),
@@ -106,6 +115,8 @@ impl CacheEntry {
         ])
     }
 
+    /// Parse a snapshot JSONL line (`None` when fields are missing or
+    /// malformed).
     pub fn from_json(v: &Json) -> Option<CacheEntry> {
         Some(CacheEntry {
             fingerprint: Fingerprint::parse(v.get("fingerprint")?.as_str()?)?,
@@ -127,9 +138,14 @@ impl CacheEntry {
 /// Hit/miss/eviction counters (monotonic over the cache's lifetime).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CacheStats {
+    /// Lookups that found a resident entry.
     pub hits: u64,
+    /// Lookups that found nothing.
     pub misses: u64,
+    /// Entries inserted (including refreshes of resident keys).
     pub inserts: u64,
+    /// Entries dropped by LRU capacity pressure (migrations via
+    /// [`ResultCache::remove`] do not count).
     pub evictions: u64,
 }
 
@@ -161,6 +177,8 @@ pub struct ResultCache {
     /// tick -> fingerprint; ticks are unique, so the first key is the LRU.
     recency: BTreeMap<u64, Fingerprint>,
     tick: u64,
+    /// Lifetime hit/miss/insert/eviction counters. Replay loops report
+    /// *deltas* against a snapshot of this taken at replay start.
     pub stats: CacheStats,
 }
 
@@ -176,14 +194,17 @@ impl ResultCache {
         }
     }
 
+    /// Entries currently resident.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// Whether the cache holds no entries.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
+    /// The entry budget evictions enforce.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
@@ -229,6 +250,17 @@ impl ResultCache {
         self.map.insert(fp, Slot { entry, tick: self.tick });
     }
 
+    /// Remove and return the entry for `fp`, if resident. This is a
+    /// *migration*, not an eviction — the cluster layer's planned rebalance
+    /// moves an entry to the shard that now owns its key — so the eviction
+    /// counter is untouched and recency bookkeeping is simply dropped with
+    /// the slot.
+    pub fn remove(&mut self, fp: Fingerprint) -> Option<CacheEntry> {
+        let slot = self.map.remove(&fp)?;
+        self.recency.remove(&slot.tick);
+        Some(slot.entry)
+    }
+
     /// Best cross-GPU transfer candidate: a cached correct kernel for the
     /// same task / strategy / models, tuned on a *different* GPU. Ties break
     /// on (speedup, fingerprint) so the scan is order-independent.
@@ -271,11 +303,22 @@ impl ResultCache {
     /// Write the cache as JSONL: a version header, then one entry per line,
     /// coldest first.
     pub fn snapshot(&self, path: impl AsRef<Path>) -> Result<()> {
-        let mut out = Json::obj(vec![(
-            "snapshot_version",
-            Json::num(SNAPSHOT_VERSION as f64),
-        )])
-        .to_string();
+        self.snapshot_with_header(path, Vec::new())
+    }
+
+    /// [`ResultCache::snapshot`], with extra fields merged into the header
+    /// line next to `snapshot_version`. The cluster layer stamps each shard
+    /// file with its rendezvous epoch, shard index, and node count so a
+    /// restore can cross-check the manifest against the files it names;
+    /// [`ResultCache::restore`] itself ignores unknown header fields.
+    pub fn snapshot_with_header(
+        &self,
+        path: impl AsRef<Path>,
+        extra: Vec<(&str, Json)>,
+    ) -> Result<()> {
+        let mut header = vec![("snapshot_version", Json::num(SNAPSHOT_VERSION as f64))];
+        header.extend(extra);
+        let mut out = Json::obj(header).to_string();
         out.push('\n');
         for e in self.entries_coldest_first() {
             out.push_str(&e.to_json().to_string());
@@ -296,6 +339,15 @@ impl ResultCache {
     pub fn restore(path: impl AsRef<Path>, capacity: usize) -> Result<ResultCache> {
         let text = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("reading snapshot {}", path.as_ref().display()))?;
+        Self::restore_from_str(&text, capacity, path.as_ref())
+    }
+
+    /// [`ResultCache::restore`] over snapshot text already in memory —
+    /// `origin` names the source file in errors. The cluster loader uses
+    /// this to rebuild each shard from the one read its manifest
+    /// cross-checks already made.
+    pub fn restore_from_str(text: &str, capacity: usize, origin: &Path) -> Result<ResultCache> {
+        let path = origin;
         let mut cache = ResultCache::new(capacity);
         let mut saw_header = false;
         for (i, line) in text.lines().enumerate() {
@@ -303,7 +355,7 @@ impl ResultCache {
                 continue;
             }
             let v = Json::parse(line).map_err(|e| {
-                anyhow!("snapshot {} line {}: {e}", path.as_ref().display(), i + 1)
+                anyhow!("snapshot {} line {}: {e}", path.display(), i + 1)
             })?;
             if !saw_header {
                 // The first line must declare a compatible fingerprint
@@ -320,20 +372,20 @@ impl ResultCache {
                         "snapshot {} has version {x} unsupported by this build \
                          (which reads {SNAPSHOT_VERSION}) — delete the snapshot \
                          and re-warm",
-                        path.as_ref().display()
+                        path.display()
                     ),
                     None => bail!(
                         "snapshot {} has no version header (written before the \
                          v{SNAPSHOT_VERSION} fingerprint scheme) — delete the \
                          snapshot and re-warm",
-                        path.as_ref().display()
+                        path.display()
                     ),
                 }
             }
             let entry = CacheEntry::from_json(&v).ok_or_else(|| {
                 anyhow!(
                     "snapshot {} line {}: missing fields",
-                    path.as_ref().display(),
+                    path.display(),
                     i + 1
                 )
             })?;
@@ -342,7 +394,7 @@ impl ResultCache {
         if !saw_header {
             bail!(
                 "snapshot {} is empty or missing its version header",
-                path.as_ref().display()
+                path.display()
             );
         }
         // Restoring is not traffic: don't let the rebuild pollute the
@@ -412,6 +464,49 @@ mod tests {
         // now 2 is coldest
         c.insert(entry(3, "L1-3", "rtx6000", 1.0));
         assert!(c.peek(Fingerprint(2)).is_none());
+    }
+
+    #[test]
+    fn remove_is_a_migration_not_an_eviction() {
+        let mut c = ResultCache::new(2);
+        c.insert(entry(1, "L1-1", "rtx6000", 1.0));
+        c.insert(entry(2, "L1-2", "rtx6000", 1.0));
+        let taken = c.remove(Fingerprint(1)).expect("resident");
+        assert_eq!(taken.fingerprint, Fingerprint(1));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats.evictions, 0, "migration must not count as eviction");
+        assert!(c.remove(Fingerprint(1)).is_none(), "already gone");
+        // The freed slot is genuinely free: two inserts fit without evicting
+        // (the removed entry's recency bookkeeping left with it).
+        c.insert(entry(3, "L1-3", "rtx6000", 1.0));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats.evictions, 0);
+        c.insert(entry(4, "L1-4", "rtx6000", 1.0));
+        assert_eq!(c.stats.evictions, 1, "capacity pressure still evicts LRU");
+        assert!(c.peek(Fingerprint(2)).is_none(), "2 was coldest");
+    }
+
+    #[test]
+    fn header_extras_round_trip_and_are_ignored_by_restore() {
+        let dir = std::env::temp_dir().join("cudaforge_cache_header_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stamped.jsonl");
+        let mut c = ResultCache::new(4);
+        c.insert(entry(1, "L1-1", "rtx6000", 1.1));
+        c.snapshot_with_header(
+            &path,
+            vec![("epoch", Json::num(3.0)), ("shard", Json::num(1.0))],
+        )
+        .unwrap();
+        // The stamped fields are on the header line…
+        let text = std::fs::read_to_string(&path).unwrap();
+        let header = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(header.get("epoch").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(header.get("shard").and_then(|v| v.as_f64()), Some(1.0));
+        // …and a plain restore still succeeds, ignoring them.
+        let r = ResultCache::restore(&path, 4).unwrap();
+        assert_eq!(r.len(), 1);
+        assert!(r.peek(Fingerprint(1)).is_some());
     }
 
     #[test]

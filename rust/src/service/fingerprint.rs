@@ -26,7 +26,10 @@ use crate::workflow::Strategy;
 
 /// 64-bit content address of one optimization request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct Fingerprint(pub u64);
+pub struct Fingerprint(
+    /// The digest value (FNV-1a over the canonical field list).
+    pub u64,
+);
 
 impl fmt::Display for Fingerprint {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
@@ -62,15 +65,18 @@ pub struct FieldHasher {
 }
 
 impl FieldHasher {
+    /// An empty hasher.
     pub fn new() -> FieldHasher {
         FieldHasher::default()
     }
 
+    /// Add one `(name, value)` pair (order does not matter).
     pub fn field(mut self, name: &str, value: impl fmt::Display) -> FieldHasher {
         self.fields.push((name.to_string(), value.to_string()));
         self
     }
 
+    /// Canonicalize (sort by name) and digest the field list.
     pub fn finish(mut self) -> Fingerprint {
         self.fields.sort();
         let mut h = FNV_OFFSET;

@@ -27,8 +27,10 @@
 //! by `crate::cluster`, which instantiates *N* of these building blocks
 //! (one `ResultCache` shard, one `FleetSim` slice per simulated node),
 //! routes fingerprints across them with rendezvous hashing, meters
-//! per-tenant fair-share quotas under overload, and replays
-//! node-failure/rebalance scenarios. The cluster layer deliberately reuses
+//! per-tenant fair-share quotas under overload, replays elastic-membership
+//! scenarios (node failures *and* joins with planned rebalance), and
+//! persists/restores shard-aware snapshots whose per-shard files reuse this
+//! module's [`cache`] wire format. The cluster layer deliberately reuses
 //! this module's machinery unchanged: a 1-node, 1-tenant cluster replay is
 //! bit-identical to [`KernelService::replay`] (an invariant the integration
 //! tests assert), so every latency/SLO property validated here transfers to
@@ -100,8 +102,11 @@ use crate::workflow::{
 /// run; batch tolerates a day of queueing.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SloTargets {
+    /// Latency target for interactive traffic, seconds.
     pub interactive_s: f64,
+    /// Latency target for standard traffic, seconds.
     pub standard_s: f64,
+    /// Latency target for batch traffic, seconds.
     pub batch_s: f64,
 }
 
@@ -112,6 +117,7 @@ impl Default for SloTargets {
 }
 
 impl SloTargets {
+    /// The latency target for priority class `p`, seconds.
     pub fn target_s(&self, p: Priority) -> f64 {
         match p {
             Priority::Interactive => self.interactive_s,
@@ -145,9 +151,13 @@ pub struct ServiceConfig {
     pub queue_depth: usize,
     /// Per-priority latency targets the report scores attainment against.
     pub slo: SloTargets,
+    /// Workflow strategy every request runs under.
     pub strategy: Strategy,
+    /// Optimization round budget per workflow run.
     pub rounds: usize,
+    /// Coder model profile.
     pub coder: ModelProfile,
+    /// Judge model profile.
     pub judge: ModelProfile,
     /// Workflow seed shared by every run (fingerprints exclude seeds, so one
     /// fingerprint must always resolve to one result).
@@ -213,13 +223,17 @@ impl ServiceConfig {
 /// latency and are excluded from the percentiles; they are scored separately.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PriorityClassReport {
+    /// The priority class these aggregates cover.
     pub priority: Priority,
     /// Requests of this class in the trace (served + rejected).
     pub requests: usize,
     /// Requests of this class shed by admission control.
     pub rejected: u64,
+    /// Median latency over served requests of this class, seconds.
     pub p50_latency_s: f64,
+    /// 95th-percentile latency of this class, seconds.
     pub p95_latency_s: f64,
+    /// 99th-percentile latency of this class, seconds.
     pub p99_latency_s: f64,
     /// The class's SLO latency target.
     pub slo_target_s: f64,
@@ -233,12 +247,15 @@ pub struct PriorityClassReport {
 /// (trace, config) — `PartialEq` so tests can assert replay invariance.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ServiceReport {
+    /// Requests in the replayed trace.
     pub requests: usize,
     /// Workflow runs actually executed (cache misses after dedup).
     pub flights_run: usize,
+    /// Requests answered straight from the result cache.
     pub cache_hits: u64,
     /// Requests served by joining an in-flight duplicate (single-flight).
     pub shared: u64,
+    /// Entries evicted under capacity pressure during the replay.
     pub evictions: u64,
     /// Requests shed by admission control under overload.
     pub rejected: u64,
@@ -248,9 +265,13 @@ pub struct ServiceReport {
     pub warm_correct: usize,
     /// Requests served without a fresh workflow run / total.
     pub hit_rate: f64,
+    /// Median served latency (queue wait + service time), seconds.
     pub p50_latency_s: f64,
+    /// 95th-percentile served latency, seconds.
     pub p95_latency_s: f64,
+    /// 99th-percentile served latency, seconds.
     pub p99_latency_s: f64,
+    /// Mean served latency, seconds.
     pub mean_latency_s: f64,
     /// Mean simulated seconds executed flights waited for a GPU worker.
     pub mean_queue_wait_s: f64,
@@ -278,6 +299,8 @@ pub struct ServiceReport {
     pub mean_rounds_to_best_warm: f64,
     /// Simulated busy time across all runs (the fleet-size-free unit).
     pub gpu_hours: f64,
+    /// Trace requests per simulated GPU-hour of work — the throughput the
+    /// cache/dedup machinery buys.
     pub requests_per_gpu_hour: f64,
 }
 
@@ -600,6 +623,7 @@ impl FleetHooks for ServiceHooks<'_> {
 
 /// The long-lived service: a cache plus the admission/dispatch loop.
 pub struct KernelService {
+    /// The deployment parameters the service was built with.
     pub config: ServiceConfig,
     cache: ResultCache,
     /// First measured *cold*-run spend per fingerprint — the counterfactual
@@ -610,6 +634,7 @@ pub struct KernelService {
 }
 
 impl KernelService {
+    /// A cold service (empty cache) under `config`.
     pub fn new(config: ServiceConfig) -> KernelService {
         let cache = ResultCache::new(config.capacity);
         KernelService { config, cache, cold_cost: BTreeMap::new() }
@@ -622,10 +647,12 @@ impl KernelService {
         KernelService { config, cache, cold_cost: BTreeMap::new() }
     }
 
+    /// The service's result cache (introspection/snapshotting).
     pub fn cache(&self) -> &ResultCache {
         &self.cache
     }
 
+    /// Content address of one request under this service's config.
     pub fn fingerprint_of(&self, task: &TaskSpec, gpu: &crate::gpu::GpuSpec) -> Fingerprint {
         self.config.fingerprint_of(task, gpu)
     }

@@ -77,6 +77,7 @@ where
 /// the start event, not at submission.
 #[derive(Clone, Debug)]
 pub struct SimFlight {
+    /// Content address of the work — the single-flight dedup key.
     pub fingerprint: Fingerprint,
     /// Most urgent priority across members; late joiners can escalate it
     /// while the flight still waits.
@@ -98,7 +99,9 @@ pub struct SimFlight {
 /// When a flight started and finished on the simulated fleet.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SimCompletion {
+    /// Simulated instant the flight started on a worker.
     pub start_s: f64,
+    /// Simulated instant the flight's service time elapsed.
     pub completion_s: f64,
 }
 
@@ -182,6 +185,7 @@ impl FleetSim {
         }
     }
 
+    /// Simulated GPU workers in this fleet.
     pub fn workers(&self) -> usize {
         self.workers
     }

@@ -28,10 +28,12 @@ pub enum Priority {
     Batch,
 }
 
+/// Every priority class, most urgent first (the drain order).
 pub const ALL_PRIORITIES: [Priority; 3] =
     [Priority::Interactive, Priority::Standard, Priority::Batch];
 
 impl Priority {
+    /// Lower-case display name (reports and CLI output).
     pub fn name(self) -> &'static str {
         match self {
             Priority::Interactive => "interactive",

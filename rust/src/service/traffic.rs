@@ -25,9 +25,11 @@ use crate::util::rng::Rng;
 /// Trace shape parameters.
 #[derive(Clone, Debug)]
 pub struct TrafficConfig {
+    /// Requests to generate.
     pub requests: usize,
     /// Zipf exponent s (popularity of the k-th task ∝ k^-s).
     pub zipf_s: f64,
+    /// RNG seed — the trace is fully determined by it.
     pub seed: u64,
     /// Mean gap between consecutive arrivals, in simulated seconds
     /// (exponentially distributed). 0 models a single burst at t = 0.
@@ -119,8 +121,11 @@ impl TrafficConfig {
 /// an urgency class, a tenant, and the simulated instant it arrives.
 #[derive(Clone, Copy, Debug)]
 pub struct TrafficRequest {
+    /// Index into the caller's task set.
     pub task_index: usize,
+    /// Target GPU the kernel must be optimized for.
     pub gpu: &'static GpuSpec,
+    /// Urgency class (admission and SLO scoring key off it).
     pub priority: Priority,
     /// Index into the trace's `tenant_mix` (and the cluster's tenant list).
     /// Single-node replays ignore it; the cluster layer meters quotas by it.

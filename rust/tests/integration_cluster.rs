@@ -2,12 +2,19 @@
 //! contracts (a 1-node single-tenant cluster is bit-identical to the
 //! single-node service, and cluster reports are bit-identical across OS
 //! thread counts *and* across the host-side `window` batch size), plus the
-//! cluster-only behaviours: node failure with rebalance accounting,
-//! fair-share tenant quotas under overload, and cross-node warm-start
-//! routing with its transfer latency — all on the global event loop, where
-//! a warm seed must come from a flight already completed in simulated time.
+//! cluster-only behaviours: membership events (node failure, node join
+//! with planned rebalance) and their accounting, shard-aware snapshot
+//! save/restore round-trips (bit-identical under unchanged membership,
+//! exactly-accounted movement under a changed node count), fair-share
+//! tenant quotas under overload, and cross-node warm-start routing with
+//! its transfer latency — all on the global event loop, where a warm seed
+//! must come from a flight already completed (or a transfer already
+//! landed) in simulated time.
 
-use cudaforge::cluster::{ClusterConfig, ClusterReport, ClusterService, Router, TenantSpec};
+use cudaforge::cluster::{
+    ClusterConfig, ClusterReport, ClusterService, MembershipEvent, RebalanceKind, Router,
+    TenantSpec,
+};
 use cudaforge::gpu;
 use cudaforge::service::queue::Priority;
 use cudaforge::service::traffic::{generate, TrafficConfig, TrafficRequest};
@@ -100,14 +107,21 @@ fn sharded_replay(threads: usize, seed: u64, window: usize) -> ClusterReport {
         },
     );
     // Exercise every cluster feature at once: sharding, quotas, a
-    // mid-replay node failure, and cross-node warm transfers.
+    // mid-replay node failure *and recovery* (the node rejoins empty,
+    // triggering a planned rebalance with in-transit refills), a locality
+    // margin on cross-node warm transfers.
     let fail_at = trace[trace.len() / 2].arrival_s;
+    let rejoin_at = trace[3 * trace.len() / 4].arrival_s;
     let mut svc = ClusterService::new(ClusterConfig {
         nodes: 3,
         tenants: vec![TenantSpec::new("alpha", 3.0), TenantSpec::new("beta", 1.0)],
         tenant_quotas: true,
         transfer_latency_s: 30.0,
-        fail_node_at: Some((1, fail_at)),
+        warm_locality_margin: 0.25,
+        events: vec![
+            MembershipEvent::fail(1, fail_at),
+            MembershipEvent::join(1, rejoin_at),
+        ],
         service: ServiceConfig {
             threads,
             window,
@@ -174,7 +188,7 @@ fn node_failure_rehashes_keys_and_accounts_the_re_miss() {
     ];
     let mut svc = ClusterService::new(ClusterConfig {
         nodes: 2,
-        fail_node_at: Some((owner, 150_000.0)),
+        events: vec![MembershipEvent::fail(owner, 150_000.0)],
         service: probe_cfg,
         ..ClusterConfig::default()
     });
@@ -183,16 +197,217 @@ fn node_failure_rehashes_keys_and_accounts_the_re_miss() {
     // t=150k the shard dies; t=200k rehashes to the survivor and re-runs.
     assert_eq!(r.overall.flights_run, 2, "the lost key re-misses");
     assert_eq!(r.overall.cache_hits, 1);
-    let rb = r.rebalance.expect("failure fired mid-replay");
-    assert_eq!(rb.failed_node, owner);
+    assert_eq!(r.rebalances.len(), 1, "failure fired mid-replay");
+    let rb = &r.rebalances[0];
+    assert_eq!(rb.kind, RebalanceKind::NodeFailure);
+    assert_eq!(rb.node, owner);
     assert!(rb.cache_entries_lost >= 1, "the anchor entry was resident");
     assert!(rb.rehashed_requests >= 1, "the t=200 request was displaced");
     assert_eq!(rb.remissed_flights, 1);
     assert!(rb.remiss_api_usd > 0.0, "the re-run re-spent API dollars");
+    assert_eq!(r.epoch, 1, "one membership change applied");
     assert!(!r.per_node[owner].alive);
     assert!(r.per_node[1 - owner].alive);
     // The survivor ran the re-miss.
     assert!(r.per_node[1 - owner].flights_run >= 1);
+}
+
+#[test]
+fn node_join_warm_refills_rehashed_keys_and_prices_the_gap() {
+    let suite = tasks::kernelbench();
+    let probe_cfg = ServiceConfig { threads: 1, window: 1, seed: 7, ..ServiceConfig::default() };
+    let anchor = (0..suite.len())
+        .find(|i| {
+            let wf = probe_cfg.base_workflow(gpu::by_key("rtx6000").unwrap());
+            let r = run_task(&wf, &suite[*i], &NoOracle);
+            r.correct && r.best_speedup > 0.0 && r.best_config.is_some()
+        })
+        .expect("some task solves cold on rtx6000");
+    let fp = probe_cfg.fingerprint_of(&suite[anchor], gpu::by_key("rtx6000").unwrap());
+    // The node that owns the anchor under full membership is the joiner: it
+    // starts outside the cluster (its first event is a join), so the anchor
+    // initially lands on the survivor.
+    let joiner = Router::new(2).route(fp, &[true, true]).unwrap();
+    let survivor = 1 - joiner;
+    let transfer = 5_000.0;
+    let mk = |cfg: &ServiceConfig| ClusterConfig {
+        nodes: 2,
+        transfer_latency_s: transfer,
+        events: vec![MembershipEvent::join(joiner, 150_000.0)],
+        service: cfg.clone(),
+        ..ClusterConfig::default()
+    };
+
+    // ---- the clean rebalance: no request lands inside the transfer gap --
+    // t=0 cold on the survivor; t=100k hits the survivor; the join at
+    // t=150k moves the key, landing at t=155k; t=200k hits the *joiner*.
+    let trace = vec![
+        req_at(anchor, "rtx6000", Priority::Standard, 0, 0.0),
+        req_at(anchor, "rtx6000", Priority::Standard, 0, 100_000.0),
+        req_at(anchor, "rtx6000", Priority::Standard, 0, 200_000.0),
+    ];
+    let mut svc = ClusterService::new(mk(&probe_cfg));
+    assert!(!svc.membership().is_alive(joiner), "the joiner starts outside");
+    let r = svc.replay(&trace, &suite, &NoOracle);
+    assert_eq!(r.overall.flights_run, 1, "the moved key never re-runs");
+    assert_eq!(r.overall.cache_hits, 2, "a hit on each side of the join");
+    assert_eq!(r.epoch, 1);
+    assert_eq!(r.rebalances.len(), 1);
+    let rb = &r.rebalances[0];
+    assert_eq!(rb.kind, RebalanceKind::NodeJoin);
+    assert_eq!(rb.node, joiner);
+    assert_eq!(rb.at_s, 150_000.0);
+    assert_eq!(rb.entries_moved, 1, "exactly the anchor's entry moves");
+    assert!((rb.transfer_s - transfer).abs() < 1e-9, "transfer spend itemized");
+    assert_eq!(rb.cache_entries_lost, 0);
+    assert_eq!(rb.remissed_flights, 0, "nothing arrived inside the gap");
+    assert_eq!(rb.rehashed_requests, 1, "the t=200k request now routes to the joiner");
+    assert!(r.per_node[joiner].alive && r.per_node[survivor].alive);
+    // The entry genuinely moved shards.
+    assert!(svc.cache(joiner).peek(fp).is_some(), "refill landed on the joiner");
+    assert!(svc.cache(survivor).peek(fp).is_none(), "the survivor handed it off");
+
+    // ---- the gap re-miss: a request between join and landing re-runs ----
+    let gap_trace = vec![
+        req_at(anchor, "rtx6000", Priority::Standard, 0, 0.0),
+        req_at(anchor, "rtx6000", Priority::Standard, 0, 100_000.0),
+        req_at(anchor, "rtx6000", Priority::Standard, 0, 152_000.0),
+        req_at(anchor, "rtx6000", Priority::Standard, 0, 200_000.0),
+    ];
+    let mut svc = ClusterService::new(mk(&probe_cfg));
+    let r = svc.replay(&gap_trace, &suite, &NoOracle);
+    assert_eq!(
+        r.overall.flights_run, 2,
+        "the in-transit key re-runs for the gap arrival"
+    );
+    assert_eq!(r.overall.cache_hits, 2);
+    let rb = &r.rebalances[0];
+    assert_eq!(rb.entries_moved, 1);
+    assert_eq!(rb.remissed_flights, 1, "the gap arrival is the join's re-miss");
+    assert!(rb.remiss_api_usd > 0.0);
+    assert_eq!(rb.rehashed_requests, 2, "both post-join arrivals route to the joiner");
+}
+
+/// Temp dir helper: a fresh, empty snapshot directory per test.
+fn fresh_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn cluster_snapshot_round_trip_is_bit_identical_under_unchanged_membership() {
+    let suite = tasks::kernelbench();
+    let mk_trace = |seed: u64| {
+        generate(
+            suite.len(),
+            &TrafficConfig {
+                requests: 150,
+                seed,
+                tenant_mix: vec![("a".to_string(), 3.0), ("b".to_string(), 1.0)],
+                ..TrafficConfig::default()
+            },
+        )
+    };
+    let warm_trace = mk_trace(7);
+    let day2 = mk_trace(11);
+    let cfg = ClusterConfig {
+        nodes: 3,
+        tenants: vec![TenantSpec::new("a", 3.0), TenantSpec::new("b", 1.0)],
+        service: ServiceConfig { threads: 2, window: 16, seed: 7, ..ServiceConfig::default() },
+        ..ClusterConfig::default()
+    };
+    let dir = fresh_dir("cudaforge_cluster_snap_roundtrip");
+
+    let mut original = ClusterService::new(cfg.clone());
+    original.replay(&warm_trace, &suite, &NoOracle);
+    let manifest = original.snapshot(&dir).unwrap();
+    assert_eq!(manifest.nodes, 3);
+    assert!(
+        manifest.shards.iter().map(|s| s.entries).sum::<usize>() > 0,
+        "the warm replay cached something"
+    );
+
+    let (mut restored, rb) = ClusterService::restore(cfg, &dir).unwrap();
+    assert!(rb.is_none(), "unchanged membership: nothing moves");
+    assert_eq!(restored.epoch(), original.epoch());
+    for n in 0..3 {
+        assert_eq!(restored.cache(n).len(), original.cache(n).len());
+    }
+
+    // The hard contract: day-2 traffic replays bit-identically through the
+    // snapshot-restored cluster and the original warm one — every counter,
+    // percentile, and dollar sum (the snapshot carries per-shard recency
+    // *and* the cluster-wide cold-cost registry, so counterfactual pricing
+    // survives the restart too).
+    let expected = original.replay(&day2, &suite, &NoOracle);
+    let got = restored.replay(&day2, &suite, &NoOracle);
+    assert_eq!(got, expected);
+    assert!(expected.overall.cache_hits > 0, "day 2 re-uses day 1's work");
+}
+
+#[test]
+fn restore_under_a_different_node_count_accounts_the_movement_exactly() {
+    let suite = tasks::kernelbench();
+    let trace = generate(
+        suite.len(),
+        &TrafficConfig { requests: 200, seed: 7, ..TrafficConfig::default() },
+    );
+    let mk = |nodes: usize| ClusterConfig {
+        nodes,
+        service: ServiceConfig { threads: 2, window: 16, seed: 7, ..ServiceConfig::default() },
+        ..ClusterConfig::default()
+    };
+    let dir = fresh_dir("cudaforge_cluster_snap_regrow");
+    let mut two = ClusterService::new(mk(2));
+    two.replay(&trace, &suite, &NoOracle);
+    two.snapshot(&dir).unwrap();
+    let entries_before: usize = (0..2).map(|n| two.cache(n).len()).sum();
+    assert!(entries_before > 0);
+
+    // Expected movement under the grown router, computed independently.
+    let r3 = Router::new(3);
+    let alive3 = [true, true, true];
+    let expected_moved: usize = (0..2)
+        .map(|n| {
+            two.cache(n)
+                .entries_coldest_first()
+                .filter(|e| r3.route(e.fingerprint, &alive3) != Some(n))
+                .count()
+        })
+        .sum();
+    assert!(expected_moved > 0, "growing 2 -> 3 must displace some keys");
+
+    let (mut three, rb) = ClusterService::restore(mk(3), &dir).unwrap();
+    let rb = rb.expect("a node-count change is a rebalance");
+    assert_eq!(rb.kind, RebalanceKind::SnapshotRestore);
+    assert_eq!(rb.node, 2, "the snapshot was laid out for 2 nodes");
+    assert_eq!(rb.entries_moved, expected_moved, "movement is exactly accounted");
+    assert_eq!(rb.cache_entries_lost, 0);
+    assert!((rb.transfer_s - expected_moved as f64 * 30.0).abs() < 1e-9);
+    assert_eq!(three.epoch(), two.epoch() + 1, "the regrow is a membership change");
+    // Conservation: every entry landed, and on its 3-node owner.
+    let entries_after: usize = (0..3).map(|n| three.cache(n).len()).sum();
+    assert_eq!(entries_after, entries_before);
+    for n in 0..3 {
+        for e in three.cache(n).entries_coldest_first() {
+            assert_eq!(r3.route(e.fingerprint, &alive3), Some(n));
+        }
+    }
+    // The restore's movement also leads the next replay's report, so a
+    // library caller reading ClusterReport.rebalances sees it too.
+    let r = three.replay(&trace, &suite, &NoOracle);
+    assert_eq!(
+        r.rebalances.first().map(|rb| (rb.kind, rb.entries_moved)),
+        Some((RebalanceKind::SnapshotRestore, expected_moved)),
+        "the restore rebalance rides into the first post-restore replay"
+    );
+
+    // Shrinking 2 -> 1 is the inverse: exactly shard 1's entries move.
+    let (one, rb) = ClusterService::restore(mk(1), &dir).unwrap();
+    let rb = rb.expect("a node-count change is a rebalance");
+    assert_eq!(rb.entries_moved, two.cache(1).len());
+    assert_eq!(one.cache(0).len(), entries_before);
 }
 
 #[test]

@@ -226,6 +226,38 @@ fn snapshot_restore_makes_the_restart_warm() {
 }
 
 #[test]
+fn cluster_shard_files_are_single_node_snapshots() {
+    // Cross-layer compat contract: each `shard-<i>.jsonl` a cluster
+    // snapshot writes is a valid single-node cache snapshot (the epoch /
+    // shard / nodes stamps ride in the header, which `ResultCache::restore`
+    // ignores) — an operator can lift one shard out of a cluster snapshot
+    // and warm a single-node service with it.
+    use cudaforge::cluster::{ClusterConfig, ClusterService};
+    let suite = tasks::kernelbench();
+    let trace = generate(
+        suite.len(),
+        &TrafficConfig { requests: 120, seed: 7, ..TrafficConfig::default() },
+    );
+    let mut cluster = ClusterService::new(ClusterConfig {
+        nodes: 2,
+        service: ServiceConfig { threads: 2, window: 16, seed: 7, ..ServiceConfig::default() },
+        ..ClusterConfig::default()
+    });
+    cluster.replay(&trace, &suite, &NoOracle);
+    let dir = std::env::temp_dir().join("cudaforge_shard_compat_itest");
+    let _ = std::fs::remove_dir_all(&dir);
+    let manifest = cluster.snapshot(&dir).unwrap();
+
+    for (i, shard) in manifest.shards.iter().enumerate() {
+        let restored = ResultCache::restore(dir.join(&shard.file), 1024).unwrap();
+        assert_eq!(restored.len(), cluster.cache(i).len(), "shard {i} round-trips");
+        for e in cluster.cache(i).entries_coldest_first() {
+            assert_eq!(restored.peek(e.fingerprint), Some(e), "shard {i} entry survives");
+        }
+    }
+}
+
+#[test]
 fn window_batch_size_never_changes_the_report() {
     // `window` is demoted to a host-side OS-thread batching knob: the
     // replay is event-driven, so the full report — counters, latency
