@@ -1,0 +1,88 @@
+//! Autoscaling walkthrough: replay one Zipf trace through every
+//! (policy, scenario) combination and print the cost/SLO frontier — the
+//! operational question the autoscaling subsystem exists for: how many
+//! node-hours does each policy spend, and what does that spend buy in
+//! per-priority SLO attainment, tail latency, and shed counts, once the
+//! policy's own churn (cache-entry losses, transfer gaps, re-run bills) is
+//! priced by the rebalance machinery?
+//!
+//! The fleet has 6 node slots of which 4 start alive, so policies have
+//! headroom in both directions; joins pay a 10-minute provisioning delay,
+//! fails land immediately. The static policy is the do-nothing baseline —
+//! under the steady scenario it reproduces the plain `cluster` replay bit
+//! for bit.
+//!
+//!     cargo run --release --example autoscale_frontier
+
+use cudaforge::cluster::autoscale::{policy_by_name, AutoscaleConfig, POLICY_NAMES};
+use cudaforge::cluster::{AutoscaleRun, ClusterConfig, ClusterService, Scenario};
+use cudaforge::report::{frontier_table, FrontierRow};
+use cudaforge::service::traffic::{generate, TrafficConfig};
+use cudaforge::service::ServiceConfig;
+use cudaforge::tasks;
+use cudaforge::workflow::NoOracle;
+
+const SLOTS: usize = 6;
+const START_ALIVE: usize = 4;
+
+fn main() {
+    let suite = tasks::kernelbench();
+    let base_trace = generate(
+        suite.len(),
+        &TrafficConfig { requests: 800, ..TrafficConfig::default() },
+    );
+
+    let mut rows = Vec::new();
+    for scenario in Scenario::all() {
+        // The shapers move arrival instants only — same tasks, same GPUs,
+        // same tenants — so every policy faces the same work, differently
+        // timed.
+        let mut trace = base_trace.clone();
+        scenario.shape_arrivals(&mut trace);
+        let span_s = trace.last().map(|r| r.arrival_s).unwrap_or(0.0);
+
+        for policy_name in POLICY_NAMES {
+            let policy = policy_by_name(policy_name).expect("known policy");
+            let mut run = AutoscaleRun::new(
+                policy,
+                AutoscaleConfig {
+                    tick_s: 3600.0,
+                    provision_delay_s: 600.0,
+                    min_nodes: 1,
+                    max_nodes: SLOTS,
+                },
+            );
+            let mut config = ClusterConfig {
+                nodes: SLOTS,
+                initial_dead: (START_ALIVE..SLOTS).collect(),
+                node_service_multipliers: scenario.service_multipliers(SLOTS),
+                service: ServiceConfig { window: 32, ..ServiceConfig::default() },
+                ..ClusterConfig::default()
+            };
+            config.events.extend(scenario.membership_events(START_ALIVE, span_s));
+
+            let mut svc = ClusterService::new(config);
+            let report = svc.replay_autoscaled(&trace, &suite, &NoOracle, &mut run);
+            println!(
+                "{:>17} x {:<16} {:>2} ticks  {:>2} joins  {:>2} fails  \
+                 {:>8.2} node-hrs  {:>4} shed",
+                scenario.name(),
+                policy_name,
+                run.ticks,
+                run.joins(),
+                run.fails(),
+                report.node_hours,
+                report.overall.rejected,
+            );
+            rows.push(FrontierRow {
+                policy: policy_name.to_string(),
+                scenario: scenario.name().to_string(),
+                joins: run.joins(),
+                fails: run.fails(),
+                report,
+            });
+        }
+    }
+
+    println!("{}", frontier_table(&rows).render());
+}

@@ -33,6 +33,7 @@ fn base_config() -> ClusterConfig {
             ..ServiceConfig::default()
         },
         events: Vec::new(),
+        ..ClusterConfig::default()
     }
 }
 

@@ -5,6 +5,12 @@
 //! order), the same replay through a fail + rejoin membership cycle (the
 //! planned-rebalance path), and a shard-aware snapshot save/restore round
 //! trip.
+//!
+//! A node-count sweep reports sharded-replay throughput in requests/s at
+//! several fleet sizes; set `CUDAFORGE_BENCH_JSON=<path>` to also emit the
+//! whole series as JSON (`BENCH_cluster.json` at the repo root is the
+//! committed reference run) and `CUDAFORGE_BENCH_FAST=1` for a CI-speed
+//! smoke pass.
 
 use cudaforge::cluster::{
     fair_share_quotas, ClusterConfig, ClusterService, MembershipEvent, Router, TenantSpec,
@@ -13,14 +19,16 @@ use cudaforge::service::fingerprint::Fingerprint;
 use cudaforge::service::traffic::{generate, TrafficConfig};
 use cudaforge::service::ServiceConfig;
 use cudaforge::tasks;
-use cudaforge::util::bench::{bench, black_box};
+use cudaforge::util::bench::{black_box, BenchSet};
 use cudaforge::workflow::NoOracle;
 
 fn main() {
+    let mut set = BenchSet::new("cluster");
+
     let router = Router::new(8);
     let alive = vec![true; 8];
     let mut k = 0u64;
-    bench("cluster::router route (8 nodes)", 2_000_000, || {
+    set.run("cluster::router route (8 nodes)", 2_000_000, 1.0, || {
         let fp = Fingerprint(k.wrapping_mul(0x9E37_79B9_7F4A_7C15));
         black_box(router.route(fp, &alive));
         k += 1;
@@ -29,7 +37,7 @@ fn main() {
     let mut degraded = vec![true; 8];
     degraded[3] = false;
     let mut j = 0u64;
-    bench("cluster::router route (8 nodes, 1 dead)", 2_000_000, || {
+    set.run("cluster::router route (8 nodes, 1 dead)", 2_000_000, 1.0, || {
         let fp = Fingerprint(j.wrapping_mul(0x2545_F491_4F6C_DD1D));
         black_box(router.route(fp, &degraded));
         j += 1;
@@ -38,7 +46,7 @@ fn main() {
     let tenants: Vec<TenantSpec> = (0..16)
         .map(|i| TenantSpec::new(format!("t{i}"), 1.0 + i as f64))
         .collect();
-    bench("cluster::fair_share_quotas (16 tenants)", 1_000_000, || {
+    set.run("cluster::fair_share_quotas (16 tenants)", 1_000_000, 1.0, || {
         black_box(fair_share_quotas(64, &tenants));
     });
 
@@ -64,7 +72,7 @@ fn main() {
         },
         ..ClusterConfig::default()
     };
-    bench("cluster::replay 200 Zipf requests over 4 nodes (e2e)", 200, || {
+    set.run("cluster::replay 200 Zipf requests over 4 nodes (e2e)", 200, 200.0, || {
         let mut svc = ClusterService::new(base());
         black_box(svc.replay(&trace, &suite, &NoOracle));
     });
@@ -74,7 +82,7 @@ fn main() {
     // re-runs, and the join's planned-rebalance refills.
     let fail_at = trace[trace.len() / 3].arrival_s;
     let rejoin_at = trace[2 * trace.len() / 3].arrival_s;
-    bench("cluster::replay with fail + rejoin (planned rebalance)", 200, || {
+    set.run("cluster::replay with fail + rejoin (planned rebalance)", 200, 200.0, || {
         let mut cfg = base();
         cfg.events =
             vec![MembershipEvent::fail(1, fail_at), MembershipEvent::join(1, rejoin_at)];
@@ -82,14 +90,29 @@ fn main() {
         black_box(svc.replay(&trace, &suite, &NoOracle));
     });
 
+    // Throughput sweep: the same 200-request trace replayed over growing
+    // fleets — the global event loop's cost scales with node count, and the
+    // figure is reported in requests/s via `units_per_iter`.
+    for nodes in [1usize, 4, 8] {
+        let name = format!("cluster::replay throughput (200 reqs, {nodes} nodes)");
+        set.run(&name, 200, 200.0, || {
+            let mut cfg = base();
+            cfg.nodes = nodes;
+            let mut svc = ClusterService::new(cfg);
+            black_box(svc.replay(&trace, &suite, &NoOracle));
+        });
+    }
+
     // Shard-aware snapshot round trip: manifest + N shard files + the
     // cold-cost registry, written and cross-checked back in.
     let mut warm = ClusterService::new(base());
     warm.replay(&trace, &suite, &NoOracle);
     let dir = std::env::temp_dir().join("cudaforge_cluster_bench_snapshot");
     let _ = std::fs::remove_dir_all(&dir);
-    bench("cluster::snapshot save + restore (4 shards)", 50, || {
+    set.run("cluster::snapshot save + restore (4 shards)", 50, 1.0, || {
         warm.snapshot(&dir).expect("snapshot");
         black_box(ClusterService::restore(base(), &dir).expect("restore"));
     });
+
+    set.finish();
 }

@@ -5,6 +5,11 @@
 //! serving time, so it must stay far below the microsecond regime. The
 //! final pair of replays shows the `window` knob is host-side batching
 //! only: both run the identical event-driven simulation.
+//!
+//! A trace-size sweep reports end-to-end replay throughput in requests/s at
+//! several sizes; set `CUDAFORGE_BENCH_JSON=<path>` to also emit the whole
+//! series as JSON (`BENCH_service.json` at the repo root is the committed
+//! reference run) and `CUDAFORGE_BENCH_FAST=1` for a CI-speed smoke pass.
 
 use cudaforge::agents::profiles::O3;
 use cudaforge::gpu::RTX6000_ADA;
@@ -16,7 +21,7 @@ use cudaforge::service::queue::Priority;
 use cudaforge::service::traffic::{generate, TrafficConfig};
 use cudaforge::service::{KernelService, ServiceConfig};
 use cudaforge::tasks;
-use cudaforge::util::bench::{bench, black_box};
+use cudaforge::util::bench::{black_box, BenchSet};
 use cudaforge::workflow::{NoOracle, Strategy};
 
 fn entry(fp: u64) -> CacheEntry {
@@ -49,8 +54,9 @@ impl FleetHooks for Fixed {
 fn main() {
     let suite = tasks::kernelbench();
     let task = &suite[0];
+    let mut set = BenchSet::new("service");
 
-    bench("service::fingerprint::of_request", 2_000_000, || {
+    set.run("service::fingerprint::of_request", 2_000_000, 1.0, || {
         black_box(of_request(task, &RTX6000_ADA, &O3, &O3, Strategy::CudaForge, 10));
     });
 
@@ -59,7 +65,7 @@ fn main() {
         cache.insert(entry(i));
     }
     let mut i = 0u64;
-    bench("service::cache get+insert under LRU churn", 1_000_000, || {
+    set.run("service::cache get+insert under LRU churn", 1_000_000, 1.0, || {
         black_box(cache.get(Fingerprint(i % 700)));
         if i % 7 == 0 {
             cache.insert(entry(i % 900));
@@ -68,7 +74,7 @@ fn main() {
     });
 
     let mut seq = 0u64;
-    bench("service::fleet submit+join (window of 32, heavy dedup)", 200_000, || {
+    set.run("service::fleet submit+join (window of 32, heavy dedup)", 200_000, 32.0, || {
         let mut fleet = FleetSim::new(4);
         let mut hooks = Fixed(900.0);
         for k in 0..32u64 {
@@ -90,7 +96,7 @@ fn main() {
     });
 
     let mut sim_seq = 0u64;
-    bench("service::fleet submit+advance (16 flights, 4 workers)", 100_000, || {
+    set.run("service::fleet submit+advance (16 flights, 4 workers)", 100_000, 16.0, || {
         let mut fleet = FleetSim::new(4);
         let mut hooks = Fixed(900.0);
         for k in 0..16u64 {
@@ -108,7 +114,7 @@ fn main() {
         sim_seq += 16;
     });
 
-    bench("service::replay 200 Zipf requests (e2e)", 500, || {
+    set.run("service::replay 200 Zipf requests (e2e)", 500, 200.0, || {
         let trace = generate(
             suite.len(),
             &TrafficConfig { requests: 200, ..TrafficConfig::default() },
@@ -124,7 +130,7 @@ fn main() {
     // The window knob batches host work only; the simulation is identical.
     for window in [1usize, 64] {
         let name = format!("service::replay 200 Zipf requests (window {window})");
-        bench(&name, 200, || {
+        set.run(&name, 200, 200.0, || {
             let trace = generate(
                 suite.len(),
                 &TrafficConfig { requests: 200, ..TrafficConfig::default() },
@@ -137,4 +143,26 @@ fn main() {
             black_box(svc.replay(&trace, &suite, &NoOracle));
         });
     }
+
+    // Throughput sweep: how replay cost scales with trace size. The trace
+    // is generated outside the timed closure so the figure is the replay
+    // itself, reported in requests/s via `units_per_iter`.
+    for requests in [200usize, 1000, 4000] {
+        let trace = generate(
+            suite.len(),
+            &TrafficConfig { requests, ..TrafficConfig::default() },
+        );
+        let name = format!("service::replay throughput ({requests} reqs)");
+        let iters = (200_000 / requests.max(1)) as u64;
+        set.run(&name, iters.max(10), requests as f64, || {
+            let mut svc = KernelService::new(ServiceConfig {
+                threads: 1,
+                window: 16,
+                ..ServiceConfig::default()
+            });
+            black_box(svc.replay(&trace, &suite, &NoOracle));
+        });
+    }
+
+    set.finish();
 }

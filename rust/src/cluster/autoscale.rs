@@ -1,0 +1,623 @@
+//! Closed-loop autoscaling policies over the cluster's membership.
+//!
+//! A replay under autoscaling ([`super::ClusterService::replay_autoscaled`])
+//! pauses at simulated **decision ticks** (every
+//! [`AutoscaleConfig::tick_s`] seconds), snapshots per-node rolling signals
+//! into a [`TickSignals`], and asks an [`AutoscalePolicy`] how many nodes to
+//! add or drop. The [`AutoscaleRun`] turns that integer into concrete
+//! [`MembershipEvent`]s — fails land immediately, joins land after the
+//! configured provisioning delay — and the replay feeds them through the
+//! **same** epoch-versioned membership machinery scripted events use, so
+//! every policy decision is automatically priced: cache-entry losses,
+//! transfer gaps, refill billing, and the per-event
+//! [`super::RebalanceReport`] all come for free.
+//!
+//! Everything here is deterministic: policies see only simulated-time
+//! signals (never wall-clock or thread counts), so a policy run inherits
+//! the replay's bit-identity contracts across OS `threads` and `window`
+//! sizes. The [`StaticPolicy`] never acts, which makes an autoscaled replay
+//! under it bit-identical to a plain [`super::ClusterService::replay`] —
+//! the anchor the integration tests pin.
+
+use crate::cluster::{MembershipChange, MembershipEvent};
+
+/// One node's rolling signals at a decision tick.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeSignals {
+    /// Node slot index.
+    pub node: usize,
+    /// Whether the node is alive at the tick instant.
+    pub alive: bool,
+    /// Busy-seconds accrued since the previous tick divided by the node's
+    /// worker-seconds of capacity over the same span. Service time accrues
+    /// at flight *start* (the fleet's rolling-utilization convention), so a
+    /// long flight shows up entirely in the tick that admitted it.
+    pub utilization: f64,
+    /// Flights waiting in the node's queue at the tick instant.
+    pub backlog: usize,
+}
+
+/// Everything a policy may observe at one decision tick. All fields are
+/// functions of simulated time only.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TickSignals {
+    /// The tick's simulated instant.
+    pub at_s: f64,
+    /// Seconds since the previous tick (equals the tick period except for
+    /// a first tick after a warm restore).
+    pub elapsed_s: f64,
+    /// Alive nodes at the tick instant.
+    pub alive_nodes: usize,
+    /// Total worker slots across alive nodes.
+    pub total_slots: usize,
+    /// Per-node signals, indexed by slot (dead nodes included, marked).
+    pub per_node: Vec<NodeSignals>,
+    /// Total queued flights across alive nodes.
+    pub backlog_total: usize,
+    /// Mean utilization across alive nodes (0 if none are alive).
+    pub mean_utilization: f64,
+    /// Fraction of requests *completed since the previous tick* that met
+    /// their priority's SLO target; 1.0 when nothing completed (an idle
+    /// window is not an SLO violation).
+    pub slo_attainment: f64,
+    /// Requests completed since the previous tick.
+    pub served_window: u64,
+    /// Requests that had arrived by the tick instant, since replay start.
+    pub arrivals_window: usize,
+}
+
+/// A deterministic sizing policy: observe a tick, answer with a signed
+/// node delta (`+n` schedule n joins, `-n` schedule n fails, `0` hold).
+/// The [`AutoscaleRun`] clamps the answer to the fleet's actual headroom,
+/// so policies may answer optimistically.
+pub trait AutoscalePolicy {
+    /// The policy's CLI/report name.
+    fn name(&self) -> &'static str;
+    /// Decide a node delta for this tick. `&mut self` so policies can keep
+    /// internal state (cooldowns, last-direction hysteresis) — but that
+    /// state must itself be a function of the observed signal sequence.
+    fn decide(&mut self, signals: &TickSignals) -> i64;
+}
+
+/// The do-nothing baseline: the fleet stays whatever size it started at.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StaticPolicy;
+
+impl AutoscalePolicy for StaticPolicy {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+    fn decide(&mut self, _signals: &TickSignals) -> i64 {
+        0
+    }
+}
+
+/// Threshold/hysteresis on rolling utilization and backlog depth: scale up
+/// when mean utilization or per-node backlog crosses the high-water mark,
+/// scale down only when utilization is below the low-water mark *and* the
+/// queues are empty, and hold for `cooldown_ticks` after any action so one
+/// burst doesn't cause a join/fail flap.
+#[derive(Clone, Copy, Debug)]
+pub struct ThresholdPolicy {
+    /// Scale up when mean utilization exceeds this.
+    pub util_high: f64,
+    /// Scale down only when mean utilization is below this.
+    pub util_low: f64,
+    /// Scale up when queued flights per alive node exceed this.
+    pub backlog_high: f64,
+    /// Ticks to hold after acting (the hysteresis half of the policy).
+    pub cooldown_ticks: usize,
+    cooldown: usize,
+}
+
+impl Default for ThresholdPolicy {
+    fn default() -> Self {
+        ThresholdPolicy {
+            util_high: 0.75,
+            util_low: 0.20,
+            backlog_high: 4.0,
+            cooldown_ticks: 1,
+            cooldown: 0,
+        }
+    }
+}
+
+impl ThresholdPolicy {
+    /// Build a fully-parameterized threshold policy (the `cooldown` counter
+    /// itself is internal state and starts at zero).
+    pub fn new(
+        util_high: f64,
+        util_low: f64,
+        backlog_high: f64,
+        cooldown_ticks: usize,
+    ) -> ThresholdPolicy {
+        ThresholdPolicy { util_high, util_low, backlog_high, cooldown_ticks, cooldown: 0 }
+    }
+}
+
+impl AutoscalePolicy for ThresholdPolicy {
+    fn name(&self) -> &'static str {
+        "threshold"
+    }
+    fn decide(&mut self, s: &TickSignals) -> i64 {
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return 0;
+        }
+        let per_node_backlog = if s.alive_nodes > 0 {
+            s.backlog_total as f64 / s.alive_nodes as f64
+        } else {
+            s.backlog_total as f64
+        };
+        if s.mean_utilization > self.util_high || per_node_backlog > self.backlog_high {
+            self.cooldown = self.cooldown_ticks;
+            1
+        } else if s.mean_utilization < self.util_low && s.backlog_total == 0 {
+            self.cooldown = self.cooldown_ticks;
+            -1
+        } else {
+            0
+        }
+    }
+}
+
+/// Target-tracking on windowed SLO attainment: scale up whenever the
+/// fraction of requests completed since the last tick that met their SLO
+/// drops below `target_attainment`; scale down when attainment holds *and*
+/// the fleet is so idle (below `util_floor`, empty queues) that shedding a
+/// node can't plausibly cost the target.
+#[derive(Clone, Copy, Debug)]
+pub struct TargetTrackingPolicy {
+    /// Windowed SLO attainment to defend.
+    pub target_attainment: f64,
+    /// Scale down only when mean utilization is below this.
+    pub util_floor: f64,
+    /// Ticks to hold after acting.
+    pub cooldown_ticks: usize,
+    cooldown: usize,
+}
+
+impl Default for TargetTrackingPolicy {
+    fn default() -> Self {
+        TargetTrackingPolicy {
+            target_attainment: 0.95,
+            util_floor: 0.25,
+            cooldown_ticks: 1,
+            cooldown: 0,
+        }
+    }
+}
+
+impl TargetTrackingPolicy {
+    /// Build a fully-parameterized target-tracking policy (the `cooldown`
+    /// counter itself is internal state and starts at zero).
+    pub fn new(
+        target_attainment: f64,
+        util_floor: f64,
+        cooldown_ticks: usize,
+    ) -> TargetTrackingPolicy {
+        TargetTrackingPolicy { target_attainment, util_floor, cooldown_ticks, cooldown: 0 }
+    }
+}
+
+impl AutoscalePolicy for TargetTrackingPolicy {
+    fn name(&self) -> &'static str {
+        "target-tracking"
+    }
+    fn decide(&mut self, s: &TickSignals) -> i64 {
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return 0;
+        }
+        if s.slo_attainment < self.target_attainment {
+            self.cooldown = self.cooldown_ticks;
+            1
+        } else if s.mean_utilization < self.util_floor && s.backlog_total == 0 {
+            self.cooldown = self.cooldown_ticks;
+            -1
+        } else {
+            0
+        }
+    }
+}
+
+/// Look a policy up by its CLI name (`static`, `threshold`,
+/// `target-tracking`), with default parameters.
+pub fn policy_by_name(name: &str) -> Option<Box<dyn AutoscalePolicy>> {
+    match name {
+        "static" => Some(Box::new(StaticPolicy)),
+        "threshold" => Some(Box::<ThresholdPolicy>::default()),
+        "target-tracking" => Some(Box::<TargetTrackingPolicy>::default()),
+        _ => None,
+    }
+}
+
+/// Every policy name [`policy_by_name`] accepts, in presentation order.
+pub const POLICY_NAMES: [&str; 3] = ["static", "threshold", "target-tracking"];
+
+/// Knobs shared by every policy run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutoscaleConfig {
+    /// Seconds between decision ticks.
+    pub tick_s: f64,
+    /// Simulated seconds between a join decision and the capacity landing
+    /// (instance boot + image pull + cache-server attach). Fails are
+    /// immediate — capacity you drop is gone now.
+    pub provision_delay_s: f64,
+    /// Never fail the fleet below this many alive nodes.
+    pub min_nodes: usize,
+    /// Never join the fleet above this many alive-or-provisioning nodes
+    /// (additionally capped by the cluster's configured node-slot count).
+    pub max_nodes: usize,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            tick_s: 3600.0,
+            provision_delay_s: 600.0,
+            min_nodes: 1,
+            max_nodes: usize::MAX,
+        }
+    }
+}
+
+/// One concrete action a policy took: the decision instant, the instant
+/// the resulting membership event lands, and the event itself.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScheduledAction {
+    /// Tick instant the policy decided at.
+    pub decided_at_s: f64,
+    /// Instant the membership event fires (`decided_at_s` for fails,
+    /// `decided_at_s + provision_delay_s` for joins).
+    pub at_s: f64,
+    /// Node slot acted on.
+    pub node: usize,
+    /// Whether the node fails or joins.
+    pub change: MembershipChange,
+}
+
+/// The mutable state of one policy run: the policy, its tick cursor, the
+/// rolling-signal baselines, and the action log. Owned by the caller and
+/// threaded through [`super::ClusterService::replay_autoscaled`]; after the
+/// replay, [`AutoscaleRun::actions`] holds every event the policy emitted.
+pub struct AutoscaleRun {
+    /// The run's knobs.
+    pub config: AutoscaleConfig,
+    policy: Box<dyn AutoscalePolicy>,
+    /// 1-based index of the next tick to fire (tick k fires at `k * tick_s`).
+    next_tick: u64,
+    /// Joins scheduled but not yet landed (their `at_s` is in the future).
+    pending_joins: Vec<MembershipEvent>,
+    prev_busy: Vec<f64>,
+    prev_served: u64,
+    prev_ok: u64,
+    last_tick_s: f64,
+    /// Every action the policy took, in decision order.
+    pub actions: Vec<ScheduledAction>,
+    /// Decision ticks fired so far.
+    pub ticks: usize,
+}
+
+impl AutoscaleRun {
+    /// Wrap a policy and config into a fresh run.
+    pub fn new(policy: Box<dyn AutoscalePolicy>, config: AutoscaleConfig) -> AutoscaleRun {
+        assert!(
+            config.tick_s.is_finite() && config.tick_s > 0.0,
+            "autoscale tick must be finite and positive, got {}",
+            config.tick_s
+        );
+        AutoscaleRun {
+            config,
+            policy,
+            next_tick: 1,
+            pending_joins: Vec::new(),
+            prev_busy: Vec::new(),
+            prev_served: 0,
+            prev_ok: 0,
+            last_tick_s: 0.0,
+            actions: Vec::new(),
+            ticks: 0,
+        }
+    }
+
+    /// The wrapped policy's name.
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Joins the policy has scheduled this run.
+    pub fn joins(&self) -> usize {
+        self.actions.iter().filter(|a| a.change == MembershipChange::Join).count()
+    }
+
+    /// Fails the policy has scheduled this run.
+    pub fn fails(&self) -> usize {
+        self.actions.iter().filter(|a| a.change == MembershipChange::Fail).count()
+    }
+
+    /// The next decision tick due at or before `now`, if any.
+    pub(crate) fn next_due(&self, now: f64) -> Option<f64> {
+        let at = self.next_tick as f64 * self.config.tick_s;
+        (at <= now).then_some(at)
+    }
+
+    /// Fire the tick at `at_s`: build the [`TickSignals`] from the raw
+    /// per-node state, ask the policy, clamp its answer to the fleet's
+    /// headroom, and return the membership events to schedule. `alive`,
+    /// `busy_s`, and `depths` are indexed by node slot; `served`/`slo_ok`
+    /// are since-replay-start completion counters and `arrivals` the
+    /// number of requests that have arrived so far.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn observe(
+        &mut self,
+        at_s: f64,
+        alive: &[bool],
+        busy_s: &[f64],
+        depths: &[usize],
+        workers_per_node: usize,
+        served: u64,
+        slo_ok: u64,
+        arrivals: usize,
+    ) -> Vec<MembershipEvent> {
+        self.next_tick += 1;
+        self.ticks += 1;
+        let elapsed_s = at_s - self.last_tick_s;
+        self.prev_busy.resize(busy_s.len(), 0.0);
+
+        let capacity_s = workers_per_node as f64 * elapsed_s;
+        let per_node: Vec<NodeSignals> = (0..busy_s.len())
+            .map(|node| NodeSignals {
+                node,
+                alive: alive[node],
+                utilization: if capacity_s > 0.0 {
+                    (busy_s[node] - self.prev_busy[node]) / capacity_s
+                } else {
+                    0.0
+                },
+                backlog: depths[node],
+            })
+            .collect();
+        let alive_nodes = per_node.iter().filter(|n| n.alive).count();
+        let backlog_total: usize = per_node.iter().filter(|n| n.alive).map(|n| n.backlog).sum();
+        let mean_utilization = if alive_nodes > 0 {
+            per_node.iter().filter(|n| n.alive).map(|n| n.utilization).sum::<f64>()
+                / alive_nodes as f64
+        } else {
+            0.0
+        };
+        let served_window = served - self.prev_served;
+        let slo_attainment = if served_window > 0 {
+            (slo_ok - self.prev_ok) as f64 / served_window as f64
+        } else {
+            1.0
+        };
+        let signals = TickSignals {
+            at_s,
+            elapsed_s,
+            alive_nodes,
+            total_slots: alive_nodes * workers_per_node,
+            per_node,
+            backlog_total,
+            mean_utilization,
+            slo_attainment,
+            served_window,
+            arrivals_window: arrivals,
+        };
+
+        self.prev_busy.copy_from_slice(busy_s);
+        self.prev_served = served;
+        self.prev_ok = slo_ok;
+        self.last_tick_s = at_s;
+
+        let want = self.policy.decide(&signals);
+        self.pending_joins.retain(|ev| ev.at_s > at_s);
+
+        let mut out = Vec::new();
+        if want > 0 {
+            // Planned-alive = alive now + joins still in flight; never
+            // provision past max_nodes or past the configured slot count.
+            let ceiling = self.config.max_nodes.min(alive.len());
+            let planned = alive_nodes + self.pending_joins.len();
+            let room = ceiling.saturating_sub(planned);
+            let mut to_add = (want as usize).min(room);
+            for node in 0..alive.len() {
+                if to_add == 0 {
+                    break;
+                }
+                if !alive[node] && !self.has_pending(node) {
+                    let ev = MembershipEvent::join(
+                        node,
+                        at_s + self.config.provision_delay_s.max(0.0),
+                    );
+                    self.pending_joins.push(ev);
+                    self.actions.push(ScheduledAction {
+                        decided_at_s: at_s,
+                        at_s: ev.at_s,
+                        node,
+                        change: MembershipChange::Join,
+                    });
+                    out.push(ev);
+                    to_add -= 1;
+                }
+            }
+        } else if want < 0 {
+            // Clamp against both the planned size (so we don't decide our
+            // way below min_nodes counting in-flight joins) and the live
+            // size (so we never fail a node that isn't actually alive).
+            let planned = alive_nodes + self.pending_joins.len();
+            let mut to_drop = ((-want) as usize)
+                .min(planned.saturating_sub(self.config.min_nodes))
+                .min(alive_nodes.saturating_sub(self.config.min_nodes));
+            for node in (0..alive.len()).rev() {
+                if to_drop == 0 {
+                    break;
+                }
+                if alive[node] && !self.has_pending(node) {
+                    let ev = MembershipEvent::fail(node, at_s);
+                    self.actions.push(ScheduledAction {
+                        decided_at_s: at_s,
+                        at_s,
+                        node,
+                        change: MembershipChange::Fail,
+                    });
+                    out.push(ev);
+                    to_drop -= 1;
+                }
+            }
+        }
+        out
+    }
+
+    fn has_pending(&self, node: usize) -> bool {
+        self.pending_joins.iter().any(|ev| ev.node == node)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tick(run: &mut AutoscaleRun, at_s: f64, alive: &[bool], busy: &[f64], depths: &[usize]) -> Vec<MembershipEvent> {
+        run.observe(at_s, alive, busy, depths, 2, 0, 0, 0)
+    }
+
+    #[test]
+    fn static_policy_never_acts() {
+        let mut run = AutoscaleRun::new(Box::new(StaticPolicy), AutoscaleConfig::default());
+        for k in 1..=10u64 {
+            let evs = tick(
+                &mut run,
+                k as f64 * 3600.0,
+                &[true, true, false],
+                &[1e6, 1e6, 0.0],
+                &[50, 50, 0],
+            );
+            assert!(evs.is_empty());
+        }
+        assert_eq!(run.ticks, 10);
+        assert!(run.actions.is_empty());
+    }
+
+    #[test]
+    fn threshold_scales_up_on_hot_fleet_and_down_on_idle() {
+        let policy = ThresholdPolicy { cooldown_ticks: 0, ..ThresholdPolicy::default() };
+        let mut run = AutoscaleRun::new(Box::new(policy), AutoscaleConfig::default());
+        // Tick 1: two alive nodes fully busy (2 workers * 3600 s each).
+        let evs = tick(&mut run, 3600.0, &[true, true, false], &[7200.0, 7200.0, 0.0], &[0, 0, 0]);
+        assert_eq!(evs, vec![MembershipEvent::join(2, 3600.0 + 600.0)], "hot fleet joins the first dead slot, after the provisioning delay");
+        // Tick 2: node 2's join landed at 4200 s, and the fleet is now
+        // idle (no new busy-seconds, empty queues) — shed the
+        // highest-indexed alive node.
+        let evs = tick(&mut run, 7200.0, &[true, true, true], &[7200.0, 7200.0, 0.0], &[0, 0, 0]);
+        assert_eq!(evs, vec![MembershipEvent::fail(2, 7200.0)]);
+        assert_eq!(run.joins(), 1);
+        assert_eq!(run.fails(), 1);
+    }
+
+    #[test]
+    fn threshold_scales_up_on_backlog_even_when_util_is_low() {
+        let policy = ThresholdPolicy { cooldown_ticks: 0, ..ThresholdPolicy::default() };
+        let mut run = AutoscaleRun::new(Box::new(policy), AutoscaleConfig::default());
+        let evs = tick(&mut run, 3600.0, &[true, false], &[0.0, 0.0], &[9, 0]);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].change, MembershipChange::Join);
+    }
+
+    #[test]
+    fn cooldown_suppresses_the_next_decision() {
+        let policy = ThresholdPolicy { cooldown_ticks: 1, ..ThresholdPolicy::default() };
+        let mut run = AutoscaleRun::new(Box::new(policy), AutoscaleConfig::default());
+        let hot = [14400.0, 14400.0];
+        assert_eq!(tick(&mut run, 3600.0, &[true, false], &[7200.0, 0.0], &[0, 0]).len(), 1);
+        // Still hot, but cooling down: no action. (Busy grows so util stays high.)
+        assert!(tick(&mut run, 7200.0, &[true, true], &hot, &[0, 0]).is_empty());
+        assert_eq!(run.actions.len(), 1);
+    }
+
+    #[test]
+    fn target_tracking_defends_attainment_and_sheds_idle_capacity() {
+        let policy = TargetTrackingPolicy { cooldown_ticks: 0, ..TargetTrackingPolicy::default() };
+        let mut run = AutoscaleRun::new(Box::new(policy), AutoscaleConfig::default());
+        // 10 served, only 5 in SLO → attainment 0.5 < 0.95 → join.
+        let evs = run.observe(3600.0, &[true, false], &[100.0, 0.0], &[0, 0], 2, 10, 5, 10);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].change, MembershipChange::Join);
+        // Next window: everything in SLO, fleet idle → fail.
+        let evs = run.observe(7200.0, &[true, true], &[100.0, 0.0], &[0, 0], 2, 20, 15, 20);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].change, MembershipChange::Fail);
+        // Idle window with zero completions counts as attainment 1.0.
+        let evs = run.observe(10800.0, &[true, false], &[100.0, 0.0], &[0, 0], 2, 20, 15, 20);
+        assert_eq!(evs.len(), 1, "still idle: sheds again toward min_nodes");
+        assert_eq!(evs[0].change, MembershipChange::Fail);
+        // At min_nodes (1 alive): the clamp stops further sheds.
+        let evs = run.observe(14400.0, &[false, false], &[100.0, 0.0], &[0, 0], 2, 20, 15, 20);
+        assert!(evs.is_empty() || evs.iter().all(|e| e.change != MembershipChange::Fail));
+    }
+
+    #[test]
+    fn clamps_respect_min_max_and_pending_joins() {
+        struct Always(i64);
+        impl AutoscalePolicy for Always {
+            fn name(&self) -> &'static str {
+                "always"
+            }
+            fn decide(&mut self, _s: &TickSignals) -> i64 {
+                self.0
+            }
+        }
+        // max_nodes 2 over 4 slots, 1 alive: a +10 answer adds exactly 1.
+        let cfg = AutoscaleConfig { max_nodes: 2, ..AutoscaleConfig::default() };
+        let mut run = AutoscaleRun::new(Box::new(Always(10)), cfg);
+        let evs = tick(&mut run, 3600.0, &[true, false, false, false], &[0.0; 4], &[0; 4]);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].node, 1, "lowest-indexed dead slot joins first");
+        // Same tick period, join still pending (delay 600 → lands at 4200):
+        // planned size is already at max, so nothing more is added.
+        let evs = tick(&mut run, 4100.0, &[true, false, false, false], &[0.0; 4], &[0; 4]);
+        assert!(evs.is_empty(), "pending join counts against max_nodes");
+
+        // min_nodes 2, 3 alive: a -10 answer drops exactly 1, highest first.
+        let cfg = AutoscaleConfig { min_nodes: 2, ..AutoscaleConfig::default() };
+        let mut run = AutoscaleRun::new(Box::new(Always(-10)), cfg);
+        let evs = tick(&mut run, 3600.0, &[true, true, true], &[0.0; 3], &[0; 3]);
+        assert_eq!(evs, vec![MembershipEvent::fail(2, 3600.0)]);
+    }
+
+    #[test]
+    fn utilization_is_busy_delta_over_capacity() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        struct Capture(Rc<RefCell<Option<TickSignals>>>);
+        impl AutoscalePolicy for Capture {
+            fn name(&self) -> &'static str {
+                "capture"
+            }
+            fn decide(&mut self, s: &TickSignals) -> i64 {
+                *self.0.borrow_mut() = Some(s.clone());
+                0
+            }
+        }
+        let cell = Rc::new(RefCell::new(None));
+        let mut run =
+            AutoscaleRun::new(Box::new(Capture(Rc::clone(&cell))), AutoscaleConfig::default());
+        // 2 workers/node, 3600 s window → capacity 7200 s. Node 0 accrued
+        // 3600 busy-seconds → util 0.5; node 1 dead, excluded from the mean.
+        run.observe(3600.0, &[true, false], &[3600.0, 0.0], &[3, 0], 2, 4, 4, 7);
+        let sig = cell.borrow().clone().unwrap();
+        assert_eq!(sig.mean_utilization, 0.5);
+        assert_eq!(sig.elapsed_s, 3600.0);
+        // Second window: node 0 adds 1800 more busy-seconds → util 0.25.
+        // Served goes 4→6 with SLO-ok 4→5 → attainment 0.5 in the window.
+        run.observe(7200.0, &[true, false], &[5400.0, 0.0], &[1, 0], 2, 6, 5, 9);
+        let sig = cell.borrow().clone().unwrap();
+        assert_eq!(sig.mean_utilization, 0.25);
+        assert_eq!(sig.per_node[0].utilization, 0.25);
+        assert!(!sig.per_node[1].alive);
+        assert_eq!(sig.served_window, 2);
+        assert_eq!(sig.slo_attainment, 0.5);
+        assert_eq!(sig.backlog_total, 1);
+        assert_eq!(sig.arrivals_window, 9);
+    }
+}

@@ -35,7 +35,20 @@
 //!   and requests that slip into the transfer gap re-miss (also itemized).
 //!   A node whose *first* scheduled event is a join starts outside the
 //!   cluster (the "new capacity arrives mid-trace" scenario); fail-then-
-//!   join models recovery.
+//!   join models recovery. Event streams are **validated at construction**:
+//!   failing a node that is already dead at the event's instant, or joining
+//!   one already alive, is a [`MembershipEventError`] naming the node and
+//!   instant (see [`validate_events`]) — not a silent no-op.
+//! - **Closed-loop autoscaling.** [`autoscale`] adds the policy layer that
+//!   *emits* membership events instead of scripting them: an
+//!   [`autoscale::AutoscalePolicy`] observes per-node rolling signals at
+//!   simulated decision ticks and schedules fails (immediate) and joins
+//!   (after a provisioning delay) through this same event machinery, so
+//!   every decision is priced by the rebalance accounting below.
+//!   [`scenario`] supplies the deterministic traffic/fleet scenarios
+//!   (diurnal, flash crowd, mass interruption, straggler) policies are
+//!   compared on, and [`crate::report::frontier_table`] renders the
+//!   comparison.
 //! - **Cross-node warm starts, locality-aware.** A miss on node A may seed
 //!   from a hit-adjacent entry owned by node B, paying
 //!   `transfer_latency_s` on top of the run's service time — but only when
@@ -72,7 +85,9 @@
 //!
 //! [`KernelService::replay`]: crate::service::KernelService::replay
 
+pub mod autoscale;
 pub mod router;
+pub mod scenario;
 pub mod snapshot;
 
 use std::collections::{BTreeMap, BTreeSet};
@@ -93,7 +108,9 @@ use crate::tasks::TaskSpec;
 use crate::util::stats::percentile;
 use crate::workflow::{run_task, CorrectnessOracle};
 
+pub use autoscale::AutoscaleRun;
 pub use router::{Membership, Router};
+pub use scenario::Scenario;
 
 /// One tenant of the cluster: a name for reporting and a fair-share weight.
 #[derive(Clone, Debug, PartialEq)]
@@ -126,9 +143,12 @@ pub enum MembershipChange {
 
 /// One scheduled membership change, applied the first time simulated time
 /// reaches `at_s` (at an arrival, or during the final drain if the instant
-/// falls after the last arrival). Events whose node index is out of range,
-/// or that would not change the node's state (failing a dead node, joining
-/// an alive one), are no-ops.
+/// falls after the last arrival). Events whose node index is out of range
+/// are filtered out before the replay consumes the stream; events that
+/// would not change their node's state (failing a node already dead at the
+/// instant, joining one already alive) are rejected at service
+/// construction with a [`MembershipEventError`] naming the node and
+/// instant — see [`validate_events`].
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MembershipEvent {
     /// The node slot the event concerns.
@@ -185,6 +205,17 @@ pub struct ClusterConfig {
     /// Scheduled membership changes, applied at their simulated instants
     /// in `(at_s, node, change)` order.
     pub events: Vec<MembershipEvent>,
+    /// Node slots that start *outside* the cluster (dead) even without a
+    /// scheduled join — the autoscaler's headroom: slots a policy may
+    /// bring in later. Out-of-range indices are ignored. Empty by default,
+    /// so existing configs are unaffected.
+    pub initial_dead: Vec<usize>,
+    /// Per-node service-time multipliers (the straggler knob): node `i`'s
+    /// flights take `node_service_multipliers[i]` times their computed
+    /// service time. Missing, non-finite, or non-positive entries mean
+    /// `1.0`. Empty by default — and `x * 1.0` is bitwise identity for
+    /// finite times, so an empty vector changes nothing.
+    pub node_service_multipliers: Vec<f64>,
 }
 
 impl Default for ClusterConfig {
@@ -197,6 +228,20 @@ impl Default for ClusterConfig {
             transfer_latency_s: 30.0,
             warm_locality_margin: 0.0,
             events: Vec::new(),
+            initial_dead: Vec::new(),
+            node_service_multipliers: Vec::new(),
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Node `i`'s effective service-time multiplier: the configured entry
+    /// when it is finite and positive, `1.0` otherwise (including when the
+    /// vector is shorter than the fleet).
+    pub fn node_multiplier(&self, node: usize) -> f64 {
+        match self.node_service_multipliers.get(node) {
+            Some(&m) if m.is_finite() && m > 0.0 => m,
+            _ => 1.0,
         }
     }
 }
@@ -348,6 +393,12 @@ pub struct ClusterReport {
     /// Executed misses that warm-started from an entry owned by a
     /// *different* node (each paid `transfer_latency_s`).
     pub cross_node_warm: usize,
+    /// Alive-node-hours integrated over the replay's simulated span (from
+    /// t = 0 to the fleet makespan, membership changes applied at their
+    /// instants) — the fleet-sizing cost axis of the autoscaling frontier.
+    /// A 4-node cluster alive for a 2-hour replay spends 8 node-hours
+    /// whether or not its workers were busy.
+    pub node_hours: f64,
     /// Total quota-exceeded sheds across tenants.
     pub quota_shed: u64,
     /// One entry per rebalance, in event order. The first replay after a
@@ -478,6 +529,24 @@ struct ClusterHooks<'a> {
     /// timestamp order, before fleet events at the same instant.
     pending_refills: BTreeMap<(u64, u64), (usize, CacheEntry)>,
     refill_seq: u64,
+    /// Alive-node-seconds accrued so far (piecewise-constant integral of
+    /// the alive count over simulated time, advanced at each membership
+    /// change and closed out at the fleet makespan).
+    node_seconds: f64,
+    /// The instant `node_seconds` is accrued up to.
+    node_seconds_at: f64,
+}
+
+impl ClusterHooks<'_> {
+    /// Advance the alive-node-seconds integral to `now` at the *current*
+    /// alive count. Called with each membership event's instant before the
+    /// change applies (the interval up to the event bills at the old fleet
+    /// size) and with the fleet makespan at the end of the replay.
+    fn accrue_node_seconds(&mut self, now: f64) {
+        let dt = (now - self.node_seconds_at).max(0.0);
+        self.node_seconds += self.membership.alive_count() as f64 * dt;
+        self.node_seconds_at = self.node_seconds_at.max(now);
+    }
 }
 
 impl ClusterHooks<'_> {
@@ -801,11 +870,51 @@ fn apply_membership_due(
         let ev = events[*next];
         *next += 1;
         advance_cluster(fleets, ev.at_s, hooks);
+        // Node-hours up to this instant bill at the pre-change fleet size.
+        hooks.accrue_node_seconds(ev.at_s);
         match ev.change {
             MembershipChange::Fail => apply_failure(config, ev, hooks),
             MembershipChange::Join => apply_join(config, ev, hooks),
         }
     }
+}
+
+/// Insert `ev` into the due-sorted tail of `events` (positions `from..`),
+/// preserving the replay's `(at_s, node, change)` order. Used by the
+/// autoscaling loop: a policy's events always land at or after the tick
+/// that decided them, so the already-consumed prefix (`..from`) never needs
+/// to move.
+fn insert_sorted_event(events: &mut Vec<MembershipEvent>, from: usize, ev: MembershipEvent) {
+    debug_assert!(from <= events.len());
+    let offset = events[from..].partition_point(|e| {
+        e.at_s
+            .total_cmp(&ev.at_s)
+            .then(e.node.cmp(&ev.node))
+            .then(e.change.cmp(&ev.change))
+            .is_le()
+    });
+    events.insert(from + offset, ev);
+}
+
+/// Requests `(served, slo_ok)` so far: how many of the trace's requests
+/// have a recorded latency, and how many of those met their priority
+/// class's SLO target. The autoscaling tick signals are deltas of these.
+fn slo_counts(
+    trace: &[TrafficRequest],
+    latencies: &[Option<f64>],
+    slo: &crate::service::SloTargets,
+) -> (u64, u64) {
+    let mut served = 0u64;
+    let mut ok = 0u64;
+    for (req, lat) in trace.iter().zip(latencies) {
+        if let Some(l) = lat {
+            served += 1;
+            if *l <= slo.target_s(req.priority) {
+                ok += 1;
+            }
+        }
+    }
+    (served, ok)
 }
 
 /// Clamp/normalize a config the way every constructor needs it.
@@ -818,6 +927,12 @@ fn normalized(mut config: ClusterConfig) -> ClusterConfig {
     // produce NaN completion instants (which would never fire as events).
     config.warm_locality_margin = config.warm_locality_margin.max(0.0);
     config.transfer_latency_s = config.transfer_latency_s.max(0.0);
+    // Out-of-range dead slots are meaningless; duplicates would double-count
+    // nothing but make the list confusing to report.
+    let nodes = config.nodes;
+    config.initial_dead.retain(|n| *n < nodes);
+    config.initial_dead.sort_unstable();
+    config.initial_dead.dedup();
     config
 }
 
@@ -845,8 +960,9 @@ fn sorted_events(config: &ClusterConfig) -> Vec<MembershipEvent> {
 }
 
 /// The membership a cluster starts from at `epoch`: every slot alive,
-/// except nodes whose *first* scheduled event is a join — they start
-/// outside the cluster, entering at their event's instant.
+/// except [`ClusterConfig::initial_dead`] slots and nodes whose *first*
+/// scheduled event is a join — they start outside the cluster, entering at
+/// their event's (or the autoscaler's) instant.
 fn initial_membership(config: &ClusterConfig, epoch: u64) -> Membership {
     let mut first: BTreeMap<usize, MembershipChange> = BTreeMap::new();
     for ev in sorted_events(config) {
@@ -856,8 +972,60 @@ fn initial_membership(config: &ClusterConfig, epoch: u64) -> Membership {
         .into_iter()
         .filter(|(_, c)| *c == MembershipChange::Join)
         .map(|(n, _)| n)
+        .chain(config.initial_dead.iter().copied().filter(|n| *n < config.nodes))
         .collect();
     Membership::with_dead(config.nodes, &start_dead, epoch)
+}
+
+/// Structured rejection of an inconsistent membership-event stream: the
+/// offending event's node, instant, and direction. Produced by
+/// [`validate_events`] when a scheduled event would not change its node's
+/// state — a symptom the schedule was written against a different starting
+/// membership than the one the cluster actually has.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MembershipEventError {
+    /// The node the invalid event targets.
+    pub node: usize,
+    /// The (clamped) instant the invalid event is scheduled at.
+    pub at_s: f64,
+    /// What the invalid event tried to do.
+    pub change: MembershipChange,
+}
+
+impl std::fmt::Display for MembershipEventError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (verb, state) = match self.change {
+            MembershipChange::Fail => ("fail", "dead"),
+            MembershipChange::Join => ("join", "alive"),
+        };
+        write!(
+            f,
+            "membership event stream invalid: {verb} of node {} at t={}s, but node {} is already {state} at that instant",
+            self.node, self.at_s, self.node
+        )
+    }
+}
+
+impl std::error::Error for MembershipEventError {}
+
+/// Check the config's membership-event stream for consistency: walking the
+/// in-range events in replay order from the starting membership, every
+/// event must actually flip its node's state. The first event that would
+/// fail an already-dead node or join an already-alive one is returned as a
+/// [`MembershipEventError`]. Out-of-range events are outside the stream
+/// (the replay filters them) and cannot invalidate it.
+pub fn validate_events(config: &ClusterConfig) -> Result<(), MembershipEventError> {
+    let config = normalized(config.clone());
+    let membership = initial_membership(&config, 0);
+    let mut alive: Vec<bool> = membership.alive().to_vec();
+    for ev in sorted_events(&config) {
+        let target_alive = ev.change == MembershipChange::Join;
+        if alive[ev.node] == target_alive {
+            return Err(MembershipEventError { node: ev.node, at_s: ev.at_s, change: ev.change });
+        }
+        alive[ev.node] = target_alive;
+    }
+    Ok(())
 }
 
 /// The long-lived cluster: a router plus N cache shards, the cluster-wide
@@ -878,22 +1046,32 @@ pub struct ClusterService {
 
 impl ClusterService {
     /// A cold cluster under `config` (normalized: at least one node and one
-    /// tenant, non-negative locality margin).
+    /// tenant, non-negative locality margin). Panics when the scheduled
+    /// membership-event stream is inconsistent — use
+    /// [`ClusterService::try_new`] to handle that as a value.
     pub fn new(config: ClusterConfig) -> ClusterService {
+        ClusterService::try_new(config).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// A cold cluster under `config`, or the [`MembershipEventError`]
+    /// explaining which scheduled event contradicts the starting membership
+    /// (failing an already-dead node / joining an already-alive one).
+    pub fn try_new(config: ClusterConfig) -> Result<ClusterService, MembershipEventError> {
         let config = normalized(config);
+        validate_events(&config)?;
         let caches = (0..config.nodes)
             .map(|_| ResultCache::new(config.service.capacity))
             .collect();
         let router = Router::new(config.nodes);
         let membership = initial_membership(&config, 0);
-        ClusterService {
+        Ok(ClusterService {
             config,
             router,
             caches,
             cold_cost: BTreeMap::new(),
             membership,
             restore_rebalance: None,
-        }
+        })
     }
 
     /// The stateless rendezvous router.
@@ -939,6 +1117,7 @@ impl ClusterService {
         dir: impl AsRef<Path>,
     ) -> Result<(ClusterService, Option<RebalanceReport>)> {
         let config = normalized(config);
+        validate_events(&config).map_err(|e| anyhow::anyhow!(e))?;
         let (manifest, shard_caches, cold_cost) =
             snapshot::load(&dir, config.service.capacity)?;
         let epoch0 = manifest.epoch + u64::from(manifest.nodes != config.nodes);
@@ -1044,6 +1223,38 @@ impl ClusterService {
         tasks: &[TaskSpec],
         oracle: &dyn CorrectnessOracle,
     ) -> ClusterReport {
+        self.replay_impl(trace, tasks, oracle, None)
+    }
+
+    /// [`ClusterService::replay`] with a closed-loop autoscaler in the
+    /// loop: at every due decision tick the replay pauses simulated time,
+    /// snapshots the fleet's rolling signals, and lets `run`'s policy
+    /// schedule membership events (fails at the tick instant, joins one
+    /// provisioning delay later) that merge into the same sorted event
+    /// stream scripted events use — so policy decisions are priced by the
+    /// identical rebalance machinery. Ticks fire between trace arrivals
+    /// (the first at `tick_s`, none after the last arrival), and every
+    /// signal is simulated-time arithmetic, so the replay keeps the
+    /// bit-identity contracts across OS `threads` and `window` sizes; under
+    /// a policy that never acts it is bit-identical to plain `replay`.
+    /// `run.actions` holds the policy's decisions afterwards.
+    pub fn replay_autoscaled(
+        &mut self,
+        trace: &[TrafficRequest],
+        tasks: &[TaskSpec],
+        oracle: &dyn CorrectnessOracle,
+        run: &mut AutoscaleRun,
+    ) -> ClusterReport {
+        self.replay_impl(trace, tasks, oracle, Some(run))
+    }
+
+    fn replay_impl(
+        &mut self,
+        trace: &[TrafficRequest],
+        tasks: &[TaskSpec],
+        oracle: &dyn CorrectnessOracle,
+        mut autoscale: Option<&mut AutoscaleRun>,
+    ) -> ClusterReport {
         let nodes = self.config.nodes;
         let n_tenants = self.config.tenants.len();
         let window = self.config.service.window.max(1);
@@ -1065,7 +1276,9 @@ impl ClusterService {
         let router = self.router;
         let caches = &mut self.caches;
         let cold_cost = &mut self.cold_cost;
-        let events = sorted_events(config);
+        // Mutable: the autoscaler inserts policy events into the unconsumed
+        // tail as its ticks fire.
+        let mut events = sorted_events(config);
         let mut next_event = 0usize;
         // A restore-time rebalance surfaces in the first replay's report
         // (its keys are all placed, so nothing is tracked as re-missable).
@@ -1073,6 +1286,9 @@ impl ClusterService {
 
         let mut fleets: Vec<FleetSim> =
             (0..nodes).map(|_| FleetSim::new(sim_workers)).collect();
+        for (ni, fleet) in fleets.iter_mut().enumerate() {
+            fleet.set_service_multiplier(config.node_multiplier(ni));
+        }
         let mut rejected = 0u64;
         let mut rejected_by_class = [0u64; 3];
         let mut tenant_requests = vec![0usize; n_tenants];
@@ -1111,6 +1327,8 @@ impl ClusterService {
             remiss_open: BTreeMap::new(),
             pending_refills: BTreeMap::new(),
             refill_seq: 0,
+            node_seconds: 0.0,
+            node_seconds_at: 0.0,
         };
         if let Some(rb) = restore_rb {
             hooks.rebalances.push(ActiveRebalance { report: rb, tracked: BTreeSet::new() });
@@ -1166,6 +1384,47 @@ impl ClusterService {
                 let seq = (w0 + off) as u64;
                 let now = req.arrival_s;
                 let t = req.tenant.min(n_tenants - 1);
+                // Autoscaler decision ticks due by this arrival fire first,
+                // each at its own instant: scheduled events due by the tick
+                // land, the cluster advances to the tick, the policy
+                // observes the fleet exactly as it stands at that simulated
+                // moment, and whatever it schedules merges into the sorted
+                // event tail (a fail at the tick instant is consumed by the
+                // very next `apply_membership_due` below; a join lands one
+                // provisioning delay later). Firing a tick with a policy
+                // that emits nothing only advances the cluster to an
+                // instant `<= now` — a prefix of the advance below — so a
+                // non-acting policy leaves the replay bit-identical.
+                if let Some(run) = autoscale.as_deref_mut() {
+                    while let Some(tick_at) = run.next_due(now) {
+                        apply_membership_due(
+                            &events,
+                            &mut next_event,
+                            config,
+                            tick_at,
+                            &mut fleets,
+                            &mut hooks,
+                        );
+                        advance_cluster(&mut fleets, tick_at, &mut hooks);
+                        let alive: Vec<bool> = hooks.membership.alive().to_vec();
+                        let busy: Vec<f64> = fleets.iter().map(|f| f.busy_s()).collect();
+                        let depths: Vec<usize> = fleets.iter().map(|f| f.depth()).collect();
+                        let (served, slo_ok) =
+                            slo_counts(trace, &hooks.stats.latencies, &config.service.slo);
+                        for ev in run.observe(
+                            tick_at,
+                            &alive,
+                            &busy,
+                            &depths,
+                            sim_workers,
+                            served,
+                            slo_ok,
+                            seq as usize,
+                        ) {
+                            insert_sorted_event(&mut events, next_event, ev);
+                        }
+                    }
+                }
                 // Membership events due by this arrival land at their own
                 // instants (graceful drain for a failing node's accepted
                 // work; refills in flight for a joining one). Starts between
@@ -1303,6 +1562,10 @@ impl ClusterService {
             .sum();
         let busy_s: f64 = fleets.iter().map(|f| f.busy_s()).sum();
         let makespan = fleets.iter().map(|f| f.makespan_s()).fold(0.0f64, f64::max);
+        // Close the alive-node-seconds integral at the makespan (or at the
+        // last membership instant, if that fell later than any work).
+        hooks.accrue_node_seconds(makespan);
+        let node_hours = hooks.node_seconds / 3600.0;
         let wait_s: f64 = fleets.iter().map(|f| f.total_queue_wait_s()).sum();
         let served_flights: usize = fleets.iter().map(|f| f.flights_served()).sum();
         let total_workers = nodes * sim_workers;
@@ -1429,6 +1692,7 @@ impl ClusterService {
             per_node,
             per_tenant,
             cross_node_warm: hooks.cross_node_warm,
+            node_hours,
             quota_shed: tenant_quota_shed.iter().sum(),
             rebalances: hooks.rebalances.into_iter().map(|rb| rb.report).collect(),
         }
@@ -1653,5 +1917,161 @@ mod tests {
         // No candidate anywhere.
         assert!(warm_candidate_across(&caches, &c, "L9-99", "rtx6000", &alive, 0, 0.0)
             .is_none());
+    }
+
+    #[test]
+    fn redundant_events_are_structured_errors_not_silent_noops() {
+        // Failing a node twice without a join in between: the second fail
+        // finds the node already dead.
+        let config = ClusterConfig {
+            nodes: 2,
+            events: vec![MembershipEvent::fail(1, 100.0), MembershipEvent::fail(1, 200.0)],
+            ..ClusterConfig::default()
+        };
+        let err = validate_events(&config).unwrap_err();
+        assert_eq!(
+            err,
+            MembershipEventError { node: 1, at_s: 200.0, change: MembershipChange::Fail }
+        );
+        let msg = err.to_string();
+        assert!(msg.contains("fail of node 1"), "error names the node: {msg}");
+        assert!(msg.contains("t=200"), "error names the instant: {msg}");
+        assert!(msg.contains("already dead"), "error names the state: {msg}");
+        assert!(ClusterService::try_new(config).is_err());
+
+        // Joining an alive node: node 0 starts alive (its first event is
+        // not a join), so the join contradicts the starting membership.
+        let config = ClusterConfig {
+            nodes: 2,
+            events: vec![MembershipEvent::fail(0, 50.0), MembershipEvent::join(0, 10.0)],
+            ..ClusterConfig::default()
+        };
+        let err = validate_events(&config).unwrap_err();
+        assert_eq!(
+            err,
+            MembershipEventError { node: 0, at_s: 10.0, change: MembershipChange::Join }
+        );
+        assert!(err.to_string().contains("already alive"));
+
+        // Failing a slot that starts outside the cluster.
+        let config = ClusterConfig {
+            nodes: 3,
+            initial_dead: vec![2],
+            events: vec![MembershipEvent::fail(2, 5.0)],
+            ..ClusterConfig::default()
+        };
+        let err = validate_events(&config).unwrap_err();
+        assert_eq!(err.node, 2);
+        assert_eq!(err.change, MembershipChange::Fail);
+    }
+
+    #[test]
+    fn consistent_streams_and_out_of_range_events_validate() {
+        // fail → join → fail on one node is a legal lifecycle; an
+        // out-of-range event is filtered before validation, not an error.
+        let config = ClusterConfig {
+            nodes: 2,
+            events: vec![
+                MembershipEvent::fail(1, 100.0),
+                MembershipEvent::join(1, 400.0),
+                MembershipEvent::fail(1, 900.0),
+                MembershipEvent::join(7, 50.0),
+            ],
+            ..ClusterConfig::default()
+        };
+        assert!(validate_events(&config).is_ok());
+        assert!(ClusterService::try_new(config).is_ok());
+        // A join-first node starts dead, so its join is consistent.
+        let config = ClusterConfig {
+            nodes: 2,
+            events: vec![MembershipEvent::join(1, 300.0)],
+            ..ClusterConfig::default()
+        };
+        assert!(validate_events(&config).is_ok());
+    }
+
+    #[test]
+    fn initial_dead_slots_start_outside_the_cluster() {
+        let config = normalized(ClusterConfig {
+            nodes: 4,
+            initial_dead: vec![3, 1, 3, 9],
+            ..ClusterConfig::default()
+        });
+        assert_eq!(config.initial_dead, vec![1, 3], "sorted, deduped, in range");
+        let m = initial_membership(&config, 0);
+        assert!(m.is_alive(0));
+        assert!(!m.is_alive(1));
+        assert!(m.is_alive(2));
+        assert!(!m.is_alive(3));
+        assert_eq!(m.epoch(), 0);
+    }
+
+    #[test]
+    fn node_multiplier_defaults_to_identity() {
+        let mut config = ClusterConfig { nodes: 3, ..ClusterConfig::default() };
+        assert_eq!(config.node_multiplier(0), 1.0);
+        assert_eq!(config.node_multiplier(7), 1.0);
+        config.node_service_multipliers = vec![4.0, f64::NAN, -2.0];
+        assert_eq!(config.node_multiplier(0), 4.0);
+        assert_eq!(config.node_multiplier(1), 1.0, "NaN falls back to identity");
+        assert_eq!(config.node_multiplier(2), 1.0, "non-positive falls back to identity");
+    }
+
+    #[test]
+    fn insert_sorted_event_keeps_replay_order_in_the_tail() {
+        let mut events = vec![
+            MembershipEvent::fail(0, 10.0),
+            MembershipEvent::fail(1, 50.0),
+            MembershipEvent::join(0, 90.0),
+        ];
+        // The first event is already consumed; insert into the tail.
+        insert_sorted_event(&mut events, 1, MembershipEvent::join(1, 70.0));
+        assert_eq!(events[2], MembershipEvent::join(1, 70.0));
+        // Same instant and node: Fail sorts before Join, as in sorted_events.
+        insert_sorted_event(&mut events, 1, MembershipEvent::fail(1, 70.0));
+        assert_eq!(events[2], MembershipEvent::fail(1, 70.0));
+        assert_eq!(events[3], MembershipEvent::join(1, 70.0));
+        assert!(events[1..]
+            .windows(2)
+            .all(|p| p[0].at_s.total_cmp(&p[1].at_s).is_le()));
+    }
+
+    #[test]
+    fn node_hours_integrate_the_alive_count_over_the_span() {
+        // One node, one request served at t = 0 in ~26.5 simulated minutes,
+        // then a failure at 100 000 s: the span runs to the failure instant
+        // (the last membership event, past the makespan), all of it with
+        // one node alive.
+        let suite = tasks::kernelbench();
+        let trace = vec![TrafficRequest {
+            task_index: 0,
+            gpu: gpu::by_key("rtx6000").unwrap(),
+            priority: Priority::Standard,
+            tenant: 0,
+            arrival_s: 0.0,
+        }];
+        let mut cluster = ClusterService::new(ClusterConfig {
+            nodes: 1,
+            events: vec![MembershipEvent::fail(0, 100_000.0)],
+            service: ServiceConfig { threads: 1, ..ServiceConfig::default() },
+            ..ClusterConfig::default()
+        });
+        let r = cluster.replay(&trace, &suite, &NoOracle);
+        assert_eq!(r.node_hours, 100_000.0 / 3600.0, "1 node x 100 000 s, then 0 nodes");
+
+        // No events: node-hours are simply nodes x makespan.
+        let mut cluster = ClusterService::new(ClusterConfig {
+            nodes: 2,
+            service: ServiceConfig { threads: 1, ..ServiceConfig::default() },
+            ..ClusterConfig::default()
+        });
+        let r = cluster.replay(&trace, &suite, &NoOracle);
+        let makespan_h = r.overall.gpu_hours / r.overall.utilization / 8.0 / 2.0;
+        assert!(
+            (r.node_hours - 2.0 * makespan_h).abs() < 1e-6,
+            "2 nodes x makespan ({} vs {})",
+            r.node_hours,
+            2.0 * makespan_h
+        );
     }
 }

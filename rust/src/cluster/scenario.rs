@@ -1,0 +1,380 @@
+//! Deterministic traffic/fleet scenarios for autoscaling studies.
+//!
+//! A [`Scenario`] is a named, parameter-free-to-invoke bundle of three
+//! deterministic transforms layered over a generated trace and a cluster
+//! config:
+//!
+//! 1. **Arrival shaping** ([`Scenario::shape_arrivals`]) — a monotone
+//!    time-warp applied to the trace's arrival instants. The Zipf/Poisson
+//!    generator stays untouched (same seeds, same draws, same
+//!    task/GPU/priority/tenant sequence), so the *only* thing a shaper
+//!    changes is *when* each request lands. [`Scenario::steady`] is the
+//!    identity: it does not touch the trace at all, so a steady-scenario
+//!    replay is byte-identical to an unshaped one.
+//! 2. **Scripted membership events** ([`Scenario::membership_events`]) —
+//!    the correlated mass interruption fails a block of nodes at one
+//!    simulated instant, spot-reclaim style.
+//! 3. **Per-node service multipliers** ([`Scenario::service_multipliers`])
+//!    — the straggler scenario makes one node's workers slower than the
+//!    rest (threaded through `FleetSim::set_service_multiplier`).
+//!
+//! All three transforms are pure functions of the scenario parameters and
+//! the input trace — no RNG — so a scenario replay inherits the replay's
+//! bit-determinism contracts unchanged.
+
+use crate::cluster::MembershipEvent;
+use crate::service::traffic::TrafficRequest;
+
+/// Which shape a [`Scenario`] applies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// No transform at all: the generated trace replays as-is.
+    Steady,
+    /// A sinusoidal day/night load cycle: arrivals bunch up around the
+    /// peaks of each period and thin out in the troughs.
+    Diurnal,
+    /// A flash crowd: the middle fifth of the trace's arrivals compress
+    /// into a `1/surge`-length burst; later arrivals shift earlier by the
+    /// time saved.
+    FlashCrowd,
+    /// A correlated mass interruption: a block of initially-alive nodes
+    /// fails simultaneously a third of the way into the trace (spot
+    /// capacity reclaimed in one sweep).
+    MassInterruption,
+    /// A straggler: node 0's workers take [`Scenario::straggler_multiplier`]
+    /// times as long per flight as everyone else's.
+    Straggler,
+}
+
+/// A deterministic scenario: arrival shaping + scripted membership events +
+/// per-node service multipliers. Build one with the named constructors
+/// ([`Scenario::diurnal`], …) or [`Scenario::by_name`], then tweak the
+/// public parameters if the defaults don't fit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    /// Which transform family this scenario applies.
+    pub kind: ScenarioKind,
+    /// Diurnal only: relative rate swing, in `[0, 1)`. 0.8 means the peak
+    /// arrival rate is `1/(1-0.8) = 5x` the trough's.
+    pub amplitude: f64,
+    /// Diurnal only: seconds per load cycle.
+    pub period_s: f64,
+    /// Flash crowd only: how many times faster the crowd window's arrivals
+    /// land (values below 1 are clamped to 1 — a "surge" that slows
+    /// traffic down is not a flash crowd).
+    pub surge: f64,
+    /// Mass interruption only: fraction of the initially-alive fleet that
+    /// fails at the interruption instant (clamped so at least one node
+    /// survives).
+    pub interruption_frac: f64,
+    /// Straggler only: node 0's service-time multiplier.
+    pub straggler_multiplier: f64,
+}
+
+impl Scenario {
+    fn base(kind: ScenarioKind) -> Scenario {
+        Scenario {
+            kind,
+            amplitude: 0.8,
+            period_s: 6.0 * 3600.0,
+            surge: 4.0,
+            interruption_frac: 0.5,
+            straggler_multiplier: 4.0,
+        }
+    }
+
+    /// The identity scenario: unshaped arrivals, no events, no multipliers.
+    pub fn steady() -> Scenario {
+        Scenario::base(ScenarioKind::Steady)
+    }
+
+    /// A sinusoidal day/night cycle (amplitude 0.8, 6-hour period).
+    pub fn diurnal() -> Scenario {
+        Scenario::base(ScenarioKind::Diurnal)
+    }
+
+    /// A flash crowd (the middle fifth of arrivals lands 4x faster).
+    pub fn flash_crowd() -> Scenario {
+        Scenario::base(ScenarioKind::FlashCrowd)
+    }
+
+    /// A correlated mass interruption (half the initially-alive nodes fail
+    /// a third of the way in).
+    pub fn mass_interruption() -> Scenario {
+        Scenario::base(ScenarioKind::MassInterruption)
+    }
+
+    /// A straggler node (node 0 runs 4x slower).
+    pub fn straggler() -> Scenario {
+        Scenario::base(ScenarioKind::Straggler)
+    }
+
+    /// Every scenario in the pack, in presentation order.
+    pub fn all() -> Vec<Scenario> {
+        vec![
+            Scenario::steady(),
+            Scenario::diurnal(),
+            Scenario::flash_crowd(),
+            Scenario::mass_interruption(),
+            Scenario::straggler(),
+        ]
+    }
+
+    /// Look a scenario up by its CLI name (`steady`, `diurnal`,
+    /// `flash-crowd`, `mass-interruption`, `straggler`).
+    pub fn by_name(name: &str) -> Option<Scenario> {
+        match name {
+            "steady" => Some(Scenario::steady()),
+            "diurnal" => Some(Scenario::diurnal()),
+            "flash-crowd" => Some(Scenario::flash_crowd()),
+            "mass-interruption" => Some(Scenario::mass_interruption()),
+            "straggler" => Some(Scenario::straggler()),
+            _ => None,
+        }
+    }
+
+    /// The scenario's CLI/report name.
+    pub fn name(&self) -> &'static str {
+        match self.kind {
+            ScenarioKind::Steady => "steady",
+            ScenarioKind::Diurnal => "diurnal",
+            ScenarioKind::FlashCrowd => "flash-crowd",
+            ScenarioKind::MassInterruption => "mass-interruption",
+            ScenarioKind::Straggler => "straggler",
+        }
+    }
+
+    /// Warp the trace's arrival instants in place. The warp is a
+    /// closed-form monotone map `w(t)` (no RNG, no iteration-order
+    /// dependence), followed by a running-max pass that repairs any
+    /// ulp-scale ordering wobble so the trace stays sorted — replays
+    /// `debug_assert` sortedness. [`ScenarioKind::Steady`],
+    /// [`ScenarioKind::MassInterruption`], and [`ScenarioKind::Straggler`]
+    /// leave the slice untouched (not even rewritten), so their traces are
+    /// byte-identical to the unshaped ones.
+    pub fn shape_arrivals(&self, trace: &mut [TrafficRequest]) {
+        match self.kind {
+            ScenarioKind::Steady
+            | ScenarioKind::MassInterruption
+            | ScenarioKind::Straggler => {}
+            ScenarioKind::Diurnal => {
+                // w(t) = t + (a*P/2pi) * sin(2pi t / P): w'(t) = 1 + a*cos(...)
+                // stays positive for a < 1, so the map is strictly monotone;
+                // arrival *density* in warped time oscillates between
+                // 1/(1+a) and 1/(1-a) of the base rate — the day/night cycle.
+                let a = self.amplitude.clamp(0.0, 0.99);
+                let p = self.period_s.max(1.0);
+                let k = a * p / (2.0 * std::f64::consts::PI);
+                for req in trace.iter_mut() {
+                    let t = req.arrival_s;
+                    req.arrival_s = t + k * (2.0 * std::f64::consts::PI * t / p).sin();
+                }
+                enforce_sorted(trace);
+            }
+            ScenarioKind::FlashCrowd => {
+                // Compress the arrivals of the base window [0.4T, 0.6T) by
+                // `surge`; everything after shifts earlier by the saved
+                // time. Piecewise linear, closed form, monotone.
+                let span = trace.last().map(|r| r.arrival_s).unwrap_or(0.0);
+                if span <= 0.0 {
+                    return;
+                }
+                let surge = self.surge.max(1.0);
+                let t0 = 0.4 * span;
+                let t1 = 0.6 * span;
+                let saved = (t1 - t0) * (1.0 - 1.0 / surge);
+                for req in trace.iter_mut() {
+                    let t = req.arrival_s;
+                    req.arrival_s = if t < t0 {
+                        t
+                    } else if t < t1 {
+                        t0 + (t - t0) / surge
+                    } else {
+                        t - saved
+                    };
+                }
+                enforce_sorted(trace);
+            }
+        }
+    }
+
+    /// The scenario's scripted membership events, given how many nodes are
+    /// alive at replay start and the trace's (shaped) arrival span. Only
+    /// the mass interruption scripts anything: it fails the
+    /// `interruption_frac` highest-indexed initially-alive nodes at
+    /// `span/3`, all at the same instant, leaving at least one survivor.
+    pub fn membership_events(&self, alive_nodes: usize, span_s: f64) -> Vec<MembershipEvent> {
+        match self.kind {
+            ScenarioKind::MassInterruption => {
+                let frac = self.interruption_frac.clamp(0.0, 1.0);
+                let n_fail = ((alive_nodes as f64 * frac).floor() as usize)
+                    .min(alive_nodes.saturating_sub(1));
+                let at = (span_s / 3.0).max(0.0);
+                (alive_nodes - n_fail..alive_nodes)
+                    .map(|node| MembershipEvent::fail(node, at))
+                    .collect()
+            }
+            _ => Vec::new(),
+        }
+    }
+
+    /// Per-node service-time multipliers over `slots` node slots. Every
+    /// scenario but the straggler returns an empty vector (all nodes at
+    /// 1.0); the straggler slows node 0 down by
+    /// [`Scenario::straggler_multiplier`].
+    pub fn service_multipliers(&self, slots: usize) -> Vec<f64> {
+        match self.kind {
+            ScenarioKind::Straggler if slots > 0 => {
+                let mut m = vec![1.0; slots];
+                m[0] = self.straggler_multiplier.max(1.0);
+                m
+            }
+            _ => Vec::new(),
+        }
+    }
+}
+
+/// Repair ulp-scale ordering wobble a float warp can introduce between
+/// near-equal arrivals: clamp each instant to at least its predecessor's.
+fn enforce_sorted(trace: &mut [TrafficRequest]) {
+    for i in 1..trace.len() {
+        if trace[i].arrival_s < trace[i - 1].arrival_s {
+            trace[i].arrival_s = trace[i - 1].arrival_s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::MembershipChange;
+    use crate::service::traffic::{generate, TrafficConfig};
+
+    fn base_trace(requests: usize) -> Vec<TrafficRequest> {
+        generate(8, &TrafficConfig { requests, seed: 11, ..TrafficConfig::default() })
+    }
+
+    fn arrivals(trace: &[TrafficRequest]) -> Vec<f64> {
+        trace.iter().map(|r| r.arrival_s).collect()
+    }
+
+    #[test]
+    fn steady_is_the_identity() {
+        let mut shaped = base_trace(300);
+        let original = arrivals(&shaped);
+        Scenario::steady().shape_arrivals(&mut shaped);
+        assert_eq!(arrivals(&shaped), original, "steady must not move a single arrival");
+    }
+
+    #[test]
+    fn every_shaper_keeps_the_trace_sorted_and_nonnegative() {
+        for scenario in Scenario::all() {
+            let mut trace = base_trace(400);
+            scenario.shape_arrivals(&mut trace);
+            assert!(
+                trace.windows(2).all(|p| p[0].arrival_s <= p[1].arrival_s),
+                "{} must keep arrivals sorted",
+                scenario.name()
+            );
+            assert!(
+                trace.iter().all(|r| r.arrival_s >= 0.0),
+                "{} must keep arrivals non-negative",
+                scenario.name()
+            );
+        }
+    }
+
+    #[test]
+    fn shapers_only_move_time_never_content() {
+        for scenario in Scenario::all() {
+            let original = base_trace(200);
+            let mut shaped = original.clone();
+            scenario.shape_arrivals(&mut shaped);
+            for (a, b) in original.iter().zip(&shaped) {
+                assert_eq!(a.task_index, b.task_index);
+                assert_eq!(a.gpu.key, b.gpu.key);
+                assert_eq!(a.priority, b.priority);
+                assert_eq!(a.tenant, b.tenant);
+            }
+        }
+    }
+
+    #[test]
+    fn diurnal_warp_is_bounded_by_its_amplitude() {
+        let original = base_trace(300);
+        let mut shaped = original.clone();
+        let s = Scenario::diurnal();
+        s.shape_arrivals(&mut shaped);
+        // |w(t) - t| <= a*P/2pi by construction.
+        let bound = s.amplitude * s.period_s / (2.0 * std::f64::consts::PI) + 1e-9;
+        for (a, b) in original.iter().zip(&shaped) {
+            assert!((a.arrival_s - b.arrival_s).abs() <= bound);
+        }
+        assert_ne!(arrivals(&original), arrivals(&shaped), "the warp must actually warp");
+    }
+
+    #[test]
+    fn flash_crowd_compresses_the_crowd_window() {
+        let original = base_trace(500);
+        let span = original.last().unwrap().arrival_s;
+        let mut shaped = original.clone();
+        let s = Scenario::flash_crowd();
+        s.shape_arrivals(&mut shaped);
+        let in_window = |t: f64| t >= 0.4 * span && t < 0.6 * span;
+        let crowd: Vec<(f64, f64)> = original
+            .iter()
+            .zip(&shaped)
+            .filter(|(o, _)| in_window(o.arrival_s))
+            .map(|(o, w)| (o.arrival_s, w.arrival_s))
+            .collect();
+        assert!(crowd.len() > 10, "the fixed seed puts arrivals in the window");
+        let base_width = crowd.last().unwrap().0 - crowd.first().unwrap().0;
+        let shaped_width = crowd.last().unwrap().1 - crowd.first().unwrap().1;
+        assert!(
+            shaped_width < base_width / (s.surge * 0.9),
+            "crowd window must compress ~{}x (was {base_width}, now {shaped_width})",
+            s.surge
+        );
+        // Total span shrinks by the time the compression saved.
+        let saved = (0.6 * span - 0.4 * span) * (1.0 - 1.0 / s.surge);
+        let new_span = shaped.last().unwrap().arrival_s;
+        assert!((span - saved - new_span).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mass_interruption_fails_a_block_simultaneously() {
+        let s = Scenario::mass_interruption();
+        let events = s.membership_events(4, 90_000.0);
+        assert_eq!(events.len(), 2, "half of 4 alive nodes fail");
+        for ev in &events {
+            assert_eq!(ev.change, MembershipChange::Fail);
+            assert_eq!(ev.at_s, 30_000.0, "all failures land at the same instant");
+        }
+        assert_eq!(
+            events.iter().map(|e| e.node).collect::<Vec<_>>(),
+            vec![2, 3],
+            "the highest-indexed alive nodes are reclaimed"
+        );
+        // Never kill the whole fleet, even at frac 1.0.
+        let mut total = Scenario::mass_interruption();
+        total.interruption_frac = 1.0;
+        assert_eq!(total.membership_events(3, 900.0).len(), 2, "one node always survives");
+        assert!(total.membership_events(1, 900.0).is_empty());
+    }
+
+    #[test]
+    fn straggler_slows_exactly_node_zero() {
+        let s = Scenario::straggler();
+        let m = s.service_multipliers(4);
+        assert_eq!(m, vec![4.0, 1.0, 1.0, 1.0]);
+        assert!(Scenario::diurnal().service_multipliers(4).is_empty());
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for scenario in Scenario::all() {
+            assert_eq!(Scenario::by_name(scenario.name()), Some(scenario));
+        }
+        assert_eq!(Scenario::by_name("nope"), None);
+    }
+}

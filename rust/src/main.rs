@@ -5,6 +5,7 @@
 //!   suite      run a strategy over KernelBench or D*
 //!   serve      replay Zipf traffic through the kernel-optimization service
 //!   cluster    replay Zipf traffic over a sharded multi-tenant cluster
+//!   autoscale  compare autoscaling policies across traffic scenarios
 //!   bench      regenerate a paper table/figure (`--exp table1|...|all`)
 //!   select     run the offline metric-selection pipeline (Algorithms 1-2)
 //!   verify     execute every AOT artifact on PJRT vs its reference (pjrt)
@@ -30,6 +31,14 @@
 //!               cluster)
 //!               --snapshot DIR (shard-aware snapshot directory: restore
 //!               before the replay if its manifest exists, save after)
+//! Autoscale flags: cluster flags (minus --fail/--join scheduling and
+//!               --snapshot) plus --policy static|threshold|target-tracking
+//!               (comma list or `all`) --scenario steady|diurnal|
+//!               flash-crowd|mass-interruption|straggler (comma list or
+//!               `all`) --tick SECS (decision-tick period)
+//!               --provision-delay SECS (join lead time) --min-nodes N
+//!               --max-nodes N (fleet size bounds; slots above --nodes
+//!               start outside the cluster)
 
 use cudaforge::agents::profiles;
 use cudaforge::cluster::{
@@ -166,9 +175,17 @@ fn tenants_from(arg: &str) -> Vec<TenantSpec> {
     out
 }
 
-fn cluster(args: &Args) {
-    let oracle = build_oracle(args);
-    let suite = tasks::kernelbench();
+/// Everything the cluster-style subcommands share: the traffic model and
+/// the deployment config, built from the same flags and defaults — which is
+/// what makes `autoscale` under a do-nothing policy reproduce `cluster`
+/// bit for bit.
+struct ClusterSetup {
+    seed: u64,
+    traffic: TrafficConfig,
+    config: ClusterConfig,
+}
+
+fn cluster_setup(args: &Args) -> ClusterSetup {
     let seed = args.get_u64("seed", 7);
     let tenants = tenants_from(args.get_or("tenants", "alpha:3,beta:1"));
     let traffic = TrafficConfig {
@@ -243,12 +260,20 @@ fn cluster(args: &Args) {
     let config = ClusterConfig {
         service,
         nodes,
-        tenants: tenants.clone(),
+        tenants,
         tenant_quotas: !args.flag("no-quotas"),
         transfer_latency_s: nonneg_arg("transfer-latency", 30.0),
         warm_locality_margin: nonneg_arg("warm-locality-margin", 0.0),
         events,
+        ..ClusterConfig::default()
     };
+    ClusterSetup { seed, traffic, config }
+}
+
+fn cluster(args: &Args) {
+    let oracle = build_oracle(args);
+    let suite = tasks::kernelbench();
+    let ClusterSetup { seed, traffic, config } = cluster_setup(args);
     println!(
         "cluster: {} nodes x {} sim GPUs | {} tenants (quotas {}) | cache {}/shard | \
          queue depth {} | {} requests (zipf s={}, seed {})",
@@ -381,6 +406,145 @@ fn cluster(args: &Args) {
     }
 }
 
+/// Parse a comma-separated `--policy` / `--scenario` list, or `all`.
+fn names_from<'a>(arg: &'a str, flag: &str, all: &[&'a str], valid: &[&str]) -> Vec<&'a str> {
+    if arg == "all" {
+        return all.to_vec();
+    }
+    arg.split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(|p| {
+            if !valid.contains(&p) {
+                eprintln!("error: --{flag} '{p}' unknown; options: {} or all", valid.join(" "));
+                std::process::exit(2);
+            }
+            p
+        })
+        .collect()
+}
+
+fn autoscale(args: &Args) {
+    use cudaforge::cluster::autoscale::{policy_by_name, AutoscaleConfig, POLICY_NAMES};
+    use cudaforge::cluster::{AutoscaleRun, Scenario};
+
+    let oracle = build_oracle(args);
+    let suite = tasks::kernelbench();
+    let ClusterSetup { seed, traffic, config: base } = cluster_setup(args);
+
+    let scenario_names: Vec<&'static str> =
+        Scenario::all().iter().map(|s| s.name()).collect();
+    let policies = names_from(
+        args.get_or("policy", "all"),
+        "policy",
+        &POLICY_NAMES,
+        &POLICY_NAMES,
+    );
+    let scenarios: Vec<Scenario> =
+        names_from(args.get_or("scenario", "all"), "scenario", &scenario_names, &scenario_names)
+            .into_iter()
+            .map(|n| Scenario::by_name(n).expect("validated above"))
+            .collect();
+
+    let start_alive = base.nodes;
+    let min_nodes = args.get_usize("min-nodes", 1).max(1);
+    let max_nodes = args.get_usize("max-nodes", start_alive).max(min_nodes);
+    // Slots = the largest fleet any policy may reach; slots past the
+    // starting size begin outside the cluster, waiting for a join.
+    let slots = start_alive.max(max_nodes);
+    let tick_s = args.get_f64("tick", 3600.0);
+    let provision_delay_s = args.get_f64("provision-delay", 600.0);
+    if !(tick_s.is_finite() && tick_s > 0.0) {
+        eprintln!("error: --tick must be a finite value > 0 seconds, got {tick_s}");
+        std::process::exit(2);
+    }
+    if !(provision_delay_s.is_finite() && provision_delay_s >= 0.0) {
+        eprintln!(
+            "error: --provision-delay must be a finite value >= 0 seconds, \
+             got {provision_delay_s}"
+        );
+        std::process::exit(2);
+    }
+
+    let base_trace = try_generate(suite.len(), &traffic).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    println!(
+        "autoscale: {} policies x {} scenarios | fleet {}..{} nodes (start {}) | \
+         tick {}s, provisioning delay {}s | {} requests (seed {})",
+        policies.len(),
+        scenarios.len(),
+        min_nodes,
+        slots,
+        start_alive,
+        tick_s,
+        provision_delay_s,
+        traffic.requests,
+        seed,
+    );
+
+    let ctx = Ctx {
+        seed,
+        results_dir: args.get_or("out", "results").to_string(),
+        ..Ctx::default()
+    };
+    let mut rows: Vec<report::FrontierRow> = Vec::new();
+    for scenario in &scenarios {
+        let mut trace = base_trace.clone();
+        scenario.shape_arrivals(&mut trace);
+        let span_s = trace.last().map(|r| r.arrival_s).unwrap_or(0.0);
+        for pname in &policies {
+            let policy = policy_by_name(pname).expect("validated above");
+            let mut config = base.clone();
+            config.nodes = slots;
+            config.initial_dead = (start_alive..slots).collect();
+            config.node_service_multipliers = scenario.service_multipliers(slots);
+            config.events.extend(scenario.membership_events(start_alive, span_s));
+            let mut run = AutoscaleRun::new(
+                policy,
+                AutoscaleConfig { tick_s, provision_delay_s, min_nodes, max_nodes },
+            );
+            let t0 = std::time::Instant::now();
+            // Scenario-scripted events merge with any --fail-node/--join-node
+            // flags; an inconsistent combination is a user error, not a bug.
+            let mut svc = ClusterService::try_new(config).unwrap_or_else(|e| {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            });
+            let report = svc.replay_autoscaled(&trace, &suite, oracle.as_ref(), &mut run);
+            println!(
+                "  {pname} on {}: {} ticks, {} joins / {} fails | {:.2} node-hrs | \
+                 {} shed | wall {:.2}s",
+                scenario.name(),
+                run.ticks,
+                run.joins(),
+                run.fails(),
+                report.node_hours,
+                report.overall.rejected,
+                t0.elapsed().as_secs_f64(),
+            );
+            // A single (policy, scenario) combination is a plain cluster
+            // replay with the policy in the loop: persist the full cluster
+            // report too, so `autoscale --policy static --scenario steady`
+            // writes a cluster.csv bit-identical to `cluster`'s (CI checks
+            // exactly that).
+            if policies.len() == 1 && scenarios.len() == 1 {
+                report::cluster_report(&ctx, &report);
+            }
+            rows.push(report::FrontierRow {
+                policy: pname.to_string(),
+                scenario: scenario.name().to_string(),
+                joins: run.joins(),
+                fails: run.fails(),
+                report,
+            });
+        }
+    }
+    println!("{}", report::frontier_table(&rows).render());
+    report::frontier_report(&ctx, &rows);
+}
+
 fn serve(args: &Args) {
     let oracle = build_oracle(args);
     let suite = tasks::kernelbench();
@@ -509,7 +673,7 @@ fn serve(args: &Args) {
 
 fn usage() {
     println!("cudaforge {} — CudaForge reproduction CLI", cudaforge::version());
-    println!("usage: cudaforge <run|suite|serve|cluster|bench|select|verify|specs> [flags]");
+    println!("usage: cudaforge <run|suite|serve|cluster|autoscale|bench|select|verify|specs> [flags]");
     println!("  run    --task L1-95 [--gpu rtx6000 --strategy cudaforge --rounds 10]");
     println!("  suite  [--dstar] [--strategy NAME --coder o3 --judge gpt5]");
     println!("  serve  [--requests 2000 --zipf 1.1 --seed 7 --capacity 1024]");
@@ -521,6 +685,10 @@ fn usage() {
     println!("         [--fail-node N --fail-at SECS (node N drops at SECS)]");
     println!("         [--join-node N --join-at SECS (node N enters, empty, at SECS)]");
     println!("         [--snapshot DIR (shard-aware: restore before / save after)]");
+    println!("  autoscale [cluster flags] [--policy static|threshold|target-tracking|all]");
+    println!("         [--scenario steady|diurnal|flash-crowd|mass-interruption|straggler|all]");
+    println!("         [--tick 3600 (decision period, secs) --provision-delay 600]");
+    println!("         [--min-nodes 1 --max-nodes N (fleet bounds; defaults to --nodes)]");
     println!("  bench  --exp <table1|table2|table3|table4|table5|fig4..fig9|table6|table8|all> [--quick]");
     println!("  select [--iterations 100]");
     println!("  verify [--artifacts artifacts]   (needs --features pjrt)");
@@ -585,6 +753,7 @@ fn main() {
         }
         "serve" => serve(&args),
         "cluster" => cluster(&args),
+        "autoscale" => autoscale(&args),
         "bench" => {
             let oracle = build_oracle(&args);
             let ctx = Ctx {

@@ -527,6 +527,7 @@ pub fn cluster_table(r: &crate::cluster::ClusterReport) -> Table {
         ("API spent ($)".into(), f2(o.api_usd_spent)),
         ("API saved vs cold ($)".into(), f2(o.api_usd_saved)),
         ("Simulated GPU-hours".into(), f2(o.gpu_hours)),
+        ("Node-hours (alive-node time)".into(), f2(r.node_hours)),
     ];
     for n in &r.per_node {
         rows.push((
@@ -602,6 +603,86 @@ pub fn cluster_report(ctx: &Ctx, r: &crate::cluster::ClusterReport) {
     ctx.save("cluster", &cluster_table(r));
 }
 
+/// One `(policy, scenario)` cell of the autoscaling cost/SLO frontier: the
+/// policy's action counts plus the full cluster report its replay produced.
+pub struct FrontierRow {
+    /// Autoscaling policy name (`static`, `threshold`, `target-tracking`).
+    pub policy: String,
+    /// Scenario name (`steady`, `diurnal`, `flash-crowd`, …).
+    pub scenario: String,
+    /// Join events the policy scheduled.
+    pub joins: usize,
+    /// Fail events the policy scheduled.
+    pub fails: usize,
+    /// The replay's report under this policy/scenario combination.
+    pub report: crate::cluster::ClusterReport,
+}
+
+/// The autoscaling frontier (the `autoscale` subcommand): one row per
+/// `(policy, scenario)` replay, ranking policies within each scenario by
+/// node-hours spent against what that spend bought — per-priority SLO
+/// attainment, tail latency, shed counts, and the rebalance bill the
+/// policy's own churn ran up. Column glossary: `Node-hrs` is alive-node
+/// time integrated over the simulated span (the fleet-sizing cost axis);
+/// `Shed` counts every rejected request; `SLO int/std/batch` are the
+/// per-priority attainment fractions; `Rebal $` is API spend re-incurred
+/// re-running work that policy-driven failures lost (or joins had in
+/// transit); `Transfer (s)` is simulated seconds of cache-entry movement
+/// the policy's joins paid for.
+pub fn frontier_table(rows: &[FrontierRow]) -> Table {
+    use crate::service::queue::Priority;
+    let mut t = Table::new(
+        "Autoscale frontier — node-hours vs SLO attainment",
+        &[
+            "Scenario", "Policy", "Node-hrs", "Joins", "Fails", "Shed", "p99 (min)",
+            "SLO int", "SLO std", "SLO batch", "Rebal $", "Transfer (s)",
+        ],
+    );
+    let slo_of = |row: &FrontierRow, p: Priority| {
+        row.report
+            .overall
+            .per_priority
+            .iter()
+            .find(|c| c.priority == p)
+            .map(|c| pct(c.slo_attainment))
+            .unwrap_or_else(|| "-".to_string())
+    };
+    // Rank within each scenario by node-hours (the cost axis), cheapest
+    // first; policy name breaks exact ties so the order is total.
+    let mut order: Vec<&FrontierRow> = rows.iter().collect();
+    order.sort_by(|a, b| {
+        a.scenario
+            .cmp(&b.scenario)
+            .then(a.report.node_hours.total_cmp(&b.report.node_hours))
+            .then(a.policy.cmp(&b.policy))
+    });
+    for row in order {
+        let r = &row.report;
+        let rebal_usd: f64 = r.rebalances.iter().map(|rb| rb.remiss_api_usd).sum();
+        let transfer_s: f64 = r.rebalances.iter().map(|rb| rb.transfer_s).sum();
+        t.row(vec![
+            row.scenario.clone(),
+            row.policy.clone(),
+            f2(r.node_hours),
+            row.joins.to_string(),
+            row.fails.to_string(),
+            r.overall.rejected.to_string(),
+            f2(r.overall.p99_latency_s / 60.0),
+            slo_of(row, Priority::Interactive),
+            slo_of(row, Priority::Standard),
+            slo_of(row, Priority::Batch),
+            f2(rebal_usd),
+            f2(transfer_s),
+        ]);
+    }
+    t
+}
+
+/// Render + persist the autoscaling frontier.
+pub fn frontier_report(ctx: &Ctx, rows: &[FrontierRow]) {
+    ctx.save("frontier", &frontier_table(rows));
+}
+
 /// Run every experiment (the `bench --exp all` path).
 pub fn run_all(ctx: &Ctx, oracle: &dyn CorrectnessOracle, quick: bool) {
     table1(ctx, oracle, quick);
@@ -670,5 +751,109 @@ mod tests {
         let ctx = Ctx { results_dir: "/tmp/cudaforge_test_results".into(), ..Ctx::default() };
         fig8(&ctx, &NoOracle);
         assert!(Path::new("/tmp/cudaforge_test_results/fig8.csv").exists());
+    }
+
+    fn cluster_report_with_rebalances() -> crate::cluster::ClusterReport {
+        use crate::cluster::{ClusterReport, RebalanceKind, RebalanceReport};
+        ClusterReport {
+            overall: crate::service::ServiceReport::default(),
+            nodes: 3,
+            epoch: 3,
+            per_node: Vec::new(),
+            per_tenant: Vec::new(),
+            cross_node_warm: 0,
+            node_hours: 12.5,
+            quota_shed: 0,
+            rebalances: vec![
+                RebalanceReport {
+                    kind: RebalanceKind::NodeFailure,
+                    node: 2,
+                    at_s: 1800.0,
+                    cache_entries_lost: 7,
+                    entries_moved: 0,
+                    transfer_s: 0.0,
+                    rehashed_requests: 11,
+                    remissed_flights: 4,
+                    remiss_api_usd: 1.25,
+                },
+                RebalanceReport {
+                    kind: RebalanceKind::NodeJoin,
+                    node: 2,
+                    at_s: 5400.0,
+                    cache_entries_lost: 0,
+                    entries_moved: 9,
+                    transfer_s: 270.0,
+                    rehashed_requests: 3,
+                    remissed_flights: 1,
+                    remiss_api_usd: 0.3,
+                },
+                RebalanceReport {
+                    kind: RebalanceKind::SnapshotRestore,
+                    node: 4,
+                    at_s: 0.0,
+                    cache_entries_lost: 2,
+                    entries_moved: 15,
+                    transfer_s: 450.0,
+                    rehashed_requests: 0,
+                    remissed_flights: 0,
+                    remiss_api_usd: 0.0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn cluster_table_renders_every_rebalance_kind_with_its_figures() {
+        let rendered = cluster_table(&cluster_report_with_rebalances()).render();
+        // Failure row: kind + node + instant, and the loss/re-miss figures.
+        assert!(rendered.contains("rebalance: node 2 failed @1800s"), "{rendered}");
+        assert!(rendered.contains("7 entries lost"), "{rendered}");
+        assert!(rendered.contains("11 reqs rehashed"), "{rendered}");
+        assert!(rendered.contains("4 re-missed flights ($1.25 re-spent)"), "{rendered}");
+        // Join row: kind + node + instant, entries moved, transfer spend.
+        assert!(rendered.contains("rebalance: node 2 joined @5400s"), "{rendered}");
+        assert!(rendered.contains("9 entries refilled (270.00s transfer)"), "{rendered}");
+        // Restore row: prior node count, movement, unplaceable count.
+        assert!(rendered.contains("rebalance: snapshot restore (was 4 nodes)"), "{rendered}");
+        assert!(rendered.contains("15 entries moved (450.00s transfer)"), "{rendered}");
+        assert!(rendered.contains("2 unplaceable"), "{rendered}");
+        // The new cost axis renders alongside.
+        assert!(rendered.contains("Node-hours (alive-node time)"), "{rendered}");
+        assert!(rendered.contains("12.50"), "{rendered}");
+    }
+
+    #[test]
+    fn frontier_table_ranks_policies_by_node_hours_within_scenario() {
+        let mut cheap = cluster_report_with_rebalances();
+        cheap.node_hours = 8.0;
+        let expensive = cluster_report_with_rebalances();
+        let rows = vec![
+            FrontierRow {
+                policy: "static".into(),
+                scenario: "diurnal".into(),
+                joins: 0,
+                fails: 0,
+                report: expensive,
+            },
+            FrontierRow {
+                policy: "threshold".into(),
+                scenario: "diurnal".into(),
+                joins: 2,
+                fails: 1,
+                report: cheap,
+            },
+        ];
+        let t = frontier_table(&rows);
+        let rendered = t.render();
+        assert!(rendered.contains("Autoscale frontier"), "{rendered}");
+        let threshold_at = rendered.find("threshold").expect("threshold row renders");
+        let static_at = rendered.find("static").expect("static row renders");
+        assert!(
+            threshold_at < static_at,
+            "the cheaper policy (8.0 node-hrs) ranks above the 12.5 one:\n{rendered}"
+        );
+        // The rebalance bill columns aggregate across the report's entries.
+        assert!(rendered.contains("1.55"), "rebal $ sums remiss spend: {rendered}");
+        assert!(rendered.contains("720.00"), "transfer sums transfer_s: {rendered}");
     }
 }

@@ -164,6 +164,11 @@ pub struct FleetSim {
     served: usize,
     busy_s: f64,
     makespan_s: f64,
+    /// Every service time the hooks return is scaled by this factor before
+    /// the completion is scheduled — the "slow node" (straggler) knob. 1.0
+    /// (the default) is bitwise identity for finite service times, so an
+    /// unconfigured fleet behaves exactly as before the knob existed.
+    service_multiplier: f64,
 }
 
 impl FleetSim {
@@ -182,12 +187,30 @@ impl FleetSim {
             served: 0,
             busy_s: 0.0,
             makespan_s: 0.0,
+            service_multiplier: 1.0,
         }
     }
 
     /// Simulated GPU workers in this fleet.
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Scale every service time this fleet's workers take by `m` — a value
+    /// above 1.0 models a straggler node (slow GPUs, thermal throttling, a
+    /// noisy neighbour), below 1.0 a faster-than-baseline part. Non-finite
+    /// or non-positive values are rejected (they would corrupt the event
+    /// clock); the multiplier applies to everything the hooks charge to the
+    /// flight, cross-node transfer fetches included — a slow node is slow
+    /// at ingesting transfers too.
+    pub fn set_service_multiplier(&mut self, m: f64) {
+        assert!(m.is_finite() && m > 0.0, "service multiplier must be finite and > 0, got {m}");
+        self.service_multiplier = m;
+    }
+
+    /// The fleet's current service-time multiplier (1.0 unless configured).
+    pub fn service_multiplier(&self) -> f64 {
+        self.service_multiplier
     }
 
     /// Flights waiting for a worker (the admission-control depth signal).
@@ -328,7 +351,7 @@ impl FleetSim {
                 self.waiting_by_fp.remove(&flight.fingerprint);
                 self.arrivals.remove(&(flight.arrival_s.to_bits(), flight.leader_seq));
                 self.free_at.pop();
-                let service_s = hooks.on_start(&flight, start);
+                let service_s = hooks.on_start(&flight, start) * self.service_multiplier;
                 debug_assert!(
                     service_s.is_finite() && service_s >= 0.0,
                     "service time must be finite and non-negative, got {service_s}"

@@ -1,8 +1,20 @@
 //! Criterion-style micro-benchmark harness (criterion itself is not in the
 //! offline vendor set). Used by the `cargo bench` targets and the §Perf pass:
 //! warmup, timed iterations, mean / p50 / p95 and throughput reporting.
+//!
+//! Two environment knobs make the harness scriptable:
+//!
+//! - `CUDAFORGE_BENCH_FAST=1` shrinks warmup to ~50 ms and the measurement
+//!   window to ~200 ms (min 3 iterations) — a smoke-test mode for CI, where
+//!   the point is "the bench runs and emits sane numbers", not tight
+//!   confidence intervals.
+//! - `CUDAFORGE_BENCH_JSON=<path>` makes [`BenchSet::finish`] write every
+//!   recorded result to `<path>` as one JSON document (see `BENCH_*.json`
+//!   at the repo root for the committed reference series).
 
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
@@ -36,19 +48,32 @@ fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// True when `CUDAFORGE_BENCH_FAST` is set to anything but empty or `0`.
+fn fast_mode() -> bool {
+    match std::env::var("CUDAFORGE_BENCH_FAST") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    }
+}
+
 /// Run `f` under timing: ~0.5 s warmup then enough iterations to cover
 /// ~2 s of measurement (min 10, max `max_iters`). Prints a criterion-like
-/// line and returns the stats.
+/// line and returns the stats. Under `CUDAFORGE_BENCH_FAST` the windows
+/// shrink to ~50 ms / ~200 ms (min 3 iterations).
 pub fn bench<F: FnMut()>(name: &str, max_iters: u64, mut f: F) -> BenchResult {
+    let (warmup_ms, measure_ns, min_iters) =
+        if fast_mode() { (50, 2e8, 3) } else { (300, 2e9, 10) };
+
     // Warmup + per-iteration estimate.
     let warm_start = Instant::now();
     let mut warm_iters = 0u64;
-    while warm_start.elapsed() < Duration::from_millis(300) && warm_iters < max_iters {
+    while warm_start.elapsed() < Duration::from_millis(warmup_ms) && warm_iters < max_iters
+    {
         f();
         warm_iters += 1;
     }
     let per_iter = warm_start.elapsed().as_nanos() as f64 / warm_iters.max(1) as f64;
-    let target_iters = ((2e9 / per_iter.max(1.0)) as u64).clamp(10, max_iters);
+    let target_iters = ((measure_ns / per_iter.max(1.0)) as u64).clamp(min_iters, max_iters);
 
     let mut samples = Vec::with_capacity(target_iters as usize);
     for _ in 0..target_iters {
@@ -79,6 +104,76 @@ pub fn bench<F: FnMut()>(name: &str, max_iters: u64, mut f: F) -> BenchResult {
     r
 }
 
+/// A named collection of bench results, for suites that want a JSON series
+/// next to the console lines. `record` attaches a units-per-iteration
+/// figure so throughput benches (requests replayed, routes resolved) report
+/// units/s rather than bare iterations/s.
+pub struct BenchSet {
+    suite: String,
+    rows: Vec<(BenchResult, f64)>,
+}
+
+impl BenchSet {
+    /// Start an empty set for the named suite (e.g. `"service"`).
+    pub fn new(suite: &str) -> BenchSet {
+        BenchSet { suite: suite.to_string(), rows: Vec::new() }
+    }
+
+    /// Time `f` via [`bench`] and record the result. `units_per_iter` is
+    /// what one iteration processes (requests, lookups, ...); the JSON row
+    /// carries both the per-iteration stats and `units_per_s`.
+    pub fn run<F: FnMut()>(
+        &mut self,
+        name: &str,
+        max_iters: u64,
+        units_per_iter: f64,
+        f: F,
+    ) -> BenchResult {
+        let r = bench(name, max_iters, f);
+        self.rows.push((r.clone(), units_per_iter));
+        r
+    }
+
+    /// Serialize every recorded row. Stable shape:
+    /// `{"suite", "results": [{name, iters, mean_ns, p50_ns, p95_ns,
+    /// units_per_iter, units_per_s}]}`.
+    pub fn to_json(&self) -> Json {
+        let results = self
+            .rows
+            .iter()
+            .map(|(r, units)| {
+                Json::obj(vec![
+                    ("name", Json::str(&r.name)),
+                    ("iters", Json::num(r.iters as f64)),
+                    ("mean_ns", Json::num(r.mean_ns)),
+                    ("p50_ns", Json::num(r.p50_ns)),
+                    ("p95_ns", Json::num(r.p95_ns)),
+                    ("units_per_iter", Json::num(*units)),
+                    ("units_per_s", Json::num(units * r.per_second())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("suite", Json::str(&self.suite)),
+            ("results", Json::Arr(results)),
+        ])
+    }
+
+    /// If `CUDAFORGE_BENCH_JSON` names a path, write [`BenchSet::to_json`]
+    /// there (plus a trailing newline) and print a one-line confirmation.
+    pub fn finish(&self) {
+        if let Ok(path) = std::env::var("CUDAFORGE_BENCH_JSON") {
+            if path.is_empty() {
+                return;
+            }
+            match std::fs::write(&path, format!("{}\n", self.to_json())) {
+                Ok(()) => println!("bench json: {} results -> {path}", self.rows.len()),
+                Err(e) => eprintln!("bench json: failed to write {path}: {e}"),
+            }
+        }
+    }
+}
+
 /// `black_box` shim (std::hint::black_box is stable).
 pub use std::hint::black_box;
 
@@ -93,6 +188,28 @@ mod tests {
         });
         assert!(r.mean_ns > 0.0);
         assert!(r.p50_ns <= r.p95_ns * 1.001);
-        assert!(r.iters >= 10);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn bench_set_serializes_units_per_second() {
+        let mut set = BenchSet::new("unit-test");
+        set.run("spin", 50, 200.0, || {
+            black_box((0..64).sum::<u64>());
+        });
+        let doc = set.to_json();
+        assert_eq!(doc.get("suite").and_then(Json::as_str), Some("unit-test"));
+        let rows = doc.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 1);
+        let row = &rows[0];
+        assert_eq!(row.get("name").and_then(Json::as_str), Some("spin"));
+        let mean = row.get("mean_ns").and_then(Json::as_f64).unwrap();
+        let ups = row.get("units_per_s").and_then(Json::as_f64).unwrap();
+        assert!(mean > 0.0);
+        // units_per_s is exactly units * (1e9 / mean_ns).
+        assert!((ups - 200.0 * 1e9 / mean).abs() < 1e-6 * ups.abs());
+        // Round-trips through the serializer.
+        let text = doc.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
     }
 }

@@ -1,0 +1,332 @@
+//! Integration: closed-loop autoscaling over the sharded cluster replay.
+//!
+//! The contracts pinned here are the subsystem's acceptance criteria:
+//!
+//! 1. A [`StaticPolicy`] run with the steady (identity) scenario is
+//!    **bit-identical** to a plain `ClusterService::replay` — the
+//!    autoscaling loop's decision ticks are pure observations.
+//! 2. The threshold and target-tracking policies each produce at least one
+//!    join *and* one fail on the diurnal and flash-crowd scenarios, every
+//!    action is priced by a matching entry in `ClusterReport::rebalances`,
+//!    joins land exactly one provisioning delay after their decision — and
+//!    the whole report (actions included) is bit-identical across OS
+//!    `threads` 1/2/8 and `window` sizes.
+//! 3. Scenario-scripted membership events (the mass interruption) flow
+//!    through the same validated, priced machinery as policy decisions.
+//!
+//! The fleet here is deliberately tiny and slow-ticking: 4 tasks on one
+//! GPU so the cacheable key population is 4, one simulated worker per
+//! node, 6 node slots of which 4 start alive, an hourly decision tick.
+//! With those numbers the first tick's window provably contains a cold
+//! workflow start (hundreds of busy-seconds against a 0.02 utilization
+//! high-water mark → a join), and once all four keys are cached there are
+//! provably all-hit windows (0.0 busy-seconds against a 0.01 low-water
+//! mark, empty queues → a fail). The preconditions those arguments rest on
+//! are asserted against the generated trace, so a parameter drift fails
+//! loudly here instead of flaking downstream.
+
+use cudaforge::cluster::autoscale::{
+    AutoscaleConfig, AutoscalePolicy, ScheduledAction, StaticPolicy, TargetTrackingPolicy,
+    ThresholdPolicy,
+};
+use cudaforge::cluster::{
+    AutoscaleRun, ClusterConfig, ClusterReport, ClusterService, MembershipChange,
+    RebalanceKind, Scenario,
+};
+use cudaforge::service::traffic::{generate, TrafficConfig, TrafficRequest};
+use cudaforge::service::ServiceConfig;
+use cudaforge::tasks::{self, TaskSpec};
+use cudaforge::workflow::NoOracle;
+use std::collections::BTreeMap;
+
+/// Node slots in the cluster config (the autoscaler's provisioning pool).
+const SLOTS: usize = 6;
+/// Slots alive at replay start; the rest are dead headroom.
+const START_ALIVE: usize = 4;
+const TICK_S: f64 = 3600.0;
+const PROVISION_DELAY_S: f64 = 600.0;
+
+fn small_suite() -> Vec<TaskSpec> {
+    tasks::kernelbench().into_iter().take(4).collect()
+}
+
+fn base_trace(priority_mix: [f64; 3]) -> Vec<TrafficRequest> {
+    generate(
+        4,
+        &TrafficConfig {
+            requests: 600,
+            mean_interarrival_s: 90.0,
+            gpu_mix: vec![("rtx6000", 1.0)],
+            priority_mix,
+            ..TrafficConfig::default()
+        },
+    )
+}
+
+fn cluster_config(threads: usize, window: usize, scenario: &Scenario) -> ClusterConfig {
+    ClusterConfig {
+        nodes: SLOTS,
+        initial_dead: (START_ALIVE..SLOTS).collect(),
+        node_service_multipliers: scenario.service_multipliers(SLOTS),
+        service: ServiceConfig {
+            threads,
+            window,
+            sim_workers: 1,
+            seed: 7,
+            ..ServiceConfig::default()
+        },
+        ..ClusterConfig::default()
+    }
+}
+
+fn autoscale_cfg() -> AutoscaleConfig {
+    AutoscaleConfig {
+        tick_s: TICK_S,
+        provision_delay_s: PROVISION_DELAY_S,
+        min_nodes: 1,
+        max_nodes: SLOTS,
+    }
+}
+
+/// The preconditions the guaranteed-join / guaranteed-fail arguments rest
+/// on (see the module doc). Asserted per shaped trace so a tuning drift in
+/// the generator or the shapers fails here, with a name, not downstream.
+fn assert_trace_preconditions(trace: &[TrafficRequest], name: &str) {
+    assert!(
+        trace[0].arrival_s < TICK_S,
+        "{name}: the first (necessarily cold) arrival must land inside the first tick window"
+    );
+    assert!(
+        trace.iter().all(|r| r.gpu.key == "rtx6000"),
+        "{name}: a single-GPU mix keeps the key population at 4"
+    );
+    let mut first_seen: BTreeMap<usize, f64> = BTreeMap::new();
+    for req in trace {
+        first_seen.entry(req.task_index).or_insert(req.arrival_s);
+    }
+    assert_eq!(first_seen.len(), 4, "{name}: all four tasks appear in the trace");
+    let last_new = first_seen.values().fold(0.0f64, |a, b| a.max(*b));
+    let span = trace.last().unwrap().arrival_s;
+    // Cold workflows run well under ~1600 simulated seconds each; two of
+    // those (service + possible same-node queueing) past the last novel
+    // key, plus two whole tick windows, must still fit before the trace
+    // ends — that guarantees an all-hit, zero-busy window for the
+    // scale-down half of each policy.
+    assert!(
+        last_new + 2.0 * 1600.0 + 2.0 * TICK_S < span,
+        "{name}: an all-hit tick window must exist after the cold population completes \
+         (last novel key at {last_new:.0}s, span {span:.0}s)"
+    );
+}
+
+/// Every policy action must be priced: a rebalance entry with the matching
+/// kind, node, and landing instant. Joins land exactly one provisioning
+/// delay after their decision tick; fails land at the tick itself.
+fn assert_actions_priced(actions: &[ScheduledAction], report: &ClusterReport, name: &str) {
+    for action in actions {
+        let kind = match action.change {
+            MembershipChange::Fail => RebalanceKind::NodeFailure,
+            MembershipChange::Join => RebalanceKind::NodeJoin,
+        };
+        assert!(
+            report.rebalances.iter().any(|rb| rb.kind == kind
+                && rb.node == action.node
+                && rb.at_s == action.at_s),
+            "{name}: action {action:?} has no matching rebalance entry"
+        );
+        match action.change {
+            MembershipChange::Join => assert_eq!(
+                action.at_s,
+                action.decided_at_s + PROVISION_DELAY_S,
+                "{name}: joins land one provisioning delay after the decision"
+            ),
+            MembershipChange::Fail => assert_eq!(
+                action.at_s, action.decided_at_s,
+                "{name}: fails land at the decision instant"
+            ),
+        }
+    }
+}
+
+fn make_policy(policy_name: &str) -> Box<dyn AutoscalePolicy> {
+    match policy_name {
+        // Thresholds sized to the tiny fleet: one cold workflow start in a
+        // tick window clears 0.02 mean utilization; an all-hit window is
+        // exactly 0.0. The huge backlog threshold keeps the utilization
+        // signal the only scale-up trigger, so the test argument stays
+        // one-dimensional.
+        "threshold" => Box::new(ThresholdPolicy::new(0.02, 0.01, 1e9, 0)),
+        // Defend perfect attainment: any window completing a cold
+        // interactive request (minutes of latency against a 120 s SLO)
+        // scales up; all-hit idle windows (attainment 1.0, utilization
+        // 0.0) scale down.
+        "target-tracking" => Box::new(TargetTrackingPolicy::new(1.0, 0.01, 0)),
+        other => panic!("unknown test policy {other}"),
+    }
+}
+
+#[allow(clippy::type_complexity)]
+fn run_autoscaled(
+    policy_name: &str,
+    scenario: &Scenario,
+    trace: &[TrafficRequest],
+    suite: &[TaskSpec],
+    threads: usize,
+    window: usize,
+) -> (ClusterReport, Vec<ScheduledAction>, usize) {
+    let mut run = AutoscaleRun::new(make_policy(policy_name), autoscale_cfg());
+    let mut svc = ClusterService::new(cluster_config(threads, window, scenario));
+    let report = svc.replay_autoscaled(trace, suite, &NoOracle, &mut run);
+    let actions = run.actions.clone();
+    (report, actions, run.ticks)
+}
+
+#[test]
+fn static_policy_with_no_shaper_reproduces_the_plain_cluster_replay() {
+    let suite = small_suite();
+    let trace = base_trace([0.2, 0.6, 0.2]);
+    let scenario = Scenario::steady();
+    let mut plain_svc = ClusterService::new(cluster_config(2, 16, &scenario));
+    let plain = plain_svc.replay(&trace, &suite, &NoOracle);
+
+    for (threads, window) in [(1usize, 1usize), (2, 16), (8, 64)] {
+        let mut run = AutoscaleRun::new(Box::new(StaticPolicy), autoscale_cfg());
+        let mut svc = ClusterService::new(cluster_config(threads, window, &scenario));
+        let report = svc.replay_autoscaled(&trace, &suite, &NoOracle, &mut run);
+        assert_eq!(
+            report, plain,
+            "threads {threads} window {window}: static autoscaling must be bit-identical \
+             to the plain replay"
+        );
+        assert!(run.actions.is_empty(), "the static policy never acts");
+        assert!(run.ticks > 0, "decision ticks actually fired");
+    }
+}
+
+#[test]
+fn threshold_policy_joins_and_fails_on_shaped_traffic_bit_identically() {
+    let suite = small_suite();
+    for scenario in [Scenario::diurnal(), Scenario::flash_crowd()] {
+        let mut trace = base_trace([0.2, 0.6, 0.2]);
+        scenario.shape_arrivals(&mut trace);
+        assert_trace_preconditions(&trace, scenario.name());
+
+        let baseline = run_autoscaled("threshold", &scenario, &trace, &suite, 1, 1);
+        let (report, actions, ticks) = &baseline;
+        assert!(*ticks >= 10, "{}: the trace spans many decision ticks", scenario.name());
+        let joins =
+            actions.iter().filter(|a| a.change == MembershipChange::Join).count();
+        let fails =
+            actions.iter().filter(|a| a.change == MembershipChange::Fail).count();
+        assert!(joins >= 1, "{}: the hot first window forces a join", scenario.name());
+        assert!(fails >= 1, "{}: an all-hit window forces a fail", scenario.name());
+        assert_actions_priced(actions, report, scenario.name());
+
+        for (threads, window) in [(2usize, 16usize), (8, 64)] {
+            let other = run_autoscaled("threshold", &scenario, &trace, &suite, threads, window);
+            assert_eq!(
+                other, baseline,
+                "{}: threads {threads} window {window} must be bit-identical",
+                scenario.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn target_tracking_policy_joins_and_fails_on_shaped_traffic_bit_identically() {
+    let suite = small_suite();
+    for scenario in [Scenario::diurnal(), Scenario::flash_crowd()] {
+        // All-interactive traffic: a cold workflow (minutes of simulated
+        // latency) can never meet the 120 s interactive SLO, so any window
+        // completing one drops attainment below the 1.0 target.
+        let mut trace = base_trace([1.0, 0.0, 0.0]);
+        scenario.shape_arrivals(&mut trace);
+        assert_trace_preconditions(&trace, scenario.name());
+
+        let baseline = run_autoscaled("target-tracking", &scenario, &trace, &suite, 1, 1);
+        let (report, actions, _ticks) = &baseline;
+        let joins =
+            actions.iter().filter(|a| a.change == MembershipChange::Join).count();
+        let fails =
+            actions.iter().filter(|a| a.change == MembershipChange::Fail).count();
+        assert!(joins >= 1, "{}: an SLO-violating window forces a join", scenario.name());
+        assert!(fails >= 1, "{}: an idle attainment-1.0 window forces a fail", scenario.name());
+        assert_actions_priced(actions, report, scenario.name());
+
+        for (threads, window) in [(2usize, 16usize), (8, 64)] {
+            let other =
+                run_autoscaled("target-tracking", &scenario, &trace, &suite, threads, window);
+            assert_eq!(
+                other, baseline,
+                "{}: threads {threads} window {window} must be bit-identical",
+                scenario.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn scripted_mass_interruption_events_are_priced_like_policy_actions() {
+    let suite = small_suite();
+    let scenario = Scenario::mass_interruption();
+    let mut trace = base_trace([0.2, 0.6, 0.2]);
+    scenario.shape_arrivals(&mut trace); // identity for this scenario
+    let span = trace.last().unwrap().arrival_s;
+
+    // A static policy keeps the scripted events the only membership
+    // changes, so both reclaimed nodes must surface as priced failures.
+    let mut config = cluster_config(2, 16, &scenario);
+    config.events.extend(scenario.membership_events(START_ALIVE, span));
+    let mut run = AutoscaleRun::new(Box::new(StaticPolicy), autoscale_cfg());
+    let mut svc = ClusterService::new(config);
+    let report = svc.replay_autoscaled(&trace, &suite, &NoOracle, &mut run);
+
+    assert!(run.actions.is_empty());
+    let scripted_at = span / 3.0;
+    let scripted: Vec<usize> = report
+        .rebalances
+        .iter()
+        .filter(|rb| rb.kind == RebalanceKind::NodeFailure && rb.at_s == scripted_at)
+        .map(|rb| rb.node)
+        .collect();
+    assert_eq!(
+        scripted,
+        vec![2, 3],
+        "the interruption reclaims the two highest-indexed alive nodes, priced"
+    );
+    assert_eq!(report.epoch, 2, "each applied failure bumps the membership epoch");
+}
+
+#[test]
+fn straggler_multipliers_reach_the_replay() {
+    // The straggler scenario's multiplier vector must actually change the
+    // replay (node 0 serves 4x slower), and the steady scenario's empty
+    // vector must not.
+    let suite = small_suite();
+    let trace = base_trace([0.2, 0.6, 0.2]);
+
+    let mut steady_svc = ClusterService::new(cluster_config(2, 16, &Scenario::steady()));
+    let steady = steady_svc.replay(&trace, &suite, &NoOracle);
+    let mut empty_mult = cluster_config(2, 16, &Scenario::steady());
+    assert!(empty_mult.node_service_multipliers.is_empty());
+    empty_mult.node_service_multipliers = vec![1.0; SLOTS];
+    let mut unit_svc = ClusterService::new(empty_mult);
+    let unit = unit_svc.replay(&trace, &suite, &NoOracle);
+    assert_eq!(unit, steady, "all-1.0 multipliers are the identity");
+
+    // The straggler scenario's vector slows exactly node 0.
+    let straggler_cfg = cluster_config(2, 16, &Scenario::straggler());
+    assert_eq!(straggler_cfg.node_service_multipliers, vec![4.0, 1.0, 1.0, 1.0, 1.0, 1.0]);
+
+    // Whether node 0 owns traffic under this seed is a routing accident, so
+    // the plumb-through proof slows *every* node: any replay runs cold
+    // flights somewhere, and a fleet-wide 4x multiplier must change the
+    // latency surface.
+    let mut slow_cfg = cluster_config(2, 16, &Scenario::steady());
+    slow_cfg.node_service_multipliers = vec![4.0; SLOTS];
+    let mut slow_svc = ClusterService::new(slow_cfg);
+    let slow = slow_svc.replay(&trace, &suite, &NoOracle);
+    assert!(steady.overall.flights_run > 0, "cold flights exist to be slowed");
+    assert_ne!(slow, steady, "a fleet-wide 4x multiplier must change the report");
+}

@@ -130,6 +130,7 @@ fn sharded_replay(threads: usize, seed: u64, window: usize) -> ClusterReport {
             seed,
             ..ServiceConfig::default()
         },
+        ..ClusterConfig::default()
     });
     svc.replay(&trace, &suite, &NoOracle)
 }
