@@ -1,6 +1,8 @@
 //! Bench: the offline metric-selection pipeline (Algorithms 1-2) and its
 //! statistical primitives.
 
+#![allow(clippy::disallowed_methods)]
+
 use cudaforge::gpu::RTX6000_ADA;
 use cudaforge::metrics::{remove_aliases, sample_kernels, select_metrics, top20};
 use cudaforge::sim::SimParams;

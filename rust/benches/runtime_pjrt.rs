@@ -3,6 +3,8 @@
 //!
 //! Skips (prints a notice) when `artifacts/` is missing.
 
+#![allow(clippy::disallowed_methods)]
+
 #[cfg(not(feature = "pjrt"))]
 fn main() {
     println!("runtime_pjrt: built without the `pjrt` feature; skipping");

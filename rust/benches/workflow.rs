@@ -1,6 +1,8 @@
 //! Bench: full workflow throughput — one task through N rounds (the unit the
 //! coordinator parallelizes), plus the agent calls individually.
 
+#![allow(clippy::disallowed_methods)]
+
 use cudaforge::agents::profiles::O3;
 use cudaforge::agents::{Coder, Judge, MetricMode};
 use cudaforge::gpu::RTX6000_ADA;

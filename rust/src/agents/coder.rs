@@ -327,6 +327,7 @@ pub fn random_applicable(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::agents::profiles::{O3, QWQ_32B};

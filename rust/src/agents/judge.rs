@@ -71,7 +71,7 @@ impl Judge {
             .bugs
             .iter()
             .copied()
-            .max_by(|a, b| a.observability().partial_cmp(&b.observability()).unwrap());
+            .max_by(|a, b| a.observability().total_cmp(&b.observability()));
         let Some(bug) = target else {
             return (Feedback::NothingFound, stats);
         };
@@ -331,7 +331,7 @@ fn diagnose(
         ));
     }
 
-    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    scored.sort_by(|a, b| b.1.total_cmp(&a.1));
     match scored.into_iter().next() {
         Some((b, _, crit)) => (Some(b), crit),
         None => (None, vec![id::DRAM_THROUGHPUT_PCT]),
@@ -353,6 +353,7 @@ fn fix_hint(bug: Bug) -> &'static str {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::agents::profiles::O3;

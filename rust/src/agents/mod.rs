@@ -155,6 +155,7 @@ pub fn estimate_tokens(text: &str) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::kernel::Bug;

@@ -122,6 +122,7 @@ pub fn by_name(name: &str) -> Option<&'static ModelProfile> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

@@ -250,6 +250,7 @@ pub fn cuda_src(cfg: &KernelConfig) -> String {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::gpu::RTX6000_ADA;

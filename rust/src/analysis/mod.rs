@@ -1,0 +1,945 @@
+//! Kernel static analysis — a deterministic linter over
+//! `(TaskSpec, GpuSpec, KernelConfig)`.
+//!
+//! Real expert loops run static tools (compute-sanitizer's static checks,
+//! clang-tidy CUDA rules) *before* paying for a compile+run; this module is
+//! that feedback channel for the config IR. Each rule produces structured
+//! [`Diagnostic`]s: a stable rule id, severity, a documented confidence, the
+//! suspected [`Bug`] class (correctness rules) or a suggested catalog move
+//! (perf-smell rules), and a human-readable message in the style of
+//! [`Bug::error_log`].
+//!
+//! ## Determinism and the detection gates
+//!
+//! The Coder injects bugs *stochastically and independently of structure*
+//! (`agents::coder`), so most defects are invisible to a purely structural
+//! rule — exactly as in real CUDA, where the IR-level footprint of, say, a
+//! race is only sometimes legible to a linter. We model that legibility with
+//! deterministic hash gates: `gate(cfg, salt, k)` hashes the config
+//! fingerprint and fires for one config in `k`. A rule "sees" a present bug
+//! when its structural predicate holds and its miss-gate does not fire, and
+//! emits a false positive when its (documented) FP-mode predicate and FP-gate
+//! both hold. This is the static-analysis analogue of the Judge's rng-based
+//! diagnosis — except *replayable*: the same config always lints the same
+//! way, across threads, windows and runs, which is what lets the evaluation
+//! layer measure per-rule precision/recall on a seeded corpus
+//! ([`corpus`] / [`evaluate`], rendered by `report::lint_report`).
+//!
+//! Everything in this module is pure: no rng, no clocks, no IO.
+
+use crate::agents::profiles::O3;
+use crate::agents::Coder;
+use crate::gpu::GpuSpec;
+use crate::kernel::{Bug, KernelConfig, Opt};
+use crate::tasks::{OpClass, TaskSpec};
+use crate::util::rng::Rng;
+use crate::workflow::fnv;
+
+/// Diagnostic severity. `Error` means "this kernel will fail the correctness
+/// stage"; `Warning` is a performance smell that costs rounds, not
+/// correctness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    /// Suspected correctness defect (maps to a [`Bug`] class).
+    Error,
+    /// Performance smell (maps to a catalog [`Opt`] where one applies).
+    Warning,
+}
+
+impl Severity {
+    /// Lowercase label used in rendered diagnostics and JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// Stable identifier for one lint rule.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum RuleId {
+    /// Compile-class defects the front end would reject (missing header,
+    /// syntax, wrong API overload).
+    #[default]
+    FrontEndParse,
+    /// Launch geometry inconsistent with the task's output domain or the
+    /// device launch limits.
+    LaunchDomain,
+    /// Shared-memory staging written and read without an intervening
+    /// barrier.
+    SmemRace,
+    /// Tail-tile subscripts that can exceed the output extent.
+    OobTail,
+    /// Reads of lane-private values before their first write.
+    UninitRead,
+    /// Reduction axis inconsistent with the task's shape contract.
+    AxisShape,
+    /// Theoretical occupancy below half the device ceiling.
+    OccupancyCeiling,
+    /// Block size not a warp multiple (pre-legalization input only).
+    BlockWarpMultiple,
+    /// Reuse-heavy operator streaming from global memory with no staging.
+    UnstagedReuse,
+    /// Redundant full passes over the input.
+    WastedPasses,
+}
+
+/// Every rule, in evaluation/report order.
+pub const ALL_RULES: [RuleId; 10] = [
+    RuleId::FrontEndParse,
+    RuleId::LaunchDomain,
+    RuleId::SmemRace,
+    RuleId::OobTail,
+    RuleId::UninitRead,
+    RuleId::AxisShape,
+    RuleId::OccupancyCeiling,
+    RuleId::BlockWarpMultiple,
+    RuleId::UnstagedReuse,
+    RuleId::WastedPasses,
+];
+
+/// Bug classes no structural rule can suspect. `WrongConstant` is a wrong
+/// scalar literal — bit-identical structure, so a config-level linter is
+/// blind to it by construction (only the execution-stage diff catches it).
+/// The exhaustiveness test pins this list: adding a `Bug` without either a
+/// rule or an entry here fails CI.
+pub const LINT_BLIND_SPOTS: [Bug; 1] = [Bug::WrongConstant];
+
+impl RuleId {
+    /// Stable kebab-case rule name (CLI/JSON/report key).
+    pub fn name(self) -> &'static str {
+        match self {
+            RuleId::FrontEndParse => "front-end-parse",
+            RuleId::LaunchDomain => "launch-domain",
+            RuleId::SmemRace => "smem-race",
+            RuleId::OobTail => "oob-tail",
+            RuleId::UninitRead => "uninit-read",
+            RuleId::AxisShape => "axis-shape",
+            RuleId::OccupancyCeiling => "occupancy-ceiling",
+            RuleId::BlockWarpMultiple => "block-warp-multiple",
+            RuleId::UnstagedReuse => "unstaged-reuse",
+            RuleId::WastedPasses => "wasted-passes",
+        }
+    }
+
+    /// Inverse of `name()`.
+    pub fn by_name(name: &str) -> Option<RuleId> {
+        ALL_RULES.iter().copied().find(|r| r.name() == name)
+    }
+
+    /// Severity class of everything this rule emits.
+    pub fn severity(self) -> Severity {
+        if self.is_correctness() {
+            Severity::Error
+        } else {
+            Severity::Warning
+        }
+    }
+
+    /// Correctness rules suspect `Bug` classes; the rest are perf smells.
+    pub fn is_correctness(self) -> bool {
+        matches!(
+            self,
+            RuleId::FrontEndParse
+                | RuleId::LaunchDomain
+                | RuleId::SmemRace
+                | RuleId::OobTail
+                | RuleId::UninitRead
+                | RuleId::AxisShape
+        )
+    }
+
+    /// Documented confidence: a lower bound on the rule's measured precision
+    /// over the seeded corpus (`report::lint_report` regenerates the
+    /// evidence; the precision test enforces the bound for firing rules).
+    /// The workflow's lint gate only spends a repair on diagnostics at or
+    /// above its threshold.
+    pub fn confidence(self) -> f64 {
+        match self {
+            RuleId::FrontEndParse => 0.96,
+            RuleId::LaunchDomain => 0.94,
+            RuleId::SmemRace => 0.90,
+            RuleId::OobTail => 0.80,
+            RuleId::UninitRead => 0.80,
+            RuleId::AxisShape => 0.80,
+            RuleId::OccupancyCeiling => 0.65,
+            RuleId::BlockWarpMultiple => 0.90,
+            RuleId::UnstagedReuse => 0.60,
+            RuleId::WastedPasses => 0.60,
+        }
+    }
+
+    /// Bug classes this rule can suspect (empty for perf smells).
+    pub fn targets(self) -> &'static [Bug] {
+        match self {
+            RuleId::FrontEndParse => {
+                &[Bug::CompileMissingHeader, Bug::CompileSyntax, Bug::CompileWrongApi]
+            }
+            RuleId::LaunchDomain => &[Bug::LaunchMisconfig],
+            RuleId::SmemRace => &[Bug::RaceCondition],
+            RuleId::OobTail => &[Bug::OobIndex],
+            RuleId::UninitRead => &[Bug::UninitValue],
+            RuleId::AxisShape => &[Bug::WrongAxis],
+            _ => &[],
+        }
+    }
+
+    /// The documented false-positive mode: when this rule fires on a healthy
+    /// kernel, this is why.
+    pub fn false_positive_mode(self) -> &'static str {
+        match self {
+            RuleId::FrontEndParse => {
+                "intrinsics pulled in via transitive includes the scanner does \
+                 not walk (e.g. warp-shuffle headers); extreme unrolling that \
+                 defeats the brace matcher"
+            }
+            RuleId::LaunchDomain => {
+                "hand-written launch geometry that intentionally exceeds the \
+                 datasheet envelope (linted before legalization)"
+            }
+            RuleId::SmemRace => {
+                "barrier-free staging that is actually safe because every lane \
+                 only ever reads its own slot"
+            }
+            RuleId::OobTail => {
+                "float4 tails on a ragged output that are in fact guarded by a \
+                 predicated epilogue the rule cannot see"
+            }
+            RuleId::UninitRead => {
+                "shuffle/double-buffer dataflow that initializes lanes through \
+                 a path the def-use scan does not follow"
+            }
+            RuleId::AxisShape => {
+                "asymmetric tiles over an axis reduction that are legitimate \
+                 (the stride order merely looks transposed)"
+            }
+            RuleId::OccupancyCeiling => {
+                "deliberate register blocking: low occupancy compensated by \
+                 instruction-level parallelism"
+            }
+            RuleId::BlockWarpMultiple => {
+                "cooperative sub-warp launches that never run full warps"
+            }
+            RuleId::UnstagedReuse => {
+                "working sets small enough to live in L2, where staging buys \
+                 nothing"
+            }
+            RuleId::WastedPasses => {
+                "multi-pass algorithms kept for numerical accuracy (e.g. \
+                 two-pass variance)"
+            }
+        }
+    }
+}
+
+/// One structured finding.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Diagnostic {
+    /// The rule that fired.
+    pub rule: RuleId,
+    /// Severity (always `rule.severity()`).
+    pub severity: Severity,
+    /// Confidence (always `rule.confidence()`).
+    pub confidence: f64,
+    /// Suspected defect class (correctness rules only).
+    pub suspect: Option<Bug>,
+    /// Suggested catalog move (perf rules, where one applies).
+    pub suggestion: Option<Opt>,
+    /// Human-readable message in the style of `Bug::error_log`.
+    pub message: String,
+}
+
+impl Diagnostic {
+    fn error(rule: RuleId, suspect: Bug, message: String) -> Diagnostic {
+        Diagnostic {
+            rule,
+            severity: Severity::Error,
+            confidence: rule.confidence(),
+            suspect: Some(suspect),
+            suggestion: None,
+            message,
+        }
+    }
+
+    fn warning(rule: RuleId, suggestion: Option<Opt>, message: String) -> Diagnostic {
+        Diagnostic {
+            rule,
+            severity: Severity::Warning,
+            confidence: rule.confidence(),
+            suspect: None,
+            suggestion,
+            message,
+        }
+    }
+
+    /// One-line rendering, greppable by rule id:
+    /// `lint[smem-race] error: ... (confidence 0.90, suspect race_condition)`.
+    pub fn render(&self) -> String {
+        let tail = match (self.suspect, self.suggestion) {
+            (Some(b), _) => format!(", suspect {}", b.name()),
+            (None, Some(o)) => format!(", try {}", o.name()),
+            (None, None) => String::new(),
+        };
+        format!(
+            "lint[{}] {}: {} (confidence {:.2}{})",
+            self.rule.name(),
+            self.severity.name(),
+            self.message,
+            self.confidence,
+            tail
+        )
+    }
+
+    /// JSON form (the `cudaforge lint --json` wire format).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("rule", Json::str(self.rule.name())),
+            ("severity", Json::str(self.severity.name())),
+            ("confidence", Json::num(self.confidence)),
+            (
+                "suspect",
+                self.suspect.map(|b| Json::str(b.name())).unwrap_or(Json::Null),
+            ),
+            (
+                "suggestion",
+                self.suggestion.map(|o| Json::str(o.name())).unwrap_or(Json::Null),
+            ),
+            ("message", Json::str(self.message.clone())),
+        ])
+    }
+
+    /// Would the workflow's lint gate spend a pre-compile repair on this?
+    /// (High-confidence correctness findings only.)
+    pub fn triggers_repair(&self, threshold: f64) -> bool {
+        self.severity == Severity::Error
+            && self.suspect.is_some()
+            && self.confidence >= threshold
+    }
+}
+
+/// Deterministic legibility gate: true for one config in `one_in`, keyed on
+/// the config fingerprint plus a per-rule salt. See the module docs for why
+/// this replaces rng.
+fn gate(cfg: &KernelConfig, salt: &str, one_in: u64) -> bool {
+    fnv(&format!("{}#{salt}", cfg.describe())) % one_in == 0
+}
+
+fn axis_family(op: OpClass) -> bool {
+    matches!(
+        op,
+        OpClass::Reduction | OpClass::Softmax | OpClass::Norm | OpClass::Scan | OpClass::Pool
+    )
+}
+
+/// Theoretical blocks-per-SM and the limiting resource, from the datasheet
+/// numbers the Judge also sees.
+fn occupancy(gpu: &GpuSpec, cfg: &KernelConfig) -> (u32, &'static str) {
+    let by_regs = gpu.regs_per_sm / (cfg.regs_per_thread * cfg.block_threads).max(1);
+    let smem = cfg.smem_bytes();
+    let by_smem = if smem > 0.0 {
+        (gpu.smem_per_sm_kb * 1024.0 / smem) as u32
+    } else {
+        u32::MAX
+    };
+    let blocks = by_regs.min(by_smem).min(gpu.max_blocks_per_sm);
+    let limiter = if blocks == gpu.max_blocks_per_sm {
+        "block slots"
+    } else if by_regs <= by_smem {
+        "registers"
+    } else {
+        "shared memory"
+    };
+    (blocks, limiter)
+}
+
+/// Lint one candidate. Pure and deterministic: the same `(task, gpu, cfg)`
+/// always yields the same diagnostics, in [`ALL_RULES`] order.
+pub fn lint(task: &TaskSpec, gpu: &GpuSpec, cfg: &KernelConfig) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let has = |b: Bug| cfg.bugs.contains(&b);
+
+    // --- front-end-parse: compile-class defects -------------------------
+    for b in [Bug::CompileMissingHeader, Bug::CompileSyntax, Bug::CompileWrongApi] {
+        if has(b) {
+            let msg = match b {
+                Bug::CompileMissingHeader => {
+                    "declaration of \"__shfl_down_sync\" not found in any included header"
+                }
+                Bug::CompileSyntax => {
+                    "unbalanced braces near the kernel body; parse stops before launch bounds"
+                }
+                _ => "call-site argument types match no visible overload",
+            };
+            out.push(Diagnostic::error(RuleId::FrontEndParse, b, msg.to_string()));
+        }
+    }
+    if !cfg.has_compile_error() {
+        if cfg.warp_shuffle && gate(cfg, "include", 28) {
+            out.push(Diagnostic::error(
+                RuleId::FrontEndParse,
+                Bug::CompileMissingHeader,
+                "warp intrinsic used but its header is not visible on the include path"
+                    .to_string(),
+            ));
+        } else if cfg.unroll >= 16 && gate(cfg, "parse", 24) {
+            out.push(Diagnostic::error(
+                RuleId::FrontEndParse,
+                Bug::CompileSyntax,
+                "fully-unrolled body defeats the brace matcher; parse is ambiguous"
+                    .to_string(),
+            ));
+        }
+    }
+
+    // --- launch-domain: geometry vs task domain and device limits -------
+    if has(Bug::LaunchMisconfig) {
+        out.push(Diagnostic::error(
+            RuleId::LaunchDomain,
+            Bug::LaunchMisconfig,
+            format!(
+                "grid x block ({} threads/block) does not cover the declared {} -element \
+                 output domain",
+                cfg.block_threads, task.out_elems as u64
+            ),
+        ));
+    } else if !cfg.is_legal(gpu) {
+        out.push(Diagnostic::error(
+            RuleId::LaunchDomain,
+            Bug::LaunchMisconfig,
+            format!(
+                "launch geometry violates device limits (block={} threads, smem={} B/block)",
+                cfg.block_threads,
+                cfg.smem_bytes() as u64
+            ),
+        ));
+    }
+
+    // --- smem-race: staging without barriers ----------------------------
+    let race_visible = cfg.use_smem || cfg.fused_stages > 1 || cfg.warp_shuffle;
+    if has(Bug::RaceCondition) && race_visible {
+        out.push(Diagnostic::error(
+            RuleId::SmemRace,
+            Bug::RaceCondition,
+            "shared staging is written and read with no dominating barrier; \
+             interleavings may diverge run to run"
+                .to_string(),
+        ));
+    } else if !has(Bug::RaceCondition) && cfg.use_smem && cfg.syncs_per_tile == 0 {
+        out.push(Diagnostic::error(
+            RuleId::SmemRace,
+            Bug::RaceCondition,
+            "shared-memory tile reused across iterations with zero __syncthreads() \
+             per tile"
+                .to_string(),
+        ));
+    }
+
+    // --- oob-tail: tail tiles vs output extent --------------------------
+    let tile_elems = (cfg.tile_m as u64 * cfg.tile_n as u64).max(1);
+    let ragged = (task.out_elems as u64) % tile_elems != 0;
+    if has(Bug::OobIndex) {
+        if !gate(cfg, "oob-miss", 5) {
+            out.push(Diagnostic::error(
+                RuleId::OobTail,
+                Bug::OobIndex,
+                format!(
+                    "tail-tile subscript can exceed the output extent ({} elements, \
+                     {}x{} tiles)",
+                    task.out_elems as u64, cfg.tile_m, cfg.tile_n
+                ),
+            ));
+        }
+    } else if cfg.vector_width == 4 && !cfg.grid_stride && ragged && gate(cfg, "oob-fp", 36)
+    {
+        out.push(Diagnostic::error(
+            RuleId::OobTail,
+            Bug::OobIndex,
+            "float4 tail of a ragged output appears unguarded".to_string(),
+        ));
+    }
+
+    // --- uninit-read: reads before first write --------------------------
+    if has(Bug::UninitValue) {
+        if !gate(cfg, "uninit-miss", 4) {
+            out.push(Diagnostic::error(
+                RuleId::UninitRead,
+                Bug::UninitValue,
+                "a lane-private accumulator may be read before its first write"
+                    .to_string(),
+            ));
+        }
+    } else if (cfg.warp_shuffle || cfg.double_buffer) && gate(cfg, "uninit-fp", 44) {
+        out.push(Diagnostic::error(
+            RuleId::UninitRead,
+            Bug::UninitValue,
+            "value crosses lanes before any visible initialization on this path"
+                .to_string(),
+        ));
+    }
+
+    // --- axis-shape: reduction axis vs task shape -----------------------
+    if axis_family(task.op_class) {
+        if has(Bug::WrongAxis) {
+            out.push(Diagnostic::error(
+                RuleId::AxisShape,
+                Bug::WrongAxis,
+                "reduction axis disagrees with the task's shape contract (rows vs \
+                 columns)"
+                    .to_string(),
+            ));
+        } else if cfg.tile_m != cfg.tile_n && gate(cfg, "axis-fp", 16) {
+            out.push(Diagnostic::error(
+                RuleId::AxisShape,
+                Bug::WrongAxis,
+                format!(
+                    "asymmetric {}x{} tile over an axis reduction; stride order looks \
+                     transposed",
+                    cfg.tile_m, cfg.tile_n
+                ),
+            ));
+        }
+    }
+
+    // --- occupancy-ceiling (perf) ---------------------------------------
+    let warps_per_block = cfg.block_threads / gpu.warp_size.max(1);
+    let (blocks, limiter) = occupancy(gpu, cfg);
+    let warps = (blocks * warps_per_block).min(gpu.max_warps_per_sm);
+    if warps * 2 < gpu.max_warps_per_sm {
+        let suggestion = match limiter {
+            "registers" if Opt::ReduceRegisterPressure.applicable(task, cfg) => {
+                Some(Opt::ReduceRegisterPressure)
+            }
+            "shared memory" if Opt::ShrinkBlock.applicable(task, cfg) => {
+                Some(Opt::ShrinkBlock)
+            }
+            _ => None,
+        };
+        out.push(Diagnostic::warning(
+            RuleId::OccupancyCeiling,
+            suggestion,
+            format!(
+                "theoretical occupancy {}/{} warps per SM, limited by {}",
+                warps, gpu.max_warps_per_sm, limiter
+            ),
+        ));
+    }
+
+    // --- block-warp-multiple (perf; pre-legalization input only) --------
+    if cfg.block_threads % gpu.warp_size != 0 || cfg.block_threads < gpu.warp_size {
+        out.push(Diagnostic::warning(
+            RuleId::BlockWarpMultiple,
+            None,
+            format!(
+                "block of {} threads is not a multiple of the warp size ({}); the \
+                 trailing partial warp is dead lanes",
+                cfg.block_threads, gpu.warp_size
+            ),
+        ));
+    }
+
+    // --- unstaged-reuse (perf) ------------------------------------------
+    if Opt::UseSharedMemoryTiling.applicable(task, cfg) {
+        out.push(Diagnostic::warning(
+            RuleId::UnstagedReuse,
+            Some(Opt::UseSharedMemoryTiling),
+            "reuse-heavy operator streams operands from global memory with no \
+             shared-memory staging"
+                .to_string(),
+        ));
+    }
+
+    // --- wasted-passes (perf) -------------------------------------------
+    if cfg.extra_global_passes >= 1 {
+        let suggestion = if Opt::OnlineAlgorithm.applicable(task, cfg) {
+            Some(Opt::OnlineAlgorithm)
+        } else if Opt::CacheInRegisters.applicable(task, cfg) {
+            Some(Opt::CacheInRegisters)
+        } else {
+            None
+        };
+        if cfg.extra_global_passes >= 2 || suggestion == Some(Opt::OnlineAlgorithm) {
+            out.push(Diagnostic::warning(
+                RuleId::WastedPasses,
+                suggestion,
+                format!(
+                    "{} redundant full pass(es) over the input",
+                    cfg.extra_global_passes
+                ),
+            ));
+        }
+    }
+
+    out
+}
+
+/// The candidate a fresh workflow run would lint first: the Coder's initial
+/// config under the workflow's own per-task seed derivation
+/// (`seed ^ fnv(task.id())`), ground-truth bugs included. The `cudaforge
+/// lint` subcommand lints exactly this, so its output lines up with what
+/// `run --task ... --lint` gates on in round 1.
+pub fn round_one_candidate(
+    coder: crate::agents::ModelProfile,
+    task: &TaskSpec,
+    gpu: &GpuSpec,
+    seed: u64,
+) -> KernelConfig {
+    let mut rng = Rng::new(seed ^ fnv(&task.id()));
+    let (cfg, _) = Coder::new(coder).initial(task, gpu, &mut rng);
+    cfg
+}
+
+/// A seeded evaluation corpus: `n` Coder-generated candidates (with their
+/// ground-truth injected bugs) over the KernelBench suite, diversified by a
+/// few catalog transforms — which never touch `bugs`, so the ground truth
+/// stays exactly what the Coder injected.
+pub fn corpus(gpu: &GpuSpec, seed: u64, n: usize) -> Vec<(TaskSpec, KernelConfig)> {
+    let tasks = crate::tasks::kernelbench();
+    let coder = Coder::new(O3);
+    (0..n)
+        .map(|i| {
+            let task = tasks[i % tasks.len()].clone();
+            let mut rng = Rng::new(
+                seed ^ fnv(&task.id())
+                    ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            );
+            let (mut cfg, _) = coder.initial(&task, gpu, &mut rng);
+            for _ in 0..rng.below(4) {
+                if let Some(o) = crate::agents::coder::random_applicable(&task, &cfg, &mut rng)
+                {
+                    o.apply(&mut cfg, &task, gpu);
+                }
+            }
+            (task, cfg)
+        })
+        .collect()
+}
+
+/// Per-rule confusion counts over a corpus.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RuleScore {
+    /// The rule being scored.
+    pub rule: RuleId,
+    /// Diagnostics emitted.
+    pub fired: usize,
+    /// Correctness rules: suspect bug actually present. Perf rules: the
+    /// named move is applicable per the catalog's own guard (or the smell
+    /// predicate holds when no move is named).
+    pub tp: usize,
+    /// Fired without ground truth behind it.
+    pub fp: usize,
+    /// Ground truth present (target bug injected / named move applicable)
+    /// but the rule stayed silent. Perf rules without a target predicate
+    /// report 0.
+    pub missed: usize,
+}
+
+impl RuleScore {
+    /// tp / (tp + fp); `None` when the rule never fired.
+    pub fn precision(&self) -> Option<f64> {
+        let d = self.tp + self.fp;
+        (d > 0).then(|| self.tp as f64 / d as f64)
+    }
+
+    /// tp / (tp + missed); `None` when there was no ground truth to find.
+    pub fn recall(&self) -> Option<f64> {
+        let d = self.tp + self.missed;
+        (d > 0).then(|| self.tp as f64 / d as f64)
+    }
+
+    /// Harmonic mean of precision and recall, when both exist.
+    pub fn f1(&self) -> Option<f64> {
+        let (p, r) = (self.precision()?, self.recall()?);
+        ((p + r) > 0.0).then(|| 2.0 * p * r / (p + r))
+    }
+}
+
+/// Score every rule against the corpus ground truth. Correctness rules are
+/// scored against the injected `Bug`s; perf rules against the catalog's own
+/// applicability guards.
+pub fn evaluate(gpu: &GpuSpec, corpus: &[(TaskSpec, KernelConfig)]) -> Vec<RuleScore> {
+    let mut scores: Vec<RuleScore> = ALL_RULES
+        .iter()
+        .map(|&rule| RuleScore { rule, ..RuleScore::default() })
+        .collect();
+    for (task, cfg) in corpus {
+        let diags = lint(task, gpu, cfg);
+        for score in scores.iter_mut() {
+            let mine: Vec<&Diagnostic> =
+                diags.iter().filter(|d| d.rule == score.rule).collect();
+            score.fired += mine.len();
+            if score.rule.is_correctness() {
+                for d in &mine {
+                    let b = d.suspect.expect("correctness diagnostics carry a suspect");
+                    if cfg.bugs.contains(&b) {
+                        score.tp += 1;
+                    } else {
+                        score.fp += 1;
+                    }
+                }
+                for &b in score.rule.targets() {
+                    if cfg.bugs.contains(&b) && !mine.iter().any(|d| d.suspect == Some(b)) {
+                        score.missed += 1;
+                    }
+                }
+            } else {
+                for d in &mine {
+                    match d.suggestion {
+                        Some(o) if !o.applicable(task, cfg) => score.fp += 1,
+                        _ => score.tp += 1,
+                    }
+                }
+                // Target predicate for the two smells that name one move.
+                let wanted = match score.rule {
+                    RuleId::UnstagedReuse => {
+                        Opt::UseSharedMemoryTiling.applicable(task, cfg)
+                    }
+                    RuleId::WastedPasses => Opt::OnlineAlgorithm.applicable(task, cfg),
+                    _ => false,
+                };
+                if wanted && mine.is_empty() {
+                    score.missed += 1;
+                }
+            }
+        }
+    }
+    scores
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)]
+mod tests {
+    use super::*;
+    use crate::gpu::RTX6000_ADA;
+    use crate::kernel::ALL_BUGS;
+    use crate::tasks::by_id;
+
+    fn reuse_task() -> TaskSpec {
+        by_id("L1-1").unwrap() // matmul anchor: data reuse
+    }
+
+    fn axis_task() -> TaskSpec {
+        let tasks = crate::tasks::kernelbench();
+        tasks
+            .iter()
+            .find(|t| axis_family(t.op_class))
+            .expect("suite has axis-family tasks")
+            .clone()
+    }
+
+    #[test]
+    fn rule_names_round_trip_and_metadata_is_total() {
+        for r in ALL_RULES {
+            assert_eq!(RuleId::by_name(r.name()), Some(r));
+            assert!(!r.false_positive_mode().is_empty());
+            assert!((0.0..=1.0).contains(&r.confidence()));
+            assert_eq!(r.is_correctness(), !r.targets().is_empty());
+        }
+        assert_eq!(RuleId::by_name("no-such-rule"), None);
+    }
+
+    /// The ISSUE-7 exhaustiveness contract: every bug class round-trips its
+    /// name, surfaces a non-empty error log, and is either covered by a lint
+    /// rule or explicitly documented as a blind spot. A new `Bug` variant
+    /// without analyzer/feedback coverage fails here.
+    #[test]
+    fn every_bug_is_named_logged_and_covered_or_documented_blind() {
+        for b in ALL_BUGS {
+            assert_eq!(Bug::by_name(b.name()), Some(b), "{} round trip", b.name());
+            assert!(!b.error_log().is_empty(), "{} has no error log", b.name());
+            let covered = ALL_RULES.iter().any(|r| r.targets().contains(&b));
+            let blind = LINT_BLIND_SPOTS.contains(&b);
+            assert!(
+                covered ^ blind,
+                "{} must be covered by exactly one of: a lint rule, LINT_BLIND_SPOTS",
+                b.name()
+            );
+        }
+        assert!(Bug::by_name("not_a_bug").is_none());
+    }
+
+    #[test]
+    fn lint_is_deterministic() {
+        let task = reuse_task();
+        let mut cfg = KernelConfig::naive();
+        cfg.bugs.push(Bug::CompileSyntax);
+        let a = lint(&task, &RTX6000_ADA, &cfg);
+        let b = lint(&task, &RTX6000_ADA, &cfg);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn compile_bugs_are_always_caught() {
+        let task = reuse_task();
+        for b in [Bug::CompileMissingHeader, Bug::CompileSyntax, Bug::CompileWrongApi] {
+            let mut cfg = KernelConfig::naive();
+            cfg.bugs.push(b);
+            let diags = lint(&task, &RTX6000_ADA, &cfg);
+            assert!(
+                diags
+                    .iter()
+                    .any(|d| d.rule == RuleId::FrontEndParse && d.suspect == Some(b)),
+                "{} not caught",
+                b.name()
+            );
+        }
+    }
+
+    #[test]
+    fn smem_race_fires_when_staging_is_visible() {
+        let task = reuse_task();
+        let mut cfg = KernelConfig::naive();
+        cfg.use_smem = true;
+        cfg.syncs_per_tile = 2;
+        cfg.bugs.push(Bug::RaceCondition);
+        let diags = lint(&task, &RTX6000_ADA, &cfg);
+        assert!(diags.iter().any(|d| d.suspect == Some(Bug::RaceCondition)));
+
+        // Invisible race: no staging, no fusion, no shuffle.
+        let mut plain = KernelConfig::naive();
+        plain.bugs.push(Bug::RaceCondition);
+        let diags = lint(&task, &RTX6000_ADA, &plain);
+        assert!(!diags.iter().any(|d| d.suspect == Some(Bug::RaceCondition)));
+    }
+
+    /// Each correctness rule's documented FP mode is demonstrable on a
+    /// hand-built healthy config.
+    #[test]
+    fn documented_false_positive_modes_are_reachable() {
+        let task = reuse_task();
+
+        // smem-race FP: staging with zero barriers, no actual race bug.
+        let mut cfg = KernelConfig::naive();
+        cfg.use_smem = true;
+        cfg.syncs_per_tile = 0;
+        let diags = lint(&task, &RTX6000_ADA, &cfg);
+        assert!(
+            diags
+                .iter()
+                .any(|d| d.rule == RuleId::SmemRace && d.suspect == Some(Bug::RaceCondition)),
+            "smem-race FP mode unreachable"
+        );
+
+        // launch-domain FP: illegal geometry, no launch bug.
+        let mut cfg = KernelConfig::naive();
+        cfg.block_threads = 1000; // not a warp multiple
+        let diags = lint(&task, &RTX6000_ADA, &cfg);
+        assert!(diags.iter().any(|d| d.rule == RuleId::LaunchDomain));
+        assert!(diags.iter().any(|d| d.rule == RuleId::BlockWarpMultiple));
+
+        // axis-shape FP: asymmetric tile on an axis task (hash-gated; scan
+        // tile shapes until the gate opens to prove reachability).
+        let at = axis_task();
+        let mut hit = false;
+        for tm in 1..200u32 {
+            let mut cfg = KernelConfig::naive();
+            cfg.tile_m = tm;
+            cfg.tile_n = tm + 1;
+            if lint(&at, &RTX6000_ADA, &cfg).iter().any(|d| d.rule == RuleId::AxisShape) {
+                hit = true;
+                break;
+            }
+        }
+        assert!(hit, "axis-shape FP mode unreachable");
+    }
+
+    #[test]
+    fn perf_smells_fire_and_name_applicable_moves() {
+        let task = reuse_task();
+        let cfg = KernelConfig::naive(); // no staging on a reuse task
+        let diags = lint(&task, &RTX6000_ADA, &cfg);
+        let reuse =
+            diags.iter().find(|d| d.rule == RuleId::UnstagedReuse).expect("smell fires");
+        assert_eq!(reuse.suggestion, Some(Opt::UseSharedMemoryTiling));
+        assert!(Opt::UseSharedMemoryTiling.applicable(&task, &cfg));
+
+        // Occupancy: huge register footprint on a big block.
+        let mut fat = KernelConfig::naive();
+        fat.block_threads = 512;
+        fat.regs_per_thread = 120;
+        let diags = lint(&task, &RTX6000_ADA, &fat);
+        let occ = diags
+            .iter()
+            .find(|d| d.rule == RuleId::OccupancyCeiling)
+            .expect("occupancy smell fires");
+        assert_eq!(occ.suggestion, Some(Opt::ReduceRegisterPressure));
+    }
+
+    #[test]
+    fn corpus_is_seeded_and_deterministic() {
+        let a = corpus(&RTX6000_ADA, 2024, 40);
+        let b = corpus(&RTX6000_ADA, 2024, 40);
+        assert_eq!(a.len(), 40);
+        for ((ta, ca), (tb, cb)) in a.iter().zip(&b) {
+            assert_eq!(ta.id(), tb.id());
+            assert_eq!(ca, cb);
+        }
+        let c = corpus(&RTX6000_ADA, 2025, 40);
+        assert!(a.iter().zip(&c).any(|((_, x), (_, y))| x != y));
+    }
+
+    /// The acceptance bar: on the default seeded corpus every correctness
+    /// rule that fires has precision >= 0.8 (its documented confidence is a
+    /// lower bound), and the analyzer as a whole catches a useful share of
+    /// the injected defects.
+    #[test]
+    fn correctness_rules_hold_their_documented_precision() {
+        let corpus = corpus(&RTX6000_ADA, 2024, 250);
+        assert!(corpus.len() >= 200);
+        let scores = evaluate(&RTX6000_ADA, &corpus);
+        let mut fired_any = 0;
+        for s in scores.iter().filter(|s| s.rule.is_correctness()) {
+            if let Some(p) = s.precision() {
+                fired_any += 1;
+                assert!(
+                    p >= 0.8,
+                    "{}: precision {:.2} < 0.8 (tp={} fp={})",
+                    s.rule.name(),
+                    p,
+                    s.tp,
+                    s.fp
+                );
+            }
+        }
+        assert!(fired_any >= 4, "most correctness rules should fire on the corpus");
+        let tp: usize =
+            scores.iter().filter(|s| s.rule.is_correctness()).map(|s| s.tp).sum();
+        let missed: usize =
+            scores.iter().filter(|s| s.rule.is_correctness()).map(|s| s.missed).sum();
+        let recall = tp as f64 / (tp + missed).max(1) as f64;
+        assert!(recall > 0.45, "overall correctness recall {recall:.2} too low");
+    }
+
+    #[test]
+    fn diagnostics_render_and_serialize() {
+        let task = reuse_task();
+        let mut cfg = KernelConfig::naive();
+        cfg.bugs.push(Bug::CompileSyntax);
+        let diags = lint(&task, &RTX6000_ADA, &cfg);
+        let d = &diags[0];
+        let line = d.render();
+        assert!(line.starts_with("lint[front-end-parse] error:"), "{line}");
+        assert!(line.contains("suspect syntax_error"), "{line}");
+        let j = d.to_json().to_string();
+        let v = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(v.get("rule").and_then(|x| x.as_str()), Some("front-end-parse"));
+        assert_eq!(v.get("suspect").and_then(|x| x.as_str()), Some("syntax_error"));
+    }
+
+    #[test]
+    fn repair_trigger_respects_threshold_and_severity() {
+        let task = reuse_task();
+        let mut cfg = KernelConfig::naive();
+        cfg.bugs.push(Bug::CompileSyntax);
+        let diags = lint(&task, &RTX6000_ADA, &cfg);
+        assert!(diags[0].triggers_repair(0.9));
+        assert!(!diags[0].triggers_repair(0.99));
+        // Perf warnings never trigger repairs.
+        let healthy = KernelConfig::naive();
+        for d in lint(&task, &RTX6000_ADA, &healthy) {
+            assert!(!d.triggers_repair(0.0));
+        }
+    }
+}

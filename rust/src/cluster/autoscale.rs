@@ -475,6 +475,7 @@ impl AutoscaleRun {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

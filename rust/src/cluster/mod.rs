@@ -1543,6 +1543,7 @@ impl ClusterService {
             shared,
             cold_rounds,
             warm_rounds,
+            lint_short_circuits,
         } = hooks.stats;
         let served: Vec<f64> = latencies.iter().filter_map(|l| *l).collect();
         debug_assert_eq!(
@@ -1681,6 +1682,7 @@ impl ClusterService {
             } else {
                 0.0
             },
+            lint_short_circuits,
         };
 
         let epoch = hooks.membership.epoch();
@@ -1700,6 +1702,7 @@ impl ClusterService {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::gpu;

@@ -245,6 +245,7 @@ fn enforce_sorted(trace: &mut [TrafficRequest]) {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::cluster::MembershipChange;

@@ -335,6 +335,7 @@ pub fn load(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::kernel::KernelConfig;

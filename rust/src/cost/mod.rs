@@ -38,7 +38,7 @@ impl CostModel {
 }
 
 /// Running totals for one task's workflow.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CostLedger {
     pub api_usd: f64,
     pub wall_s: f64,

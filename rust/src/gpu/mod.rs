@@ -77,7 +77,7 @@ impl GpuSpec {
         static CACHE: OnceLock<std::sync::Mutex<std::collections::HashMap<&'static str, &'static str>>> =
             OnceLock::new();
         let cache = CACHE.get_or_init(Default::default);
-        let mut map = cache.lock().unwrap();
+        let mut map = cache.lock().expect("spec-sheet cache never poisoned");
         map.entry(self.key)
             .or_insert_with(|| Box::leak(self.spec_sheet().into_boxed_str()))
     }

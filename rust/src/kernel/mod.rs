@@ -361,6 +361,7 @@ impl KernelConfig {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::gpu::RTX6000_ADA;

@@ -320,6 +320,7 @@ impl Opt {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::gpu::RTX6000_ADA;
@@ -382,6 +383,47 @@ mod tests {
                         format!("illegal after {:?}: {}", o, cfg.describe()),
                     )?;
                 }
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: the applicable-guard is honest. Whenever a move claims it
+    /// can still improve a config (`applicable` is true), applying it must
+    /// actually change the config — a move that is a no-op on configs it
+    /// claims to improve would make the Judge spin on phantom suggestions.
+    /// Checked along random transform walks so every catalog entry is probed
+    /// against diverse intermediate states, not just the naive seed.
+    #[test]
+    fn prop_applicable_moves_are_never_noops() {
+        let tasks = kernelbench();
+        prop::check("applicable-not-noop", 0x0A11, |rng| {
+            let task = &tasks[rng.below(tasks.len())];
+            let mut cfg = KernelConfig::naive();
+            cfg.legalize(&RTX6000_ADA);
+            for _ in 0..rng.range_usize(1, 10) {
+                for o in OPT_CATALOG {
+                    if !o.applicable(task, &cfg) {
+                        continue;
+                    }
+                    let mut probe = cfg.clone();
+                    o.apply(&mut probe, task, &RTX6000_ADA);
+                    prop::ensure(
+                        probe != cfg,
+                        format!("{o:?} claims applicable but is a no-op on {}", cfg.describe()),
+                    )?;
+                    prop::ensure(
+                        probe.is_legal(&RTX6000_ADA),
+                        format!("{o:?} produced illegal config {}", probe.describe()),
+                    )?;
+                }
+                // Advance the walk one real step.
+                let open: Vec<Opt> =
+                    OPT_CATALOG.iter().copied().filter(|o| o.applicable(task, &cfg)).collect();
+                if open.is_empty() {
+                    break;
+                }
+                open[rng.below(open.len())].apply(&mut cfg, task, &RTX6000_ADA);
             }
             Ok(())
         });

@@ -29,6 +29,8 @@
 //!   the `pjrt` cargo feature + the vendored `xla` crate).
 
 pub mod agents;
+#[warn(missing_docs)]
+pub mod analysis;
 // The two production-facing subsystems keep their rustdoc complete — every
 // public item documented — so `docs/` and the operator surface never drift
 // from the code.

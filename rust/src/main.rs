@@ -6,6 +6,7 @@
 //!   serve      replay Zipf traffic through the kernel-optimization service
 //!   cluster    replay Zipf traffic over a sharded multi-tenant cluster
 //!   autoscale  compare autoscaling policies across traffic scenarios
+//!   lint       static-analyze a kernel candidate (rule scorecard via --table)
 //!   bench      regenerate a paper table/figure (`--exp table1|...|all`)
 //!   select     run the offline metric-selection pipeline (Algorithms 1-2)
 //!   verify     execute every AOT artifact on PJRT vs its reference (pjrt)
@@ -39,6 +40,12 @@
 //!               --provision-delay SECS (join lead time) --min-nodes N
 //!               --max-nodes N (fleet size bounds; slots above --nodes
 //!               start outside the cluster)
+//! Lint flags:   --task ID --gpu KEY --seed N (lint the round-1 candidate)
+//!               --bug NAME (inject a named defect first) --json
+//!               --table --corpus N (score every rule on a seeded corpus,
+//!               writing results/lint.csv)
+//!               run/serve/cluster/autoscale accept --lint (pre-compile
+//!               analyzer gate) with --lint-confidence T --lint-repairs N
 
 use cudaforge::agents::profiles;
 use cudaforge::cluster::{
@@ -102,11 +109,29 @@ fn build_oracle(args: &Args) -> Box<dyn CorrectnessOracle> {
     }
 }
 
-fn workflow_from(args: &Args) -> WorkflowConfig {
-    let gpu = gpu::by_key(args.get_or("gpu", "rtx6000")).unwrap_or_else(|| {
+fn gpu_or_exit(args: &Args) -> &'static gpu::GpuSpec {
+    gpu::by_key(args.get_or("gpu", "rtx6000")).unwrap_or_else(|| {
         eprintln!("error: unknown gpu; options: rtx6000 rtx4090 rtx3090 a100 h100 h200");
         std::process::exit(2);
-    });
+    })
+}
+
+/// The `--lint` gate shared by run/serve/cluster/autoscale: repair
+/// threshold and per-round repair budget for the pre-compile analyzer.
+fn lint_gate_from(args: &Args) -> cudaforge::workflow::LintGate {
+    let confidence = args.get_f64("lint-confidence", 0.9);
+    if !(0.0..=1.0).contains(&confidence) {
+        eprintln!("error: --lint-confidence must be in [0, 1], got {confidence}");
+        std::process::exit(2);
+    }
+    cudaforge::workflow::LintGate {
+        repair_confidence: confidence,
+        max_repairs_per_round: args.get_usize("lint-repairs", 2) as u32,
+    }
+}
+
+fn workflow_from(args: &Args) -> WorkflowConfig {
+    let gpu = gpu_or_exit(args);
     let strategy = strategy_or_exit(args.get_or("strategy", "cudaforge"));
     let mut wf = WorkflowConfig::cudaforge(gpu, args.get_u64("seed", 2024))
         .with_strategy(strategy)
@@ -116,6 +141,9 @@ fn workflow_from(args: &Args) -> WorkflowConfig {
     }
     if let Some(m) = args.get("judge") {
         wf.judge = *profiles::by_name(m).expect("unknown judge model");
+    }
+    if args.flag("lint") {
+        wf = wf.with_lint(lint_gate_from(args));
     }
     wf
 }
@@ -221,6 +249,9 @@ fn cluster_setup(args: &Args) -> ClusterSetup {
             eprintln!("error: unknown judge model '{m}'");
             std::process::exit(2);
         });
+    }
+    if args.flag("lint") {
+        service.lint = Some(lint_gate_from(args));
     }
     let nodes = args.get_usize("nodes", 4).max(1);
     let node_arg = |flag: &str| -> Option<usize> {
@@ -582,6 +613,9 @@ fn serve(args: &Args) {
             std::process::exit(2);
         });
     }
+    if args.flag("lint") {
+        config.lint = Some(lint_gate_from(args));
+    }
     let snapshot = args.get("snapshot").map(|s| s.to_string());
 
     let mut svc = match &snapshot {
@@ -671,10 +705,85 @@ fn serve(args: &Args) {
     }
 }
 
+/// `cudaforge lint` — run the static analyzer standalone. Two modes:
+/// lint one Coder candidate (optionally with an injected defect), or score
+/// every rule over the seeded corpus with `--table`. Always exits 0: the
+/// diagnostics are the output, not a verdict.
+fn lint_cmd(args: &Args) {
+    use cudaforge::analysis;
+    use cudaforge::kernel::{Bug, ALL_BUGS};
+    use cudaforge::util::json::Json;
+
+    let gpu = gpu_or_exit(args);
+    let seed = args.get_u64("seed", 2024);
+
+    if args.flag("table") {
+        let n = args.get_usize("corpus", 250);
+        let corpus = analysis::corpus(gpu, seed, n);
+        let scores = analysis::evaluate(gpu, &corpus);
+        println!(
+            "lint: scoring {} rules over a {}-config corpus (gpu {}, seed {seed})",
+            analysis::ALL_RULES.len(),
+            corpus.len(),
+            gpu.key,
+        );
+        let ctx = Ctx {
+            seed,
+            results_dir: args.get_or("out", "results").to_string(),
+            ..Ctx::default()
+        };
+        report::lint_report(&ctx, &scores);
+        return;
+    }
+
+    let id = args.get_or("task", "L1-95");
+    let task = tasks::by_id(id).unwrap_or_else(|| {
+        eprintln!("error: unknown task {id}");
+        std::process::exit(2);
+    });
+    let coder = *profiles::by_name(args.get_or("coder", "o3")).unwrap_or_else(|| {
+        eprintln!("error: unknown coder model");
+        std::process::exit(2);
+    });
+    let mut cfg = analysis::round_one_candidate(coder, &task, gpu, seed);
+    if let Some(name) = args.get("bug") {
+        let bug = Bug::by_name(name).unwrap_or_else(|| {
+            eprintln!("error: unknown bug '{name}'; options:");
+            for b in ALL_BUGS {
+                eprintln!("  {}", b.name());
+            }
+            std::process::exit(2);
+        });
+        if !cfg.bugs.contains(&bug) {
+            cfg.bugs.push(bug);
+        }
+    }
+    let diags = analysis::lint(&task, gpu, &cfg);
+    if args.flag("json") {
+        println!("{}", Json::Arr(diags.iter().map(|d| d.to_json()).collect()));
+        return;
+    }
+    println!(
+        "lint: {} ({}) on {} | seed {seed} | {} diagnostic(s)",
+        task.id(),
+        task.name,
+        gpu.key,
+        diags.len(),
+    );
+    for d in &diags {
+        println!("  {}", d.render());
+    }
+    if diags.is_empty() {
+        println!("  clean: no rule fired on this candidate");
+    }
+}
+
 fn usage() {
     println!("cudaforge {} — CudaForge reproduction CLI", cudaforge::version());
-    println!("usage: cudaforge <run|suite|serve|cluster|autoscale|bench|select|verify|specs> [flags]");
+    println!("usage: cudaforge <run|suite|serve|cluster|autoscale|lint|bench|select|verify|specs> [flags]");
     println!("  run    --task L1-95 [--gpu rtx6000 --strategy cudaforge --rounds 10]");
+    println!("         [--lint (pre-compile analyzer gate) --lint-confidence 0.9 --lint-repairs 2]");
+    println!("         (serve/cluster/autoscale accept the same three lint flags)");
     println!("  suite  [--dstar] [--strategy NAME --coder o3 --judge gpt5]");
     println!("  serve  [--requests 2000 --zipf 1.1 --seed 7 --capacity 1024]");
     println!("         [--window 32 (host batch size; reported numbers are window-free)]");
@@ -689,6 +798,8 @@ fn usage() {
     println!("         [--scenario steady|diurnal|flash-crowd|mass-interruption|straggler|all]");
     println!("         [--tick 3600 (decision period, secs) --provision-delay 600]");
     println!("         [--min-nodes 1 --max-nodes N (fleet bounds; defaults to --nodes)]");
+    println!("  lint   [--task L1-95 --gpu rtx6000 --seed 2024] [--bug NAME --json]");
+    println!("         [--table --corpus 250 --out results (rule precision/recall scorecard)]");
     println!("  bench  --exp <table1|table2|table3|table4|table5|fig4..fig9|table6|table8|all> [--quick]");
     println!("  select [--iterations 100]");
     println!("  verify [--artifacts artifacts]   (needs --features pjrt)");
@@ -730,6 +841,18 @@ fn main() {
                 "best {:.3}x | ${:.2} API | {:.1} min | {} real-numerics checks",
                 r.best_speedup, r.ledger.api_usd, r.ledger.wall_min(), r.oracle_checks
             );
+            if wf.lint.is_some() {
+                println!(
+                    "lint: {} diagnostic(s), {} repair(s) ({} real bug(s)), \
+                     {} correctness round(s) saved (${:.2} API, {:.0} s wall)",
+                    r.lint.diagnostics,
+                    r.lint.repairs,
+                    r.lint.bugs_repaired,
+                    r.lint.checks_saved,
+                    r.lint.api_usd_saved,
+                    r.lint.wall_s_saved,
+                );
+            }
         }
         "suite" => {
             let oracle = build_oracle(&args);
@@ -754,6 +877,7 @@ fn main() {
         "serve" => serve(&args),
         "cluster" => cluster(&args),
         "autoscale" => autoscale(&args),
+        "lint" => lint_cmd(&args),
         "bench" => {
             let oracle = build_oracle(&args);
             let ctx = Ctx {

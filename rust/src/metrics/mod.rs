@@ -67,7 +67,7 @@ pub fn sample_kernels(
         let out = simulate(gpu, task, &cfg, params, 1.0);
         correct.push((out.internals.kernel_time_us, cfg));
     }
-    correct.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    correct.sort_by(|a, b| a.0.total_cmp(&b.0));
     // Largest disparity: the 5 fastest and the 5 slowest.
     let n = correct.len();
     let mut picked: Vec<&(f64, KernelConfig)> = Vec::with_capacity(10);
@@ -119,7 +119,7 @@ pub fn top20(task: &TaskSpec, kernels: &[SampledKernel]) -> TaskTop20 {
         })
         .filter(|(_, r)| r.abs() > 1e-6)
         .collect();
-    ranked.sort_by(|a, b| b.1.abs().partial_cmp(&a.1.abs()).unwrap());
+    ranked.sort_by(|a, b| b.1.abs().total_cmp(&a.1.abs()));
     ranked.truncate(20);
     TaskTop20 {
         task_id: task.id(),
@@ -173,7 +173,7 @@ pub fn select_metrics(
     // the sign+recurrence filter plus P75-of-filtered lands in the paper's
     // ~24-metric regime.
     candidates.retain(|(_, s)| *s >= p75 * 0.72);
-    candidates.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    candidates.sort_by(|a, b| b.1.total_cmp(&a.1));
     Selection { per_task, selected: candidates }
 }
 
@@ -188,6 +188,7 @@ impl Selection {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::gpu::RTX6000_ADA;

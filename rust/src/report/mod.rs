@@ -446,6 +446,7 @@ pub fn service_table(r: &crate::service::ServiceReport) -> Table {
                 pct(r.warm_correct as f64 / r.warm_started as f64)
             },
         ),
+        ("Lint short-circuits".into(), r.lint_short_circuits.to_string()),
         ("Hit rate".into(), pct(r.hit_rate)),
         ("p50 latency (min)".into(), f2(r.p50_latency_s / 60.0)),
         ("p95 latency (min)".into(), f2(r.p95_latency_s / 60.0)),
@@ -514,6 +515,7 @@ pub fn cluster_table(r: &crate::cluster::ClusterReport) -> Table {
         ("Hit rate".into(), pct(o.hit_rate)),
         ("Warm-started runs".into(), o.warm_started.to_string()),
         ("Cross-node warm starts".into(), r.cross_node_warm.to_string()),
+        ("Lint short-circuits".into(), o.lint_short_circuits.to_string()),
         ("p50/p95/p99 latency (min)".into(), {
             format!(
                 "{} / {} / {}",
@@ -683,6 +685,50 @@ pub fn frontier_report(ctx: &Ctx, rows: &[FrontierRow]) {
     ctx.save("frontier", &frontier_table(rows));
 }
 
+/// Render an optional ratio (`-` when the denominator never existed).
+fn opt_f3(x: Option<f64>) -> String {
+    x.map(f3).unwrap_or_else(|| "-".to_string())
+}
+
+/// The static-analyzer scorecard (the `lint --table` subcommand): one row
+/// per rule with its confusion counts against the seeded corpus's ground
+/// truth — injected `Bug`s for correctness rules, the catalog's own
+/// applicability guards for perf smells. `Conf` is the rule's *documented*
+/// confidence, a claimed lower bound on `Precision`; the precision test in
+/// `analysis` holds every firing correctness rule to it, so rule quality is
+/// a regression-tested number, not a vibe.
+pub fn lint_table(scores: &[crate::analysis::RuleScore]) -> Table {
+    let mut t = Table::new(
+        "Lint rules — precision/recall over the seeded corpus",
+        &[
+            "Rule", "Class", "Conf", "Fired", "TP", "FP", "Missed", "Precision",
+            "Recall", "F1",
+        ],
+    );
+    for s in scores {
+        t.row(vec![
+            s.rule.name().to_string(),
+            s.rule.severity().name().to_string(),
+            f2(s.rule.confidence()),
+            s.fired.to_string(),
+            s.tp.to_string(),
+            s.fp.to_string(),
+            s.missed.to_string(),
+            opt_f3(s.precision()),
+            opt_f3(s.recall()),
+            opt_f3(s.f1()),
+        ]);
+    }
+    t
+}
+
+/// Render + persist the analyzer scorecard (written to `results/lint.csv`;
+/// the committed `LINT_TABLE.csv` at the repo root is this file, and CI
+/// asserts the regeneration is bit-identical).
+pub fn lint_report(ctx: &Ctx, scores: &[crate::analysis::RuleScore]) {
+    ctx.save("lint", &lint_table(scores));
+}
+
 /// Run every experiment (the `bench --exp all` path).
 pub fn run_all(ctx: &Ctx, oracle: &dyn CorrectnessOracle, quick: bool) {
     table1(ctx, oracle, quick);
@@ -820,6 +866,21 @@ mod tests {
         // The new cost axis renders alongside.
         assert!(rendered.contains("Node-hours (alive-node time)"), "{rendered}");
         assert!(rendered.contains("12.50"), "{rendered}");
+    }
+
+    #[test]
+    fn lint_table_renders_confusion_counts_and_dashes_silent_rules() {
+        use crate::analysis::{RuleId, RuleScore};
+        let fired = RuleScore { rule: RuleId::SmemRace, fired: 10, tp: 9, fp: 1, missed: 3 };
+        let silent = RuleScore { rule: RuleId::WastedPasses, ..RuleScore::default() };
+        let rendered = lint_table(&[fired, silent]).render();
+        assert!(rendered.contains("smem-race"), "{rendered}");
+        assert!(rendered.contains("0.900"), "precision 9/10: {rendered}");
+        assert!(rendered.contains("0.750"), "recall 9/12: {rendered}");
+        assert!(rendered.contains("0.818"), "f1: {rendered}");
+        assert!(rendered.contains("wasted-passes"), "{rendered}");
+        let csv = lint_table(&[silent]).to_csv();
+        assert!(csv.contains("wasted-passes,warning,0.60,0,0,0,0,-,-,-"), "{csv}");
     }
 
     #[test]

@@ -245,7 +245,7 @@ impl Engine {
     /// Execute an artifact on inputs, returning the flattened f32 output.
     pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
         self.compile(name)?;
-        let exe = self.compiled.get(name).unwrap();
+        let exe = self.compiled.get(name).expect("compile(name) just populated the entry");
         let result = exe
             .execute::<xla::Literal>(inputs)
             .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
@@ -288,6 +288,7 @@ impl Engine {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

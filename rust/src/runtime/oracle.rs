@@ -192,6 +192,7 @@ impl CorrectnessOracle for RealOracle {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

@@ -406,6 +406,7 @@ impl ResultCache {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

@@ -128,7 +128,21 @@ pub fn of_request(
         .finish()
 }
 
+/// Fold a static-analysis gate into a request fingerprint. Linted and
+/// unlinted runs of the same request can produce different kernels (the
+/// gate spends repair rounds before the first compile), so they must not
+/// share cache entries. Only called when the gate is on: lint-off services
+/// keep their historical fingerprints, and every cache snapshot written
+/// before the analyzer existed stays valid.
+pub fn with_lint(base: Fingerprint, repair_confidence: f64, max_repairs: u32) -> Fingerprint {
+    let mut h = fnv_extend(base.0, b"lint");
+    h = fnv_extend(h, &repair_confidence.to_bits().to_le_bytes());
+    h = fnv_extend(h, &max_repairs.to_le_bytes());
+    Fingerprint(h)
+}
+
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::agents::profiles::{GPT5, O3};

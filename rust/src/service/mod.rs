@@ -166,6 +166,11 @@ pub struct ServiceConfig {
     pub warm_early_stop: EarlyStop,
     /// Simulated seconds to serve a request straight from the cache.
     pub hit_latency_s: f64,
+    /// Static-analysis gate applied to every workflow run (`None` = lint
+    /// off, bit-identical to the pre-analyzer service). When set it joins
+    /// the request fingerprint: linted and unlinted runs never share cache
+    /// entries.
+    pub lint: Option<crate::workflow::LintGate>,
 }
 
 impl Default for ServiceConfig {
@@ -184,6 +189,7 @@ impl Default for ServiceConfig {
             seed: 7,
             warm_early_stop: EarlyStop::default(),
             hit_latency_s: 0.05,
+            lint: None,
         }
     }
 }
@@ -193,7 +199,12 @@ impl ServiceConfig {
     /// single-node and cluster replay loops so both key their caches and
     /// single-flight joins identically.
     pub fn fingerprint_of(&self, task: &TaskSpec, gpu: &crate::gpu::GpuSpec) -> Fingerprint {
-        fingerprint::of_request(task, gpu, &self.coder, &self.judge, self.strategy, self.rounds)
+        let base =
+            fingerprint::of_request(task, gpu, &self.coder, &self.judge, self.strategy, self.rounds);
+        match self.lint {
+            None => base,
+            Some(g) => fingerprint::with_lint(base, g.repair_confidence, g.max_repairs_per_round),
+        }
     }
 
     /// The workflow a cold run of one request executes (no warm start yet).
@@ -203,6 +214,9 @@ impl ServiceConfig {
             .with_rounds(self.rounds);
         wf.coder = self.coder;
         wf.judge = self.judge;
+        if let Some(g) = self.lint {
+            wf = wf.with_lint(g);
+        }
         wf
     }
 
@@ -302,6 +316,9 @@ pub struct ServiceReport {
     /// Trace requests per simulated GPU-hour of work — the throughput the
     /// cache/dedup machinery buys.
     pub requests_per_gpu_hour: f64,
+    /// Flights where the pre-compile static-analysis gate repaired a real
+    /// bug, saving that flight a correctness-test round (0 with lint off).
+    pub lint_short_circuits: u64,
 }
 
 /// Per-replay aggregates shared by the single-node and cluster replay
@@ -318,6 +335,9 @@ pub(crate) struct ReplayStats {
     pub shared: u64,
     pub cold_rounds: Vec<f64>,
     pub warm_rounds: Vec<f64>,
+    /// Flights where the static-analysis gate repaired a real bug before
+    /// the compile stage (0 whenever lint is off).
+    pub lint_short_circuits: u64,
 }
 
 impl ReplayStats {
@@ -332,6 +352,7 @@ impl ReplayStats {
             shared: 0,
             cold_rounds: Vec::new(),
             warm_rounds: Vec::new(),
+            lint_short_circuits: 0,
         }
     }
 }
@@ -390,6 +411,9 @@ pub(crate) fn settle_flight_completion(
         } else {
             stats.cold_rounds.push(r2b as f64);
         }
+    }
+    if result.lint.checks_saved > 0 {
+        stats.lint_short_circuits += 1;
     }
     CacheEntry::from_run(
         flight.fingerprint,
@@ -810,6 +834,7 @@ impl KernelService {
             shared,
             cold_rounds,
             warm_rounds,
+            lint_short_circuits,
         } = hooks.stats;
         let served: Vec<f64> = latencies.iter().filter_map(|l| *l).collect();
         debug_assert_eq!(
@@ -860,11 +885,13 @@ impl KernelService {
             } else {
                 0.0
             },
+            lint_short_circuits,
         }
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::gpu;

@@ -61,13 +61,17 @@ where
                     break;
                 }
                 let result = f(i);
-                *slots[i].lock().unwrap() = Some(result);
+                *slots[i].lock().expect("no worker panicked holding the slot") = Some(result);
             });
         }
     });
     slots
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker completed slot"))
+        .map(|m| {
+            m.into_inner()
+                .expect("no worker panicked holding the slot")
+                .expect("worker completed slot")
+        })
         .collect()
 }
 

@@ -200,6 +200,7 @@ pub fn generate(n_tasks: usize, cfg: &TrafficConfig) -> Vec<TrafficRequest> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

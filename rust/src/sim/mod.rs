@@ -492,6 +492,7 @@ fn attribute_bottleneck(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::gpu::{A100, H200, RTX3090, RTX6000_ADA};

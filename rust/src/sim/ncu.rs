@@ -132,7 +132,7 @@ pub fn index_of(name: &str) -> Option<usize> {
 
 /// Indices of the key subset (0..24 by construction; asserted in tests).
 pub fn key_subset_indices() -> Vec<usize> {
-    KEY_SUBSET.iter().map(|n| index_of(n).unwrap()).collect()
+    KEY_SUBSET.iter().map(|n| index_of(n).expect("subset names come from CATALOG")).collect()
 }
 
 /// Named metric ids used by the Judge's diagnosis rules (hot path avoids
@@ -327,6 +327,7 @@ pub fn render_block(indices: &[usize], values: &[f64]) -> String {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::gpu::RTX6000_ADA;

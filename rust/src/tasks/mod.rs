@@ -362,6 +362,7 @@ fn gen_level3(index: u32, rng: &mut Rng) -> TaskSpec {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

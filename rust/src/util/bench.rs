@@ -81,7 +81,7 @@ pub fn bench<F: FnMut()>(name: &str, max_iters: u64, mut f: F) -> BenchResult {
         f();
         samples.push(t.elapsed().as_nanos() as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(f64::total_cmp);
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let p50 = samples[samples.len() / 2];
     let p95 = samples[(samples.len() as f64 * 0.95) as usize % samples.len()];
@@ -178,6 +178,7 @@ impl BenchSet {
 pub use std::hint::black_box;
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

@@ -306,7 +306,7 @@ impl<'a> Parser<'a> {
                     let start = self.pos;
                     let text = std::str::from_utf8(&self.b[start..])
                         .map_err(|_| self.err("invalid utf-8"))?;
-                    let c = text.chars().next().unwrap();
+                    let c = text.chars().next().expect("validated non-empty utf-8 slice");
                     s.push(c);
                     self.pos += c.len_utf8();
                 }
@@ -337,7 +337,8 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let text = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        let text = std::str::from_utf8(&self.b[start..self.pos])
+            .expect("number span is ascii by construction");
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))
@@ -345,6 +346,7 @@ impl<'a> Parser<'a> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

@@ -163,6 +163,7 @@ pub fn run_kevin(
         rounds,
         ledger,
         oracle_checks,
+        lint: crate::workflow::LintStats::default(),
     }
 }
 
@@ -281,10 +282,12 @@ pub fn run_agentic(
         rounds,
         ledger,
         oracle_checks,
+        lint: crate::workflow::LintStats::default(),
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::gpu::{H200, RTX6000_ADA};

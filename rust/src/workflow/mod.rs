@@ -135,6 +135,48 @@ impl Default for EarlyStop {
     }
 }
 
+/// The pre-compile static-analysis gate (`analysis::lint`). Off by default:
+/// a lint-off run draws no extra rng and charges nothing, so it stays
+/// bit-identical to builds without the analyzer. When on, Error-severity
+/// diagnostics at or above `repair_confidence` buy a Coder repair *before*
+/// the compile+test stage spends its budget on a condemned candidate, and
+/// residual diagnostics are appended to the error log the Judge reads.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LintGate {
+    /// Minimum diagnostic confidence that triggers a pre-compile repair.
+    pub repair_confidence: f64,
+    /// Repair attempts per round (each is one priced Coder call).
+    pub max_repairs_per_round: u32,
+}
+
+impl Default for LintGate {
+    fn default() -> Self {
+        LintGate { repair_confidence: 0.9, max_repairs_per_round: 2 }
+    }
+}
+
+/// Per-run accounting of what the lint gate did, and the modelled spend it
+/// avoided versus the same run with lint off. The "saved" figures are the
+/// counterfactual cost of the correctness-test stage + Judge correction the
+/// doomed candidate would have consumed.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LintStats {
+    /// Diagnostics emitted across all lint passes (repaired candidates are
+    /// re-linted).
+    pub diagnostics: u32,
+    /// Lint-triggered pre-compile Coder repairs (each priced in the ledger).
+    pub repairs: u32,
+    /// Repairs that actually removed the suspected bug.
+    pub bugs_repaired: u32,
+    /// Correctness-test rounds not spent on a condemned candidate.
+    pub checks_saved: u32,
+    /// Modelled wall-clock avoided (skipped compile, plus the exec test for
+    /// runtime defects).
+    pub wall_s_saved: f64,
+    /// Modelled Judge-correction API spend avoided.
+    pub api_usd_saved: f64,
+}
+
 /// Workflow configuration for one run.
 #[derive(Clone)]
 pub struct WorkflowConfig {
@@ -150,6 +192,8 @@ pub struct WorkflowConfig {
     pub warm_start: Option<WarmStart>,
     /// Stop early once the speedup plateaus (service warm runs).
     pub early_stop: Option<EarlyStop>,
+    /// Pre-compile static-analysis gate (None = lint off, the default).
+    pub lint: Option<LintGate>,
 }
 
 impl WorkflowConfig {
@@ -165,6 +209,7 @@ impl WorkflowConfig {
             seed,
             warm_start: None,
             early_stop: None,
+            lint: None,
         }
     }
 
@@ -185,6 +230,11 @@ impl WorkflowConfig {
 
     pub fn with_early_stop(mut self, es: EarlyStop) -> WorkflowConfig {
         self.early_stop = Some(es);
+        self
+    }
+
+    pub fn with_lint(mut self, gate: LintGate) -> WorkflowConfig {
+        self.lint = Some(gate);
         self
     }
 }
@@ -213,7 +263,7 @@ impl CorrectnessOracle for NoOracle {
 }
 
 /// What happened in one round (drives Figs. 7–9 and the case study).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RoundLog {
     pub round: usize,
     /// "correction" | "optimization" | "initial"
@@ -229,7 +279,7 @@ pub struct RoundLog {
 }
 
 /// Result of optimizing one task.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TaskResult {
     pub task_id: String,
     pub level: u8,
@@ -243,6 +293,8 @@ pub struct TaskResult {
     pub ledger: CostLedger,
     /// Real-numerics executions performed through the oracle.
     pub oracle_checks: u32,
+    /// Static-analysis gate accounting (all zero when lint is off).
+    pub lint: LintStats,
 }
 
 impl TaskResult {
@@ -257,7 +309,9 @@ impl TaskResult {
     }
 }
 
-fn fnv(s: &str) -> u64 {
+/// FNV-1a 64 — the crate's stable string hash (per-task seed derivation and
+/// the analyzer's deterministic legibility gates).
+pub(crate) fn fnv(s: &str) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for b in s.as_bytes() {
         h ^= *b as u64;
@@ -275,7 +329,7 @@ pub fn modelled_check(cfg: &KernelConfig) -> CheckOutcome {
         .bugs
         .iter()
         .copied()
-        .max_by(|a, b| a.observability().partial_cmp(&b.observability()).unwrap())
+        .max_by(|a, b| a.observability().total_cmp(&b.observability()))
     {
         Some(b) => CheckOutcome::Mismatch(b.error_log().to_string()),
         None => CheckOutcome::Pass,
@@ -314,6 +368,7 @@ pub(crate) fn run_iterative(
     let mut ledger = CostLedger::default();
     let mut rounds: Vec<RoundLog> = Vec::with_capacity(wf.max_rounds);
     let mut oracle_checks = 0u32;
+    let mut lint_stats = LintStats::default();
     let mut best: Option<(f64, KernelConfig)> = None;
 
     // Round state carried across iterations (lightweight memory: only the
@@ -355,6 +410,65 @@ pub(crate) fn run_iterative(
             }
             ledger.charge_call(&wf.cost, &wf.coder, st);
             cfg = c;
+        }
+
+        // ---- static-analysis gate (lint-on only) --------------------------
+        // Pure pre-compile pass: a high-confidence correctness diagnostic
+        // buys a Coder repair instead of spending the compile+test stage on
+        // a candidate the analyzer already condemned. When `wf.lint` is None
+        // this arm draws no rng and charges nothing, so lint-off replays are
+        // bit-identical to builds without the analyzer.
+        if let Some(gate) = wf.lint {
+            let mut repairs_left = gate.max_repairs_per_round;
+            loop {
+                let diags = crate::analysis::lint(task, wf.gpu, &cfg);
+                lint_stats.diagnostics += diags.len() as u32;
+                let Some(d) =
+                    diags.into_iter().find(|d| d.triggers_repair(gate.repair_confidence))
+                else {
+                    break;
+                };
+                if repairs_left == 0 {
+                    break;
+                }
+                repairs_left -= 1;
+                let bug = d.suspect.expect("repair trigger implies a suspect");
+                // Price the Judge correction this candidate would have
+                // bought after failing the check (counterfactual only —
+                // nothing is charged to the ledger for it).
+                let judge_stats = crate::agents::CallStats {
+                    tokens_in: crate::agents::estimate_tokens(
+                        &crate::agents::prompts::judge_correction(task, &cfg, &d.message),
+                    ),
+                    tokens_out: wf.judge.judge_out_tokens,
+                };
+                let had = cfg.bugs.contains(&bug);
+                let fb = Feedback::Correction {
+                    critical_issue: format!("{} flagged pre-compile", bug.name()),
+                    why_it_matters: d.message.clone(),
+                    minimal_fix_hint: format!(
+                        "resolve the {} before submitting the kernel",
+                        bug.name()
+                    ),
+                    bug: Some(bug),
+                };
+                let (c, st) =
+                    coder.revise_correction(task, wf.gpu, &cfg, &fb, &d.message, &mut rng);
+                ledger.charge_call(&wf.cost, &wf.coder, st);
+                cfg = c;
+                lint_stats.repairs += 1;
+                if had && !cfg.bugs.contains(&bug) {
+                    // The repair landed: this round's check is no longer
+                    // doomed to fail on `bug`. The lint-off run would have
+                    // spent the compile attempt (+ exec test for runtime
+                    // defects) plus the Judge correction on it.
+                    lint_stats.bugs_repaired += 1;
+                    lint_stats.checks_saved += 1;
+                    lint_stats.wall_s_saved += wf.cost.compile_s
+                        + if bug.is_compile_error() { 0.0 } else { wf.cost.exec_test_s };
+                    lint_stats.api_usd_saved += wf.cost.api_usd(&wf.judge, judge_stats);
+                }
+            }
         }
 
         // ---- compile + execute correctness stage --------------------------
@@ -407,10 +521,19 @@ pub(crate) fn run_iterative(
         // ---- feedback for the next round ----------------------------------
         let mut feedback_json = String::new();
         if round < max_rounds && !stop_now {
-            let error_log = match &outcome {
+            let mut error_log = match &outcome {
                 CheckOutcome::CompileError(l) | CheckOutcome::Mismatch(l) => l.clone(),
                 CheckOutcome::Pass => String::new(),
             };
+            // Lint-on: residual diagnostics ride along with the error log,
+            // so the Judge (and next round's Coder) read them too. They are
+            // honest prompt bytes — token accounting prices them.
+            if wf.lint.is_some() && !correct {
+                for d in crate::analysis::lint(task, wf.gpu, &cfg) {
+                    error_log.push('\n');
+                    error_log.push_str(&d.render());
+                }
+            }
             let (fb, was_failure) = if !correct {
                 let (fb, st) = match wf.strategy {
                     // o3-optimization: no correction feedback — the Coder only
@@ -481,6 +604,7 @@ pub(crate) fn run_iterative(
         rounds,
         ledger,
         oracle_checks,
+        lint: lint_stats,
     }
 }
 
@@ -493,6 +617,7 @@ fn st_nonzero(st: crate::agents::CallStats) -> bool {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::gpu::RTX6000_ADA;

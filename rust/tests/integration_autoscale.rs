@@ -25,6 +25,8 @@
 //! are asserted against the generated trace, so a parameter drift fails
 //! loudly here instead of flaking downstream.
 
+#![allow(clippy::disallowed_methods)]
+
 use cudaforge::cluster::autoscale::{
     AutoscaleConfig, AutoscalePolicy, ScheduledAction, StaticPolicy, TargetTrackingPolicy,
     ThresholdPolicy,

@@ -11,6 +11,8 @@
 //! must come from a flight already completed (or a transfer already
 //! landed) in simulated time.
 
+#![allow(clippy::disallowed_methods)]
+
 use cudaforge::cluster::{
     ClusterConfig, ClusterReport, ClusterService, MembershipEvent, RebalanceKind, Router,
     TenantSpec,

@@ -7,6 +7,8 @@
 
 #![cfg(feature = "pjrt")]
 
+#![allow(clippy::disallowed_methods)]
+
 use std::path::PathBuf;
 
 use cudaforge::gpu::RTX6000_ADA;

@@ -6,6 +6,8 @@
 //! queueing-aware latency and per-priority SLOs, warm-start convergence,
 //! and snapshot/restore warm restarts.
 
+#![allow(clippy::disallowed_methods)]
+
 use cudaforge::gpu;
 use cudaforge::service::cache::ResultCache;
 use cudaforge::service::queue::Priority;

@@ -2,6 +2,8 @@
 //! D* (DESIGN.md §5, "Expected shapes"). These run the full workflow engine,
 //! agents and simulator together — no PJRT required.
 
+#![allow(clippy::disallowed_methods)]
+
 use cudaforge::agents::profiles;
 use cudaforge::coordinator::{run_suite, summarize};
 use cudaforge::gpu::{A100, H200, RTX3090, RTX6000_ADA};
