@@ -19,8 +19,13 @@ use cudaforge::service::fingerprint::Fingerprint;
 use cudaforge::service::traffic::{generate, TrafficConfig};
 use cudaforge::service::ServiceConfig;
 use cudaforge::tasks;
-use cudaforge::util::bench::{black_box, BenchSet};
+use cudaforge::util::bench::{black_box, BenchSet, CountingAlloc};
 use cudaforge::workflow::NoOracle;
+
+// Count every allocation so the JSON series carries `total_allocations`
+// next to throughput (see `util::bench::CountingAlloc`).
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 fn main() {
     let mut set = BenchSet::new("cluster");

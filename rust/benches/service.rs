@@ -21,8 +21,13 @@ use cudaforge::service::queue::Priority;
 use cudaforge::service::traffic::{generate, TrafficConfig};
 use cudaforge::service::{KernelService, ServiceConfig};
 use cudaforge::tasks;
-use cudaforge::util::bench::{black_box, BenchSet};
+use cudaforge::util::bench::{black_box, BenchSet, CountingAlloc};
 use cudaforge::workflow::{NoOracle, Strategy};
+
+// Count every allocation so the JSON series carries `total_allocations`
+// next to throughput (see `util::bench::CountingAlloc`).
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 fn entry(fp: u64) -> CacheEntry {
     CacheEntry {

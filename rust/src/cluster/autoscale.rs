@@ -297,6 +297,9 @@ pub struct AutoscaleRun {
     pub actions: Vec<ScheduledAction>,
     /// Decision ticks fired so far.
     pub ticks: usize,
+    /// The signals the most recent tick observed — what the flight
+    /// recorder stamps into its `autoscale.tick` event.
+    pub(crate) last_signals: Option<TickSignals>,
 }
 
 impl AutoscaleRun {
@@ -318,6 +321,7 @@ impl AutoscaleRun {
             last_tick_s: 0.0,
             actions: Vec::new(),
             ticks: 0,
+            last_signals: None,
         }
     }
 
@@ -411,6 +415,7 @@ impl AutoscaleRun {
         self.last_tick_s = at_s;
 
         let want = self.policy.decide(&signals);
+        self.last_signals = Some(signals);
         self.pending_joins.retain(|ev| ev.at_s > at_s);
 
         let mut out = Vec::new();

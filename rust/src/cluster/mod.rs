@@ -101,10 +101,13 @@ use crate::service::pool::{FleetHooks, FleetSim, SimCompletion, SimFlight};
 use crate::service::queue::Priority;
 use crate::service::traffic::TrafficRequest;
 use crate::service::{
-    per_priority_report, settle_flight_completion, speculate_window, PendingRun, ReplayStats,
-    RunMemo, ServiceConfig, ServiceReport,
+    admit_event, flight_complete_event, per_priority_report, settle_flight_completion,
+    speculate_window, PendingRun, ReplayStats, RunMemo, ServiceConfig, ServiceReport,
 };
 use crate::tasks::TaskSpec;
+use crate::trace::profile::Stage;
+use crate::trace::{NullSink, Observer, TraceEvent};
+use crate::util::json::Json;
 use crate::util::stats::percentile;
 use crate::workflow::{run_task, CorrectnessOracle};
 
@@ -408,6 +411,19 @@ pub struct ClusterReport {
     pub rebalances: Vec<RebalanceReport>,
 }
 
+/// The locality decision [`warm_choice_across`] made, with the numbers the
+/// margin comparison ran on — exactly what the flight recorder's
+/// `warm.lookup` event narrates.
+struct WarmChoice<'c> {
+    /// The winning candidate and its owning node (`None`: run cold).
+    pick: Option<(usize, &'c CacheEntry)>,
+    /// Best own-shard candidate's speedup, when the own shard had one.
+    own_speedup: Option<f64>,
+    /// Best remote candidate `(node, speedup)`, when any alive remote
+    /// shard had one.
+    remote: Option<(usize, f64)>,
+}
+
 /// Locality-aware warm-start pick across every *alive* shard, with the
 /// owning node (a dead node's entries are unreachable, not warm-start
 /// donors). The best candidate on the requester's own shard (`own`) wins
@@ -416,7 +432,7 @@ pub struct ClusterReport {
 /// seed is not worth the transfer. Remote ties break on
 /// (speedup, fingerprint, node) so the scan order can never change the
 /// pick.
-fn warm_candidate_across<'c>(
+fn warm_choice_across<'c>(
     caches: &'c [ResultCache],
     c: &ServiceConfig,
     task_id: &str,
@@ -424,7 +440,7 @@ fn warm_candidate_across<'c>(
     alive: &[bool],
     own: usize,
     locality_margin: f64,
-) -> Option<(usize, &'c CacheEntry)> {
+) -> WarmChoice<'c> {
     let probe = |cache: &'c ResultCache| {
         cache.warm_candidate(task_id, gpu_key, c.strategy.name(), c.coder.name, c.judge.name)
     };
@@ -453,7 +469,9 @@ fn warm_candidate_across<'c>(
             }
         }
     }
-    match (own_best, remote) {
+    let own_speedup = own_best.map(|e| e.best_speedup);
+    let remote_info = remote.map(|(n, e)| (n, e.best_speedup));
+    let pick = match (own_best, remote) {
         (None, None) => None,
         (Some(o), None) => Some((own, o)),
         (None, Some(r)) => Some(r),
@@ -464,7 +482,22 @@ fn warm_candidate_across<'c>(
                 Some((own, o))
             }
         }
-    }
+    };
+    WarmChoice { pick, own_speedup, remote: remote_info }
+}
+
+/// [`warm_choice_across`] reduced to the winning candidate — what the
+/// speculation predictor (which never emits events) needs.
+fn warm_candidate_across<'c>(
+    caches: &'c [ResultCache],
+    c: &ServiceConfig,
+    task_id: &str,
+    gpu_key: &str,
+    alive: &[bool],
+    own: usize,
+    locality_margin: f64,
+) -> Option<(usize, &'c CacheEntry)> {
+    warm_choice_across(caches, c, task_id, gpu_key, alive, own, locality_margin).pick
 }
 
 /// Per-node admission/serving counters for one replay.
@@ -500,7 +533,7 @@ struct ActiveRebalance {
 /// start events pick the warm seed across alive shards at event-time state,
 /// completion events apply side effects via the accounting helper shared
 /// with the single-node replay.
-struct ClusterHooks<'a> {
+struct ClusterHooks<'a, 'o> {
     config: &'a ClusterConfig,
     trace: &'a [TrafficRequest],
     tasks: &'a [TaskSpec],
@@ -525,9 +558,9 @@ struct ClusterHooks<'a> {
     /// `rebalances`, settled (remiss counted, spend added) at completion.
     remiss_open: BTreeMap<Fingerprint, usize>,
     /// Planned-rebalance refills in transit: `(landing bits, seq)` →
-    /// `(destination node, entry)`. Fired by the global event loop in
-    /// timestamp order, before fleet events at the same instant.
-    pending_refills: BTreeMap<(u64, u64), (usize, CacheEntry)>,
+    /// `(destination node, source node, entry)`. Fired by the global event
+    /// loop in timestamp order, before fleet events at the same instant.
+    pending_refills: BTreeMap<(u64, u64), (usize, usize, CacheEntry)>,
     refill_seq: u64,
     /// Alive-node-seconds accrued so far (piecewise-constant integral of
     /// the alive count over simulated time, advanced at each membership
@@ -535,9 +568,13 @@ struct ClusterHooks<'a> {
     node_seconds: f64,
     /// The instant `node_seconds` is accrued up to.
     node_seconds_at: f64,
+    /// The flight recorder. Every emission below happens on the
+    /// deterministic event-loop path, at a simulated instant — never from
+    /// the speculative OS-thread pool.
+    obs: &'a mut Observer<'o>,
 }
 
-impl ClusterHooks<'_> {
+impl ClusterHooks<'_, '_> {
     /// Advance the alive-node-seconds integral to `now` at the *current*
     /// alive count. Called with each membership event's instant before the
     /// change applies (the interval up to the event bills at the old fleet
@@ -549,7 +586,7 @@ impl ClusterHooks<'_> {
     }
 }
 
-impl ClusterHooks<'_> {
+impl ClusterHooks<'_, '_> {
     /// Count this arrival against every rebalance that displaced it: a
     /// failure displaces requests its dead node would own were it alive; a
     /// join displaces requests its node now owns (pre-join they routed to a
@@ -593,17 +630,19 @@ impl ClusterHooks<'_> {
     }
 }
 
-impl FleetHooks for ClusterHooks<'_> {
+impl FleetHooks for ClusterHooks<'_, '_> {
     fn on_start(&mut self, flight: &SimFlight, start_s: f64) -> f64 {
         let req = &self.trace[flight.leader_seq as usize];
         let task = &self.tasks[req.task_index];
         let c = &self.config.service;
+        let node = self.node;
         // The flight leaves the backlog: release its tenant's quota slot.
         let nc = &mut self.per_node[self.node];
         nc.backlog_by_tenant[flight.tenant] =
             nc.backlog_by_tenant[flight.tenant].saturating_sub(1);
         let base = c.base_workflow(req.gpu);
-        let (wf, cross) = match warm_candidate_across(
+        self.obs.enter(Stage::WarmLookup);
+        let choice = warm_choice_across(
             self.caches,
             c,
             &task.id(),
@@ -611,7 +650,19 @@ impl FleetHooks for ClusterHooks<'_> {
             self.membership.alive(),
             self.node,
             self.config.warm_locality_margin,
-        ) {
+        );
+        self.obs.exit(Stage::WarmLookup);
+        let fp = flight.fingerprint;
+        let leader = flight.leader_seq;
+        let margin = self.config.warm_locality_margin;
+        // Owned copies of what the emission needs, so the shard borrow can
+        // end before the event closure runs.
+        let own_speedup = choice.own_speedup;
+        let remote = choice.remote;
+        let pick_info: Option<(usize, f64, String, String)> = choice.pick.map(|(owner, e)| {
+            (owner, e.best_speedup, e.fingerprint.to_string(), e.gpu_key.clone())
+        });
+        let (wf, cross) = match choice.pick {
             Some((owner, entry)) => {
                 // The causality contract: a warm seed's producing flight —
                 // on any node — completed no later than this start.
@@ -626,23 +677,65 @@ impl FleetHooks for ClusterHooks<'_> {
             }
             None => (base, false),
         };
+        self.obs.emit(|| {
+            let ev = TraceEvent::new(start_s, "warm.lookup", node)
+                .field("fp", Json::str(fp.to_string()))
+                .field("leader_seq", Json::num(leader as f64));
+            let Some((owner, speedup, source_fp, source_gpu)) = pick_info else {
+                return ev.field("picked", Json::str("none"));
+            };
+            if owner != node {
+                // Remote wins: the margin inequality held, transfer billed.
+                return ev
+                    .field("picked", Json::str("remote"))
+                    .field("own_speedup", Json::num(own_speedup.unwrap_or(0.0)))
+                    .field("remote_node", Json::num(owner as f64))
+                    .field("remote_speedup", Json::num(speedup))
+                    .field("margin", Json::num(margin))
+                    .field("source_fp", Json::str(source_fp))
+                    .field("source_gpu", Json::str(source_gpu));
+            }
+            let ev =
+                ev.field("picked", Json::str("own")).field("own_speedup", Json::num(speedup));
+            match remote {
+                // Own wins against a measured remote: record the losing
+                // side so the margin arithmetic can be replayed.
+                Some((rn, rs)) => ev
+                    .field("remote_node", Json::num(rn as f64))
+                    .field("remote_speedup", Json::num(rs))
+                    .field("margin", Json::num(margin)),
+                None => ev
+                    .field("source_fp", Json::str(source_fp))
+                    .field("source_gpu", Json::str(source_gpu)),
+            }
+        });
         if cross {
             self.cross_node_warm += 1;
         }
+        self.obs.enter(Stage::Workflow);
         let result = match self.memo.take(flight.fingerprint, &wf.warm_start) {
             Some(r) => r,
             // Speculation missed: run inline with the true event-time
             // workflow.
             None => run_task(&wf, task, self.oracle),
         };
+        self.obs.exit(Stage::Workflow);
         // A cross-node seed is fetched before the run starts: the transfer
         // rides on the flight's service time.
         let service_s = result.ledger.wall_s
             + if cross { self.config.transfer_latency_s } else { 0.0 };
-        self.pending.insert(
-            flight.leader_seq,
-            PendingRun { result, warm: wf.warm_start.is_some() },
-        );
+        let warm = wf.warm_start.is_some();
+        let members = flight.members.len();
+        self.obs.emit(|| {
+            TraceEvent::new(start_s, "flight.start", node)
+                .field("fp", Json::str(fp.to_string()))
+                .field("leader_seq", Json::num(leader as f64))
+                .field("service_s", Json::num(service_s))
+                .field("warm", Json::Bool(warm))
+                .field("cross_node", Json::Bool(cross))
+                .field("members", Json::num(members as f64))
+        });
+        self.pending.insert(flight.leader_seq, PendingRun { result, warm });
         service_s
     }
 
@@ -653,6 +746,9 @@ impl FleetHooks for ClusterHooks<'_> {
             .expect("a completion follows its start");
         let req = &self.trace[flight.leader_seq as usize];
         let task = &self.tasks[req.task_index];
+        let node = self.node;
+        let lint_saved = run.result.lint.checks_saved;
+        let correct = run.result.correct;
         let entry = settle_flight_completion(
             &self.config.service,
             &mut self.stats,
@@ -667,6 +763,18 @@ impl FleetHooks for ClusterHooks<'_> {
         let nc = &mut self.per_node[self.node];
         nc.flights_run += 1;
         nc.shared += (flight.members.len() - 1) as u64;
+        let cached = entry.is_some();
+        self.obs.emit(|| flight_complete_event(node, flight, done, run.warm, correct, cached));
+        if lint_saved > 0 {
+            let fp = flight.fingerprint;
+            let leader = flight.leader_seq;
+            self.obs.emit(|| {
+                TraceEvent::new(done.completion_s, "lint.short_circuit", node)
+                    .field("fp", Json::str(fp.to_string()))
+                    .field("leader_seq", Json::num(leader as f64))
+                    .field("checks_saved", Json::num(lint_saved as f64))
+            });
+        }
         // A flight opened to re-run work a failure lost (or a rebalance had
         // in transit) settles that rebalance's re-miss bill here, at its
         // own completion instant.
@@ -687,11 +795,17 @@ impl FleetHooks for ClusterHooks<'_> {
             if let Some(owner) = self.router.route(e.fingerprint, self.membership.alive()) {
                 if owner == self.node {
                     self.visible_at.insert(e.fingerprint, done.completion_s);
-                    self.caches[owner].insert(e);
+                    if let Some(evicted) = self.caches[owner].insert(e) {
+                        self.obs.emit(|| {
+                            TraceEvent::new(done.completion_s, "cache.evict", owner)
+                                .field("fp", Json::str(evicted.to_string()))
+                        });
+                    }
                 } else {
                     let land_at = done.completion_s + self.config.transfer_latency_s;
                     self.refill_seq += 1;
-                    self.pending_refills.insert((land_at.to_bits(), self.refill_seq), (owner, e));
+                    self.pending_refills
+                        .insert((land_at.to_bits(), self.refill_seq), (owner, self.node, e));
                 }
             }
         }
@@ -704,7 +818,7 @@ impl FleetHooks for ClusterHooks<'_> {
 /// index — so a flight starting on node A at instant `t` observes exactly
 /// the side effects of every flight completed, and every transfer landed,
 /// by `t`.
-fn advance_cluster(fleets: &mut [FleetSim], now: f64, hooks: &mut ClusterHooks) {
+fn advance_cluster(fleets: &mut [FleetSim], now: f64, hooks: &mut ClusterHooks<'_, '_>) {
     loop {
         // (instant, kind, node): kind 0 = refill landing, 1 = completion,
         // 2 = start.
@@ -726,7 +840,7 @@ fn advance_cluster(fleets: &mut [FleetSim], now: f64, hooks: &mut ClusterHooks) 
         }
         match best {
             Some((t, 0, _)) if t <= now => {
-                let ((bits, _), (node, entry)) = hooks
+                let ((bits, _), (node, from, entry)) = hooks
                     .pending_refills
                     .pop_first()
                     .expect("the peeked refill is resident");
@@ -736,8 +850,19 @@ fn advance_cluster(fleets: &mut [FleetSim], now: f64, hooks: &mut ClusterHooks) 
                     rb.tracked.remove(&fp);
                 }
                 if hooks.membership.is_alive(node) {
-                    hooks.visible_at.insert(fp, f64::from_bits(bits));
-                    hooks.caches[node].insert(entry);
+                    let at = f64::from_bits(bits);
+                    hooks.visible_at.insert(fp, at);
+                    hooks.obs.emit(|| {
+                        TraceEvent::new(at, "cache.refill", node)
+                            .field("fp", Json::str(fp.to_string()))
+                            .field("from_node", Json::num(from as f64))
+                    });
+                    if let Some(evicted) = hooks.caches[node].insert(entry) {
+                        hooks.obs.emit(|| {
+                            TraceEvent::new(at, "cache.evict", node)
+                                .field("fp", Json::str(evicted.to_string()))
+                        });
+                    }
                 }
             }
             Some((t, _, ni)) if t <= now => {
@@ -754,7 +879,7 @@ fn advance_cluster(fleets: &mut [FleetSim], now: f64, hooks: &mut ClusterHooks) 
 /// are billed to this failure), accepted work keeps draining, refills in
 /// transit to the dead node die with it. A no-op when the node is already
 /// dead or out of range.
-fn apply_failure(config: &ClusterConfig, ev: MembershipEvent, hooks: &mut ClusterHooks) {
+fn apply_failure(config: &ClusterConfig, ev: MembershipEvent, hooks: &mut ClusterHooks<'_, '_>) {
     if !hooks.membership.set_alive(ev.node, false) {
         return;
     }
@@ -766,7 +891,7 @@ fn apply_failure(config: &ClusterConfig, ev: MembershipEvent, hooks: &mut Cluste
     // they are resident nowhere, so they count among this failure's losses,
     // and their eventual re-runs bill the failure — not the join that
     // moved them.
-    hooks.pending_refills.retain(|_, (node, entry)| {
+    hooks.pending_refills.retain(|_, (node, _, entry)| {
         if *node == ev.node {
             lost.insert(entry.fingerprint);
             false
@@ -786,6 +911,11 @@ fn apply_failure(config: &ClusterConfig, ev: MembershipEvent, hooks: &mut Cluste
     let nc = &mut hooks.per_node[ev.node];
     nc.evictions_carry += carry - nc.evictions0;
     nc.evictions0 = 0;
+    let lost_n = lost.len();
+    hooks.obs.emit(|| {
+        TraceEvent::new(ev.at_s, "membership.fail", ev.node)
+            .field("entries_lost", Json::num(lost_n as f64))
+    });
     hooks.rebalances.push(ActiveRebalance {
         report: RebalanceReport {
             kind: RebalanceKind::NodeFailure,
@@ -808,7 +938,7 @@ fn apply_failure(config: &ClusterConfig, ev: MembershipEvent, hooks: &mut Cluste
 /// Until a key's refill lands it is tracked — a request for it in the gap
 /// re-misses, billed to this join. A no-op when the node is already alive
 /// or out of range.
-fn apply_join(config: &ClusterConfig, ev: MembershipEvent, hooks: &mut ClusterHooks) {
+fn apply_join(config: &ClusterConfig, ev: MembershipEvent, hooks: &mut ClusterHooks<'_, '_>) {
     if !hooks.membership.set_alive(ev.node, true) {
         return;
     }
@@ -831,12 +961,17 @@ fn apply_join(config: &ClusterConfig, ev: MembershipEvent, hooks: &mut ClusterHo
                 hooks.refill_seq += 1;
                 hooks
                     .pending_refills
-                    .insert((land_at.to_bits(), hooks.refill_seq), (ev.node, entry));
+                    .insert((land_at.to_bits(), hooks.refill_seq), (ev.node, ni, entry));
                 tracked.insert(fp);
                 moved += 1;
             }
         }
     }
+    hooks.obs.emit(|| {
+        TraceEvent::new(ev.at_s, "membership.join", ev.node)
+            .field("entries_moved", Json::num(moved as f64))
+            .field("lands_at_s", Json::num(land_at))
+    });
     hooks.rebalances.push(ActiveRebalance {
         report: RebalanceReport {
             kind: RebalanceKind::NodeJoin,
@@ -864,7 +999,7 @@ fn apply_membership_due(
     config: &ClusterConfig,
     now: f64,
     fleets: &mut [FleetSim],
-    hooks: &mut ClusterHooks,
+    hooks: &mut ClusterHooks<'_, '_>,
 ) {
     while *next < events.len() && events[*next].at_s <= now {
         let ev = events[*next];
@@ -1223,7 +1358,26 @@ impl ClusterService {
         tasks: &[TaskSpec],
         oracle: &dyn CorrectnessOracle,
     ) -> ClusterReport {
-        self.replay_impl(trace, tasks, oracle, None)
+        let mut sink = NullSink;
+        let mut obs = Observer::new(&mut sink);
+        self.replay_impl(trace, tasks, oracle, None, &mut obs)
+    }
+
+    /// [`ClusterService::replay`] with a flight recorder attached: every
+    /// admission decision, cross-shard warm lookup, flight span, refill
+    /// landing, membership change, and eviction is emitted through `obs`
+    /// at its simulated instant. With a [`crate::trace::NullSink`]
+    /// observer this is exactly `replay`; with a
+    /// [`crate::trace::Recorder`] the recorded stream is itself
+    /// deterministic across OS thread counts and window sizes.
+    pub fn replay_observed(
+        &mut self,
+        trace: &[TrafficRequest],
+        tasks: &[TaskSpec],
+        oracle: &dyn CorrectnessOracle,
+        obs: &mut Observer<'_>,
+    ) -> ClusterReport {
+        self.replay_impl(trace, tasks, oracle, None, obs)
     }
 
     /// [`ClusterService::replay`] with a closed-loop autoscaler in the
@@ -1245,7 +1399,25 @@ impl ClusterService {
         oracle: &dyn CorrectnessOracle,
         run: &mut AutoscaleRun,
     ) -> ClusterReport {
-        self.replay_impl(trace, tasks, oracle, Some(run))
+        let mut sink = NullSink;
+        let mut obs = Observer::new(&mut sink);
+        self.replay_impl(trace, tasks, oracle, Some(run), &mut obs)
+    }
+
+    /// [`ClusterService::replay_autoscaled`] with a flight recorder
+    /// attached: on top of everything [`ClusterService::replay_observed`]
+    /// records, each decision tick emits an `autoscale.tick` event with
+    /// the signals the policy saw and an `autoscale.decide` event per
+    /// membership event it scheduled.
+    pub fn replay_autoscaled_observed(
+        &mut self,
+        trace: &[TrafficRequest],
+        tasks: &[TaskSpec],
+        oracle: &dyn CorrectnessOracle,
+        run: &mut AutoscaleRun,
+        obs: &mut Observer<'_>,
+    ) -> ClusterReport {
+        self.replay_impl(trace, tasks, oracle, Some(run), obs)
     }
 
     fn replay_impl(
@@ -1254,6 +1426,7 @@ impl ClusterService {
         tasks: &[TaskSpec],
         oracle: &dyn CorrectnessOracle,
         mut autoscale: Option<&mut AutoscaleRun>,
+        obs: &mut Observer<'_>,
     ) -> ClusterReport {
         let nodes = self.config.nodes;
         let n_tenants = self.config.tenants.len();
@@ -1329,6 +1502,7 @@ impl ClusterService {
             refill_seq: 0,
             node_seconds: 0.0,
             node_seconds_at: 0.0,
+            obs: &mut *obs,
         };
         if let Some(rb) = restore_rb {
             hooks.rebalances.push(ActiveRebalance { report: rb, tracked: BTreeSet::new() });
@@ -1336,6 +1510,7 @@ impl ClusterService {
 
         for (w0, win) in trace.chunks(window).enumerate().map(|(i, w)| (i * window, w)) {
             // ---- speculation: batch-run predicted misses on OS threads ---
+            hooks.obs.enter(Stage::Speculation);
             {
                 let caches: &[ResultCache] = hooks.caches;
                 let alive: Vec<bool> = hooks.membership.alive().to_vec();
@@ -1378,8 +1553,10 @@ impl ClusterService {
                     )
                 });
             }
+            hooks.obs.exit(Stage::Speculation);
 
             // ---- admission: event-driven, one arrival at a time ----------
+            hooks.obs.enter(Stage::Admission);
             for (off, req) in win.iter().enumerate() {
                 let seq = (w0 + off) as u64;
                 let now = req.arrival_s;
@@ -1411,7 +1588,7 @@ impl ClusterService {
                         let depths: Vec<usize> = fleets.iter().map(|f| f.depth()).collect();
                         let (served, slo_ok) =
                             slo_counts(trace, &hooks.stats.latencies, &config.service.slo);
-                        for ev in run.observe(
+                        let decisions = run.observe(
                             tick_at,
                             &alive,
                             &busy,
@@ -1420,7 +1597,42 @@ impl ClusterService {
                             served,
                             slo_ok,
                             seq as usize,
-                        ) {
+                        );
+                        if let Some(sig) = run.last_signals.clone() {
+                            hooks.obs.emit(|| {
+                                TraceEvent::new(tick_at, "autoscale.tick", 0)
+                                    .field("alive_nodes", Json::num(sig.alive_nodes as f64))
+                                    .field(
+                                        "backlog_total",
+                                        Json::num(sig.backlog_total as f64),
+                                    )
+                                    .field(
+                                        "mean_utilization",
+                                        Json::Num(sig.mean_utilization),
+                                    )
+                                    .field("slo_attainment", Json::Num(sig.slo_attainment))
+                                    .field(
+                                        "served_window",
+                                        Json::num(sig.served_window as f64),
+                                    )
+                                    .field(
+                                        "arrivals_window",
+                                        Json::num(sig.arrivals_window as f64),
+                                    )
+                            });
+                        }
+                        for ev in decisions {
+                            hooks.obs.emit(|| {
+                                TraceEvent::new(tick_at, "autoscale.decide", ev.node)
+                                    .field(
+                                        "action",
+                                        Json::str(match ev.change {
+                                            MembershipChange::Fail => "fail",
+                                            MembershipChange::Join => "join",
+                                        }),
+                                    )
+                                    .field("lands_at_s", Json::Num(ev.at_s))
+                            });
                             insert_sorted_event(&mut events, next_event, ev);
                         }
                     }
@@ -1429,6 +1641,7 @@ impl ClusterService {
                 // instants (graceful drain for a failing node's accepted
                 // work; refills in flight for a joining one). Starts between
                 // an event and this arrival already see the new membership.
+                hooks.obs.enter(Stage::EventHeap);
                 apply_membership_due(
                     &events,
                     &mut next_event,
@@ -1441,7 +1654,11 @@ impl ClusterService {
                 // cluster-wide, so this arrival observes exactly the events
                 // landed by its own instant.
                 advance_cluster(&mut fleets, now, &mut hooks);
-                let fp = config.service.fingerprint_of(&tasks[req.task_index], req.gpu);
+                hooks.obs.exit(Stage::EventHeap);
+                hooks.obs.enter(Stage::Fingerprint);
+                let task = &tasks[req.task_index];
+                let fp = config.service.fingerprint_of(task, req.gpu);
+                hooks.obs.exit(Stage::Fingerprint);
                 hooks.count_rehashed(fp);
                 // Every arrival is this tenant's traffic, even one the
                 // cluster cannot route (served + rejected == requests must
@@ -1454,6 +1671,10 @@ impl ClusterService {
                         rejected += 1;
                         rejected_by_class[req.priority as usize] += 1;
                         tenant_rejected[t] += 1;
+                        hooks.obs.emit(|| {
+                            admit_event(now, 0, seq, fp, req, task, 0, "shed")
+                                .field("reason", Json::str("routing"))
+                        });
                         continue;
                     }
                 };
@@ -1462,10 +1683,14 @@ impl ClusterService {
                 // Single-flight joins first: identical work waiting or on a
                 // worker is shared, not redone. Joiners settle with the
                 // flight at its completion.
-                if fleet.join_waiting(fp, seq, now, req.priority)
-                    || fleet.join_running(fp, seq, now)
-                {
-                    // joined
+                let joined_waiting = fleet.join_waiting(fp, seq, now, req.priority);
+                if joined_waiting || fleet.join_running(fp, seq, now) {
+                    let outcome =
+                        if joined_waiting { "join-waiting" } else { "join-running" };
+                    let depth = fleet.depth();
+                    hooks
+                        .obs
+                        .emit(|| admit_event(now, ni, seq, fp, req, task, depth, outcome));
                 } else if let Some(entry) = hooks.caches[ni].get(fp) {
                     if let Some(done) = hooks.visible_at.get(&fp) {
                         debug_assert!(
@@ -1476,6 +1701,11 @@ impl ClusterService {
                     hooks.stats.latencies[seq as usize] = Some(hit_latency_s);
                     hooks.stats.api_cold += entry.cold_api_usd;
                     hooks.per_node[ni].hits += 1;
+                    let depth = fleet.depth();
+                    hooks.obs.emit(|| {
+                        admit_event(now, ni, seq, fp, req, task, depth, "hit")
+                            .field("latency_s", Json::num(hit_latency_s))
+                    });
                 } else {
                     // Miss: admission control. The global batch-shed
                     // applies first (as on a single node), then the
@@ -1488,6 +1718,11 @@ impl ClusterService {
                         rejected += 1;
                         rejected_by_class[req.priority as usize] += 1;
                         tenant_rejected[t] += 1;
+                        let depth = fleet.depth();
+                        hooks.obs.emit(|| {
+                            admit_event(now, ni, seq, fp, req, task, depth, "shed")
+                                .field("reason", Json::str("depth"))
+                        });
                     } else if over
                         && quotas_on
                         && hooks.per_node[ni].backlog_by_tenant[t] >= quotas[t]
@@ -1497,6 +1732,15 @@ impl ClusterService {
                         rejected_by_class[req.priority as usize] += 1;
                         tenant_rejected[t] += 1;
                         tenant_quota_shed[t] += 1;
+                        let depth = fleet.depth();
+                        let backlog = hooks.per_node[ni].backlog_by_tenant[t];
+                        let quota = quotas[t];
+                        hooks.obs.emit(|| {
+                            admit_event(now, ni, seq, fp, req, task, depth, "shed")
+                                .field("reason", Json::str("quota"))
+                                .field("backlog", Json::num(backlog as f64))
+                                .field("quota", Json::num(quota as f64))
+                        });
                     } else {
                         // A new flight for a key some rebalance made
                         // unreachable is that rebalance's re-miss.
@@ -1510,6 +1754,10 @@ impl ClusterService {
                             members: vec![(seq, now)],
                         });
                         hooks.per_node[ni].backlog_by_tenant[t] += 1;
+                        let depth = fleet.depth();
+                        hooks
+                            .obs
+                            .emit(|| admit_event(now, ni, seq, fp, req, task, depth, "enqueue"));
                     }
                 }
                 // Every admission decision samples this node's backlog —
@@ -1517,10 +1765,12 @@ impl ClusterService {
                 let nc = &mut hooks.per_node[ni];
                 nc.peak_depth = nc.peak_depth.max(fleet.depth());
             }
+            hooks.obs.exit(Stage::Admission);
         }
         // Drain: serve everything still waiting, running, or in transit at
         // end of trace. A membership event past the last arrival still
         // fires here — the drain advances simulated time through it.
+        hooks.obs.enter(Stage::EventHeap);
         apply_membership_due(
             &events,
             &mut next_event,
@@ -1530,9 +1780,11 @@ impl ClusterService {
             &mut hooks,
         );
         advance_cluster(&mut fleets, f64::INFINITY, &mut hooks);
+        hooks.obs.exit(Stage::EventHeap);
         debug_assert!(hooks.pending.is_empty(), "every started flight completed");
         debug_assert!(hooks.pending_refills.is_empty(), "every refill landed");
 
+        hooks.obs.enter(Stage::Report);
         let ReplayStats {
             latencies,
             api_spent,
@@ -1687,7 +1939,7 @@ impl ClusterService {
 
         let epoch = hooks.membership.epoch();
         self.membership = hooks.membership.clone();
-        ClusterReport {
+        let report = ClusterReport {
             overall,
             nodes,
             epoch,
@@ -1697,7 +1949,9 @@ impl ClusterService {
             node_hours,
             quota_shed: tenant_quota_shed.iter().sum(),
             rebalances: hooks.rebalances.into_iter().map(|rb| rb.report).collect(),
-        }
+        };
+        hooks.obs.exit(Stage::Report);
+        report
     }
 }
 

@@ -85,6 +85,13 @@ pub struct Manifest {
     pub shards: Vec<ShardFile>,
     /// The cluster-wide cold-cost registry file.
     pub cold_cost: ShardFile,
+    /// Build stamp of the binary that wrote the snapshot
+    /// ([`crate::trace::build_stamp`]): crate version plus enabled
+    /// features. Informational — restores gate on the wire versions
+    /// above, never on this — but it turns "which build wrote this?"
+    /// into a `cat` instead of an archaeology session. Absent in
+    /// pre-stamp snapshots (restored as the empty string).
+    pub build: String,
 }
 
 impl Manifest {
@@ -99,6 +106,7 @@ impl Manifest {
                 Json::Arr(self.shards.iter().map(ShardFile::to_json).collect()),
             ),
             ("cold_cost", self.cold_cost.to_json()),
+            ("build", Json::str(self.build.clone())),
         ])
     }
 
@@ -115,6 +123,13 @@ impl Manifest {
                 .map(ShardFile::from_json)
                 .collect::<Option<Vec<_>>>()?,
             cold_cost: ShardFile::from_json(v.get("cold_cost")?)?,
+            // Tolerated when absent: the stamp is informational, and
+            // snapshots written before it existed stay loadable.
+            build: v
+                .get("build")
+                .and_then(|b| b.as_str())
+                .map(String::from)
+                .unwrap_or_default(),
         })
     }
 }
@@ -257,6 +272,7 @@ pub fn save(
         nodes,
         shards,
         cold_cost: ShardFile { file: cold_file, entries: cold_cost.len() },
+        build: crate::trace::build_stamp(),
     };
     let mpath = dir.join(MANIFEST_FILE);
     std::fs::write(&mpath, format!("{}\n", manifest.to_json()))
@@ -387,6 +403,7 @@ mod tests {
         assert_eq!(m.shards[0].entries, 2);
         assert_eq!(m.shards[1].entries, 1);
         assert_eq!(m.cold_cost.entries, 2);
+        assert_eq!(m.build, crate::trace::build_stamp());
         assert!(exists(&dir));
 
         let (m2, restored, cold2) = load(&dir, 8).unwrap();

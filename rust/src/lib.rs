@@ -47,9 +47,22 @@ pub mod runtime;
 pub mod service;
 pub mod sim;
 pub mod tasks;
+#[warn(missing_docs)]
+pub mod trace;
 pub mod util;
 pub mod workflow;
 
+/// Crate version (the `cudaforge version` stamp, also embedded in trace
+/// headers and snapshot manifests).
 pub fn version() -> &'static str {
     env!("CARGO_PKG_VERSION")
+}
+
+/// Cargo features this binary was built with (empty on a default build).
+pub fn features() -> Vec<&'static str> {
+    let mut out = Vec::new();
+    if cfg!(feature = "pjrt") {
+        out.push("pjrt");
+    }
+    out
 }

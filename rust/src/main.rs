@@ -11,6 +11,8 @@
 //!   select     run the offline metric-selection pipeline (Algorithms 1-2)
 //!   verify     execute every AOT artifact on PJRT vs its reference (pjrt)
 //!   specs      print the GPU spec database
+//!   trace      explain one fingerprint's causal story from a recorded trace
+//!   version    print the build stamp (crate version + enabled features)
 //!
 //! Global flags: --seed N --threads N --rounds N --gpu KEY --quick
 //!               --strategy NAME --coder MODEL --judge MODEL
@@ -46,6 +48,16 @@
 //!               writing results/lint.csv)
 //!               run/serve/cluster/autoscale accept --lint (pre-compile
 //!               analyzer gate) with --lint-confidence T --lint-repairs N
+//! Observability: serve/cluster/autoscale accept --trace DIR (record the
+//!               deterministic flight-recorder stream and write
+//!               events.jsonl + chrome_trace.json + metrics.csv into DIR)
+//!               and --profile (host wall-clock stage breakdown printed
+//!               after the replay)
+//! Trace flags:  --explain FINGERPRINT (reconstruct that request's causal
+//!               story) --dir DIR (trace directory, default `trace`)
+//!
+//! Every subcommand rejects flags it does not understand (exit 2 + usage)
+//! instead of silently falling back to defaults.
 
 use cudaforge::agents::profiles;
 use cudaforge::cluster::{
@@ -60,6 +72,7 @@ use cudaforge::service::cache::ResultCache;
 use cudaforge::service::traffic::{try_generate, TrafficConfig};
 use cudaforge::service::{KernelService, ServiceConfig, SloTargets};
 use cudaforge::tasks;
+use cudaforge::trace::{profile::Profiler, NullSink, Observer, Recorder, TraceMeta};
 use cudaforge::util::cli::Args;
 use cudaforge::workflow::{
     run_task, CorrectnessOracle, NoOracle, Strategy, WorkflowConfig, ALL_STRATEGIES,
@@ -127,6 +140,49 @@ fn lint_gate_from(args: &Args) -> cudaforge::workflow::LintGate {
     cudaforge::workflow::LintGate {
         repair_confidence: confidence,
         max_repairs_per_round: args.get_usize("lint-repairs", 2) as u32,
+    }
+}
+
+/// The `--trace DIR` / `--profile` pair shared by the replay subcommands
+/// (`serve`, `cluster`, `autoscale`).
+struct TraceOpts {
+    dir: Option<String>,
+    profile: bool,
+}
+
+impl TraceOpts {
+    fn from(args: &Args) -> TraceOpts {
+        TraceOpts {
+            dir: args.get("trace").map(|s| s.to_string()),
+            profile: args.flag("profile"),
+        }
+    }
+
+    /// Write the recorded stream's three artifacts (under `DIR/sub` when
+    /// several replays share one `--trace` invocation) and say what
+    /// landed. A write failure is a warning, not an exit: the replay's
+    /// report already printed and is the primary deliverable.
+    fn write(&self, sub: Option<&str>, meta: &TraceMeta, events: &[cudaforge::trace::TraceEvent]) {
+        let Some(dir) = &self.dir else { return };
+        let path = match sub {
+            Some(s) => std::path::Path::new(dir).join(s),
+            None => std::path::PathBuf::from(dir),
+        };
+        match cudaforge::trace::write_dir(&path, meta, events) {
+            Ok(()) => eprintln!(
+                "[trace: {} events -> {}/{{events.jsonl,chrome_trace.json,metrics.csv}}]",
+                events.len(),
+                path.display()
+            ),
+            Err(e) => eprintln!("warning: trace not written: {e:#}"),
+        }
+    }
+
+    /// Print the profiler's stage table (no-op when `--profile` was off).
+    fn report(&self, profiler: Option<Profiler>) {
+        if let Some(p) = profiler {
+            println!("{}", p.finish().table().render());
+        }
     }
 }
 
@@ -330,7 +386,7 @@ fn cluster(args: &Args) {
         }
     }
     let trace = try_generate(suite.len(), &traffic).unwrap_or_else(|e| {
-        eprintln!("error: {e}");
+        eprintln!("error: {e:#}");
         std::process::exit(2);
     });
     let snapshot_dir = args.get("snapshot").map(|s| s.to_string());
@@ -377,8 +433,24 @@ fn cluster(args: &Args) {
         }
         _ => ClusterService::new(config),
     };
+    let topts = TraceOpts::from(args);
+    let mut recorder = Recorder::default();
+    let mut null = NullSink;
+    let mut obs = if topts.dir.is_some() {
+        Observer::new(&mut recorder)
+    } else {
+        Observer::new(&mut null)
+    };
     let t0 = std::time::Instant::now();
-    let report = svc.replay(&trace, &suite, oracle.as_ref());
+    if topts.profile {
+        obs.profiler = Some(Profiler::new());
+    }
+    let report = svc.replay_observed(&trace, &suite, oracle.as_ref(), &mut obs);
+    let profiler = obs.profiler.take();
+    let mut meta =
+        TraceMeta::new("cluster", svc.config.nodes, svc.config.service.sim_workers);
+    meta.tenants = svc.config.tenants.iter().map(|t| t.name.clone()).collect();
+    topts.write(None, &meta, &recorder.events);
     let ctx = Ctx {
         seed,
         results_dir: args.get_or("out", "results").to_string(),
@@ -424,6 +496,7 @@ fn cluster(args: &Args) {
             RebalanceKind::SnapshotRestore => {}
         }
     }
+    topts.report(profiler);
     if let Some(dir) = &snapshot_dir {
         match svc.snapshot(dir) {
             Ok(m) => eprintln!(
@@ -498,7 +571,7 @@ fn autoscale(args: &Args) {
     }
 
     let base_trace = try_generate(suite.len(), &traffic).unwrap_or_else(|e| {
-        eprintln!("error: {e}");
+        eprintln!("error: {e:#}");
         std::process::exit(2);
     });
     println!(
@@ -520,6 +593,12 @@ fn autoscale(args: &Args) {
         results_dir: args.get_or("out", "results").to_string(),
         ..Ctx::default()
     };
+    let topts = TraceOpts::from(args);
+    // Several (policy, scenario) replays can share one `--trace` run: each
+    // combination records into its own `DIR/<policy>-<scenario>/` subtree
+    // (a single combination writes straight into DIR).
+    let multi_combo = policies.len() * scenarios.len() > 1;
+    let tenant_names: Vec<String> = base.tenants.iter().map(|t| t.name.clone()).collect();
     let mut rows: Vec<report::FrontierRow> = Vec::new();
     for scenario in &scenarios {
         let mut trace = base_trace.clone();
@@ -536,14 +615,36 @@ fn autoscale(args: &Args) {
                 policy,
                 AutoscaleConfig { tick_s, provision_delay_s, min_nodes, max_nodes },
             );
+            let mut recorder = Recorder::default();
+            let mut null = NullSink;
+            let mut obs = if topts.dir.is_some() {
+                Observer::new(&mut recorder)
+            } else {
+                Observer::new(&mut null)
+            };
             let t0 = std::time::Instant::now();
+            if topts.profile {
+                obs.profiler = Some(Profiler::new());
+            }
             // Scenario-scripted events merge with any --fail-node/--join-node
             // flags; an inconsistent combination is a user error, not a bug.
             let mut svc = ClusterService::try_new(config).unwrap_or_else(|e| {
-                eprintln!("error: {e}");
+                eprintln!("error: {e:#}");
                 std::process::exit(2);
             });
-            let report = svc.replay_autoscaled(&trace, &suite, oracle.as_ref(), &mut run);
+            let report = svc.replay_autoscaled_observed(
+                &trace,
+                &suite,
+                oracle.as_ref(),
+                &mut run,
+                &mut obs,
+            );
+            let profiler = obs.profiler.take();
+            let mut meta = TraceMeta::new("cluster", slots, base.service.sim_workers);
+            meta.tenants = tenant_names.clone();
+            let sub = format!("{pname}-{}", scenario.name());
+            topts.write(multi_combo.then_some(sub.as_str()), &meta, &recorder.events);
+            topts.report(profiler);
             println!(
                 "  {pname} on {}: {} ticks, {} joins / {} fails | {:.2} node-hrs | \
                  {} shed | wall {:.2}s",
@@ -661,11 +762,25 @@ fn serve(args: &Args) {
         svc.config.window,
     );
     let trace = try_generate(suite.len(), &traffic).unwrap_or_else(|e| {
-        eprintln!("error: {e}");
+        eprintln!("error: {e:#}");
         std::process::exit(2);
     });
+    let topts = TraceOpts::from(args);
+    let mut recorder = Recorder::default();
+    let mut null = NullSink;
+    let mut obs = if topts.dir.is_some() {
+        Observer::new(&mut recorder)
+    } else {
+        Observer::new(&mut null)
+    };
     let t0 = std::time::Instant::now();
-    let report = svc.replay(&trace, &suite, oracle.as_ref());
+    if topts.profile {
+        obs.profiler = Some(Profiler::new());
+    }
+    let report = svc.replay_observed(&trace, &suite, oracle.as_ref(), &mut obs);
+    let profiler = obs.profiler.take();
+    let meta = TraceMeta::new("service", 1, svc.config.sim_workers);
+    topts.write(None, &meta, &recorder.events);
     let ctx = Ctx {
         seed,
         results_dir: args.get_or("out", "results").to_string(),
@@ -697,6 +812,7 @@ fn serve(args: &Args) {
             c.rejected,
         );
     }
+    topts.report(profiler);
     if let Some(path) = &snapshot {
         match svc.cache().snapshot(path) {
             Ok(()) => eprintln!("[snapshot: {} entries -> {path}]", svc.cache().len()),
@@ -778,9 +894,68 @@ fn lint_cmd(args: &Args) {
     }
 }
 
+/// `cudaforge trace` — explain-mode over a recorded flight-recorder
+/// directory: reconstruct one fingerprint's causal story from
+/// `DIR/events.jsonl`.
+fn trace_cmd(args: &Args) {
+    let dir = args.get_or("dir", "trace");
+    let Some(fp) = args.get("explain") else {
+        eprintln!(
+            "error: trace wants --explain FINGERPRINT (16 hex digits, as printed \
+             in reports and trace events) and optionally --dir DIR"
+        );
+        std::process::exit(2);
+    };
+    match cudaforge::trace::explain::explain_dir(std::path::Path::new(dir), fp) {
+        Ok(story) => println!("{story}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            eprintln!("hint: record a trace first, e.g. `cudaforge cluster --trace {dir}`");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Exit 2 with usage when the invocation carries flags this subcommand
+/// does not understand — a typo'd flag must fail loudly, not silently
+/// fall back to its default.
+fn reject_unknown(args: &Args, known: &[&str]) {
+    let unknown = args.unknown(known);
+    if unknown.is_empty() {
+        return;
+    }
+    let list: Vec<String> = unknown.iter().map(|f| format!("--{f}")).collect();
+    eprintln!("error: unknown flag(s) for this subcommand: {}\n", list.join(" "));
+    usage();
+    std::process::exit(2);
+}
+
+/// Flags understood by `serve` (the single-node replay).
+const SERVE_FLAGS: &[&str] = &[
+    "artifacts", "capacity", "coder", "interarrival", "judge", "lint",
+    "lint-confidence", "lint-repairs", "out", "profile", "queue-depth",
+    "requests", "rounds", "seed", "sim-workers", "slo", "snapshot",
+    "strategy", "threads", "trace", "window", "zipf",
+];
+
+/// Flags `cluster_setup` (shared by `cluster` and `autoscale`) parses,
+/// plus the oracle/report/trace wiring both subcommands share.
+const CLUSTER_SETUP_FLAGS: &[&str] = &[
+    "artifacts", "capacity", "coder", "fail-at", "fail-node", "interarrival",
+    "join-at", "join-node", "judge", "lint", "lint-confidence",
+    "lint-repairs", "no-quotas", "nodes", "out", "profile", "queue-depth",
+    "requests", "rounds", "seed", "sim-workers", "slo", "strategy",
+    "tenants", "threads", "trace", "transfer-latency",
+    "warm-locality-margin", "window", "zipf",
+];
+
+/// `autoscale`'s additions on top of [`CLUSTER_SETUP_FLAGS`].
+const AUTOSCALE_EXTRA_FLAGS: &[&str] =
+    &["max-nodes", "min-nodes", "policy", "provision-delay", "scenario", "tick"];
+
 fn usage() {
     println!("cudaforge {} — CudaForge reproduction CLI", cudaforge::version());
-    println!("usage: cudaforge <run|suite|serve|cluster|autoscale|lint|bench|select|verify|specs> [flags]");
+    println!("usage: cudaforge <run|suite|serve|cluster|autoscale|lint|bench|select|verify|specs|trace|version> [flags]");
     println!("  run    --task L1-95 [--gpu rtx6000 --strategy cudaforge --rounds 10]");
     println!("         [--lint (pre-compile analyzer gate) --lint-confidence 0.9 --lint-repairs 2]");
     println!("         (serve/cluster/autoscale accept the same three lint flags)");
@@ -789,6 +964,9 @@ fn usage() {
     println!("         [--window 32 (host batch size; reported numbers are window-free)]");
     println!("         [--interarrival 90 --sim-workers 8 --queue-depth N --slo 120,7200,86400]");
     println!("         [--snapshot cache.jsonl]");
+    println!("         [--trace DIR (record the flight-recorder artifacts into DIR)]");
+    println!("         [--profile (host wall-clock stage breakdown after the replay)]");
+    println!("         (cluster/autoscale accept --trace and --profile too)");
     println!("  cluster [serve flags, per node] [--nodes 4 --tenants alpha:3,beta:1]");
     println!("         [--no-quotas --transfer-latency 30 --warm-locality-margin 0.25]");
     println!("         [--fail-node N --fail-at SECS (node N drops at SECS)]");
@@ -804,6 +982,8 @@ fn usage() {
     println!("  select [--iterations 100]");
     println!("  verify [--artifacts artifacts]   (needs --features pjrt)");
     println!("  specs");
+    println!("  trace  --explain FINGERPRINT [--dir trace (a --trace output directory)]");
+    println!("  version   (build stamp: crate version + enabled features)");
     let keys: Vec<&str> = ALL_STRATEGIES.iter().map(|s| s.cli_key()).collect();
     println!("strategies: {}", keys.join(" "));
 }
@@ -813,6 +993,13 @@ fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "run" => {
+            reject_unknown(
+                &args,
+                &[
+                    "artifacts", "coder", "gpu", "judge", "lint", "lint-confidence",
+                    "lint-repairs", "rounds", "seed", "strategy", "task",
+                ],
+            );
             let id = args.get_or("task", "L1-95");
             let task = tasks::by_id(id).unwrap_or_else(|| {
                 eprintln!("error: unknown task {id}");
@@ -855,6 +1042,14 @@ fn main() {
             }
         }
         "suite" => {
+            reject_unknown(
+                &args,
+                &[
+                    "artifacts", "coder", "dstar", "gpu", "judge", "lint",
+                    "lint-confidence", "lint-repairs", "rounds", "seed", "strategy",
+                    "threads",
+                ],
+            );
             let oracle = build_oracle(&args);
             let wf = workflow_from(&args);
             let set = if args.flag("dstar") { tasks::dstar() } else { tasks::kernelbench() };
@@ -874,11 +1069,37 @@ fn main() {
                 );
             }
         }
-        "serve" => serve(&args),
-        "cluster" => cluster(&args),
-        "autoscale" => autoscale(&args),
-        "lint" => lint_cmd(&args),
+        "serve" => {
+            reject_unknown(&args, SERVE_FLAGS);
+            serve(&args)
+        }
+        "cluster" => {
+            let known: Vec<&str> =
+                CLUSTER_SETUP_FLAGS.iter().chain(&["snapshot"]).copied().collect();
+            reject_unknown(&args, &known);
+            cluster(&args)
+        }
+        "autoscale" => {
+            let known: Vec<&str> = CLUSTER_SETUP_FLAGS
+                .iter()
+                .chain(AUTOSCALE_EXTRA_FLAGS)
+                .copied()
+                .collect();
+            reject_unknown(&args, &known);
+            autoscale(&args)
+        }
+        "lint" => {
+            reject_unknown(
+                &args,
+                &["bug", "coder", "corpus", "gpu", "json", "out", "seed", "table", "task"],
+            );
+            lint_cmd(&args)
+        }
         "bench" => {
+            reject_unknown(
+                &args,
+                &["artifacts", "exp", "out", "quick", "rounds", "seed", "threads"],
+            );
             let oracle = build_oracle(&args);
             let ctx = Ctx {
                 seed: args.get_u64("seed", 2024),
@@ -890,6 +1111,7 @@ fn main() {
             report::run_experiment(&ctx, exp, oracle.as_ref(), args.flag("quick"));
         }
         "select" => {
+            reject_unknown(&args, &["iterations", "out", "seed"]);
             let ctx = Ctx {
                 seed: args.get_u64("seed", 2024),
                 results_dir: args.get_or("out", "results").to_string(),
@@ -898,6 +1120,7 @@ fn main() {
             report::table8(&ctx, args.get_usize("iterations", 100));
         }
         "verify" => {
+            reject_unknown(&args, &["artifacts", "seed"]);
             #[cfg(feature = "pjrt")]
             {
                 use cudaforge::runtime::oracle::VerificationMatrix;
@@ -933,9 +1156,25 @@ fn main() {
             }
         }
         "specs" => {
+            reject_unknown(&args, &[]);
             for g in gpu::ALL {
                 println!("{}\n", g.spec_sheet());
             }
+        }
+        "trace" => {
+            reject_unknown(&args, &["dir", "explain"]);
+            trace_cmd(&args)
+        }
+        "version" => {
+            reject_unknown(&args, &[]);
+            println!("cudaforge {}", cudaforge::version());
+            let feats = cudaforge::features();
+            if feats.is_empty() {
+                println!("features: (none)");
+            } else {
+                println!("features: {}", feats.join(", "));
+            }
+            println!("build stamp: {}", cudaforge::trace::build_stamp());
         }
         "help" => usage(),
         other => {

@@ -848,6 +848,134 @@ mod tests {
         }
     }
 
+    /// Compare a rendered table against its committed golden under
+    /// `tests/golden/`. `UPDATE_GOLDEN=1 cargo test` blesses the current
+    /// rendering instead of comparing, for intentional format changes.
+    fn assert_golden(name: &str, rendered: &str) {
+        let path = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden"))
+            .join(format!("{name}.txt"));
+        let bless = std::env::var("UPDATE_GOLDEN")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        if bless {
+            std::fs::write(&path, rendered).expect("bless golden file");
+            return;
+        }
+        let want = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+            panic!(
+                "missing golden {} ({e}); run UPDATE_GOLDEN=1 cargo test to bless",
+                path.display()
+            )
+        });
+        assert_eq!(
+            rendered, want,
+            "{name} drifted from tests/golden/{name}.txt; \
+             run UPDATE_GOLDEN=1 cargo test to bless an intentional change"
+        );
+    }
+
+    /// A fully-populated service report with hand-picked figures whose
+    /// decimal renderings are unambiguous (no rounding ties).
+    fn service_report_fixture() -> crate::service::ServiceReport {
+        use crate::service::queue::Priority;
+        crate::service::ServiceReport {
+            requests: 120,
+            flights_run: 48,
+            cache_hits: 52,
+            shared: 9,
+            evictions: 3,
+            rejected: 11,
+            warm_started: 16,
+            warm_correct: 12,
+            hit_rate: 0.525,
+            p50_latency_s: 720.0,
+            p95_latency_s: 2400.0,
+            p99_latency_s: 5400.0,
+            mean_latency_s: 1080.0,
+            mean_queue_wait_s: 360.0,
+            peak_queue_depth: 7,
+            utilization: 0.675,
+            per_priority: vec![crate::service::PriorityClassReport {
+                priority: Priority::Interactive,
+                requests: 40,
+                rejected: 4,
+                p50_latency_s: 600.0,
+                p95_latency_s: 1800.0,
+                p99_latency_s: 3600.0,
+                slo_target_s: 1800.0,
+                slo_attainment: 0.925,
+            }],
+            api_usd_spent: 19.25,
+            api_usd_saved: 30.5,
+            api_usd_cold: 49.75,
+            mean_rounds_to_best_cold: 6.25,
+            mean_rounds_to_best_warm: 3.5,
+            gpu_hours: 12.5,
+            requests_per_gpu_hour: 9.6,
+            lint_short_circuits: 5,
+        }
+    }
+
+    #[test]
+    fn service_table_matches_golden() {
+        assert_golden("service_table", &service_table(&service_report_fixture()).render());
+    }
+
+    #[test]
+    fn cluster_table_matches_golden() {
+        let mut r = cluster_report_with_rebalances();
+        r.per_node.push(crate::cluster::NodeReport {
+            node: 0,
+            alive: true,
+            requests: 60,
+            cache_hits: 20,
+            shared: 5,
+            flights_run: 25,
+            rejected: 2,
+            evictions: 1,
+            hit_rate: 0.45,
+            utilization: 0.8,
+            peak_queue_depth: 4,
+            cache_entries: 12,
+        });
+        r.per_tenant.push(crate::cluster::TenantReport {
+            tenant: "acme".into(),
+            weight: 2.0,
+            requests: 30,
+            served: 28,
+            rejected: 2,
+            quota_shed: 1,
+            p50_latency_s: 600.0,
+            p95_latency_s: 1500.0,
+            p99_latency_s: 3000.0,
+            slo_attainment: 0.95,
+        });
+        assert_golden("cluster_table", &cluster_table(&r).render());
+    }
+
+    #[test]
+    fn frontier_table_matches_golden() {
+        let mut cheap = cluster_report_with_rebalances();
+        cheap.node_hours = 8.0;
+        let rows = vec![
+            FrontierRow {
+                policy: "static".into(),
+                scenario: "diurnal".into(),
+                joins: 0,
+                fails: 0,
+                report: cluster_report_with_rebalances(),
+            },
+            FrontierRow {
+                policy: "threshold".into(),
+                scenario: "diurnal".into(),
+                joins: 2,
+                fails: 1,
+                report: cheap,
+            },
+        ];
+        assert_golden("frontier_table", &frontier_table(&rows).render());
+    }
+
     #[test]
     fn cluster_table_renders_every_rebalance_kind_with_its_figures() {
         let rendered = cluster_table(&cluster_report_with_rebalances()).render();

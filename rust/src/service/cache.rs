@@ -231,23 +231,28 @@ impl ResultCache {
     }
 
     /// Insert (or refresh) an entry, evicting the LRU entry when full.
-    pub fn insert(&mut self, entry: CacheEntry) {
+    /// Returns the evicted fingerprint, if the insert displaced one —
+    /// the flight recorder names evictions with it.
+    pub fn insert(&mut self, entry: CacheEntry) -> Option<Fingerprint> {
         let fp = entry.fingerprint;
         self.stats.inserts += 1;
         if let Some(slot) = self.map.get_mut(&fp) {
             slot.entry = entry;
             retick(&mut self.tick, &mut self.recency, slot, fp);
-            return;
+            return None;
         }
+        let mut evicted = None;
         if self.map.len() >= self.capacity {
             if let Some((_, cold)) = self.recency.pop_first() {
                 self.map.remove(&cold);
                 self.stats.evictions += 1;
+                evicted = Some(cold);
             }
         }
         self.tick += 1;
         self.recency.insert(self.tick, fp);
         self.map.insert(fp, Slot { entry, tick: self.tick });
+        evicted
     }
 
     /// Remove and return the entry for `fp`, if resident. This is a

@@ -92,6 +92,9 @@ use crate::service::pool::{run_indexed, FleetHooks, FleetSim, SimCompletion, Sim
 use crate::service::queue::{Priority, ALL_PRIORITIES};
 use crate::service::traffic::TrafficRequest;
 use crate::tasks::TaskSpec;
+use crate::trace::profile::Stage;
+use crate::trace::{NullSink, Observer, TraceEvent};
+use crate::util::json::Json;
 use crate::util::stats::{mean, percentile};
 use crate::workflow::{
     run_task, CorrectnessOracle, EarlyStop, Strategy, TaskResult, WarmStart, WorkflowConfig,
@@ -427,6 +430,67 @@ pub(crate) fn settle_flight_completion(
     )
 }
 
+/// The `request.admit` trace event shared by the single-node and cluster
+/// admission loops: one per arrival, stamped with the decision (`outcome`)
+/// and the backlog depth sampled right after it. Callers append
+/// outcome-specific fields (hit latency, shed reason, quota math).
+pub(crate) fn admit_event(
+    at_s: f64,
+    node: usize,
+    seq: u64,
+    fp: Fingerprint,
+    req: &TrafficRequest,
+    task: &TaskSpec,
+    depth: usize,
+    outcome: &'static str,
+) -> TraceEvent {
+    TraceEvent::new(at_s, "request.admit", node)
+        .field("seq", Json::num(seq as f64))
+        .field("fp", Json::str(fp.to_string()))
+        .field("tenant", Json::num(req.tenant as f64))
+        .field("priority", Json::str(req.priority.name()))
+        .field("task", Json::str(task.id()))
+        .field("gpu", Json::str(req.gpu.key))
+        .field("depth", Json::num(depth as f64))
+        .field("outcome", Json::str(outcome))
+}
+
+/// The `flight.complete` trace event shared by both completion hooks:
+/// emitted at the flight's simulated completion instant, carrying the
+/// span (`start_s` → the event's `at_s`) and every settled member.
+pub(crate) fn flight_complete_event(
+    node: usize,
+    flight: &SimFlight,
+    done: SimCompletion,
+    warm: bool,
+    correct: bool,
+    cached: bool,
+) -> TraceEvent {
+    TraceEvent::new(done.completion_s, "flight.complete", node)
+        .field("fp", Json::str(flight.fingerprint.to_string()))
+        .field("leader_seq", Json::num(flight.leader_seq as f64))
+        .field("start_s", Json::num(done.start_s))
+        .field("service_s", Json::num(done.completion_s - done.start_s))
+        .field("warm", Json::Bool(warm))
+        .field("correct", Json::Bool(correct))
+        .field("cached", Json::Bool(cached))
+        .field(
+            "members",
+            Json::Arr(
+                flight
+                    .members
+                    .iter()
+                    .map(|(seq, arrival)| {
+                        Json::obj(vec![
+                            ("seq", Json::num(*seq as f64)),
+                            ("arrival_s", Json::num(*arrival)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )
+}
+
 /// Per-priority latency/SLO aggregates over a replayed trace (shared by the
 /// single-node and cluster reports).
 pub(crate) fn per_priority_report(
@@ -562,7 +626,7 @@ pub(crate) struct PendingRun {
 /// pick the warm seed against event-time cache state and run (or look up)
 /// the workflow; completion events apply the flight's side effects at its
 /// completion instant via [`settle_flight_completion`].
-struct ServiceHooks<'a> {
+struct ServiceHooks<'a, 'o> {
     config: &'a ServiceConfig,
     trace: &'a [TrafficRequest],
     tasks: &'a [TaskSpec],
@@ -576,21 +640,43 @@ struct ServiceHooks<'a> {
     /// producing flight *this replay* (absent = resident before the replay
     /// started, available from t = 0).
     visible_at: BTreeMap<Fingerprint, f64>,
+    /// The flight recorder. Every emission below happens on the
+    /// deterministic event-loop path, at a simulated instant — never from
+    /// the speculative OS-thread pool.
+    obs: &'a mut Observer<'o>,
 }
 
-impl FleetHooks for ServiceHooks<'_> {
+impl FleetHooks for ServiceHooks<'_, '_> {
     fn on_start(&mut self, flight: &SimFlight, start_s: f64) -> f64 {
         let req = &self.trace[flight.leader_seq as usize];
         let task = &self.tasks[req.task_index];
         let c = self.config;
         let base = c.base_workflow(req.gpu);
-        let wf = match self.cache.warm_candidate(
+        self.obs.enter(Stage::WarmLookup);
+        let cand = self.cache.warm_candidate(
             &task.id(),
             req.gpu.key,
             c.strategy.name(),
             c.coder.name,
             c.judge.name,
-        ) {
+        );
+        self.obs.exit(Stage::WarmLookup);
+        let fp = flight.fingerprint;
+        let leader = flight.leader_seq;
+        self.obs.emit(|| {
+            let ev = TraceEvent::new(start_s, "warm.lookup", 0)
+                .field("fp", Json::str(fp.to_string()))
+                .field("leader_seq", Json::num(leader as f64));
+            match cand {
+                Some(e) => ev
+                    .field("picked", Json::str("own"))
+                    .field("own_speedup", Json::num(e.best_speedup))
+                    .field("source_fp", Json::str(e.fingerprint.to_string()))
+                    .field("source_gpu", Json::str(e.gpu_key.clone())),
+                None => ev.field("picked", Json::str("none")),
+            }
+        });
+        let wf = match cand {
             Some(entry) => {
                 // The causality contract: a warm seed's producing flight
                 // completed no later than this flight's start.
@@ -605,6 +691,7 @@ impl FleetHooks for ServiceHooks<'_> {
             }
             None => base,
         };
+        self.obs.enter(Stage::Workflow);
         let result = match self.memo.take(flight.fingerprint, &wf.warm_start) {
             Some(r) => r,
             // Speculation missed (e.g. an earlier completion changed the
@@ -612,10 +699,21 @@ impl FleetHooks for ServiceHooks<'_> {
             // true event-time workflow.
             None => run_task(&wf, task, self.oracle),
         };
+        self.obs.exit(Stage::Workflow);
         let service_s = result.ledger.wall_s;
+        let warm = wf.warm_start.is_some();
+        let members = flight.members.len();
+        self.obs.emit(|| {
+            TraceEvent::new(start_s, "flight.start", 0)
+                .field("fp", Json::str(fp.to_string()))
+                .field("leader_seq", Json::num(leader as f64))
+                .field("service_s", Json::num(service_s))
+                .field("warm", Json::Bool(warm))
+                .field("members", Json::num(members as f64))
+        });
         self.pending.insert(
             flight.leader_seq,
-            PendingRun { result, warm: wf.warm_start.is_some() },
+            PendingRun { result, warm },
         );
         service_s
     }
@@ -627,6 +725,8 @@ impl FleetHooks for ServiceHooks<'_> {
             .expect("a completion follows its start");
         let req = &self.trace[flight.leader_seq as usize];
         let task = &self.tasks[req.task_index];
+        let lint_saved = run.result.lint.checks_saved;
+        let correct = run.result.correct;
         let entry = settle_flight_completion(
             self.config,
             &mut self.stats,
@@ -638,9 +738,26 @@ impl FleetHooks for ServiceHooks<'_> {
             run.warm,
             &run.result,
         );
+        let cached = entry.is_some();
+        self.obs.emit(|| flight_complete_event(0, flight, done, run.warm, correct, cached));
+        if lint_saved > 0 {
+            let fp = flight.fingerprint;
+            let leader = flight.leader_seq;
+            self.obs.emit(|| {
+                TraceEvent::new(done.completion_s, "lint.short_circuit", 0)
+                    .field("fp", Json::str(fp.to_string()))
+                    .field("leader_seq", Json::num(leader as f64))
+                    .field("checks_saved", Json::num(lint_saved as f64))
+            });
+        }
         if let Some(e) = entry {
             self.visible_at.insert(e.fingerprint, done.completion_s);
-            self.cache.insert(e);
+            if let Some(evicted) = self.cache.insert(e) {
+                self.obs.emit(|| {
+                    TraceEvent::new(done.completion_s, "cache.evict", 0)
+                        .field("fp", Json::str(evicted.to_string()))
+                });
+            }
         }
     }
 }
@@ -692,6 +809,25 @@ impl KernelService {
         tasks: &[TaskSpec],
         oracle: &dyn CorrectnessOracle,
     ) -> ServiceReport {
+        let mut sink = NullSink;
+        let mut obs = Observer::new(&mut sink);
+        self.replay_observed(trace, tasks, oracle, &mut obs)
+    }
+
+    /// [`KernelService::replay`] with a flight recorder attached: every
+    /// admission decision, warm lookup, flight span, lint short-circuit,
+    /// and eviction is emitted through `obs` at its simulated instant.
+    /// With a [`NullSink`] observer this is exactly `replay` (the no-op
+    /// path is regression-tested bit-identical); with a
+    /// [`crate::trace::Recorder`] the recorded stream is itself
+    /// deterministic across OS thread counts and window sizes.
+    pub fn replay_observed(
+        &mut self,
+        trace: &[TrafficRequest],
+        tasks: &[TaskSpec],
+        oracle: &dyn CorrectnessOracle,
+        obs: &mut Observer<'_>,
+    ) -> ServiceReport {
         let window = self.config.window.max(1);
         let sim_workers = self.config.sim_workers.max(1);
         debug_assert!(
@@ -722,10 +858,12 @@ impl KernelService {
             memo: RunMemo::default(),
             pending: BTreeMap::new(),
             visible_at: BTreeMap::new(),
+            obs: &mut *obs,
         };
 
         for (w0, win) in trace.chunks(window).enumerate().map(|(i, w)| (i * window, w)) {
             // ---- speculation: batch-run predicted misses on OS threads ---
+            hooks.obs.enter(Stage::Speculation);
             {
                 let cache: &ResultCache = hooks.cache;
                 let fleet = &fleet;
@@ -770,24 +908,35 @@ impl KernelService {
                     },
                 );
             }
+            hooks.obs.exit(Stage::Speculation);
 
             // ---- admission: event-driven, one arrival at a time ----------
+            hooks.obs.enter(Stage::Admission);
             for (off, req) in win.iter().enumerate() {
                 let seq = (w0 + off) as u64;
                 let now = req.arrival_s;
                 // Fire every start and completion due by `now` first, so
                 // this arrival observes exactly the flights completed by its
                 // own instant — never results still being computed.
+                hooks.obs.enter(Stage::EventHeap);
                 fleet.advance(now, &mut hooks);
+                hooks.obs.exit(Stage::EventHeap);
+                hooks.obs.enter(Stage::Fingerprint);
                 let fp = config.fingerprint_of(&tasks[req.task_index], req.gpu);
+                hooks.obs.exit(Stage::Fingerprint);
+                let task = &tasks[req.task_index];
                 // Single-flight joins first: identical work waiting or on a
                 // worker is shared, not redone (and a join can escalate a
                 // waiting flight's priority). Joiners settle with the flight
                 // at its completion.
-                if fleet.join_waiting(fp, seq, now, req.priority)
-                    || fleet.join_running(fp, seq, now)
-                {
-                    // joined
+                let joined_waiting = fleet.join_waiting(fp, seq, now, req.priority);
+                if joined_waiting || fleet.join_running(fp, seq, now) {
+                    let outcome =
+                        if joined_waiting { "join-waiting" } else { "join-running" };
+                    let depth = fleet.depth();
+                    hooks
+                        .obs
+                        .emit(|| admit_event(now, 0, seq, fp, req, task, depth, outcome));
                 } else if let Some(entry) = hooks.cache.get(fp) {
                     if let Some(done) = hooks.visible_at.get(&fp) {
                         debug_assert!(
@@ -797,6 +946,11 @@ impl KernelService {
                     }
                     hooks.stats.latencies[seq as usize] = Some(config.hit_latency_s);
                     hooks.stats.api_cold += entry.cold_api_usd;
+                    let depth = fleet.depth();
+                    hooks.obs.emit(|| {
+                        admit_event(now, 0, seq, fp, req, task, depth, "hit")
+                            .field("latency_s", Json::num(config.hit_latency_s))
+                    });
                 } else if req.priority == Priority::Batch && fleet.depth() >= config.queue_depth
                 {
                     // Admission control: a new batch flight past the bound
@@ -804,6 +958,11 @@ impl KernelService {
                     // request really would grow the backlog).
                     rejected += 1;
                     rejected_by_class[req.priority as usize] += 1;
+                    let depth = fleet.depth();
+                    hooks.obs.emit(|| {
+                        admit_event(now, 0, seq, fp, req, task, depth, "shed")
+                            .field("reason", Json::str("depth"))
+                    });
                 } else {
                     fleet.submit(SimFlight {
                         fingerprint: fp,
@@ -813,15 +972,22 @@ impl KernelService {
                         arrival_s: now,
                         members: vec![(seq, now)],
                     });
+                    let depth = fleet.depth();
+                    hooks
+                        .obs
+                        .emit(|| admit_event(now, 0, seq, fp, req, task, depth, "enqueue"));
                 }
                 // Every admission decision samples the backlog — including
                 // hits, joins, and sheds, so a backlog pinned at its
                 // maximum while work is shed still registers.
                 peak_depth = peak_depth.max(fleet.depth());
             }
+            hooks.obs.exit(Stage::Admission);
         }
         // Drain: serve everything still waiting or running at end of trace.
+        hooks.obs.enter(Stage::EventHeap);
         fleet.advance(f64::INFINITY, &mut hooks);
+        hooks.obs.exit(Stage::EventHeap);
         debug_assert!(hooks.pending.is_empty(), "every started flight completed");
 
         let ReplayStats {
@@ -836,6 +1002,7 @@ impl KernelService {
             warm_rounds,
             lint_short_circuits,
         } = hooks.stats;
+        hooks.obs.enter(Stage::Report);
         let served: Vec<f64> = latencies.iter().filter_map(|l| *l).collect();
         debug_assert_eq!(
             served.len() + rejected as usize,
@@ -848,7 +1015,7 @@ impl KernelService {
         let evictions = hooks.cache.stats.evictions - stats0.evictions;
         let gpu_hours = fleet.busy_s() / 3600.0;
         let makespan = fleet.makespan_s();
-        ServiceReport {
+        let report = ServiceReport {
             requests: trace.len(),
             flights_run,
             cache_hits: hits,
@@ -886,7 +1053,9 @@ impl KernelService {
                 0.0
             },
             lint_short_circuits,
-        }
+        };
+        hooks.obs.exit(Stage::Report);
+        report
     }
 }
 

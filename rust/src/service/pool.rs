@@ -222,6 +222,12 @@ impl FleetSim {
         self.waiting.len()
     }
 
+    /// Flights on a simulated worker right now (the flight recorder's
+    /// occupancy gauge).
+    pub fn running(&self) -> usize {
+        self.running.len()
+    }
+
     /// Whether a flight for `fp` is waiting for a worker.
     pub fn is_waiting(&self, fp: Fingerprint) -> bool {
         self.waiting_by_fp.contains_key(&fp)

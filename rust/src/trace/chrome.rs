@@ -1,0 +1,161 @@
+//! Chrome trace-event exporter (Perfetto / `chrome://tracing`).
+//!
+//! [`chrome_trace`] renders a recorded replay as a trace-event JSON
+//! object: every `flight.complete` becomes a complete (`ph: "X"`) span —
+//! one process (`pid`) per node, one thread (`tid`) per simulated GPU
+//! slot — and every other event becomes a thread-scoped instant
+//! (`ph: "i"`) on the node's track 0. Slot assignment is reconstructed
+//! greedily (earliest-free slot wins, lowest index on ties), which
+//! reproduces the fleet's actual worker occupancy because the simulator
+//! itself dispatches in start order onto any free worker. Timestamps are
+//! simulated microseconds; the output is sorted by `(ts, emission
+//! order)`, so `ts` is monotonic — CI checks that with `jq`.
+
+use crate::trace::{build_stamp, TraceEvent, TraceMeta};
+use crate::util::json::Json;
+
+/// Render a recorded event stream as one Chrome trace-event JSON object
+/// (`{"traceEvents": [...], "otherData": {...}}`).
+pub fn chrome_trace(meta: &TraceMeta, events: &[TraceEvent]) -> Json {
+    let to_us = |s: f64| (s * 1e6).round();
+    // (ts_us, emission order, rendered event) for the final sort.
+    let mut rows: Vec<(f64, usize, Json)> = Vec::with_capacity(events.len());
+    // Greedy per-node slot reconstruction: free_at seconds per slot.
+    let mut slots: Vec<Vec<f64>> = vec![Vec::new(); meta.nodes.max(1)];
+
+    for (order, ev) in events.iter().enumerate() {
+        if ev.kind == "flight.complete" {
+            let start_s = ev.get("start_s").and_then(|v| v.as_f64()).unwrap_or(ev.at_s);
+            let dur_s = (ev.at_s - start_s).max(0.0);
+            if ev.node >= slots.len() {
+                slots.resize(ev.node + 1, Vec::new());
+            }
+            let free = &mut slots[ev.node];
+            let slot = match free.iter().position(|&t| t <= start_s + 1e-9) {
+                Some(i) => i,
+                None => {
+                    free.push(0.0);
+                    free.len() - 1
+                }
+            };
+            free[slot] = start_s + dur_s;
+            let name = ev
+                .get("fp")
+                .and_then(|v| v.as_str())
+                .map(|fp| format!("flight {fp}"))
+                .unwrap_or_else(|| "flight".to_string());
+            rows.push((
+                to_us(start_s),
+                order,
+                Json::obj(vec![
+                    ("name", Json::str(name)),
+                    ("cat", Json::str("flight")),
+                    ("ph", Json::str("X")),
+                    ("ts", Json::num(to_us(start_s))),
+                    ("dur", Json::num(to_us(dur_s))),
+                    ("pid", Json::num(ev.node as f64)),
+                    ("tid", Json::num((slot + 1) as f64)),
+                    ("args", args_of(ev)),
+                ]),
+            ));
+        } else {
+            rows.push((
+                to_us(ev.at_s),
+                order,
+                Json::obj(vec![
+                    ("name", Json::str(ev.kind)),
+                    ("cat", Json::str(category_of(ev.kind))),
+                    ("ph", Json::str("i")),
+                    ("s", Json::str("t")),
+                    ("ts", Json::num(to_us(ev.at_s))),
+                    ("pid", Json::num(ev.node as f64)),
+                    ("tid", Json::num(0.0)),
+                    ("args", args_of(ev)),
+                ]),
+            ));
+        }
+    }
+    rows.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(rows.into_iter().map(|(_, _, j)| j).collect())),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("build", Json::str(build_stamp())),
+                ("layer", Json::str(meta.layer)),
+                ("nodes", Json::num(meta.nodes as f64)),
+                ("sim_workers", Json::num(meta.sim_workers as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// Event payload as the span/instant `args` object.
+fn args_of(ev: &TraceEvent) -> Json {
+    Json::obj(ev.fields.iter().map(|(k, v)| (*k, v.clone())).collect())
+}
+
+/// Track category per event kind (Perfetto groups by these).
+fn category_of(kind: &str) -> &'static str {
+    match kind.split('.').next() {
+        Some("request") => "admission",
+        Some("warm") => "warm-start",
+        Some("cache") => "cache",
+        Some("lint") => "lint",
+        Some("membership") => "membership",
+        Some("autoscale") => "autoscale",
+        _ => "event",
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)]
+mod tests {
+    use super::*;
+
+    fn complete(at_s: f64, start_s: f64, node: usize, fp: &str) -> TraceEvent {
+        TraceEvent::new(at_s, "flight.complete", node)
+            .field("fp", Json::str(fp.to_string()))
+            .field("start_s", Json::num(start_s))
+    }
+
+    #[test]
+    fn spans_pack_onto_slots_and_ts_is_monotonic() {
+        let meta = TraceMeta::new("service", 1, 2);
+        // Two overlapping flights need two slots; a third after both
+        // complete reuses slot 1.
+        let events = vec![
+            TraceEvent::new(0.0, "request.admit", 0).field("outcome", Json::str("enqueue")),
+            complete(10.0, 0.0, 0, "aaaa"),
+            complete(12.0, 1.0, 0, "bbbb"),
+            complete(30.0, 20.0, 0, "cccc"),
+        ];
+        let j = chrome_trace(&meta, &events);
+        let evs = j.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(evs.len(), 4);
+        let ts: Vec<f64> = evs.iter().map(|e| e.get("ts").unwrap().as_f64().unwrap()).collect();
+        let mut sorted = ts.clone();
+        sorted.sort_by(f64::total_cmp);
+        assert_eq!(ts, sorted, "ts must be monotonic");
+        let spans: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .collect();
+        assert_eq!(spans.len(), 3);
+        let tid_of = |fp: &str| {
+            spans
+                .iter()
+                .find(|s| s.get("name").and_then(|n| n.as_str()) == Some(&format!("flight {fp}")))
+                .and_then(|s| s.get("tid"))
+                .and_then(|t| t.as_usize())
+                .unwrap()
+        };
+        assert_eq!(tid_of("aaaa"), 1);
+        assert_eq!(tid_of("bbbb"), 2, "overlapping flight needs its own slot");
+        assert_eq!(tid_of("cccc"), 1, "a freed slot is reused");
+        // Instants are thread-scoped and carry the scope key.
+        let inst = evs.iter().find(|e| e.get("ph").and_then(|p| p.as_str()) == Some("i")).unwrap();
+        assert_eq!(inst.get("s").and_then(|s| s.as_str()), Some("t"));
+    }
+}

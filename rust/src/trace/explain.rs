@@ -1,0 +1,220 @@
+//! `cudaforge trace --explain <fingerprint>` — reconstruct one
+//! fingerprint's causal story from a recorded `events.jsonl`.
+//!
+//! The flight recorder stamps every decision with the request
+//! fingerprint it concerns, so filtering the event log by fingerprint
+//! and narrating the survivors in order *is* the request's causal chain:
+//! admission outcome (hit / join / enqueue / shed-with-reason), the
+//! warm-start decision with its margin arithmetic spelled out, the
+//! flight's start and completion (with every settled member), lint
+//! short-circuits, and the cache afterlife (refill landings, eviction).
+
+use std::fs;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Render the causal story of `fp` from parsed event-log lines (header
+/// line excluded). Returns a "no events" message when nothing matches.
+pub fn explain_events(lines: &[Json], fp: &str) -> String {
+    let mut body = String::new();
+    let mut n = 0usize;
+    for ev in lines {
+        if ev.get("fp").and_then(|v| v.as_str()) != Some(fp) {
+            continue;
+        }
+        n += 1;
+        let at = ev.get("at_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let node = ev.get("node").and_then(|v| v.as_usize()).unwrap_or(0);
+        let kind = ev.get("kind").and_then(|v| v.as_str()).unwrap_or("?");
+        body.push_str(&format!("  t={at:>11.1}s  node {node}  {}\n", narrate(kind, ev)));
+    }
+    if n == 0 {
+        return format!("no recorded events for fingerprint {fp}\n");
+    }
+    format!("Causal story for fingerprint {fp} — {n} event(s)\n{body}")
+}
+
+/// Read `DIR/events.jsonl` and render the causal story of `fp`.
+pub fn explain_dir(dir: &Path, fp: &str) -> anyhow::Result<String> {
+    let path = dir.join("events.jsonl");
+    let raw = fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let mut lines = Vec::new();
+    for (i, line) in raw.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("{}:{}: bad event line: {e:?}", path.display(), i + 1))?;
+        if i == 0 && j.get("schema").is_some() {
+            continue; // the build-stamped header line
+        }
+        lines.push(j);
+    }
+    Ok(explain_events(&lines, fp))
+}
+
+fn num(ev: &Json, key: &str) -> f64 {
+    ev.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0)
+}
+
+fn int(ev: &Json, key: &str) -> i64 {
+    num(ev, key) as i64
+}
+
+fn text<'a>(ev: &'a Json, key: &str) -> &'a str {
+    ev.get(key).and_then(|v| v.as_str()).unwrap_or("?")
+}
+
+/// One human-readable line per event.
+fn narrate(kind: &str, ev: &Json) -> String {
+    match kind {
+        "request.admit" => {
+            let head = format!(
+                "request #{} ({}, task {} on {})",
+                int(ev, "seq"),
+                text(ev, "priority"),
+                text(ev, "task"),
+                text(ev, "gpu"),
+            );
+            match text(ev, "outcome") {
+                "hit" => format!(
+                    "{head} → cache HIT, answered from the shard in {:.2}s",
+                    num(ev, "latency_s")
+                ),
+                "join-waiting" => {
+                    format!("{head} → joined an identical flight waiting for a worker")
+                }
+                "join-running" => {
+                    format!("{head} → joined an identical flight already on a worker")
+                }
+                "enqueue" => {
+                    format!("{head} → miss: new flight enqueued (backlog {})", int(ev, "depth"))
+                }
+                "shed" => match text(ev, "reason") {
+                    "depth" => format!(
+                        "{head} → SHED: backlog {} at the admission-control bound",
+                        int(ev, "depth")
+                    ),
+                    "quota" => format!(
+                        "{head} → SHED: tenant over fair share (backlog {} ≥ quota {})",
+                        int(ev, "backlog"),
+                        int(ev, "quota")
+                    ),
+                    "routing" => format!("{head} → SHED: no alive node owns this key"),
+                    r => format!("{head} → SHED ({r})"),
+                },
+                o => format!("{head} → {o}"),
+            }
+        }
+        "warm.lookup" => match text(ev, "picked") {
+            "none" => "warm lookup: no usable cross-GPU seed → cold run".to_string(),
+            "own" => {
+                let own = num(ev, "own_speedup");
+                if ev.get("remote_speedup").is_some() {
+                    let margin = num(ev, "margin");
+                    format!(
+                        "warm lookup: own seed wins — remote {:.3}x (node {}) ≤ \
+                         own {:.3}x × (1 + {:.3}) = {:.3}x",
+                        num(ev, "remote_speedup"),
+                        int(ev, "remote_node"),
+                        own,
+                        margin,
+                        own * (1.0 + margin),
+                    )
+                } else {
+                    format!(
+                        "warm lookup: local seed {:.3}x from {} (fp {})",
+                        own,
+                        text(ev, "source_gpu"),
+                        text(ev, "source_fp"),
+                    )
+                }
+            }
+            "remote" => {
+                let own = num(ev, "own_speedup");
+                let margin = num(ev, "margin");
+                format!(
+                    "warm lookup: remote seed wins — node {} offers {:.3}x > \
+                     own {:.3}x × (1 + {:.3}) = {:.3}x (transfer billed)",
+                    int(ev, "remote_node"),
+                    num(ev, "remote_speedup"),
+                    own,
+                    margin,
+                    own * (1.0 + margin),
+                )
+            }
+            p => format!("warm lookup: {p}"),
+        },
+        "flight.start" => format!(
+            "flight starts (leader #{}): service {:.1}s{}",
+            int(ev, "leader_seq"),
+            num(ev, "service_s"),
+            if ev.get("warm").and_then(|v| v.as_bool()).unwrap_or(false) {
+                ", warm-seeded"
+            } else {
+                ", cold"
+            },
+        ),
+        "flight.complete" => {
+            let members =
+                ev.get("members").and_then(|v| v.as_arr()).map(|m| m.len()).unwrap_or(0);
+            format!(
+                "flight completes (started t={:.1}s): {members} member(s) settle{}",
+                num(ev, "start_s"),
+                if ev.get("cached").and_then(|v| v.as_bool()).unwrap_or(false) {
+                    ", result cached"
+                } else {
+                    ", result not cacheable"
+                },
+            )
+        }
+        "lint.short_circuit" => format!(
+            "lint gate repaired the candidate before compile — {} correctness round(s) saved",
+            int(ev, "checks_saved")
+        ),
+        "cache.evict" => "evicted from the shard under capacity pressure".to_string(),
+        "cache.refill" => format!(
+            "result lands in this node's shard (cross-node refill from node {})",
+            int(ev, "from_node")
+        ),
+        k => k.to_string(),
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceEvent;
+
+    #[test]
+    fn margin_arithmetic_is_spelled_out() {
+        let fp = "00000000deadbeef";
+        let lines = vec![
+            TraceEvent::new(10.0, "request.admit", 1)
+                .field("seq", Json::num(4.0))
+                .field("fp", Json::str(fp))
+                .field("priority", Json::str("standard"))
+                .field("task", Json::str("L1-95"))
+                .field("gpu", Json::str("a100"))
+                .field("outcome", Json::str("enqueue"))
+                .field("depth", Json::num(2.0))
+                .to_json(),
+            TraceEvent::new(11.0, "warm.lookup", 1)
+                .field("fp", Json::str(fp))
+                .field("picked", Json::str("remote"))
+                .field("own_speedup", Json::num(1.52))
+                .field("remote_speedup", Json::num(1.8))
+                .field("remote_node", Json::num(2.0))
+                .field("margin", Json::num(0.1))
+                .to_json(),
+        ];
+        let story = explain_events(&lines, fp);
+        assert!(story.contains("2 event(s)"), "{story}");
+        assert!(story.contains("new flight enqueued"), "{story}");
+        assert!(story.contains("1.800x > own 1.520x × (1 + 0.100) = 1.672x"), "{story}");
+        assert!(explain_events(&lines, "ffffffffffffffff").contains("no recorded events"));
+    }
+}

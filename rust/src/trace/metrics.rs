@@ -1,0 +1,326 @@
+//! Deterministic metrics over a recorded event stream.
+//!
+//! A [`MetricsRegistry`] is a plain bag of counters, gauges, and
+//! log-bucketed [`Histogram`]s — all integer/IEEE arithmetic in event
+//! order, no clocks, no sampling jitter — and [`time_series`] folds a
+//! recorded replay into one CSV row per simulated tick: arrivals and
+//! their outcomes, completions, busy seconds and utilization, latency
+//! quantile estimates, and per-tenant served/shed counts. Because the
+//! input stream is bit-identical across host thread counts and window
+//! sizes, so is the CSV.
+//!
+//! Attribution is *lumpy but deterministic*: a flight's busy seconds and
+//! member latencies land in the tick of its completion instant (not
+//! spread over its run), so a single long flight can push one tick's
+//! utilization above 1.0. That is the correct trade for bit-stable
+//! output; smooth it downstream if needed.
+
+use std::collections::BTreeMap;
+
+use crate::trace::{TraceEvent, TraceMeta};
+
+/// A log₂-bucketed histogram of nonnegative seconds. Values are rounded
+/// to integer microseconds and bucketed by bit length, so recording is
+/// pure integer math and quantiles are deterministic upper-bound
+/// estimates (within 2× of the true value).
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    buckets: [u64; 64],
+    count: u64,
+}
+
+impl Histogram {
+    /// Record one value (seconds; negatives clamp to zero).
+    pub fn record(&mut self, v_s: f64) {
+        let micros = (v_s.max(0.0) * 1e6).round() as u64;
+        let b = (64 - micros.leading_zeros() as usize).min(63);
+        self.buckets[b] += 1;
+        self.count += 1;
+    }
+
+    /// Recorded value count.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Upper-bound estimate of the `q`-quantile (`q` in [0, 1]), in
+    /// seconds. 0.0 when the histogram is empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (b, n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                if b == 0 {
+                    return 0.0;
+                }
+                return ((1u64 << b) - 1) as f64 / 1e6;
+            }
+        }
+        0.0
+    }
+}
+
+/// Named counters, gauges, and histograms. Keys are plain strings so
+/// per-tenant series can be derived (`served_alpha`, …); iteration is
+/// sorted (BTreeMap), so rendering order is deterministic.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    /// Add `by` to counter `name` (created at zero).
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Set gauge `name`.
+    pub fn set(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Add `v` to gauge `name` (created at zero).
+    pub fn add(&mut self, name: &str, v: f64) {
+        *self.gauges.entry(name.to_string()).or_insert(0.0) += v;
+    }
+
+    /// Record `v_s` into histogram `name` (created empty).
+    pub fn observe(&mut self, name: &str, v_s: f64) {
+        self.hists.entry(name.to_string()).or_default().record(v_s);
+    }
+
+    /// Counter value (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Gauge value (0.0 when absent).
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.get(name).copied().unwrap_or(0.0)
+    }
+
+    /// Histogram quantile (0.0 when absent/empty).
+    pub fn quantile(&self, name: &str, q: f64) -> f64 {
+        self.hists.get(name).map(|h| h.quantile(q)).unwrap_or(0.0)
+    }
+}
+
+/// Fold a recorded event stream into the per-tick time-series CSV.
+///
+/// One row per `meta.tick_s` of simulated time from tick 0 through the
+/// last event's tick (quiet ticks emit zero rows, so row count is a
+/// pure function of the trace span). Columns: `tick_end_s`, arrival
+/// outcomes, completions, busy seconds, utilization over
+/// `nodes × sim_workers` nominal slots, latency quantile estimates, and
+/// — when `meta.tenants` is nonempty — per-tenant served/shed counts.
+pub fn time_series(meta: &TraceMeta, events: &[TraceEvent]) -> String {
+    let tick_s = if meta.tick_s > 0.0 { meta.tick_s } else { TraceMeta::DEFAULT_TICK_S };
+    let slots = (meta.nodes.max(1) * meta.sim_workers.max(1)) as f64;
+
+    let mut header = vec![
+        "tick_end_s".to_string(),
+        "arrivals".to_string(),
+        "hits".to_string(),
+        "joins".to_string(),
+        "enqueued".to_string(),
+        "sheds".to_string(),
+        "shed_depth".to_string(),
+        "shed_quota".to_string(),
+        "shed_routing".to_string(),
+        "completions".to_string(),
+        "busy_s".to_string(),
+        "utilization".to_string(),
+        "latency_p50_s".to_string(),
+        "latency_p95_s".to_string(),
+    ];
+    for t in &meta.tenants {
+        header.push(format!("served_{t}"));
+        header.push(format!("shed_{t}"));
+    }
+    let mut out = header.join(",");
+    out.push('\n');
+
+    // Tenant attribution: admissions name their tenant index; completion
+    // members are resolved through the seq → tenant map built from them.
+    let mut tenant_of: BTreeMap<u64, usize> = BTreeMap::new();
+    let tenant_name = |i: usize| -> Option<&str> { meta.tenants.get(i).map(|s| s.as_str()) };
+
+    let mut row = |m: &MetricsRegistry, tick_end: f64| -> String {
+        let busy = m.gauge("busy_s");
+        let mut cols = vec![
+            format!("{tick_end:.0}"),
+            m.counter("arrivals").to_string(),
+            m.counter("hits").to_string(),
+            m.counter("joins").to_string(),
+            m.counter("enqueued").to_string(),
+            m.counter("sheds").to_string(),
+            m.counter("shed_depth").to_string(),
+            m.counter("shed_quota").to_string(),
+            m.counter("shed_routing").to_string(),
+            m.counter("completions").to_string(),
+            format!("{busy:.3}"),
+            format!("{:.4}", busy / (slots * tick_s)),
+            format!("{:.6}", m.quantile("latency_s", 0.50)),
+            format!("{:.6}", m.quantile("latency_s", 0.95)),
+        ];
+        for t in &meta.tenants {
+            cols.push(m.counter(&format!("served_{t}")).to_string());
+            cols.push(m.counter(&format!("shed_{t}")).to_string());
+        }
+        cols.join(",")
+    };
+
+    let mut tick = 0usize;
+    let mut m = MetricsRegistry::default();
+    for ev in events {
+        let ev_tick = (ev.at_s / tick_s).floor().max(0.0) as usize;
+        while tick < ev_tick {
+            out.push_str(&row(&m, (tick + 1) as f64 * tick_s));
+            out.push('\n');
+            m = MetricsRegistry::default();
+            tick += 1;
+        }
+        match ev.kind {
+            "request.admit" => {
+                m.inc("arrivals", 1);
+                let seq = ev.get("seq").and_then(|v| v.as_f64()).unwrap_or(-1.0) as u64;
+                let tenant = ev.get("tenant").and_then(|v| v.as_usize()).unwrap_or(0);
+                tenant_of.insert(seq, tenant);
+                match ev.get("outcome").and_then(|v| v.as_str()).unwrap_or("") {
+                    "hit" => {
+                        m.inc("hits", 1);
+                        if let Some(l) = ev.get("latency_s").and_then(|v| v.as_f64()) {
+                            m.observe("latency_s", l);
+                        }
+                        if let Some(t) = tenant_name(tenant) {
+                            m.inc(&format!("served_{t}"), 1);
+                        }
+                    }
+                    "join-waiting" | "join-running" => m.inc("joins", 1),
+                    "enqueue" => m.inc("enqueued", 1),
+                    "shed" => {
+                        m.inc("sheds", 1);
+                        let reason = ev.get("reason").and_then(|v| v.as_str()).unwrap_or("");
+                        match reason {
+                            "depth" => m.inc("shed_depth", 1),
+                            "quota" => m.inc("shed_quota", 1),
+                            "routing" => m.inc("shed_routing", 1),
+                            _ => {}
+                        }
+                        if let Some(t) = tenant_name(tenant) {
+                            m.inc(&format!("shed_{t}"), 1);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            "flight.complete" => {
+                m.inc("completions", 1);
+                if let Some(s) = ev.get("service_s").and_then(|v| v.as_f64()) {
+                    m.add("busy_s", s);
+                }
+                if let Some(members) = ev.get("members").and_then(|v| v.as_arr()) {
+                    for mem in members {
+                        let arrival =
+                            mem.get("arrival_s").and_then(|v| v.as_f64()).unwrap_or(ev.at_s);
+                        m.observe("latency_s", ev.at_s - arrival);
+                        let seq =
+                            mem.get("seq").and_then(|v| v.as_f64()).unwrap_or(-1.0) as u64;
+                        if let Some(t) =
+                            tenant_of.get(&seq).copied().and_then(tenant_name)
+                        {
+                            m.inc(&format!("served_{t}"), 1);
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    out.push_str(&row(&m, (tick + 1) as f64 * tick_s));
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn histogram_quantiles_are_upper_bounds() {
+        let mut h = Histogram::default();
+        for v in [0.001, 0.002, 0.004, 0.1, 3.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        let p50 = h.quantile(0.5);
+        assert!(p50 >= 0.004 && p50 <= 0.008, "p50 {p50}");
+        let p100 = h.quantile(1.0);
+        assert!(p100 >= 3.0 && p100 <= 6.0, "p100 {p100}");
+        assert_eq!(Histogram::default().quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn time_series_buckets_by_tick_and_tenant() {
+        let mut meta = TraceMeta::new("cluster", 1, 1);
+        meta.tenants = vec!["alpha".to_string(), "beta".to_string()];
+        meta.tick_s = 10.0;
+        let admit = |at: f64, seq: f64, tenant: f64, outcome: &'static str| {
+            let mut ev = TraceEvent::new(at, "request.admit", 0)
+                .field("seq", Json::num(seq))
+                .field("tenant", Json::num(tenant))
+                .field("outcome", Json::str(outcome));
+            if outcome == "hit" {
+                ev = ev.field("latency_s", Json::num(0.05));
+            }
+            if outcome == "shed" {
+                ev = ev.field("reason", Json::str("quota"));
+            }
+            ev
+        };
+        let events = vec![
+            admit(1.0, 0.0, 0.0, "hit"),
+            admit(2.0, 1.0, 1.0, "enqueue"),
+            admit(3.0, 2.0, 1.0, "shed"),
+            TraceEvent::new(25.0, "flight.complete", 0)
+                .field("service_s", Json::num(5.0))
+                .field(
+                    "members",
+                    Json::Arr(vec![Json::obj(vec![
+                        ("seq", Json::num(1.0)),
+                        ("arrival_s", Json::num(2.0)),
+                    ])]),
+                ),
+        ];
+        let csv = time_series(&meta, &events);
+        let lines: Vec<&str> = csv.lines().collect();
+        // Header + ticks ending at 10, 20, 30.
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("tick_end_s,arrivals,"));
+        assert!(lines[0].ends_with("served_alpha,shed_alpha,served_beta,shed_beta"));
+        // Tick 1: 3 arrivals — one hit (alpha served), one enqueue, one
+        // quota shed (beta).
+        let t1: Vec<&str> = lines[1].split(',').collect();
+        assert_eq!(t1[1], "3");
+        assert_eq!(t1[2], "1");
+        assert_eq!(t1[4], "1");
+        assert_eq!(t1[7], "1", "shed_quota");
+        assert_eq!(t1[14], "1", "served_alpha");
+        assert_eq!(t1[17], "1", "shed_beta");
+        // Tick 2 is quiet.
+        assert!(lines[2].starts_with("20,0,0,"));
+        // Tick 3: the completion serves beta's queued request.
+        let t3: Vec<&str> = lines[3].split(',').collect();
+        assert_eq!(t3[9], "1", "completions");
+        assert_eq!(t3[10], "5.000", "busy_s");
+        assert_eq!(t3[16], "1", "served_beta");
+    }
+}

@@ -1,0 +1,269 @@
+//! Deterministic flight recorder for the replay engines.
+//!
+//! Every decision point in the global event loop — admissions, warm-start
+//! lookups, flight starts/completions, lint short-circuits, cache
+//! evictions, refill landings, membership changes, autoscale ticks — can
+//! emit a structured [`TraceEvent`] stamped with its *simulated* instant.
+//! Emission goes through a [`TraceSink`]: the default [`NullSink`] makes
+//! the whole layer free (events are built lazily and never constructed
+//! when the sink is disabled), while the opt-in [`Recorder`] buffers the
+//! full event stream in memory and writes it out once, after the replay.
+//!
+//! # The determinism contract
+//!
+//! Events are emitted **only** from the deterministic event-loop path —
+//! never from the speculative OS-thread pool — and carry simulated
+//! timestamps, so the recorded stream is bit-identical regardless of the
+//! host `threads` count and the `window` batch size, exactly like the
+//! report it narrates. Host wall-clock appears in exactly one place: the
+//! opt-in self-[`profile`]r, whose output goes to the console and never
+//! into a trace artifact.
+//!
+//! # Artifacts
+//!
+//! [`write_dir`] materializes one recorded replay as three files:
+//!
+//! - `events.jsonl` — a build-stamped header line followed by one JSON
+//!   object per event, in emission (= simulated event) order.
+//! - `chrome_trace.json` — a Chrome trace-event file ([`chrome`]):
+//!   load it in Perfetto / `chrome://tracing` for a per-node, per-GPU-slot
+//!   timeline of every flight.
+//! - `metrics.csv` — the [`metrics`] time-series: per-tick counters and
+//!   gauges (arrivals, hit/shed rates, utilization, latency quantiles,
+//!   per-tenant served) sampled from the same event stream.
+//!
+//! `cudaforge trace --explain <fingerprint>` ([`explain`]) reconstructs
+//! one fingerprint's causal story from `events.jsonl`.
+
+pub mod chrome;
+pub mod explain;
+pub mod metrics;
+pub mod profile;
+
+use std::fs;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Schema tag stamped into every `events.jsonl` header.
+pub const SCHEMA: &str = "cudaforge.trace.v1";
+
+/// One structured event at a simulated instant.
+///
+/// `fields` is an ordered list of event-specific key/value pairs; the
+/// vocabulary per `kind` is documented in `docs/OBSERVABILITY.md`. Field
+/// keys must not collide with the envelope keys `at_s` / `kind` / `node`.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Simulated instant of the event, seconds.
+    pub at_s: f64,
+    /// Event kind, e.g. `"request.admit"` or `"flight.complete"`.
+    pub kind: &'static str,
+    /// The node the event happened on (0 on the single-node service).
+    pub node: usize,
+    /// Event-specific payload.
+    pub fields: Vec<(&'static str, Json)>,
+}
+
+impl TraceEvent {
+    /// A new event with an empty payload.
+    pub fn new(at_s: f64, kind: &'static str, node: usize) -> TraceEvent {
+        TraceEvent { at_s, kind, node, fields: Vec::new() }
+    }
+
+    /// Builder-style field append.
+    pub fn field(mut self, key: &'static str, value: Json) -> TraceEvent {
+        self.fields.push((key, value));
+        self
+    }
+
+    /// Look up a payload field by key.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.fields.iter().find(|(k, _)| *k == key).map(|(_, v)| v)
+    }
+
+    /// The event as one JSON object (envelope + payload, keys sorted by
+    /// the JSON layer).
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("at_s", Json::num(self.at_s)),
+            ("kind", Json::str(self.kind)),
+            ("node", Json::num(self.node as f64)),
+        ];
+        for (k, v) in &self.fields {
+            pairs.push((k, v.clone()));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Where emitted events go. Implementations must be cheap when disabled:
+/// [`Observer::emit`] consults [`TraceSink::enabled`] before even
+/// *constructing* the event.
+pub trait TraceSink {
+    /// Whether this sink wants events at all (`false` short-circuits
+    /// event construction).
+    fn enabled(&self) -> bool {
+        true
+    }
+    /// Record one event. Called in deterministic event order.
+    fn record(&mut self, ev: TraceEvent);
+}
+
+/// The default sink: tracing off. Replays through a `NullSink` are
+/// bit-identical to replays without any observer (regression-tested).
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn record(&mut self, _ev: TraceEvent) {}
+}
+
+/// The recording sink: buffers every event in memory, in emission order.
+/// Artifacts are written once, after the replay, by [`write_dir`] — so
+/// no I/O interleaves with the event loop.
+#[derive(Default)]
+pub struct Recorder {
+    /// The recorded stream, in emission order.
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceSink for Recorder {
+    fn record(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+}
+
+/// The handle threaded through a replay: a sink for trace events plus an
+/// optional wall-clock [`profile::Profiler`]. Both replay loops take an
+/// `&mut Observer`; the plain `replay` entry points pass a [`NullSink`]
+/// observer, which makes the whole layer a no-op.
+pub struct Observer<'s> {
+    sink: &'s mut dyn TraceSink,
+    /// Opt-in host-side self-profiling (`--profile`). Wall-clock stage
+    /// timers only — never feeds trace artifacts.
+    pub profiler: Option<profile::Profiler>,
+}
+
+impl<'s> Observer<'s> {
+    /// An observer writing to `sink`, with profiling off.
+    pub fn new(sink: &'s mut dyn TraceSink) -> Observer<'s> {
+        Observer { sink, profiler: None }
+    }
+
+    /// Whether the sink is recording (used to skip work that only exists
+    /// to feed events).
+    pub fn enabled(&self) -> bool {
+        self.sink.enabled()
+    }
+
+    /// Emit one event. The closure runs only when the sink is enabled,
+    /// so a disabled observer never constructs the event at all.
+    pub fn emit(&mut self, build: impl FnOnce() -> TraceEvent) {
+        if self.sink.enabled() {
+            self.sink.record(build());
+        }
+    }
+
+    /// Enter a profiling stage (no-op without a profiler).
+    pub fn enter(&mut self, stage: profile::Stage) {
+        if let Some(p) = &mut self.profiler {
+            p.enter(stage);
+        }
+    }
+
+    /// Exit a profiling stage (no-op without a profiler).
+    pub fn exit(&mut self, stage: profile::Stage) {
+        if let Some(p) = &mut self.profiler {
+            p.exit(stage);
+        }
+    }
+}
+
+/// Replay-level metadata stamped into the `events.jsonl` header and used
+/// by the metrics/chrome exporters (slot counts, tenant names).
+#[derive(Clone, Debug)]
+pub struct TraceMeta {
+    /// Which replay loop produced the stream: `"service"` or `"cluster"`.
+    pub layer: &'static str,
+    /// Simulated nodes (1 on the single-node service).
+    pub nodes: usize,
+    /// Simulated GPU workers per node.
+    pub sim_workers: usize,
+    /// Tenant names in tenant-index order (empty on the single-node
+    /// service, which has no tenant identity).
+    pub tenants: Vec<String>,
+    /// Metrics sampling tick, simulated seconds.
+    pub tick_s: f64,
+}
+
+impl TraceMeta {
+    /// Default metrics tick: 300 simulated seconds.
+    pub const DEFAULT_TICK_S: f64 = 300.0;
+
+    /// Metadata for a replay of `layer` over `nodes`×`sim_workers` slots.
+    pub fn new(layer: &'static str, nodes: usize, sim_workers: usize) -> TraceMeta {
+        TraceMeta { layer, nodes, sim_workers, tenants: Vec::new(), tick_s: Self::DEFAULT_TICK_S }
+    }
+
+    /// The `events.jsonl` header object (schema + build stamp + shape).
+    pub fn header_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(SCHEMA)),
+            ("version", Json::str(crate::version())),
+            (
+                "features",
+                Json::Arr(crate::features().iter().map(|f| Json::str(*f)).collect()),
+            ),
+            ("layer", Json::str(self.layer)),
+            ("nodes", Json::num(self.nodes as f64)),
+            ("sim_workers", Json::num(self.sim_workers as f64)),
+            (
+                "tenants",
+                Json::Arr(self.tenants.iter().map(|t| Json::str(t.as_str())).collect()),
+            ),
+            ("tick_s", Json::num(self.tick_s)),
+        ])
+    }
+}
+
+/// Build stamp shared by trace headers and snapshot manifests: crate
+/// version plus enabled cargo features.
+pub fn build_stamp() -> String {
+    let feats = crate::features();
+    if feats.is_empty() {
+        format!("cudaforge {}", crate::version())
+    } else {
+        format!("cudaforge {} +{}", crate::version(), feats.join("+"))
+    }
+}
+
+/// Serialize the recorded stream as JSONL: one header line, then one
+/// line per event, in emission order.
+pub fn events_jsonl(meta: &TraceMeta, events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    out.push_str(&meta.header_json().to_string());
+    out.push('\n');
+    for ev in events {
+        out.push_str(&ev.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write one recorded replay into `dir` as `events.jsonl`,
+/// `chrome_trace.json`, and `metrics.csv`. Creates `dir` if needed.
+pub fn write_dir(dir: &Path, meta: &TraceMeta, events: &[TraceEvent]) -> anyhow::Result<()> {
+    fs::create_dir_all(dir)
+        .map_err(|e| anyhow::anyhow!("creating trace dir {}: {e}", dir.display()))?;
+    let write = |name: &str, body: String| -> anyhow::Result<()> {
+        let path = dir.join(name);
+        fs::write(&path, body).map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    };
+    write("events.jsonl", events_jsonl(meta, events))?;
+    write("chrome_trace.json", chrome::chrome_trace(meta, events).to_string())?;
+    write("metrics.csv", metrics::time_series(meta, events))?;
+    Ok(())
+}

@@ -1,0 +1,198 @@
+//! Host-side replay self-profiling (`--profile`).
+//!
+//! The one deliberate exception to the simulated-time rule: a
+//! [`Profiler`] measures host wall-clock per replay *stage* so ROADMAP's
+//! replay-speed work has a baseline to attack. Stage attribution is
+//! **self-time**: entering a nested stage (say [`Stage::WarmLookup`]
+//! inside [`Stage::EventHeap`]) pauses the outer stage's clock, so the
+//! per-stage seconds sum to (almost exactly) the instrumented span and
+//! never double-count. Output goes to the console only — wall-clock
+//! never enters a trace artifact, which is how the recorded stream stays
+//! bit-identical across host thread counts.
+
+use std::time::Instant;
+
+use crate::util::table::Table;
+
+/// The instrumented stages of a replay, in display order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Window-batched speculative workflow runs on the OS thread pool
+    /// (includes the join — this is where miss-heavy traces spend
+    /// almost everything).
+    Speculation,
+    /// Per-arrival admission: cache probe, single-flight join, shed
+    /// decision (excluding the nested stages below).
+    Admission,
+    /// Request fingerprint hashing.
+    Fingerprint,
+    /// Warm-start candidate lookup at flight start.
+    WarmLookup,
+    /// Event-time workflow runs (speculation misses run inline here;
+    /// speculation hits are a memo take).
+    Workflow,
+    /// Draining the simulated event heap: start/completion dispatch and
+    /// event-loop bookkeeping (excluding the nested stages above).
+    EventHeap,
+    /// Report assembly after the drain.
+    Report,
+}
+
+/// Every stage, in display order.
+pub const ALL_STAGES: [Stage; 7] = [
+    Stage::Speculation,
+    Stage::Admission,
+    Stage::Fingerprint,
+    Stage::WarmLookup,
+    Stage::Workflow,
+    Stage::EventHeap,
+    Stage::Report,
+];
+
+impl Stage {
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Speculation => "speculation",
+            Stage::Admission => "admission",
+            Stage::Fingerprint => "fingerprint hashing",
+            Stage::WarmLookup => "warm lookup",
+            Stage::Workflow => "workflow runs",
+            Stage::EventHeap => "event heap",
+            Stage::Report => "report assembly",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Stage::Speculation => 0,
+            Stage::Admission => 1,
+            Stage::Fingerprint => 2,
+            Stage::WarmLookup => 3,
+            Stage::Workflow => 4,
+            Stage::EventHeap => 5,
+            Stage::Report => 6,
+        }
+    }
+}
+
+/// Self-time stage timers over one replay. Construct before the replay,
+/// [`Profiler::finish`] after it; the replay loops call
+/// [`Profiler::enter`]/[`Profiler::exit`] around each stage.
+pub struct Profiler {
+    started: Instant,
+    /// Open stages, innermost last. Each entry's `Instant` is the mark
+    /// self-time accrues from (reset whenever a nested stage closes).
+    stack: Vec<(Stage, Instant)>,
+    totals: [f64; ALL_STAGES.len()],
+}
+
+impl Default for Profiler {
+    fn default() -> Self {
+        Profiler::new()
+    }
+}
+
+impl Profiler {
+    /// Start the wall clock.
+    pub fn new() -> Profiler {
+        Profiler { started: Instant::now(), stack: Vec::new(), totals: [0.0; ALL_STAGES.len()] }
+    }
+
+    /// Open `stage`, pausing the enclosing stage's self-time clock.
+    pub fn enter(&mut self, stage: Stage) {
+        let now = Instant::now();
+        if let Some((outer, mark)) = self.stack.last_mut() {
+            self.totals[outer.idx()] += now.duration_since(*mark).as_secs_f64();
+            *mark = now;
+        }
+        self.stack.push((stage, now));
+    }
+
+    /// Close `stage`, resuming the enclosing stage's clock.
+    pub fn exit(&mut self, stage: Stage) {
+        let now = Instant::now();
+        if let Some((top, mark)) = self.stack.pop() {
+            debug_assert_eq!(top, stage, "mismatched profiler exit");
+            self.totals[top.idx()] += now.duration_since(mark).as_secs_f64();
+        }
+        if let Some((_, mark)) = self.stack.last_mut() {
+            *mark = now;
+        }
+    }
+
+    /// Stop the wall clock and return the stage breakdown.
+    pub fn finish(self) -> ProfileReport {
+        ProfileReport { totals: self.totals, wall_s: self.started.elapsed().as_secs_f64() }
+    }
+}
+
+/// The finished stage breakdown: per-stage self-time plus total wall
+/// time from profiler construction to [`Profiler::finish`].
+pub struct ProfileReport {
+    totals: [f64; ALL_STAGES.len()],
+    /// Total wall seconds over the profiled span.
+    pub wall_s: f64,
+}
+
+impl ProfileReport {
+    /// Self-time of one stage, seconds.
+    pub fn stage_s(&self, stage: Stage) -> f64 {
+        self.totals[stage.idx()]
+    }
+
+    /// Sum of all stage self-times, seconds. The acceptance bound: this
+    /// is within 10% of [`ProfileReport::wall_s`] on the bench traces.
+    pub fn stage_sum_s(&self) -> f64 {
+        self.totals.iter().sum()
+    }
+
+    /// The console table: one row per stage plus unattributed time and
+    /// the wall total.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Replay self-profile — host wall-clock by stage",
+            &["Stage", "Seconds", "% of wall"],
+        );
+        let pct_of = |s: f64| {
+            if self.wall_s > 0.0 {
+                format!("{:.1}%", 100.0 * s / self.wall_s)
+            } else {
+                "-".to_string()
+            }
+        };
+        for stage in ALL_STAGES {
+            let s = self.stage_s(stage);
+            t.row(vec![stage.name().to_string(), format!("{s:.4}"), pct_of(s)]);
+        }
+        let other = (self.wall_s - self.stage_sum_s()).max(0.0);
+        t.row(vec!["(unattributed)".to_string(), format!("{other:.4}"), pct_of(other)]);
+        t.row(vec!["total wall".to_string(), format!("{:.4}", self.wall_s), pct_of(self.wall_s)]);
+        t
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nested_stages_accrue_self_time() {
+        let mut p = Profiler::new();
+        p.enter(Stage::EventHeap);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        p.enter(Stage::Workflow);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        p.exit(Stage::Workflow);
+        p.exit(Stage::EventHeap);
+        let r = p.finish();
+        assert!(r.stage_s(Stage::EventHeap) > 0.0);
+        assert!(r.stage_s(Stage::Workflow) > 0.0);
+        // Self-time: the sum never exceeds the wall span.
+        assert!(r.stage_sum_s() <= r.wall_s + 1e-6);
+        let rendered = r.table().render();
+        assert!(rendered.contains("workflow runs"));
+        assert!(rendered.contains("total wall"));
+    }
+}

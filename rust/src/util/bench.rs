@@ -12,9 +12,61 @@
 //!   recorded result to `<path>` as one JSON document (see `BENCH_*.json`
 //!   at the repo root for the committed reference series).
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
+
+/// A counting shim over the system allocator. The bench binaries install
+/// it as their `#[global_allocator]` so [`BenchSet::to_json`] can report
+/// `total_allocations` next to throughput — a cheap regression tripwire
+/// for "this optimization quietly started cloning per request".
+pub struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+// SAFETY: defers every operation verbatim to `System`; the counter is a
+// relaxed atomic increment with no other side effects.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+/// Allocation calls observed so far (0 unless [`CountingAlloc`] is the
+/// process's global allocator).
+pub fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// Peak resident set size of this process in bytes, from
+/// `/proc/self/status` `VmHWM` — `None` off Linux or when the file is
+/// unreadable (the JSON reports `null` rather than a fake number).
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line
+        .trim_start_matches("VmHWM:")
+        .trim()
+        .trim_end_matches("kB")
+        .trim()
+        .parse()
+        .ok()?;
+    Some(kb * 1024)
+}
 
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
@@ -136,7 +188,11 @@ impl BenchSet {
 
     /// Serialize every recorded row. Stable shape:
     /// `{"suite", "results": [{name, iters, mean_ns, p50_ns, p95_ns,
-    /// units_per_iter, units_per_s}]}`.
+    /// units_per_iter, units_per_s}], "peak_rss_bytes", "total_allocations"}`
+    /// — the last two are suite-level host-side footprint figures
+    /// ([`peak_rss_bytes`] is `null` where `/proc` is unavailable, and
+    /// `total_allocations` is 0 unless the binary installed
+    /// [`CountingAlloc`]).
     pub fn to_json(&self) -> Json {
         let results = self
             .rows
@@ -156,6 +212,14 @@ impl BenchSet {
         Json::obj(vec![
             ("suite", Json::str(&self.suite)),
             ("results", Json::Arr(results)),
+            (
+                "peak_rss_bytes",
+                match peak_rss_bytes() {
+                    Some(b) => Json::num(b as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("total_allocations", Json::num(allocations() as f64)),
         ])
     }
 
@@ -209,8 +273,25 @@ mod tests {
         assert!(mean > 0.0);
         // units_per_s is exactly units * (1e9 / mean_ns).
         assert!((ups - 200.0 * 1e9 / mean).abs() < 1e-6 * ups.abs());
+        // The suite-level footprint keys are always present: RSS as a
+        // number (or null off Linux), allocations as a number.
+        assert!(doc.get("total_allocations").and_then(Json::as_f64).is_some());
+        match doc.get("peak_rss_bytes") {
+            Some(Json::Null) => {}
+            Some(v) => assert!(v.as_f64().unwrap() > 0.0),
+            None => panic!("peak_rss_bytes key missing"),
+        }
         // Round-trips through the serializer.
         let text = doc.to_string();
         assert_eq!(Json::parse(&text).unwrap(), doc);
+    }
+
+    #[test]
+    fn peak_rss_parses_proc_when_available() {
+        // On Linux the figure exists and is at least a page; elsewhere the
+        // probe degrades to None rather than inventing one.
+        if let Some(b) = peak_rss_bytes() {
+            assert!(b >= 4096, "VmHWM {b} implausibly small");
+        }
     }
 }

@@ -64,6 +64,25 @@ impl Args {
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
+
+    /// Every `--flag` or `--key value` given that is not in `known`, in
+    /// the deterministic order (options sorted, then bare flags as given).
+    /// Subcommands use this to reject typos loudly instead of silently
+    /// falling back to defaults.
+    pub fn unknown(&self, known: &[&str]) -> Vec<String> {
+        let mut out: Vec<String> = self
+            .options
+            .keys()
+            .filter(|k| !known.contains(&k.as_str()))
+            .cloned()
+            .collect();
+        for f in &self.flags {
+            if !known.contains(&f.as_str()) && !out.contains(f) {
+                out.push(f.clone());
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -99,5 +118,12 @@ mod tests {
         let a = parse("--seed 7 --fast");
         assert_eq!(a.get_u64("seed", 0), 7);
         assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn unknown_reports_both_options_and_flags() {
+        let a = parse("serve --seed 7 --requets 60 --profiel");
+        assert_eq!(a.unknown(&["seed", "requests", "profile"]), vec!["requets", "profiel"]);
+        assert!(a.unknown(&["seed", "requets", "profiel"]).is_empty());
     }
 }
