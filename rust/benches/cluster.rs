@@ -96,15 +96,38 @@ fn main() {
     });
 
     // Throughput sweep: the same 200-request trace replayed over growing
-    // fleets — the global event loop's cost scales with node count, and the
-    // figure is reported in requests/s via `units_per_iter`.
-    for nodes in [1usize, 4, 8] {
+    // fleets — the event heap keeps per-event cost at O(log events) rather
+    // than O(nodes), and the figure is reported in requests/s via
+    // `units_per_iter`. The 16- and 64-node points exist to show that
+    // flatness in the committed reference JSON.
+    for nodes in [1usize, 4, 8, 16, 64] {
         let name = format!("cluster::replay throughput (200 reqs, {nodes} nodes)");
         set.run(&name, 200, 200.0, || {
             let mut cfg = base();
             cfg.nodes = nodes;
             let mut svc = ClusterService::new(cfg);
             black_box(svc.replay(&trace, &suite, &NoOracle));
+        });
+    }
+
+    // Large-trace entry: 100k requests sharded over 16 nodes. Exists for
+    // the committed reference JSON; skipped in fast mode so the CI smoke
+    // pass stays in seconds.
+    let fast = matches!(std::env::var("CUDAFORGE_BENCH_FAST"), Ok(v) if !v.is_empty() && v != "0");
+    if !fast {
+        let big = generate(
+            suite.len(),
+            &TrafficConfig {
+                requests: 100_000,
+                tenant_mix: vec![("alpha".to_string(), 3.0), ("beta".to_string(), 1.0)],
+                ..TrafficConfig::default()
+            },
+        );
+        set.run("cluster::replay throughput (100000 reqs, 16 nodes)", 20, 100_000.0, || {
+            let mut cfg = base();
+            cfg.nodes = 16;
+            let mut svc = ClusterService::new(cfg);
+            black_box(svc.replay(&big, &suite, &NoOracle));
         });
     }
 

@@ -16,7 +16,7 @@ use cudaforge::gpu::RTX6000_ADA;
 use cudaforge::kernel::KernelConfig;
 use cudaforge::service::cache::{CacheEntry, ResultCache};
 use cudaforge::service::fingerprint::{of_request, Fingerprint};
-use cudaforge::service::pool::{FleetHooks, FleetSim, SimCompletion, SimFlight};
+use cudaforge::service::pool::{FleetHooks, FleetSim, MemberList, SimCompletion, SimFlight};
 use cudaforge::service::queue::Priority;
 use cudaforge::service::traffic::{generate, TrafficConfig};
 use cudaforge::service::{KernelService, ServiceConfig};
@@ -91,7 +91,7 @@ fn main() {
                     leader_seq: seq,
                     tenant: 0,
                     arrival_s: k as f64,
-                    members: vec![(seq, k as f64)],
+                    members: MemberList::one(seq, k as f64),
                 });
             }
             seq += 1;
@@ -111,7 +111,7 @@ fn main() {
                 leader_seq: sim_seq + k,
                 tenant: 0,
                 arrival_s: k as f64 * 3.0,
-                members: vec![(sim_seq + k, k as f64 * 3.0)],
+                members: MemberList::one(sim_seq + k, k as f64 * 3.0),
             });
         }
         fleet.advance(f64::INFINITY, &mut hooks);
@@ -151,8 +151,15 @@ fn main() {
 
     // Throughput sweep: how replay cost scales with trace size. The trace
     // is generated outside the timed closure so the figure is the replay
-    // itself, reported in requests/s via `units_per_iter`.
-    for requests in [200usize, 1000, 4000] {
+    // itself, reported in requests/s via `units_per_iter`. The large-trace
+    // entries (100k / 1M requests) exist for the committed reference JSON
+    // and are skipped in fast mode so the CI smoke pass stays in seconds.
+    let fast = matches!(std::env::var("CUDAFORGE_BENCH_FAST"), Ok(v) if !v.is_empty() && v != "0");
+    let mut sizes = vec![200usize, 1000, 4000];
+    if !fast {
+        sizes.extend([100_000, 1_000_000]);
+    }
+    for requests in sizes {
         let trace = generate(
             suite.len(),
             &TrafficConfig { requests, ..TrafficConfig::default() },

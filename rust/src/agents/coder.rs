@@ -12,7 +12,7 @@
 //! history — mirroring the paper's round-by-round prompting.
 
 use crate::agents::prompts;
-use crate::agents::{estimate_tokens, CallStats, Feedback, ModelProfile};
+use crate::agents::{estimate_tokens_len, CallStats, Feedback, ModelProfile};
 use crate::gpu::GpuSpec;
 use crate::kernel::{Bug, KernelConfig, Opt, OPT_CATALOG};
 use crate::tasks::TaskSpec;
@@ -54,9 +54,12 @@ impl Coder {
         Coder { profile }
     }
 
-    fn stats_for(&self, prompt: &str) -> CallStats {
+    /// Call stats for a prompt whose rendered byte length is `prompt_len` —
+    /// the hot path streams prompts through `prompts::LenWriter` instead of
+    /// materialising them, so only the length reaches the accountant.
+    fn stats_for_len(&self, prompt_len: usize) -> CallStats {
         CallStats {
-            tokens_in: estimate_tokens(prompt),
+            tokens_in: estimate_tokens_len(prompt_len),
             tokens_out: self.profile.gen_out_tokens,
         }
     }
@@ -129,7 +132,7 @@ impl Coder {
             cfg.bugs.push(random_bug(rng));
         }
         cfg.legalize(gpu);
-        let stats = self.stats_for(&prompts::coder_initial(task));
+        let stats = self.stats_for_len(prompts::coder_initial_len(task));
         (cfg, stats)
     }
 
@@ -164,9 +167,8 @@ impl Coder {
             cfg.bugs.push(rewrite_bug(rng));
         }
         cfg.legalize(gpu);
-        let prompt = prompts::coder_adapt(task, gpu, &warm.config);
         let stats = CallStats {
-            tokens_in: estimate_tokens(&prompt),
+            tokens_in: estimate_tokens_len(prompts::coder_adapt_len(task, gpu, &warm.config)),
             // Porting emits the kernel once, without the exploratory chatter
             // of a cold generation.
             tokens_out: self.profile.gen_out_tokens * 0.45,
@@ -214,7 +216,7 @@ impl Coder {
         }
         cfg.legalize(gpu);
         let fb_json = feedback.to_json().to_string();
-        let stats = self.stats_for(&prompts::coder_correction(prev, error_log, &fb_json));
+        let stats = self.stats_for_len(prompts::coder_correction_len(prev, error_log, &fb_json));
         let _ = task;
         (cfg, stats)
     }
@@ -285,7 +287,7 @@ impl Coder {
         }
         cfg.legalize(gpu);
         let fb_json = feedback.to_json().to_string();
-        let stats = self.stats_for(&prompts::coder_optimization(gpu, prev, &fb_json));
+        let stats = self.stats_for_len(prompts::coder_optimization_len(gpu, prev, &fb_json));
         (cfg, stats)
     }
 }

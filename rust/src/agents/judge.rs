@@ -12,7 +12,7 @@
 //! the token bill.
 
 use crate::agents::prompts;
-use crate::agents::{estimate_tokens, CallStats, Feedback, ModelProfile};
+use crate::agents::{estimate_tokens_len, CallStats, Feedback, ModelProfile};
 use crate::gpu::GpuSpec;
 use crate::kernel::transform::Bottleneck;
 use crate::kernel::{Bug, KernelConfig, Opt};
@@ -63,7 +63,7 @@ impl Judge {
         rng: &mut Rng,
     ) -> (Feedback, CallStats) {
         let stats = CallStats {
-            tokens_in: estimate_tokens(&prompts::judge_correction(task, cfg, error_log)),
+            tokens_in: estimate_tokens_len(prompts::judge_correction_len(task, cfg, error_log)),
             tokens_out: self.profile.judge_out_tokens,
         };
         // The most observable defect is the one the log points at.
@@ -119,9 +119,14 @@ impl Judge {
             MetricMode::Subset => ncu::key_subset_indices(),
             MetricMode::Full => (0..ncu::N_METRICS).collect(),
         };
-        let block = ncu::render_block(&indices, metrics);
-        let mut tokens_in =
-            estimate_tokens(&prompts::judge_optimization(task, gpu, cfg, &block));
+        // Stream the prompt (metric block included) through the counting
+        // writer: the token bill is exact, and no prompt text materialises.
+        let mut tokens_in = estimate_tokens_len(prompts::judge_optimization_len(
+            task,
+            gpu,
+            cfg,
+            ncu::MetricBlock { indices: &indices, values: metrics },
+        ));
         if self.mode == MetricMode::Full {
             // The real full NCU dump is ~2000 metrics; our catalog carries the
             // informative core. Account the remaining bulk as tokens (sized so

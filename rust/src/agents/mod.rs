@@ -151,7 +151,15 @@ impl CallStats {
 
 /// Crude-but-stable token estimate (~4 chars/token, the industry heuristic).
 pub fn estimate_tokens(text: &str) -> f64 {
-    text.len() as f64 / 4.0
+    estimate_tokens_len(text.len())
+}
+
+/// The same estimate when only the rendered byte length is known — the hot
+/// path streams prompts through a counting writer (`prompts::LenWriter`)
+/// instead of materialising them, so the estimate costs no allocation while
+/// staying bit-identical to `estimate_tokens` over the rendered string.
+pub fn estimate_tokens_len(len: usize) -> f64 {
+    len as f64 / 4.0
 }
 
 #[cfg(test)]

@@ -6,10 +6,55 @@
 //! would see. The behavioural agents *parse nothing from these strings* —
 //! they receive structured state — but every call renders and accounts them,
 //! exactly like the original system pays for them.
+//!
+//! # The two render paths
+//!
+//! Every template is written once, as a `write_*` function streaming into any
+//! [`std::fmt::Write`] sink. The `String`-returning functions (what the
+//! case-study display uses) stream into a `String`; the `*_len` functions
+//! (what the token accountants on the replay hot path use) stream into a
+//! [`LenWriter`] that counts bytes and stores nothing. Both paths execute the
+//! *same* formatting code, so the accounted length is the materialised
+//! string's length by construction — never a drifting re-implementation —
+//! while the hot path allocates no multi-kilobyte prompt per agent call.
+// The prompts are literal text with embedded newlines; `write!` is the
+// point (one template, two sinks), so the writeln!-style lint is noise here.
+#![allow(clippy::write_with_newline)]
+
+use std::fmt::{self, Write};
 
 use crate::gpu::GpuSpec;
 use crate::kernel::KernelConfig;
 use crate::tasks::TaskSpec;
+
+/// A `fmt::Write` sink that counts bytes and stores nothing. Streaming a
+/// prompt template into it yields the exact rendered length (and therefore
+/// the exact token estimate) without allocating the prompt text — the
+/// replay hot path renders millions of prompts per trace for accounting
+/// only.
+#[derive(Default)]
+pub struct LenWriter(pub usize);
+
+impl fmt::Write for LenWriter {
+    fn write_str(&mut self, s: &str) -> fmt::Result {
+        self.0 += s.len();
+        Ok(())
+    }
+}
+
+/// Render `f` into a [`LenWriter`] and return the byte count.
+fn count<F: FnOnce(&mut LenWriter) -> fmt::Result>(f: F) -> usize {
+    let mut w = LenWriter::default();
+    f(&mut w).expect("LenWriter never fails");
+    w.0
+}
+
+/// Render `f` into a fresh `String`.
+fn render<F: FnOnce(&mut String) -> fmt::Result>(f: F) -> String {
+    let mut s = String::new();
+    f(&mut s).expect("fmt::Write to String never fails");
+    s
+}
 
 /// The one-shot demonstration pair (KernelBench's few-shot example: a
 /// PyTorch module and its custom-CUDA rewrite). Abbreviated but realistic
@@ -32,10 +77,11 @@ add_mod = load_inline(name='add', cpp_sources=cpp_src, cuda_sources=source,\n\
                       functions=['add_cuda'])\n\nclass ModelNew(nn.Module):\n    \
 def forward(self, a, b):\n        return add_mod.add_cuda(a, b)\n";
 
-/// One-shot baseline prompt for the first generation (KernelBench's
-/// one-shot prompt, per Appendix A.1).
-pub fn coder_initial(task: &TaskSpec) -> String {
-    format!(
+/// Stream the one-shot baseline prompt (KernelBench's one-shot prompt, per
+/// Appendix A.1) into `w`.
+pub fn write_coder_initial<W: Write>(w: &mut W, task: &TaskSpec) -> fmt::Result {
+    write!(
+        w,
         "You write custom CUDA kernels to replace the PyTorch operators in the \
          given architecture to get speedups. You have complete freedom to choose \
          the set of operators you want to replace. Consider operator fusion \
@@ -51,16 +97,30 @@ pub fn coder_initial(task: &TaskSpec) -> String {
          code blocks. Please generate real code, NOT pseudocode. Make sure the \
          code compiles and is fully functional. Just output the new model code, \
          no other text, and NO testing code!",
-        arch = arch_src(task),
+        arch = ArchSrc(task),
     )
 }
 
-/// Warm-start adaptation prompt (service layer): port a cached best kernel
-/// onto the current target GPU instead of generating from scratch. Much
-/// shorter than the one-shot prompt — that gap is the service's per-request
-/// token saving.
-pub fn coder_adapt(task: &TaskSpec, gpu: &GpuSpec, cached: &KernelConfig) -> String {
-    format!(
+/// One-shot baseline prompt for the first generation (KernelBench's
+/// one-shot prompt, per Appendix A.1).
+pub fn coder_initial(task: &TaskSpec) -> String {
+    render(|w| write_coder_initial(w, task))
+}
+
+/// Rendered byte length of [`coder_initial`] without materialising it.
+pub fn coder_initial_len(task: &TaskSpec) -> usize {
+    count(|w| write_coder_initial(w, task))
+}
+
+/// Stream the warm-start adaptation prompt into `w`.
+pub fn write_coder_adapt<W: Write>(
+    w: &mut W,
+    task: &TaskSpec,
+    gpu: &GpuSpec,
+    cached: &KernelConfig,
+) -> fmt::Result {
+    write!(
+        w,
         "You previously optimized this operator and the best known kernel is \
          cached below. Port it to the target GPU: keep the algorithmic \
          structure, re-check launch limits (threads per block, shared memory \
@@ -71,14 +131,33 @@ pub fn coder_adapt(task: &TaskSpec, gpu: &GpuSpec, cached: &KernelConfig) -> Str
          The architecture:\n{arch}\n\n\
          Cached best kernel:\n{src}",
         spec = gpu.spec_sheet_cached(),
-        arch = arch_src(task),
-        src = cuda_src(cached),
+        arch = ArchSrc(task),
+        src = CudaSrc(cached),
     )
 }
 
-/// Judge prompt, correction mode (Appendix A.2, "CUDA Kernel Correction").
-pub fn judge_correction(task: &TaskSpec, cfg: &KernelConfig, error_log: &str) -> String {
-    format!(
+/// Warm-start adaptation prompt (service layer): port a cached best kernel
+/// onto the current target GPU instead of generating from scratch. Much
+/// shorter than the one-shot prompt — that gap is the service's per-request
+/// token saving.
+pub fn coder_adapt(task: &TaskSpec, gpu: &GpuSpec, cached: &KernelConfig) -> String {
+    render(|w| write_coder_adapt(w, task, gpu, cached))
+}
+
+/// Rendered byte length of [`coder_adapt`] without materialising it.
+pub fn coder_adapt_len(task: &TaskSpec, gpu: &GpuSpec, cached: &KernelConfig) -> usize {
+    count(|w| write_coder_adapt(w, task, gpu, cached))
+}
+
+/// Stream the correction-mode Judge prompt into `w`.
+pub fn write_judge_correction<W: Write>(
+    w: &mut W,
+    task: &TaskSpec,
+    cfg: &KernelConfig,
+    error_log: &str,
+) -> fmt::Result {
+    write!(
+        w,
         "You are a senior CUDA + PyTorch correctness auditor. Your job is to \
          read a PyTorch reference and a CUDA candidate and report exactly one \
          most critical correctness issue in the CUDA code that would cause a \
@@ -96,19 +175,33 @@ pub fn judge_correction(task: &TaskSpec, cfg: &KernelConfig, error_log: &str) ->
          PyTorch reference (ground truth):\n{arch}\n\n\
          CUDA candidate (to audit):\n{cuda}\n\n\
          Follow the Rules and produce the JSON exactly in the specified format.",
-        arch = arch_src(task),
-        cuda = cuda_src(cfg),
+        arch = ArchSrc(task),
+        cuda = CudaSrc(cfg),
     )
 }
 
-/// Judge prompt, optimization mode (Appendix A.2, "CUDA Kernel Optimization").
-pub fn judge_optimization(
+/// Judge prompt, correction mode (Appendix A.2, "CUDA Kernel Correction").
+pub fn judge_correction(task: &TaskSpec, cfg: &KernelConfig, error_log: &str) -> String {
+    render(|w| write_judge_correction(w, task, cfg, error_log))
+}
+
+/// Rendered byte length of [`judge_correction`] without materialising it.
+pub fn judge_correction_len(task: &TaskSpec, cfg: &KernelConfig, error_log: &str) -> usize {
+    count(|w| write_judge_correction(w, task, cfg, error_log))
+}
+
+/// Stream the optimization-mode Judge prompt into `w`. `metrics` is any
+/// displayable metric block — a rendered `&str`, or `ncu::MetricBlock` to
+/// stream the block without materialising it either.
+pub fn write_judge_optimization<W: Write, M: fmt::Display>(
+    w: &mut W,
     task: &TaskSpec,
     gpu: &GpuSpec,
     cfg: &KernelConfig,
-    metric_block: &str,
-) -> String {
-    format!(
+    metrics: M,
+) -> fmt::Result {
+    write!(
+        w,
         "You are a senior CUDA performance engineer. Read the target GPU spec, \
          the PyTorch reference code, the current CUDA candidate, and the Nsight \
          Compute metrics. Then identify exactly one highest-impact speed \
@@ -133,15 +226,41 @@ pub fn judge_optimization(
          Read everything and follow the Rules exactly. Return the JSON in the \
          specified format.",
         spec = gpu.spec_sheet_cached(),
-        arch = arch_src(task),
-        cuda = cuda_src(cfg),
-        metrics = metric_block,
+        arch = ArchSrc(task),
+        cuda = CudaSrc(cfg),
+        metrics = metrics,
     )
 }
 
-/// Coder prompt, rounds 2..N, correction (Appendix A.3).
-pub fn coder_correction(cfg: &KernelConfig, error_log: &str, problem_json: &str) -> String {
-    format!(
+/// Judge prompt, optimization mode (Appendix A.2, "CUDA Kernel Optimization").
+pub fn judge_optimization(
+    task: &TaskSpec,
+    gpu: &GpuSpec,
+    cfg: &KernelConfig,
+    metric_block: &str,
+) -> String {
+    render(|w| write_judge_optimization(w, task, gpu, cfg, metric_block))
+}
+
+/// Rendered byte length of [`judge_optimization`] without materialising it.
+pub fn judge_optimization_len<M: fmt::Display>(
+    task: &TaskSpec,
+    gpu: &GpuSpec,
+    cfg: &KernelConfig,
+    metrics: M,
+) -> usize {
+    count(|w| write_judge_optimization(w, task, gpu, cfg, metrics))
+}
+
+/// Stream the rounds-2..N correction Coder prompt into `w`.
+pub fn write_coder_correction<W: Write>(
+    w: &mut W,
+    cfg: &KernelConfig,
+    error_log: &str,
+    problem_json: &str,
+) -> fmt::Result {
+    write!(
+        w,
         "You are a senior CUDA-extension developer. Your job is to FIX the \
          compilation or runtime errors in the Python script shown below.\n\n\
          OUTPUT RULES (STRICT)\n\
@@ -154,17 +273,29 @@ pub fn coder_correction(cfg: &KernelConfig, error_log: &str, problem_json: &str)
          OLD CODE (read-only)\n{cuda}\n\n\
          Main Critical Problem\n{problem_json}\n\n\
          Output Section (to be generated):\n# <your corrected code>",
-        cuda = cuda_src(cfg),
+        cuda = CudaSrc(cfg),
     )
 }
 
-/// Coder prompt, rounds 2..N, optimization (Appendix A.3).
-pub fn coder_optimization(
+/// Coder prompt, rounds 2..N, correction (Appendix A.3).
+pub fn coder_correction(cfg: &KernelConfig, error_log: &str, problem_json: &str) -> String {
+    render(|w| write_coder_correction(w, cfg, error_log, problem_json))
+}
+
+/// Rendered byte length of [`coder_correction`] without materialising it.
+pub fn coder_correction_len(cfg: &KernelConfig, error_log: &str, problem_json: &str) -> usize {
+    count(|w| write_coder_correction(w, cfg, error_log, problem_json))
+}
+
+/// Stream the rounds-2..N optimization Coder prompt into `w`.
+pub fn write_coder_optimization<W: Write>(
+    w: &mut W,
     gpu: &GpuSpec,
     cfg: &KernelConfig,
     suggestion_json: &str,
-) -> String {
-    format!(
+) -> fmt::Result {
+    write!(
+        w,
         "Target GPU\n{spec}\n\n\
          You are a CUDA-kernel optimization specialist.\n\
          Analyze the provided architecture and strictly apply the following \
@@ -181,72 +312,116 @@ pub fn coder_optimization(
          2. Do NOT include testing code or extra prose.\n\n\
          Output Section (to be generated):\n# <your corrected code>",
         spec = gpu.spec_sheet_cached(),
-        cuda = cuda_src(cfg),
+        cuda = CudaSrc(cfg),
     )
+}
+
+/// Coder prompt, rounds 2..N, optimization (Appendix A.3).
+pub fn coder_optimization(
+    gpu: &GpuSpec,
+    cfg: &KernelConfig,
+    suggestion_json: &str,
+) -> String {
+    render(|w| write_coder_optimization(w, gpu, cfg, suggestion_json))
+}
+
+/// Rendered byte length of [`coder_optimization`] without materialising it.
+pub fn coder_optimization_len(
+    gpu: &GpuSpec,
+    cfg: &KernelConfig,
+    suggestion_json: &str,
+) -> usize {
+    count(|w| write_coder_optimization(w, gpu, cfg, suggestion_json))
+}
+
+/// Display adapter streaming the synthetic PyTorch "reference source" for a
+/// task — the same bytes [`arch_src`] returns, without the intermediate
+/// `String` (task cards in KernelBench are 0.5-3 KB).
+pub struct ArchSrc<'a>(pub &'a TaskSpec);
+
+impl fmt::Display for ArchSrc<'_> {
+    fn fmt(&self, w: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let task = self.0;
+        write!(
+            w,
+            "# KernelBench task {} ({}), level {}\n\
+             # flops={:.3e} bytes={:.3e} stages={} tc_eligible={}\n\
+             import torch\nimport torch.nn as nn\n\n\
+             class Model(nn.Module):\n    def __init__(self):\n        \
+             super().__init__()\n        # {} reference pipeline\n\n    \
+             def forward(self, x):\n",
+            task.id(),
+            task.name,
+            task.level,
+            task.flops,
+            task.ideal_bytes,
+            task.stages,
+            task.tc_eligible,
+            task.name,
+        )?;
+        for s in 0..task.stages.min(12) {
+            write!(
+                w,
+                "        x = self.stage_{s}(x)  # {} op, stage {s}\n",
+                task.op_class.name()
+            )?;
+        }
+        w.write_str("        return x\n")
+    }
 }
 
 /// Synthetic PyTorch "reference source" for a task — sized realistically so
 /// token accounting is honest (task cards in KernelBench are 0.5-3 KB).
 pub fn arch_src(task: &TaskSpec) -> String {
-    let mut body = String::with_capacity(64 * task.stages.min(12) as usize);
-    for s in 0..task.stages.min(12) {
-        body.push_str(&format!(
-            "        x = self.stage_{s}(x)  # {} op, stage {s}\n",
-            task.op_class.name()
-        ));
+    ArchSrc(task).to_string()
+}
+
+/// Display adapter streaming the synthetic "CUDA candidate source" for a
+/// config — the same bytes [`cuda_src`] returns, without the intermediate
+/// `String`.
+pub struct CudaSrc<'a>(pub &'a KernelConfig);
+
+impl fmt::Display for CudaSrc<'_> {
+    fn fmt(&self, w: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let cfg = self.0;
+        write!(
+            w,
+            "// candidate kernel (configuration fingerprint)\n\
+             // {desc}\n\
+             __global__ void kernel(const float* __restrict__ in, float* out) {{\n",
+            desc = cfg.describe(),
+        )?;
+        write!(
+            w,
+            "  // launch: {} threads/block, tile {}x{}x{}\n",
+            cfg.block_threads, cfg.tile_m, cfg.tile_n, cfg.tile_k
+        )?;
+        if cfg.use_smem {
+            w.write_str(
+                "  __shared__ float a_tile[TM][TK]; __shared__ float b_tile[TK][TN];\n",
+            )?;
+        }
+        for _ in 0..cfg.syncs_per_tile.min(16) {
+            w.write_str("  __syncthreads();\n")?;
+        }
+        if cfg.warp_shuffle {
+            w.write_str("  v += __shfl_down_sync(0xffffffff, v, offset);\n")?;
+        }
+        if cfg.use_tensor_cores {
+            w.write_str("  wmma::mma_sync(acc, a_frag, b_frag, acc);\n")?;
+        }
+        for p in 0..cfg.extra_global_passes {
+            write!(w, "  // pass {} re-reads input from global\n", p + 2)?;
+        }
+        w.write_str("}\n")
     }
-    format!(
-        "# KernelBench task {} ({}), level {}\n\
-         # flops={:.3e} bytes={:.3e} stages={} tc_eligible={}\n\
-         import torch\nimport torch.nn as nn\n\n\
-         class Model(nn.Module):\n    def __init__(self):\n        \
-         super().__init__()\n        # {} reference pipeline\n\n    \
-         def forward(self, x):\n{body}        return x\n",
-        task.id(),
-        task.name,
-        task.level,
-        task.flops,
-        task.ideal_bytes,
-        task.stages,
-        task.tc_eligible,
-        task.name,
-    )
 }
 
 /// Synthetic "CUDA candidate source" for a config — again sized realistically
 /// (a candidate kernel is 2-6 KB); content mirrors the config so the Judge
 /// prompt genuinely encodes the kernel state.
 pub fn cuda_src(cfg: &KernelConfig) -> String {
-    format!(
-        "// candidate kernel (configuration fingerprint)\n\
-         // {desc}\n\
-         __global__ void kernel(const float* __restrict__ in, float* out) {{\n\
-         {body}}}\n",
-        desc = cfg.describe(),
-        body = {
-            let mut b = String::with_capacity(256 + 24 * cfg.syncs_per_tile as usize);
-            b.push_str(&format!(
-                "  // launch: {} threads/block, tile {}x{}x{}\n",
-                cfg.block_threads, cfg.tile_m, cfg.tile_n, cfg.tile_k
-            ));
-            if cfg.use_smem {
-                b.push_str("  __shared__ float a_tile[TM][TK]; __shared__ float b_tile[TK][TN];\n");
-            }
-            for _ in 0..cfg.syncs_per_tile.min(16) {
-                b.push_str("  __syncthreads();\n");
-            }
-            if cfg.warp_shuffle {
-                b.push_str("  v += __shfl_down_sync(0xffffffff, v, offset);\n");
-            }
-            if cfg.use_tensor_cores {
-                b.push_str("  wmma::mma_sync(acc, a_frag, b_frag, acc);\n");
-            }
-            for p in 0..cfg.extra_global_passes {
-                b.push_str(&format!("  // pass {} re-reads input from global\n", p + 2));
-            }
-            b
-        }
-    )
+    CudaSrc(cfg).to_string()
 }
 
 #[cfg(test)]
@@ -293,5 +468,38 @@ mod tests {
         let p = judge_optimization(&t, &RTX6000_ADA, &cfg, &"m: 1.0\n".repeat(24));
         let tokens = crate::agents::estimate_tokens(&p);
         assert!(tokens > 500.0 && tokens < 5000.0, "{tokens}");
+    }
+
+    /// The load-bearing contract of the two-path design: the counted length
+    /// IS the materialised length, for every template. If a template and its
+    /// `_len` twin ever diverge, token accounting (and therefore every
+    /// reported API-cost number) drifts.
+    #[test]
+    fn counted_lengths_match_rendered_strings() {
+        let t = by_id("L3-5").unwrap();
+        let g = &RTX6000_ADA;
+        let mut cfg = KernelConfig::naive();
+        cfg.use_smem = true;
+        cfg.syncs_per_tile = 5;
+        cfg.extra_global_passes = 2;
+        assert_eq!(coder_initial_len(&t), coder_initial(&t).len());
+        assert_eq!(coder_adapt_len(&t, g, &cfg), coder_adapt(&t, g, &cfg).len());
+        assert_eq!(
+            judge_correction_len(&t, &cfg, "Outputs are not close"),
+            judge_correction(&t, &cfg, "Outputs are not close").len()
+        );
+        let block = "m: 1.0\n".repeat(24);
+        assert_eq!(
+            judge_optimization_len(&t, g, &cfg, block.as_str()),
+            judge_optimization(&t, g, &cfg, &block).len()
+        );
+        assert_eq!(
+            coder_correction_len(&cfg, "log", "{}"),
+            coder_correction(&cfg, "log", "{}").len()
+        );
+        assert_eq!(
+            coder_optimization_len(g, &cfg, "{}"),
+            coder_optimization(g, &cfg, "{}").len()
+        );
     }
 }

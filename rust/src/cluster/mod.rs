@@ -90,19 +90,21 @@ pub mod router;
 pub mod scenario;
 pub mod snapshot;
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 use std::path::Path;
 
 use anyhow::Result;
 
 use crate::service::cache::{CacheEntry, ResultCache};
 use crate::service::fingerprint::Fingerprint;
-use crate::service::pool::{FleetHooks, FleetSim, SimCompletion, SimFlight};
+use crate::service::pool::{FleetHooks, FleetSim, MemberList, SimCompletion, SimFlight};
 use crate::service::queue::Priority;
 use crate::service::traffic::TrafficRequest;
 use crate::service::{
-    admit_event, flight_complete_event, per_priority_report, settle_flight_completion,
-    speculate_window, PendingRun, ReplayStats, RunMemo, ServiceConfig, ServiceReport,
+    admit_event, flight_complete_event, intern_fingerprints, per_priority_report,
+    settle_flight_completion, speculate_window, PendingRun, ReplayStats, RunMemo, ServiceConfig,
+    ServiceReport,
 };
 use crate::tasks::TaskSpec;
 use crate::trace::profile::Stage;
@@ -562,6 +564,16 @@ struct ClusterHooks<'a, 'o> {
     /// loop in timestamp order, before fleet events at the same instant.
     pending_refills: BTreeMap<(u64, u64), (usize, usize, CacheEntry)>,
     refill_seq: u64,
+    /// The global event heap over node fleets: min-heap entries
+    /// `(t bits, kind, node, version)` with kind 1 = completion, 2 = start —
+    /// the same `(t, kind, node)` total order the per-node linear scan used,
+    /// minus the O(nodes) scan per event. Entries are validated lazily: one
+    /// is current iff its version stamp still equals its fleet's mutation
+    /// counter ([`FleetSim::version`]); stale entries (the fleet mutated
+    /// since the push) are popped and the fleet re-armed on sight. Every
+    /// fleet mutation site pushes a fresh entry, so the current next event
+    /// of every non-idle fleet is always represented.
+    event_heap: BinaryHeap<Reverse<(u64, u8, u32, u64)>>,
     /// Alive-node-seconds accrued so far (piecewise-constant integral of
     /// the alive count over simulated time, advanced at each membership
     /// change and closed out at the fleet makespan).
@@ -583,6 +595,19 @@ impl ClusterHooks<'_, '_> {
         let dt = (now - self.node_seconds_at).max(0.0);
         self.node_seconds += self.membership.alive_count() as f64 * dt;
         self.node_seconds_at = self.node_seconds_at.max(now);
+    }
+
+    /// Push node `ni`'s current next event onto the global heap, stamped
+    /// with the fleet's mutation counter. Must be called after every fleet
+    /// mutation (submit, join, fired step) so the heap always holds a
+    /// current entry for each non-idle fleet; duplicate pushes at the same
+    /// version are identical tuples and harmless.
+    fn arm_fleet(&mut self, fleets: &[FleetSim], ni: usize) {
+        if let Some((t, is_completion)) = fleets[ni].next_event() {
+            let kind = if is_completion { 1 } else { 2 };
+            self.event_heap
+                .push(Reverse((t.to_bits(), kind, ni as u32, fleets[ni].version())));
+        }
     }
 }
 
@@ -656,12 +681,19 @@ impl FleetHooks for ClusterHooks<'_, '_> {
         let leader = flight.leader_seq;
         let margin = self.config.warm_locality_margin;
         // Owned copies of what the emission needs, so the shard borrow can
-        // end before the event closure runs.
+        // end before the event closure runs. Built only when a sink is
+        // recording: the untraced hot path must not pay the fingerprint
+        // Display round-trip or the gpu-key clone (the hex form is rendered
+        // at most once per event, inside the closure below).
         let own_speedup = choice.own_speedup;
         let remote = choice.remote;
-        let pick_info: Option<(usize, f64, String, String)> = choice.pick.map(|(owner, e)| {
-            (owner, e.best_speedup, e.fingerprint.to_string(), e.gpu_key.clone())
-        });
+        let pick_info: Option<(usize, f64, Fingerprint, String)> = if self.obs.enabled() {
+            choice
+                .pick
+                .map(|(owner, e)| (owner, e.best_speedup, e.fingerprint, e.gpu_key.clone()))
+        } else {
+            None
+        };
         let (wf, cross) = match choice.pick {
             Some((owner, entry)) => {
                 // The causality contract: a warm seed's producing flight —
@@ -692,7 +724,7 @@ impl FleetHooks for ClusterHooks<'_, '_> {
                     .field("remote_node", Json::num(owner as f64))
                     .field("remote_speedup", Json::num(speedup))
                     .field("margin", Json::num(margin))
-                    .field("source_fp", Json::str(source_fp))
+                    .field("source_fp", Json::str(source_fp.to_string()))
                     .field("source_gpu", Json::str(source_gpu));
             }
             let ev =
@@ -705,7 +737,7 @@ impl FleetHooks for ClusterHooks<'_, '_> {
                     .field("remote_speedup", Json::num(rs))
                     .field("margin", Json::num(margin)),
                 None => ev
-                    .field("source_fp", Json::str(source_fp))
+                    .field("source_fp", Json::str(source_fp.to_string()))
                     .field("source_gpu", Json::str(source_gpu)),
             }
         });
@@ -818,28 +850,52 @@ impl FleetHooks for ClusterHooks<'_, '_> {
 /// index — so a flight starting on node A at instant `t` observes exactly
 /// the side effects of every flight completed, and every transfer landed,
 /// by `t`.
+///
+/// Fleet events come from the persistent global heap
+/// (`ClusterHooks::event_heap`), not a per-event scan over every node:
+/// selecting the next event is O(log events) however many nodes the
+/// cluster has. The heap key `(t bits, kind, node)` is exactly the total
+/// order the old scan minimized over (`f64::to_bits` orders like the value
+/// for the non-negative finite instants the simulation produces), so the
+/// firing sequence — and therefore every reported number — is unchanged.
 fn advance_cluster(fleets: &mut [FleetSim], now: f64, hooks: &mut ClusterHooks<'_, '_>) {
     loop {
-        // (instant, kind, node): kind 0 = refill landing, 1 = completion,
-        // 2 = start.
-        let mut best: Option<(f64, u8, usize)> = None;
-        if let Some(((bits, _), _)) = hooks.pending_refills.first_key_value() {
-            best = Some((f64::from_bits(*bits), 0, 0));
-        }
-        for (ni, fleet) in fleets.iter().enumerate() {
-            if let Some((t, is_completion)) = fleet.next_event() {
-                let key = (t, if is_completion { 1 } else { 2 }, ni);
-                let earlier = match best {
-                    None => true,
-                    Some(b) => key < b,
-                };
-                if earlier {
-                    best = Some(key);
+        // Validate the heap top lazily: an entry is current iff its version
+        // stamp still equals its fleet's mutation counter. A stale entry is
+        // discarded and its fleet re-armed (at most one stale entry dies
+        // per iteration, so the loop terminates).
+        let fleet_best = loop {
+            match hooks.event_heap.peek() {
+                None => break None,
+                Some(&Reverse((bits, kind, ni, version))) => {
+                    if fleets[ni as usize].version() == version {
+                        break Some((bits, kind, ni));
+                    }
+                    hooks.event_heap.pop();
+                    hooks.arm_fleet(fleets, ni as usize);
                 }
             }
+        };
+        let refill_bits = hooks.pending_refills.first_key_value().map(|((bits, _), _)| *bits);
+        // kind 0 = refill landing, 1 = completion, 2 = start: a refill at
+        // an instant beats any fleet event at the same instant.
+        let (t_bits, fire_fleet) = match (refill_bits, fleet_best) {
+            (None, None) => break,
+            (Some(rb), None) => (rb, None),
+            (None, Some((bits, _, ni))) => (bits, Some(ni)),
+            (Some(rb), Some((bits, kind, ni))) => {
+                if (rb, 0u8) <= (bits, kind) {
+                    (rb, None)
+                } else {
+                    (bits, Some(ni))
+                }
+            }
+        };
+        if f64::from_bits(t_bits) > now {
+            break;
         }
-        match best {
-            Some((t, 0, _)) if t <= now => {
+        match fire_fleet {
+            None => {
                 let ((bits, _), (node, from, entry)) = hooks
                     .pending_refills
                     .pop_first()
@@ -865,12 +921,14 @@ fn advance_cluster(fleets: &mut [FleetSim], now: f64, hooks: &mut ClusterHooks<'
                     }
                 }
             }
-            Some((t, _, ni)) if t <= now => {
+            Some(ni) => {
+                let ni = ni as usize;
+                hooks.event_heap.pop();
                 hooks.node = ni;
                 let fired = fleets[ni].step(now, &mut *hooks);
                 debug_assert!(fired, "the peeked event fires");
+                hooks.arm_fleet(fleets, ni);
             }
-            _ => break,
         }
     }
 }
@@ -1462,6 +1520,13 @@ impl ClusterService {
         for (ni, fleet) in fleets.iter_mut().enumerate() {
             fleet.set_service_multiplier(config.node_multiplier(ni));
         }
+        // Intern once, probe by id: each distinct (task, gpu) pair is
+        // hashed exactly once, and the admission loop reads the per-request
+        // column instead of recomputing digests per arrival.
+        obs.enter(Stage::Fingerprint);
+        let fps = intern_fingerprints(&config.service, trace, tasks);
+        obs.exit(Stage::Fingerprint);
+
         let mut rejected = 0u64;
         let mut rejected_by_class = [0u64; 3];
         let mut tenant_requests = vec![0usize; n_tenants];
@@ -1500,6 +1565,7 @@ impl ClusterService {
             remiss_open: BTreeMap::new(),
             pending_refills: BTreeMap::new(),
             refill_seq: 0,
+            event_heap: BinaryHeap::new(),
             node_seconds: 0.0,
             node_seconds_at: 0.0,
             obs: &mut *obs,
@@ -1523,35 +1589,45 @@ impl ClusterService {
                 hooks.memo.retain(|fp| {
                     fleets.iter().any(|f| f.is_waiting(fp) || f.is_running(fp))
                 });
-                speculate_window(&mut hooks.memo, threads, tasks, oracle, win, c, |fp, req| {
-                    let ni = router.route(fp, &alive)?;
-                    if caches[ni].peek(fp).is_some()
-                        || fleets[ni].is_waiting(fp)
-                        || fleets[ni].is_running(fp)
-                    {
-                        return None;
-                    }
-                    // A batch request arriving into a full backlog will be
-                    // shed — don't burn a speculative run on it.
-                    if req.priority == Priority::Batch && fleets[ni].depth() >= queue_depth {
-                        return None;
-                    }
-                    let base = c.base_workflow(req.gpu);
-                    Some(
-                        match warm_candidate_across(
-                            caches,
-                            c,
-                            &tasks[req.task_index].id(),
-                            req.gpu.key,
-                            &alive,
-                            ni,
-                            margin,
-                        ) {
-                            Some((_, entry)) => c.warm_start_from(base, entry),
-                            None => base,
-                        },
-                    )
-                });
+                speculate_window(
+                    &mut hooks.memo,
+                    threads,
+                    tasks,
+                    oracle,
+                    win,
+                    &fps[w0..w0 + win.len()],
+                    |fp, req| {
+                        let ni = router.route(fp, &alive)?;
+                        if caches[ni].peek(fp).is_some()
+                            || fleets[ni].is_waiting(fp)
+                            || fleets[ni].is_running(fp)
+                        {
+                            return None;
+                        }
+                        // A batch request arriving into a full backlog will
+                        // be shed — don't burn a speculative run on it.
+                        if req.priority == Priority::Batch
+                            && fleets[ni].depth() >= queue_depth
+                        {
+                            return None;
+                        }
+                        let base = c.base_workflow(req.gpu);
+                        Some(
+                            match warm_candidate_across(
+                                caches,
+                                c,
+                                &tasks[req.task_index].id(),
+                                req.gpu.key,
+                                &alive,
+                                ni,
+                                margin,
+                            ) {
+                                Some((_, entry)) => c.warm_start_from(base, entry),
+                                None => base,
+                            },
+                        )
+                    },
+                );
             }
             hooks.obs.exit(Stage::Speculation);
 
@@ -1657,7 +1733,7 @@ impl ClusterService {
                 hooks.obs.exit(Stage::EventHeap);
                 hooks.obs.enter(Stage::Fingerprint);
                 let task = &tasks[req.task_index];
-                let fp = config.service.fingerprint_of(task, req.gpu);
+                let fp = fps[seq as usize];
                 hooks.obs.exit(Stage::Fingerprint);
                 hooks.count_rehashed(fp);
                 // Every arrival is this tenant's traffic, even one the
@@ -1680,6 +1756,10 @@ impl ClusterService {
                 };
                 hooks.per_node[ni].requests += 1;
                 let fleet = &mut fleets[ni];
+                // Whether this arrival mutated the fleet (join or submit) —
+                // those decisions invalidate the node's event-heap entry, so
+                // the fleet is re-armed below.
+                let mut fleet_mutated = true;
                 // Single-flight joins first: identical work waiting or on a
                 // worker is shared, not redone. Joiners settle with the
                 // flight at its completion.
@@ -1692,6 +1772,7 @@ impl ClusterService {
                         .obs
                         .emit(|| admit_event(now, ni, seq, fp, req, task, depth, outcome));
                 } else if let Some(entry) = hooks.caches[ni].get(fp) {
+                    fleet_mutated = false;
                     if let Some(done) = hooks.visible_at.get(&fp) {
                         debug_assert!(
                             *done <= now,
@@ -1714,6 +1795,7 @@ impl ClusterService {
                     // free.
                     let over = fleet.depth() >= queue_depth;
                     if over && req.priority == Priority::Batch {
+                        fleet_mutated = false;
                         hooks.per_node[ni].rejected += 1;
                         rejected += 1;
                         rejected_by_class[req.priority as usize] += 1;
@@ -1727,6 +1809,7 @@ impl ClusterService {
                         && quotas_on
                         && hooks.per_node[ni].backlog_by_tenant[t] >= quotas[t]
                     {
+                        fleet_mutated = false;
                         hooks.per_node[ni].rejected += 1;
                         rejected += 1;
                         rejected_by_class[req.priority as usize] += 1;
@@ -1751,7 +1834,7 @@ impl ClusterService {
                             leader_seq: seq,
                             tenant: t,
                             arrival_s: now,
-                            members: vec![(seq, now)],
+                            members: MemberList::one(seq, now),
                         });
                         hooks.per_node[ni].backlog_by_tenant[t] += 1;
                         let depth = fleet.depth();
@@ -1762,8 +1845,12 @@ impl ClusterService {
                 }
                 // Every admission decision samples this node's backlog —
                 // hits, joins, and sheds included.
+                let depth_now = fleets[ni].depth();
                 let nc = &mut hooks.per_node[ni];
-                nc.peak_depth = nc.peak_depth.max(fleet.depth());
+                nc.peak_depth = nc.peak_depth.max(depth_now);
+                if fleet_mutated {
+                    hooks.arm_fleet(&fleets, ni);
+                }
             }
             hooks.obs.exit(Stage::Admission);
         }
@@ -1856,24 +1943,29 @@ impl ClusterService {
             })
             .collect();
 
+        // One pass over the trace bins every tenant's served latencies and
+        // SLO-within counts at once — the old path re-filtered the full
+        // trace twice per tenant, an O(tenants × requests) report step.
+        // Per-tenant latencies accumulate in arrival order, exactly what
+        // the per-tenant filter produced, and `percentile` sorts a copy
+        // internally — bit-identical.
+        let mut tenant_lat: Vec<Vec<f64>> = vec![Vec::new(); n_tenants];
+        let mut tenant_within: Vec<usize> = vec![0; n_tenants];
+        for (r, l) in trace.iter().zip(&latencies) {
+            if let Some(v) = *l {
+                let t = r.tenant.min(n_tenants - 1);
+                tenant_lat[t].push(v);
+                if v <= slo.target_s(r.priority) {
+                    tenant_within[t] += 1;
+                }
+            }
+        }
         let per_tenant: Vec<TenantReport> = config
             .tenants
             .iter()
             .enumerate()
             .map(|(t, spec)| {
-                let lat: Vec<f64> = trace
-                    .iter()
-                    .zip(&latencies)
-                    .filter(|(r, _)| r.tenant.min(n_tenants - 1) == t)
-                    .filter_map(|(_, l)| *l)
-                    .collect();
-                let within = trace
-                    .iter()
-                    .zip(&latencies)
-                    .filter(|(r, _)| r.tenant.min(n_tenants - 1) == t)
-                    .filter_map(|(r, l)| l.map(|v| (r.priority, v)))
-                    .filter(|(p, v)| *v <= slo.target_s(*p))
-                    .count();
+                let lat = &tenant_lat[t];
                 TenantReport {
                     tenant: spec.name.clone(),
                     weight: spec.weight,
@@ -1881,13 +1973,13 @@ impl ClusterService {
                     served: lat.len(),
                     rejected: tenant_rejected[t],
                     quota_shed: tenant_quota_shed[t],
-                    p50_latency_s: percentile(&lat, 50.0),
-                    p95_latency_s: percentile(&lat, 95.0),
-                    p99_latency_s: percentile(&lat, 99.0),
+                    p50_latency_s: percentile(lat, 50.0),
+                    p95_latency_s: percentile(lat, 95.0),
+                    p99_latency_s: percentile(lat, 99.0),
                     slo_attainment: if lat.is_empty() {
                         1.0
                     } else {
-                        within as f64 / lat.len() as f64
+                        tenant_within[t] as f64 / lat.len() as f64
                     },
                 }
             })

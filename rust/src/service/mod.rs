@@ -88,7 +88,9 @@ use std::collections::{BTreeMap, BTreeSet};
 use crate::agents::ModelProfile;
 use crate::service::cache::{CacheEntry, ResultCache};
 use crate::service::fingerprint::Fingerprint;
-use crate::service::pool::{run_indexed, FleetHooks, FleetSim, SimCompletion, SimFlight};
+use crate::service::pool::{
+    run_indexed, FleetHooks, FleetSim, MemberList, SimCompletion, SimFlight,
+};
 use crate::service::queue::{Priority, ALL_PRIORITIES};
 use crate::service::traffic::TrafficRequest;
 use crate::tasks::TaskSpec;
@@ -381,8 +383,8 @@ pub(crate) fn settle_flight_completion(
 ) -> Option<CacheEntry> {
     // No answer is faster than a cache hit: member latencies floor there (a
     // follower can join moments before the flight lands).
-    for (seq, arrival) in &flight.members {
-        stats.latencies[*seq as usize] =
+    for (seq, arrival) in flight.members.iter() {
+        stats.latencies[seq as usize] =
             Some((done.completion_s - arrival).max(config.hit_latency_s));
     }
     stats.shared += (flight.members.len() - 1) as u64;
@@ -482,8 +484,8 @@ pub(crate) fn flight_complete_event(
                     .iter()
                     .map(|(seq, arrival)| {
                         Json::obj(vec![
-                            ("seq", Json::num(*seq as f64)),
-                            ("arrival_s", Json::num(*arrival)),
+                            ("seq", Json::num(seq as f64)),
+                            ("arrival_s", Json::num(arrival)),
                         ])
                     })
                     .collect(),
@@ -499,31 +501,60 @@ pub(crate) fn per_priority_report(
     slo: &SloTargets,
     rejected_by_class: &[u64; 3],
 ) -> Vec<PriorityClassReport> {
-    ALL_PRIORITIES
-        .iter()
-        .map(|p| {
-            let class: Vec<f64> = trace
-                .iter()
-                .zip(latencies)
-                .filter(|(r, _)| r.priority == *p)
-                .filter_map(|(_, l)| *l)
-                .collect();
-            let target = slo.target_s(*p);
-            let attainment = if class.is_empty() {
-                1.0
-            } else {
-                class.iter().filter(|l| **l <= target).count() as f64 / class.len() as f64
-            };
-            PriorityClassReport {
-                priority: *p,
-                requests: trace.iter().filter(|r| r.priority == *p).count(),
-                rejected: rejected_by_class[*p as usize],
-                p50_latency_s: percentile(&class, 50.0),
-                p95_latency_s: percentile(&class, 95.0),
-                p99_latency_s: percentile(&class, 99.0),
-                slo_target_s: target,
-                slo_attainment: attainment,
+    // One scratch buffer serves every class's percentile input, so the
+    // report costs a constant number of allocations regardless of trace
+    // length. `percentile` sorts a copy internally, so collecting in
+    // arrival order matches the old per-class filter — bit-identical.
+    let mut class: Vec<f64> = Vec::new();
+    let mut out = Vec::with_capacity(ALL_PRIORITIES.len());
+    for p in ALL_PRIORITIES.iter() {
+        class.clear();
+        let mut requests = 0usize;
+        for (r, l) in trace.iter().zip(latencies) {
+            if r.priority == *p {
+                requests += 1;
+                if let Some(l) = *l {
+                    class.push(l);
+                }
             }
+        }
+        let target = slo.target_s(*p);
+        let attainment = if class.is_empty() {
+            1.0
+        } else {
+            class.iter().filter(|l| **l <= target).count() as f64 / class.len() as f64
+        };
+        out.push(PriorityClassReport {
+            priority: *p,
+            requests,
+            rejected: rejected_by_class[*p as usize],
+            p50_latency_s: percentile(&class, 50.0),
+            p95_latency_s: percentile(&class, 95.0),
+            p99_latency_s: percentile(&class, 99.0),
+            slo_target_s: target,
+            slo_attainment: attainment,
+        });
+    }
+    out
+}
+
+/// Compute every request's fingerprint exactly once per replay: distinct
+/// `(task, gpu)` pairs are hashed once and the per-request column is filled
+/// from the memo. The u64 [`Fingerprint`] itself is the interned id — it
+/// keys every downstream probe (cache, router, single-flight, warm lookup)
+/// without a secondary id space, and stays the on-disk snapshot format.
+pub(crate) fn intern_fingerprints(
+    config: &ServiceConfig,
+    trace: &[TrafficRequest],
+    tasks: &[TaskSpec],
+) -> Vec<Fingerprint> {
+    let mut memo: BTreeMap<(usize, &str), Fingerprint> = BTreeMap::new();
+    trace
+        .iter()
+        .map(|req| {
+            *memo
+                .entry((req.task_index, req.gpu.key))
+                .or_insert_with(|| config.fingerprint_of(&tasks[req.task_index], req.gpu))
         })
         .collect()
 }
@@ -592,13 +623,13 @@ pub(crate) fn speculate_window(
     tasks: &[TaskSpec],
     oracle: &dyn CorrectnessOracle,
     win: &[TrafficRequest],
-    config: &ServiceConfig,
+    win_fps: &[Fingerprint],
     mut predict: impl FnMut(Fingerprint, &TrafficRequest) -> Option<WorkflowConfig>,
 ) {
+    debug_assert_eq!(win.len(), win_fps.len(), "fingerprint column aligns with the window");
     let mut seen: BTreeSet<Fingerprint> = BTreeSet::new();
     let mut spec: Vec<(Fingerprint, WorkflowConfig, usize)> = Vec::new();
-    for req in win {
-        let fp = config.fingerprint_of(&tasks[req.task_index], req.gpu);
+    for (req, &fp) in win.iter().zip(win_fps) {
         if !seen.insert(fp) {
             continue;
         }
@@ -846,6 +877,13 @@ impl KernelService {
         let mut rejected_by_class = [0u64; 3];
         let mut peak_depth = 0usize;
 
+        // Intern once, probe by id: each distinct (task, gpu) pair is
+        // hashed exactly once, and the admission loop reads the per-request
+        // column instead of recomputing digests per arrival.
+        obs.enter(Stage::Fingerprint);
+        let fps = intern_fingerprints(config, trace, tasks);
+        obs.exit(Stage::Fingerprint);
+
         let mut fleet = FleetSim::new(sim_workers);
         let mut hooks = ServiceHooks {
             config,
@@ -877,7 +915,7 @@ impl KernelService {
                     tasks,
                     oracle,
                     win,
-                    config,
+                    &fps[w0..w0 + win.len()],
                     |fp, req| {
                         if cache.peek(fp).is_some()
                             || fleet.is_waiting(fp)
@@ -922,7 +960,7 @@ impl KernelService {
                 fleet.advance(now, &mut hooks);
                 hooks.obs.exit(Stage::EventHeap);
                 hooks.obs.enter(Stage::Fingerprint);
-                let fp = config.fingerprint_of(&tasks[req.task_index], req.gpu);
+                let fp = fps[seq as usize];
                 hooks.obs.exit(Stage::Fingerprint);
                 let task = &tasks[req.task_index];
                 // Single-flight joins first: identical work waiting or on a
@@ -970,7 +1008,7 @@ impl KernelService {
                         leader_seq: seq,
                         tenant: req.tenant,
                         arrival_s: now,
-                        members: vec![(seq, now)],
+                        members: MemberList::one(seq, now),
                     });
                     let depth = fleet.depth();
                     hooks

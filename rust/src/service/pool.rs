@@ -24,6 +24,22 @@
 //! in-flight index stays bounded by the number of workers, not the length
 //! of the trace.
 //!
+//! # Hot-path storage
+//!
+//! Flight records live in a slab arena (`flights` + the parallel `started`
+//! start-instant column; freed slots are recycled through `free_slots`), and
+//! the ordered indexes (`waiting`, `running`, and the by-fingerprint probes)
+//! hold `u32` slot ids instead of the records themselves. A flight is
+//! written once at submission and never moved again: joins and priority
+//! escalations mutate it in place, and settle reads it by id. Combined with
+//! [`MemberList`]'s inline leader slot (a single-member flight — the vastly
+//! common case — touches no heap at all), the submit → start → settle cycle
+//! is allocation-free at steady state, which is what lets million-request
+//! traces replay in seconds. Every mutation bumps [`FleetSim::version`]; the
+//! cluster layer's global event heap uses the stamp to lazily invalidate
+//! cached next-event entries instead of re-polling every node fleet per
+//! event.
+//!
 //! tokio is unavailable offline (DESIGN.md §2), so `run_indexed` is
 //! std::thread with an atomic work counter: workers claim indices until the
 //! list is exhausted, and results land in their slot regardless of which
@@ -75,6 +91,45 @@ where
         .collect()
 }
 
+/// The `(seq, arrival_s)` membership of a single-flight group: the leader
+/// inline (every flight has one), followers in a spill vector that only
+/// exists once someone actually joins. `Vec::new()` never allocates, so the
+/// common single-member flight costs no heap at all — the allocation-budget
+/// fence in `tests/alloc_budget.rs` leans on this.
+#[derive(Clone, Debug)]
+pub struct MemberList {
+    first: (u64, f64),
+    rest: Vec<(u64, f64)>,
+}
+
+impl MemberList {
+    /// A fresh membership holding only the leader.
+    pub fn one(seq: u64, arrival_s: f64) -> MemberList {
+        MemberList { first: (seq, arrival_s), rest: Vec::new() }
+    }
+
+    /// Append a follower (join order is preserved after the leader).
+    pub fn push(&mut self, seq: u64, arrival_s: f64) {
+        self.rest.push((seq, arrival_s));
+    }
+
+    /// Members in this flight (leader + followers).
+    pub fn len(&self) -> usize {
+        1 + self.rest.len()
+    }
+
+    /// Never empty: a flight always carries its leader.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Iterate `(seq, arrival_s)` pairs, leader first, followers in join
+    /// order.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, f64)> + '_ {
+        std::iter::once(self.first).chain(self.rest.iter().copied())
+    }
+}
+
 /// One unit of simulated work: a single-flight group (leader plus coalesced
 /// followers) waiting for, or running on, a simulated GPU worker. The
 /// flight's service time is unknown until it starts — the workflow runs at
@@ -93,11 +148,11 @@ pub struct SimFlight {
     pub tenant: usize,
     /// Simulated instant the flight exists from (its leader's arrival).
     pub arrival_s: f64,
-    /// `(seq, arrival_s)` of every member — leader first, then followers in
-    /// join order (followers may join while the flight waits *or* while it
-    /// runs). Each member's latency is `completion - its own arrival`,
-    /// settled by the completion hook.
-    pub members: Vec<(u64, f64)>,
+    /// Every member — leader first, then followers in join order (followers
+    /// may join while the flight waits *or* while it runs). Each member's
+    /// latency is `completion - its own arrival`, settled by the completion
+    /// hook.
+    pub members: MemberList,
 }
 
 /// When a flight started and finished on the simulated fleet.
@@ -122,12 +177,6 @@ pub trait FleetHooks {
     fn on_complete(&mut self, flight: &SimFlight, done: SimCompletion);
 }
 
-/// A flight on a worker, keyed in the completion-event queue.
-struct RunningFlight {
-    flight: SimFlight,
-    start_s: f64,
-}
-
 /// The fleet's next internal event (used to interleave events in global
 /// timestamp order, completions before starts at ties).
 enum PendingEvent {
@@ -141,15 +190,25 @@ enum PendingEvent {
 /// a worker frees at time `f`, it takes the most urgent flight (ties by
 /// leader arrival order) among those that have arrived by `max(f, earliest
 /// waiting arrival)`. All state is `BTreeMap`/heap based and every scan is
-/// in a total order, so a replay is bit-deterministic.
+/// in a total order, so a replay is bit-deterministic. Flight records live
+/// in the slab arena (see the module docs) and the maps hold slot ids only.
 pub struct FleetSim {
     workers: usize,
     /// Next-free instant per worker. Min-heap over `f64::to_bits`, which
     /// orders like the values because simulated times are finite and >= 0.
     free_at: BinaryHeap<Reverse<u64>>,
+    /// The flight arena: records are written once at submission and mutated
+    /// in place; slots are recycled through `free_slots` at completion, so
+    /// the arena's length is bounded by peak concurrency, not trace length.
+    flights: Vec<SimFlight>,
+    /// Start instant per arena slot (the struct-of-arrays column the
+    /// completion event reads; meaningful while the slot is running).
+    started: Vec<f64>,
+    /// Slot ids freed by completed flights, ready for reuse.
+    free_slots: Vec<u32>,
     /// The per-priority queues: flights waiting for a worker, started in
-    /// (priority, leader arrival) order.
-    waiting: BTreeMap<(Priority, u64), SimFlight>,
+    /// (priority, leader arrival) order. Values are arena slot ids.
+    waiting: BTreeMap<(Priority, u64), u32>,
     /// fingerprint -> key in `waiting`, for single-flight joins.
     waiting_by_fp: BTreeMap<Fingerprint, (Priority, u64)>,
     /// `(arrival_s bits, leader_seq)` of every waiting flight — the first
@@ -158,12 +217,18 @@ pub struct FleetSim {
     arrivals: BTreeSet<(u64, u64)>,
     /// The completion-event queue: flights on a worker, keyed by
     /// `(completion bits, leader_seq)` so draining the map front replays
-    /// completions in timestamp order. Entries are removed as their
-    /// completion fires — finished flights never accumulate.
-    running: BTreeMap<(u64, u64), RunningFlight>,
+    /// completions in timestamp order. Values are arena slot ids; entries
+    /// are removed as their completion fires — finished flights never
+    /// accumulate.
+    running: BTreeMap<(u64, u64), u32>,
     /// fingerprint -> key in `running`, for joins onto work already on a
     /// worker. Pruned with `running`, so the probe stays O(log workers).
     running_by_fp: BTreeMap<Fingerprint, (u64, u64)>,
+    /// Bumped on every mutation that can change [`FleetSim::next_event`]
+    /// (submit, joins, steps, multiplier changes). The cluster layer stamps
+    /// its global event-heap entries with this and discards stale ones
+    /// lazily instead of re-polling every fleet per event.
+    version: u64,
     queue_wait_s: f64,
     served: usize,
     busy_s: f64,
@@ -182,11 +247,15 @@ impl FleetSim {
         FleetSim {
             workers,
             free_at: (0..workers).map(|_| Reverse(0.0f64.to_bits())).collect(),
+            flights: Vec::new(),
+            started: Vec::new(),
+            free_slots: Vec::new(),
             waiting: BTreeMap::new(),
             waiting_by_fp: BTreeMap::new(),
             arrivals: BTreeSet::new(),
             running: BTreeMap::new(),
             running_by_fp: BTreeMap::new(),
+            version: 0,
             queue_wait_s: 0.0,
             served: 0,
             busy_s: 0.0,
@@ -210,11 +279,19 @@ impl FleetSim {
     pub fn set_service_multiplier(&mut self, m: f64) {
         assert!(m.is_finite() && m > 0.0, "service multiplier must be finite and > 0, got {m}");
         self.service_multiplier = m;
+        self.version = self.version.wrapping_add(1);
     }
 
     /// The fleet's current service-time multiplier (1.0 unless configured).
     pub fn service_multiplier(&self) -> f64 {
         self.service_multiplier
+    }
+
+    /// Mutation stamp: changes whenever [`FleetSim::next_event`] may have
+    /// changed. An event-heap entry recorded at version `v` is still valid
+    /// iff the fleet's version is still `v`.
+    pub fn version(&self) -> u64 {
+        self.version
     }
 
     /// Flights waiting for a worker (the admission-control depth signal).
@@ -255,7 +332,19 @@ impl FleetSim {
         let key = (flight.priority, flight.leader_seq);
         self.waiting_by_fp.insert(flight.fingerprint, key);
         self.arrivals.insert((flight.arrival_s.to_bits(), flight.leader_seq));
-        self.waiting.insert(key, flight);
+        let idx = match self.free_slots.pop() {
+            Some(i) => {
+                self.flights[i as usize] = flight;
+                i
+            }
+            None => {
+                self.flights.push(flight);
+                self.started.push(0.0);
+                (self.flights.len() - 1) as u32
+            }
+        };
+        self.waiting.insert(key, idx);
+        self.version = self.version.wrapping_add(1);
     }
 
     /// Join a *waiting* flight for `fp` as a follower, escalating its
@@ -271,12 +360,14 @@ impl FleetSim {
         let Some(key) = self.waiting_by_fp.get(&fp).copied() else {
             return false;
         };
-        let mut flight = self.waiting.remove(&key).expect("waiting_by_fp tracks waiting");
-        flight.members.push((seq, arrival_s));
+        let idx = self.waiting.remove(&key).expect("waiting_by_fp tracks waiting");
+        let flight = &mut self.flights[idx as usize];
+        flight.members.push(seq, arrival_s);
         flight.priority = flight.priority.min(priority);
         let new_key = (flight.priority, flight.leader_seq);
         self.waiting_by_fp.insert(fp, new_key);
-        self.waiting.insert(new_key, flight);
+        self.waiting.insert(new_key, idx);
+        self.version = self.version.wrapping_add(1);
         true
     }
 
@@ -287,8 +378,9 @@ impl FleetSim {
         let Some(key) = self.running_by_fp.get(&fp).copied() else {
             return false;
         };
-        let rf = self.running.get_mut(&key).expect("running_by_fp tracks running");
-        rf.flight.members.push((seq, arrival_s));
+        let idx = *self.running.get(&key).expect("running_by_fp tracks running");
+        self.flights[idx as usize].members.push(seq, arrival_s);
+        self.version = self.version.wrapping_add(1);
         true
     }
 
@@ -338,12 +430,20 @@ impl FleetSim {
     pub fn step(&mut self, now: f64, hooks: &mut dyn FleetHooks) -> bool {
         match self.peek_event() {
             Some(PendingEvent::Completion(key)) if f64::from_bits(key.0) <= now => {
-                let rf = self.running.remove(&key).expect("peeked key is resident");
-                self.running_by_fp.remove(&rf.flight.fingerprint);
+                let idx = self.running.remove(&key).expect("peeked key is resident") as usize;
+                let fp = self.flights[idx].fingerprint;
+                self.running_by_fp.remove(&fp);
+                self.version = self.version.wrapping_add(1);
                 hooks.on_complete(
-                    &rf.flight,
-                    SimCompletion { start_s: rf.start_s, completion_s: f64::from_bits(key.0) },
+                    &self.flights[idx],
+                    SimCompletion {
+                        start_s: self.started[idx],
+                        completion_s: f64::from_bits(key.0),
+                    },
                 );
+                // Settle done: recycle the slot (the record stays in place
+                // until a later submission overwrites it — no deallocation).
+                self.free_slots.push(idx as u32);
                 true
             }
             Some(PendingEvent::Start(start)) if start <= now => {
@@ -354,27 +454,33 @@ impl FleetSim {
                 let key = *self
                     .waiting
                     .iter()
-                    .find(|(_, f)| f.arrival_s <= start)
+                    .find(|(_, &idx)| self.flights[idx as usize].arrival_s <= start)
                     .expect("a flight has arrived by the start instant")
                     .0;
-                let flight = self.waiting.remove(&key).expect("key taken from the map");
-                self.waiting_by_fp.remove(&flight.fingerprint);
-                self.arrivals.remove(&(flight.arrival_s.to_bits(), flight.leader_seq));
+                let idx = self.waiting.remove(&key).expect("key taken from the map") as usize;
+                let (fp, arrival_s, leader_seq) = {
+                    let f = &self.flights[idx];
+                    (f.fingerprint, f.arrival_s, f.leader_seq)
+                };
+                self.waiting_by_fp.remove(&fp);
+                self.arrivals.remove(&(arrival_s.to_bits(), leader_seq));
                 self.free_at.pop();
-                let service_s = hooks.on_start(&flight, start) * self.service_multiplier;
+                let service_s = hooks.on_start(&self.flights[idx], start) * self.service_multiplier;
                 debug_assert!(
                     service_s.is_finite() && service_s >= 0.0,
                     "service time must be finite and non-negative, got {service_s}"
                 );
                 let completion = start + service_s;
                 self.free_at.push(Reverse(completion.to_bits()));
-                self.queue_wait_s += start - flight.arrival_s;
+                self.queue_wait_s += start - arrival_s;
                 self.busy_s += service_s;
                 self.served += 1;
                 self.makespan_s = self.makespan_s.max(completion);
-                let run_key = (completion.to_bits(), flight.leader_seq);
-                self.running_by_fp.insert(flight.fingerprint, run_key);
-                self.running.insert(run_key, RunningFlight { flight, start_s: start });
+                let run_key = (completion.to_bits(), leader_seq);
+                self.running_by_fp.insert(fp, run_key);
+                self.started[idx] = start;
+                self.running.insert(run_key, idx as u32);
+                self.version = self.version.wrapping_add(1);
                 true
             }
             _ => false,
@@ -455,7 +561,7 @@ mod tests {
             leader_seq: seq,
             tenant: 0,
             arrival_s,
-            members: vec![(seq, arrival_s)],
+            members: MemberList::one(seq, arrival_s),
         }
     }
 
@@ -486,8 +592,19 @@ mod tests {
         }
         fn on_complete(&mut self, f: &SimFlight, done: SimCompletion) {
             self.completions.push((f.leader_seq, done));
-            self.members.push(f.members.iter().map(|(s, _)| *s).collect());
+            self.members.push(f.members.iter().map(|(s, _)| s).collect());
         }
+    }
+
+    #[test]
+    fn member_list_inlines_the_leader() {
+        let mut m = MemberList::one(7, 1.5);
+        assert_eq!(m.len(), 1);
+        assert!(!m.is_empty());
+        m.push(9, 2.5);
+        assert_eq!(m.len(), 2);
+        let all: Vec<(u64, f64)> = m.iter().collect();
+        assert_eq!(all, vec![(7, 1.5), (9, 2.5)]);
     }
 
     #[test]
@@ -589,6 +706,47 @@ mod tests {
         assert!(!sim.is_running(Fingerprint(7)), "pruned at its completion event");
         assert_eq!(sim.in_flight(Fingerprint(7)), None);
         assert_eq!(hooks.completions.len(), 1);
+    }
+
+    #[test]
+    fn arena_slots_are_recycled_across_flights() {
+        // Serve many more flights than the worker count: the arena must stay
+        // bounded by peak concurrency (waiting + running), not trace length.
+        // Service shorter than the interarrival gap, so the fleet keeps up
+        // and peak concurrency stays at a couple of flights.
+        let mut sim = FleetSim::new(2);
+        let service: Vec<(u64, f64)> = (0..64).map(|i| (i, 0.5)).collect();
+        let mut hooks = Script::new(&service);
+        for i in 0..64u64 {
+            sim.submit(flight(100 + i, i, i as f64, Priority::Standard));
+            sim.advance(i as f64, &mut hooks);
+        }
+        sim.advance(f64::INFINITY, &mut hooks);
+        assert_eq!(hooks.completions.len(), 64);
+        assert_eq!(sim.flights_served(), 64);
+        assert!(
+            sim.flights.len() < 16,
+            "arena grew to {} slots for 64 sequential flights",
+            sim.flights.len()
+        );
+    }
+
+    #[test]
+    fn version_stamp_tracks_every_mutation() {
+        let mut sim = FleetSim::new(1);
+        let v0 = sim.version();
+        sim.submit(flight(1, 0, 0.0, Priority::Standard));
+        let v1 = sim.version();
+        assert_ne!(v0, v1, "submit changes the next event");
+        assert!(sim.join_waiting(Fingerprint(1), 1, 0.5, Priority::Interactive));
+        let v2 = sim.version();
+        assert_ne!(v1, v2, "a join can escalate priority / change membership");
+        let mut hooks = Script::new(&[(0, 10.0)]);
+        sim.advance(0.0, &mut hooks);
+        assert_ne!(v2, sim.version(), "a fired start changes the next event");
+        let v3 = sim.version();
+        assert!(sim.join_running(Fingerprint(1), 2, 1.0));
+        assert_ne!(v3, sim.version());
     }
 
     #[test]

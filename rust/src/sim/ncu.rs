@@ -315,15 +315,29 @@ pub fn profile(
     v
 }
 
+/// Display adapter for the Judge-prompt metric block (name: value lines) —
+/// the same bytes [`render_block`] returns, streamed without materialising
+/// the block. The token accountant renders it straight into a counting
+/// writer (see `agents::prompts::LenWriter`), so the per-round metric block
+/// costs no allocation on the replay hot path.
+#[derive(Clone, Copy)]
+pub struct MetricBlock<'a> {
+    pub indices: &'a [usize],
+    pub values: &'a [f64],
+}
+
+impl std::fmt::Display for MetricBlock<'_> {
+    fn fmt(&self, w: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for &i in self.indices {
+            writeln!(w, "{}: {:.4}", CATALOG[i], self.values[i])?;
+        }
+        Ok(())
+    }
+}
+
 /// Render a metric block for the Judge prompt (name: value lines).
 pub fn render_block(indices: &[usize], values: &[f64]) -> String {
-    use std::fmt::Write;
-    // Preallocate: ~64 chars/line (name + value). Hot path: 1-2x per round.
-    let mut s = String::with_capacity(indices.len() * 80);
-    for &i in indices {
-        let _ = writeln!(s, "{}: {:.4}", CATALOG[i], values[i]);
-    }
-    s
+    MetricBlock { indices, values }.to_string()
 }
 
 #[cfg(test)]

@@ -437,8 +437,8 @@ pub(crate) fn run_iterative(
                 // bought after failing the check (counterfactual only —
                 // nothing is charged to the ledger for it).
                 let judge_stats = crate::agents::CallStats {
-                    tokens_in: crate::agents::estimate_tokens(
-                        &crate::agents::prompts::judge_correction(task, &cfg, &d.message),
+                    tokens_in: crate::agents::estimate_tokens_len(
+                        crate::agents::prompts::judge_correction_len(task, &cfg, &d.message),
                     ),
                     tokens_out: wf.judge.judge_out_tokens,
                 };

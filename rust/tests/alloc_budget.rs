@@ -1,0 +1,81 @@
+//! Allocation-budget regression fence for the replay hot path.
+//!
+//! The PR-9 overhaul (interned fingerprints, the SoA flight arena, the
+//! scratch-buffer report) is only worth keeping if it *stays* kept: a
+//! future change that quietly reintroduces a per-request `clone()` or a
+//! per-event `format!` would still pass every behavioural test. This
+//! binary installs [`CountingAlloc`] as the global allocator and holds an
+//! untraced mid-size replay to a stated allocations-per-request budget.
+//!
+//! The budgets are deliberately generous — they are tripwires for
+//! order-of-magnitude regressions, not byte-exact accounting:
+//!
+//! - **cold** (empty cache, every distinct fingerprint runs a workflow):
+//!   20 000 allocations/request, dominated by the workflow runs
+//!   themselves, not the admission loop;
+//! - **warm** (second replay of the same trace on the same service, all
+//!   cache hits): 64 allocations/request — the admission loop proper
+//!   (intern + probe + hit accounting + report) allocates almost nothing,
+//!   so even a small per-request leak trips this fence.
+//!
+//! Kept as its own test binary: the counter is process-global, so a
+//! sibling test allocating on another thread would pollute the figures.
+
+#![allow(clippy::disallowed_methods)]
+
+use cudaforge::service::traffic::{generate, TrafficConfig};
+use cudaforge::service::{KernelService, ServiceConfig};
+use cudaforge::tasks;
+use cudaforge::util::bench::{allocations, CountingAlloc};
+use cudaforge::workflow::NoOracle;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+const REQUESTS: usize = 2000;
+const COLD_BUDGET_PER_REQ: u64 = 20_000;
+const WARM_BUDGET_PER_REQ: u64 = 64;
+
+#[test]
+fn replay_stays_within_allocation_budget() {
+    let suite = tasks::kernelbench();
+    let trace = generate(
+        suite.len(),
+        &TrafficConfig { requests: REQUESTS, seed: 11, ..TrafficConfig::default() },
+    );
+    let mut svc = KernelService::new(ServiceConfig {
+        threads: 1,
+        window: 16,
+        seed: 11,
+        ..ServiceConfig::default()
+    });
+
+    // Cold pass: misses run full workflows, so the budget is loose.
+    let before_cold = allocations();
+    let cold = svc.replay(&trace, &suite, &NoOracle);
+    let cold_allocs = allocations() - before_cold;
+    assert_eq!(cold.requests, REQUESTS);
+    assert!(
+        cold_allocs <= COLD_BUDGET_PER_REQ * REQUESTS as u64,
+        "cold replay allocated {cold_allocs} times for {REQUESTS} requests \
+         (budget {COLD_BUDGET_PER_REQ}/request)"
+    );
+
+    // Warm pass: the same trace against the now-populated cache exercises
+    // the admission hot path alone — intern, probe, hit, report.
+    let before_warm = allocations();
+    let warm = svc.replay(&trace, &suite, &NoOracle);
+    let warm_allocs = allocations() - before_warm;
+    assert_eq!(warm.requests, REQUESTS);
+    assert!(
+        warm.cache_hits > REQUESTS / 2,
+        "warm replay should be hit-dominated, saw {} hits",
+        warm.cache_hits
+    );
+    assert!(
+        warm_allocs <= WARM_BUDGET_PER_REQ * REQUESTS as u64,
+        "warm replay allocated {warm_allocs} times for {REQUESTS} requests \
+         (budget {WARM_BUDGET_PER_REQ}/request) — a per-request allocation \
+         crept back into the hot path"
+    );
+}

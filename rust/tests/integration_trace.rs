@@ -12,6 +12,7 @@
 use cudaforge::analysis;
 use cudaforge::cluster::{ClusterConfig, ClusterReport, ClusterService, MembershipEvent, TenantSpec};
 use cudaforge::gpu;
+use cudaforge::report::{cluster_table, service_table};
 use cudaforge::service::queue::Priority;
 use cudaforge::service::traffic::{generate, TrafficConfig, TrafficRequest};
 use cudaforge::service::{KernelService, ServiceConfig};
@@ -82,6 +83,66 @@ fn recording_never_changes_the_service_report() {
     let mut obs = Observer::new(&mut null);
     let mut svc = KernelService::new(cfg);
     assert_eq!(svc.replay_observed(&trace, &suite, &NoOracle, &mut obs), expected);
+}
+
+/// The untraced entry points (`replay`, cluster `replay`) are thin NullSink
+/// wrappers over the observed implementations — so traced-off output must
+/// stay *byte*-identical, not merely `PartialEq`-equal: the rendered report
+/// tables and their CSV forms are compared as strings. This pins the
+/// wrapper contract through the hot-path storage rewrites (interned
+/// fingerprints, the SoA flight arena, the global event heap).
+#[test]
+fn untraced_wrappers_render_byte_identical_reports() {
+    let suite = tasks::kernelbench();
+    let trace = generate(
+        suite.len(),
+        &TrafficConfig { requests: 200, seed: 7, ..TrafficConfig::default() },
+    );
+    let cfg = ServiceConfig { threads: 1, window: 16, seed: 7, ..ServiceConfig::default() };
+
+    let mut plain = KernelService::new(cfg.clone());
+    let a = plain.replay(&trace, &suite, &NoOracle);
+    let mut null = NullSink;
+    let mut obs = Observer::new(&mut null);
+    let mut svc = KernelService::new(cfg);
+    let b = svc.replay_observed(&trace, &suite, &NoOracle, &mut obs);
+    assert_eq!(a, b);
+    assert_eq!(
+        service_table(&a).render(),
+        service_table(&b).render(),
+        "service table must render byte-identically traced-off vs untraced"
+    );
+    assert_eq!(service_table(&a).to_csv(), service_table(&b).to_csv());
+
+    let ctrace = generate(
+        suite.len(),
+        &TrafficConfig {
+            requests: 200,
+            seed: 7,
+            tenant_mix: vec![("alpha".to_string(), 3.0), ("beta".to_string(), 1.0)],
+            ..TrafficConfig::default()
+        },
+    );
+    let ccfg = ClusterConfig {
+        nodes: 3,
+        tenants: vec![TenantSpec::new("alpha", 3.0), TenantSpec::new("beta", 1.0)],
+        tenant_quotas: true,
+        service: ServiceConfig { threads: 1, window: 16, seed: 7, ..ServiceConfig::default() },
+        ..ClusterConfig::default()
+    };
+    let mut cplain = ClusterService::new(ccfg.clone());
+    let ca = cplain.replay(&ctrace, &suite, &NoOracle);
+    let mut cnull = NullSink;
+    let mut cobs = Observer::new(&mut cnull);
+    let mut csvc = ClusterService::new(ccfg);
+    let cb = csvc.replay_observed(&ctrace, &suite, &NoOracle, &mut cobs);
+    assert_eq!(ca, cb);
+    assert_eq!(
+        cluster_table(&ca).render(),
+        cluster_table(&cb).render(),
+        "cluster table must render byte-identically traced-off vs untraced"
+    );
+    assert_eq!(cluster_table(&ca).to_csv(), cluster_table(&cb).to_csv());
 }
 
 /// The full cluster feature mix (sharding, tenants + quotas, a fail +
