@@ -16,7 +16,9 @@ use cudaforge::gpu::RTX6000_ADA;
 use cudaforge::kernel::KernelConfig;
 use cudaforge::service::cache::{CacheEntry, ResultCache};
 use cudaforge::service::fingerprint::{of_request, Fingerprint};
-use cudaforge::service::pool::{FleetHooks, FleetSim, MemberList, SimCompletion, SimFlight};
+use cudaforge::service::pool::{
+    DispatchSnapshot, FleetHooks, FleetSim, MemberList, SimCompletion, SimFlight,
+};
 use cudaforge::service::queue::Priority;
 use cudaforge::service::traffic::{generate, TrafficConfig};
 use cudaforge::service::{KernelService, ServiceConfig};
@@ -50,7 +52,7 @@ fn entry(fp: u64) -> CacheEntry {
 struct Fixed(f64);
 
 impl FleetHooks for Fixed {
-    fn on_start(&mut self, _f: &SimFlight, _start_s: f64) -> f64 {
+    fn on_start(&mut self, _f: &SimFlight, _start_s: f64, _fair: DispatchSnapshot) -> f64 {
         self.0
     }
     fn on_complete(&mut self, _f: &SimFlight, _done: SimCompletion) {}

@@ -98,8 +98,11 @@ use anyhow::Result;
 
 use crate::service::cache::{CacheEntry, ResultCache};
 use crate::service::fingerprint::Fingerprint;
-use crate::service::pool::{FleetHooks, FleetSim, MemberList, SimCompletion, SimFlight};
+use crate::service::pool::{
+    DispatchSnapshot, FleetHooks, FleetSim, MemberList, SimCompletion, SimFlight,
+};
 use crate::service::queue::Priority;
+use crate::service::ratelimit::{RateDecision, RateLimiter, RatePolicy};
 use crate::service::traffic::TrafficRequest;
 use crate::service::{
     admit_event, flight_complete_event, intern_fingerprints, per_priority_report,
@@ -317,6 +320,13 @@ pub struct TenantReport {
     /// The subset of `rejected` shed specifically by this tenant exceeding
     /// its fair-share quota.
     pub quota_shed: u64,
+    /// The subset of `rejected` throttled by the front-door token bucket
+    /// (shed reason `rate`; 0 with the limiter off).
+    pub throttled: u64,
+    /// Deepest flight backlog this tenant held on any single node (max over
+    /// nodes of the per-node per-tenant peak, so `max over tenants <=` the
+    /// cluster's `peak_queue_depth` `<= sum over tenants`).
+    pub peak_queue_depth: usize,
     /// Median latency over this tenant's served requests, seconds.
     pub p50_latency_s: f64,
     /// 95th-percentile latency over this tenant's served requests, seconds.
@@ -514,6 +524,10 @@ struct NodeCounters {
     /// quota meter (the slot is released when the flight starts on a
     /// worker).
     backlog_by_tenant: Vec<usize>,
+    /// Deepest per-tenant backlog observed at this node (sampled at each
+    /// submit, right after the slot is taken) — the per-tenant split of
+    /// `peak_depth`, so tenant report rows reconcile with node rows.
+    peak_backlog_by_tenant: Vec<usize>,
     /// This node's cache eviction counter at replay start (delta basis).
     evictions0: u64,
     /// Evictions accumulated before the cache shard was dropped by a
@@ -656,7 +670,7 @@ impl ClusterHooks<'_, '_> {
 }
 
 impl FleetHooks for ClusterHooks<'_, '_> {
-    fn on_start(&mut self, flight: &SimFlight, start_s: f64) -> f64 {
+    fn on_start(&mut self, flight: &SimFlight, start_s: f64, fair: DispatchSnapshot) -> f64 {
         let req = &self.trace[flight.leader_seq as usize];
         let task = &self.tasks[req.task_index];
         let c = &self.config.service;
@@ -758,6 +772,7 @@ impl FleetHooks for ClusterHooks<'_, '_> {
             + if cross { self.config.transfer_latency_s } else { 0.0 };
         let warm = wf.warm_start.is_some();
         let members = flight.members.len();
+        let tenant = flight.tenant;
         self.obs.emit(|| {
             TraceEvent::new(start_s, "flight.start", node)
                 .field("fp", Json::str(fp.to_string()))
@@ -766,6 +781,10 @@ impl FleetHooks for ClusterHooks<'_, '_> {
                 .field("warm", Json::Bool(warm))
                 .field("cross_node", Json::Bool(cross))
                 .field("members", Json::num(members as f64))
+                .field("tenant", Json::num(tenant as f64))
+                .field("deficit", Json::num(fair.deficit_s))
+                .field("vtime", Json::num(fair.vtime_s))
+                .field("weight", Json::num(fair.weight))
         });
         self.pending.insert(flight.leader_seq, PendingRun { result, warm });
         service_s
@@ -1515,10 +1534,15 @@ impl ClusterService {
         // (its keys are all placed, so nothing is tracked as re-missable).
         let restore_rb = self.restore_rebalance.take();
 
+        // Dispatch weights come from the same tenant specs admission quotas
+        // use — metering and fairness agree on who deserves what.
+        let dispatch_weights: Vec<f64> = config.tenants.iter().map(|t| t.weight).collect();
         let mut fleets: Vec<FleetSim> =
             (0..nodes).map(|_| FleetSim::new(sim_workers)).collect();
         for (ni, fleet) in fleets.iter_mut().enumerate() {
             fleet.set_service_multiplier(config.node_multiplier(ni));
+            fleet.set_fair_dispatch(config.service.fair_dispatch);
+            fleet.set_tenant_weights(&dispatch_weights);
         }
         // Intern once, probe by id: each distinct (task, gpu) pair is
         // hashed exactly once, and the admission loop reads the per-request
@@ -1532,6 +1556,13 @@ impl ClusterService {
         let mut tenant_requests = vec![0usize; n_tenants];
         let mut tenant_rejected = vec![0u64; n_tenants];
         let mut tenant_quota_shed = vec![0u64; n_tenants];
+        let mut tenant_throttled = vec![0u64; n_tenants];
+        // One cluster-wide front door: the limiter sits ahead of routing,
+        // so a throttled request never touches any node.
+        let mut limiter = RateLimiter::new(RatePolicy::from_config(
+            config.service.tenant_rate,
+            config.service.tenant_burst,
+        ));
 
         let mut hooks = ClusterHooks {
             config,
@@ -1554,6 +1585,7 @@ impl ClusterService {
                     rejected: 0,
                     peak_depth: 0,
                     backlog_by_tenant: vec![0; n_tenants],
+                    peak_backlog_by_tenant: vec![0; n_tenants],
                     evictions0: evictions0[i],
                     evictions_carry: 0,
                 })
@@ -1740,6 +1772,21 @@ impl ClusterService {
                 // cluster cannot route (served + rejected == requests must
                 // hold per tenant).
                 tenant_requests[t] += 1;
+                // Front door first: a throttled request never reaches
+                // routing, any shard, or admission control.
+                if let RateDecision::Throttle { tokens, retry_at_s } = limiter.check(t, now) {
+                    rejected += 1;
+                    rejected_by_class[req.priority as usize] += 1;
+                    tenant_rejected[t] += 1;
+                    tenant_throttled[t] += 1;
+                    hooks.obs.emit(|| {
+                        admit_event(now, 0, seq, fp, req, task, 0, "shed")
+                            .field("reason", Json::str("rate"))
+                            .field("tokens", Json::num(tokens))
+                            .field("retry_at_s", Json::num(retry_at_s))
+                    });
+                    continue;
+                }
                 let ni = match router.route(fp, hooks.membership.alive()) {
                     Some(n) => n,
                     None => {
@@ -1837,6 +1884,9 @@ impl ClusterService {
                             members: MemberList::one(seq, now),
                         });
                         hooks.per_node[ni].backlog_by_tenant[t] += 1;
+                        let nc = &mut hooks.per_node[ni];
+                        nc.peak_backlog_by_tenant[t] =
+                            nc.peak_backlog_by_tenant[t].max(nc.backlog_by_tenant[t]);
                         let depth = fleet.depth();
                         hooks
                             .obs
@@ -1973,6 +2023,13 @@ impl ClusterService {
                     served: lat.len(),
                     rejected: tenant_rejected[t],
                     quota_shed: tenant_quota_shed[t],
+                    throttled: tenant_throttled[t],
+                    peak_queue_depth: hooks
+                        .per_node
+                        .iter()
+                        .map(|nc| nc.peak_backlog_by_tenant[t])
+                        .max()
+                        .unwrap_or(0),
                     p50_latency_s: percentile(lat, 50.0),
                     p95_latency_s: percentile(lat, 95.0),
                     p99_latency_s: percentile(lat, 99.0),
@@ -2027,6 +2084,7 @@ impl ClusterService {
                 0.0
             },
             lint_short_circuits,
+            rate_limited: tenant_throttled.iter().sum(),
         };
 
         let epoch = hooks.membership.epoch();

@@ -259,6 +259,41 @@ fn tenants_from(arg: &str) -> Vec<TenantSpec> {
     out
 }
 
+/// Parse the front-door rate-limiter pair shared by `serve` and the
+/// cluster-style subcommands. Validated here (exit 2) so the limiter's own
+/// asserts can never fire from the CLI path: the rate must be finite and
+/// > 0, the burst finite and >= 1, and a burst without a rate is a mistake
+/// (no rate means no limiter, silently ignoring the burst).
+fn rate_limit_args(args: &Args) -> (Option<f64>, Option<f64>) {
+    let parse = |flag: &str| -> Option<f64> {
+        args.get(flag).map(|v| {
+            v.parse::<f64>().unwrap_or_else(|_| {
+                eprintln!("error: --{flag} wants a number, got '{v}'");
+                std::process::exit(2);
+            })
+        })
+    };
+    let rate = parse("tenant-rate");
+    if let Some(r) = rate {
+        if !r.is_finite() || r <= 0.0 {
+            eprintln!("error: --tenant-rate must be finite and > 0, got {r}");
+            std::process::exit(2);
+        }
+    }
+    let burst = parse("tenant-burst");
+    if let Some(b) = burst {
+        if !b.is_finite() || b < 1.0 {
+            eprintln!("error: --tenant-burst must be finite and >= 1, got {b}");
+            std::process::exit(2);
+        }
+        if rate.is_none() {
+            eprintln!("error: --tenant-burst needs --tenant-rate (no rate, no limiter)");
+            std::process::exit(2);
+        }
+    }
+    (rate, burst)
+}
+
 /// Everything the cluster-style subcommands share: the traffic model and
 /// the deployment config, built from the same flags and defaults — which is
 /// what makes `autoscale` under a do-nothing policy reproduce `cluster`
@@ -309,6 +344,10 @@ fn cluster_setup(args: &Args) -> ClusterSetup {
     if args.flag("lint") {
         service.lint = Some(lint_gate_from(args));
     }
+    service.fair_dispatch = !args.flag("no-fair-dispatch");
+    let (rate, burst) = rate_limit_args(args);
+    service.tenant_rate = rate;
+    service.tenant_burst = burst;
     let nodes = args.get_usize("nodes", 4).max(1);
     let node_arg = |flag: &str| -> Option<usize> {
         args.get(flag).map(|v| {
@@ -717,6 +756,10 @@ fn serve(args: &Args) {
     if args.flag("lint") {
         config.lint = Some(lint_gate_from(args));
     }
+    config.fair_dispatch = !args.flag("no-fair-dispatch");
+    let (rate, burst) = rate_limit_args(args);
+    config.tenant_rate = rate;
+    config.tenant_burst = burst;
     let snapshot = args.get("snapshot").map(|s| s.to_string());
 
     let mut svc = match &snapshot {
@@ -933,9 +976,10 @@ fn reject_unknown(args: &Args, known: &[&str]) {
 /// Flags understood by `serve` (the single-node replay).
 const SERVE_FLAGS: &[&str] = &[
     "artifacts", "capacity", "coder", "interarrival", "judge", "lint",
-    "lint-confidence", "lint-repairs", "out", "profile", "queue-depth",
-    "requests", "rounds", "seed", "sim-workers", "slo", "snapshot",
-    "strategy", "threads", "trace", "window", "zipf",
+    "lint-confidence", "lint-repairs", "no-fair-dispatch", "out", "profile",
+    "queue-depth", "requests", "rounds", "seed", "sim-workers", "slo",
+    "snapshot", "strategy", "tenant-burst", "tenant-rate", "threads",
+    "trace", "window", "zipf",
 ];
 
 /// Flags `cluster_setup` (shared by `cluster` and `autoscale`) parses,
@@ -943,10 +987,10 @@ const SERVE_FLAGS: &[&str] = &[
 const CLUSTER_SETUP_FLAGS: &[&str] = &[
     "artifacts", "capacity", "coder", "fail-at", "fail-node", "interarrival",
     "join-at", "join-node", "judge", "lint", "lint-confidence",
-    "lint-repairs", "no-quotas", "nodes", "out", "profile", "queue-depth",
-    "requests", "rounds", "seed", "sim-workers", "slo", "strategy",
-    "tenants", "threads", "trace", "transfer-latency",
-    "warm-locality-margin", "window", "zipf",
+    "lint-repairs", "no-fair-dispatch", "no-quotas", "nodes", "out",
+    "profile", "queue-depth", "requests", "rounds", "seed", "sim-workers",
+    "slo", "strategy", "tenant-burst", "tenant-rate", "tenants", "threads",
+    "trace", "transfer-latency", "warm-locality-margin", "window", "zipf",
 ];
 
 /// `autoscale`'s additions on top of [`CLUSTER_SETUP_FLAGS`].
@@ -964,9 +1008,12 @@ fn usage() {
     println!("         [--window 32 (host batch size; reported numbers are window-free)]");
     println!("         [--interarrival 90 --sim-workers 8 --queue-depth N --slo 120,7200,86400]");
     println!("         [--snapshot cache.jsonl]");
+    println!("         [--tenant-rate R --tenant-burst B (front-door token bucket, per tenant)]");
+    println!("         [--no-fair-dispatch (strict arrival order within a priority class)]");
     println!("         [--trace DIR (record the flight-recorder artifacts into DIR)]");
     println!("         [--profile (host wall-clock stage breakdown after the replay)]");
-    println!("         (cluster/autoscale accept --trace and --profile too)");
+    println!("         (cluster/autoscale accept --trace, --profile, and the tenant-rate/");
+    println!("          fair-dispatch flags too)");
     println!("  cluster [serve flags, per node] [--nodes 4 --tenants alpha:3,beta:1]");
     println!("         [--no-quotas --transfer-latency 30 --warm-locality-margin 0.25]");
     println!("         [--fail-node N --fail-at SECS (node N drops at SECS)]");

@@ -436,6 +436,7 @@ pub fn service_table(r: &crate::service::ServiceReport) -> Table {
         ("Cache hits".into(), r.cache_hits.to_string()),
         ("Single-flight shared".into(), r.shared.to_string()),
         ("Rejected (admission control)".into(), r.rejected.to_string()),
+        ("Rate-limited (front door)".into(), r.rate_limited.to_string()),
         ("Cache evictions".into(), r.evictions.to_string()),
         ("Warm-started runs".into(), r.warm_started.to_string()),
         (
@@ -512,6 +513,7 @@ pub fn cluster_table(r: &crate::cluster::ClusterReport) -> Table {
         ("Single-flight shared".into(), o.shared.to_string()),
         ("Rejected (all sheds)".into(), o.rejected.to_string()),
         ("Quota sheds (tenant fair-share)".into(), r.quota_shed.to_string()),
+        ("Rate-limited (front door)".into(), o.rate_limited.to_string()),
         ("Hit rate".into(), pct(o.hit_rate)),
         ("Warm-started runs".into(), o.warm_started.to_string()),
         ("Cross-node warm starts".into(), r.cross_node_warm.to_string()),
@@ -549,12 +551,18 @@ pub fn cluster_table(r: &crate::cluster::ClusterReport) -> Table {
         rows.push((
             format!("tenant {} (w={})", tn.tenant, tn.weight),
             format!(
-                "{} reqs | SLO {} | p95 {}m | {} shed ({} quota)",
+                "{} reqs ({} served) | SLO {} | p50/p95/p99 {}/{}/{}m | \
+                 {} shed ({} quota, {} rate) | peak depth {}",
                 tn.requests,
+                tn.served,
                 pct(tn.slo_attainment),
+                f2(tn.p50_latency_s / 60.0),
                 f2(tn.p95_latency_s / 60.0),
+                f2(tn.p99_latency_s / 60.0),
                 tn.rejected,
-                tn.quota_shed
+                tn.quota_shed,
+                tn.throttled,
+                tn.peak_queue_depth
             ),
         ));
     }
@@ -913,6 +921,7 @@ mod tests {
             gpu_hours: 12.5,
             requests_per_gpu_hour: 9.6,
             lint_short_circuits: 5,
+            rate_limited: 2,
         }
     }
 
@@ -945,6 +954,8 @@ mod tests {
             served: 28,
             rejected: 2,
             quota_shed: 1,
+            throttled: 1,
+            peak_queue_depth: 3,
             p50_latency_s: 600.0,
             p95_latency_s: 1500.0,
             p99_latency_s: 3000.0,

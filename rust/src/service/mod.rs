@@ -81,6 +81,7 @@ pub mod cache;
 pub mod fingerprint;
 pub mod pool;
 pub mod queue;
+pub mod ratelimit;
 pub mod traffic;
 
 use std::collections::{BTreeMap, BTreeSet};
@@ -89,9 +90,10 @@ use crate::agents::ModelProfile;
 use crate::service::cache::{CacheEntry, ResultCache};
 use crate::service::fingerprint::Fingerprint;
 use crate::service::pool::{
-    run_indexed, FleetHooks, FleetSim, MemberList, SimCompletion, SimFlight,
+    run_indexed, DispatchSnapshot, FleetHooks, FleetSim, MemberList, SimCompletion, SimFlight,
 };
 use crate::service::queue::{Priority, ALL_PRIORITIES};
+use crate::service::ratelimit::{RateDecision, RateLimiter, RatePolicy};
 use crate::service::traffic::TrafficRequest;
 use crate::tasks::TaskSpec;
 use crate::trace::profile::Stage;
@@ -176,6 +178,23 @@ pub struct ServiceConfig {
     /// the request fingerprint: linted and unlinted runs never share cache
     /// entries.
     pub lint: Option<crate::workflow::LintGate>,
+    /// Deficit-weighted-fair dispatch within each priority class (the
+    /// default). Off = the historical strict `(priority, arrival)` order —
+    /// bit-identical to the pre-DWFQ scheduler, and to the fair scheduler
+    /// under single-tenant traffic.
+    pub fair_dispatch: bool,
+    /// Per-tenant dispatch weights indexed by tenant id (missing or
+    /// non-positive entries fall back to 1.0). Empty = every tenant equal.
+    /// The cluster fills this from its tenant quota shares so admission
+    /// metering and dispatch fairness agree on who deserves what.
+    pub tenant_weights: Vec<f64>,
+    /// Front-door token-bucket refill rate, tokens per simulated second per
+    /// tenant. `None` (default) disables rate limiting — bit-identical to
+    /// the pre-limiter service.
+    pub tenant_rate: Option<f64>,
+    /// Front-door bucket capacity (tokens). `None` defaults to one
+    /// second's worth of tokens, at least 1. Ignored without `tenant_rate`.
+    pub tenant_burst: Option<f64>,
 }
 
 impl Default for ServiceConfig {
@@ -195,6 +214,10 @@ impl Default for ServiceConfig {
             warm_early_stop: EarlyStop::default(),
             hit_latency_s: 0.05,
             lint: None,
+            fair_dispatch: true,
+            tenant_weights: Vec::new(),
+            tenant_rate: None,
+            tenant_burst: None,
         }
     }
 }
@@ -324,6 +347,9 @@ pub struct ServiceReport {
     /// Flights where the pre-compile static-analysis gate repaired a real
     /// bug, saving that flight a correctness-test round (0 with lint off).
     pub lint_short_circuits: u64,
+    /// Requests throttled by the front-door token bucket (shed reason
+    /// `rate`; a subset of `rejected`). 0 with the limiter off.
+    pub rate_limited: u64,
 }
 
 /// Per-replay aggregates shared by the single-node and cluster replay
@@ -678,7 +704,7 @@ struct ServiceHooks<'a, 'o> {
 }
 
 impl FleetHooks for ServiceHooks<'_, '_> {
-    fn on_start(&mut self, flight: &SimFlight, start_s: f64) -> f64 {
+    fn on_start(&mut self, flight: &SimFlight, start_s: f64, fair: DispatchSnapshot) -> f64 {
         let req = &self.trace[flight.leader_seq as usize];
         let task = &self.tasks[req.task_index];
         let c = self.config;
@@ -734,6 +760,7 @@ impl FleetHooks for ServiceHooks<'_, '_> {
         let service_s = result.ledger.wall_s;
         let warm = wf.warm_start.is_some();
         let members = flight.members.len();
+        let tenant = flight.tenant;
         self.obs.emit(|| {
             TraceEvent::new(start_s, "flight.start", 0)
                 .field("fp", Json::str(fp.to_string()))
@@ -741,6 +768,10 @@ impl FleetHooks for ServiceHooks<'_, '_> {
                 .field("service_s", Json::num(service_s))
                 .field("warm", Json::Bool(warm))
                 .field("members", Json::num(members as f64))
+                .field("tenant", Json::num(tenant as f64))
+                .field("deficit", Json::num(fair.deficit_s))
+                .field("vtime", Json::num(fair.vtime_s))
+                .field("weight", Json::num(fair.weight))
         });
         self.pending.insert(
             flight.leader_seq,
@@ -875,7 +906,10 @@ impl KernelService {
 
         let mut rejected = 0u64;
         let mut rejected_by_class = [0u64; 3];
+        let mut rate_limited = 0u64;
         let mut peak_depth = 0usize;
+        let mut limiter =
+            RateLimiter::new(RatePolicy::from_config(config.tenant_rate, config.tenant_burst));
 
         // Intern once, probe by id: each distinct (task, gpu) pair is
         // hashed exactly once, and the admission loop reads the per-request
@@ -885,6 +919,8 @@ impl KernelService {
         obs.exit(Stage::Fingerprint);
 
         let mut fleet = FleetSim::new(sim_workers);
+        fleet.set_fair_dispatch(config.fair_dispatch);
+        fleet.set_tenant_weights(&config.tenant_weights);
         let mut hooks = ServiceHooks {
             config,
             trace,
@@ -963,6 +999,25 @@ impl KernelService {
                 let fp = fps[seq as usize];
                 hooks.obs.exit(Stage::Fingerprint);
                 let task = &tasks[req.task_index];
+                // Front door first: a throttled request never reaches the
+                // cache, the single-flight table, or admission control — the
+                // limiter protects all of them.
+                if let RateDecision::Throttle { tokens, retry_at_s } =
+                    limiter.check(req.tenant, now)
+                {
+                    rejected += 1;
+                    rejected_by_class[req.priority as usize] += 1;
+                    rate_limited += 1;
+                    let depth = fleet.depth();
+                    hooks.obs.emit(|| {
+                        admit_event(now, 0, seq, fp, req, task, depth, "shed")
+                            .field("reason", Json::str("rate"))
+                            .field("tokens", Json::num(tokens))
+                            .field("retry_at_s", Json::num(retry_at_s))
+                    });
+                    peak_depth = peak_depth.max(fleet.depth());
+                    continue;
+                }
                 // Single-flight joins first: identical work waiting or on a
                 // worker is shared, not redone (and a join can escalate a
                 // waiting flight's priority). Joiners settle with the flight
@@ -1091,6 +1146,7 @@ impl KernelService {
                 0.0
             },
             lint_short_circuits,
+            rate_limited,
         };
         hooks.obs.exit(Stage::Report);
         report
@@ -1364,5 +1420,44 @@ mod tests {
         let r2 = svc.replay(&again, &suite, &NoOracle);
         assert_eq!(r2.cache_hits, 1);
         assert!(r2.api_usd_saved > 0.0);
+    }
+
+    #[test]
+    fn front_door_rate_limit_sheds_before_admission() {
+        let suite = tasks::kernelbench();
+        // Five distinct interactive requests in one burst instant against a
+        // 1 token / 100 s bucket with burst 2: exactly two admitted, three
+        // throttled — and throttling outranks the "interactive is never
+        // shed" admission rule because throttled work never reaches it.
+        let trace: Vec<TrafficRequest> = (0..5)
+            .map(|i| req_at(i, "rtx6000", Priority::Interactive, 0.0))
+            .collect();
+        let mut svc = KernelService::new(ServiceConfig {
+            threads: 1,
+            window: 4,
+            sim_workers: 2,
+            tenant_rate: Some(0.01),
+            tenant_burst: Some(2.0),
+            ..ServiceConfig::default()
+        });
+        let r = svc.replay(&trace, &suite, &NoOracle);
+        assert_eq!(r.rate_limited, 3);
+        assert_eq!(r.rejected, 3, "all sheds were throttles");
+        assert_eq!(r.flights_run, 2);
+        assert_eq!(
+            r.cache_hits + r.shared + r.flights_run as u64 + r.rejected,
+            r.requests as u64
+        );
+
+        // Limiter off: the identical trace is served in full.
+        let mut open = KernelService::new(ServiceConfig {
+            threads: 1,
+            window: 4,
+            sim_workers: 2,
+            ..ServiceConfig::default()
+        });
+        let r = open.replay(&trace, &suite, &NoOracle);
+        assert_eq!(r.rate_limited, 0);
+        assert_eq!(r.rejected, 0);
     }
 }

@@ -164,6 +164,24 @@ pub struct SimCompletion {
     pub completion_s: f64,
 }
 
+/// The dispatch-fairness arithmetic at the instant a flight was picked:
+/// the leader tenant's accumulated (weight-normalized) deficit, the
+/// fleet-wide virtual time it is measured against, and the tenant's
+/// weight. Passed to [`FleetHooks::on_start`] so the flight recorder can
+/// narrate *why* this flight won (or waited for) the worker.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DispatchSnapshot {
+    /// The tenant's normalized virtual service-seconds charged so far
+    /// (before this flight's own service is charged).
+    pub deficit_s: f64,
+    /// The fleet's virtual clock: the smallest deficit among recently
+    /// backlogged tenants. `deficit_s - vtime_s` is how far ahead of its
+    /// entitlement the tenant is.
+    pub vtime_s: f64,
+    /// The tenant's configured weight (1.0 when unconfigured).
+    pub weight: f64,
+}
+
 /// The fleet's two event callbacks. One trait rather than two closures so a
 /// single mutable replay context (cache, cold-cost registry, counters) can
 /// serve both without aliasing `&mut` borrows.
@@ -171,7 +189,9 @@ pub trait FleetHooks {
     /// A worker picked up `flight` at `start_s`: run (or look up) its
     /// workflow and return the service time in simulated seconds. Every
     /// completion with instant `<= start_s` has already been applied.
-    fn on_start(&mut self, flight: &SimFlight, start_s: f64) -> f64;
+    /// `fair` carries the dispatch-fairness arithmetic that picked this
+    /// flight (maintained, for observability, even with fair dispatch off).
+    fn on_start(&mut self, flight: &SimFlight, start_s: f64, fair: DispatchSnapshot) -> f64;
     /// `flight`'s completion instant was reached: apply its side effects
     /// (settle member latencies, refill the cache, record the cold ref).
     fn on_complete(&mut self, flight: &SimFlight, done: SimCompletion);
@@ -187,11 +207,19 @@ enum PendingEvent {
 
 /// Discrete-event simulation of a finite GPU-worker fleet serving
 /// per-priority queues, non-preemptively and without clairvoyance: whenever
-/// a worker frees at time `f`, it takes the most urgent flight (ties by
-/// leader arrival order) among those that have arrived by `max(f, earliest
-/// waiting arrival)`. All state is `BTreeMap`/heap based and every scan is
-/// in a total order, so a replay is bit-deterministic. Flight records live
-/// in the slab arena (see the module docs) and the maps hold slot ids only.
+/// a worker frees at time `f`, it picks among the flights that have arrived
+/// by `max(f, earliest waiting arrival)`. Priority classes strictly
+/// dominate; *within* a class the default is a deficit-weighted-fair queue
+/// keyed by tenant — the eligible flight whose leader tenant has the
+/// smallest weight-normalized service deficit wins (ties by tenant index,
+/// then leader arrival order), so an admitted hog backlog cannot monopolize
+/// the workers. With a single tenant (or [`FleetSim::set_fair_dispatch`]
+/// off) the pick degenerates to exactly the historical strict
+/// `(priority, arrival)` order. Deficits are plain f64 sums updated in
+/// event order, so the scheduler is as bit-deterministic as the rest of the
+/// fleet. All state is `BTreeMap`/heap based and every scan is in a total
+/// order, so a replay is bit-deterministic. Flight records live in the slab
+/// arena (see the module docs) and the maps hold slot ids only.
 pub struct FleetSim {
     workers: usize,
     /// Next-free instant per worker. Min-heap over `f64::to_bits`, which
@@ -238,6 +266,25 @@ pub struct FleetSim {
     /// (the default) is bitwise identity for finite service times, so an
     /// unconfigured fleet behaves exactly as before the knob existed.
     service_multiplier: f64,
+    /// Whether the within-class pick uses the deficit-weighted-fair queue
+    /// (default) or the historical strict `(priority, arrival)` order. The
+    /// deficit accounting below is maintained either way, so traces carry
+    /// the fairness arithmetic even with the fair pick disabled.
+    fair_dispatch: bool,
+    /// Per-tenant weights; missing entries (and an empty vec) mean 1.0.
+    tenant_weights: Vec<f64>,
+    /// Per-tenant weight-normalized virtual service-seconds charged so far
+    /// (grown lazily on submit). The fair pick takes the smallest.
+    deficit: Vec<f64>,
+    /// Waiting flights per leader tenant — the idle→backlogged transition
+    /// detector for the deficit clamp below.
+    waiting_by_tenant: Vec<u32>,
+    /// The fleet's virtual clock: the largest pre-charge deficit any
+    /// started flight has been measured at. A tenant going from idle to
+    /// backlogged has its deficit clamped up to this, so a long-idle (or
+    /// freshly bursting) tenant gets its fair share *from now on* rather
+    /// than a make-up monopoly over the workers.
+    vtime: f64,
 }
 
 impl FleetSim {
@@ -261,6 +308,11 @@ impl FleetSim {
             busy_s: 0.0,
             makespan_s: 0.0,
             service_multiplier: 1.0,
+            fair_dispatch: true,
+            tenant_weights: Vec::new(),
+            deficit: Vec::new(),
+            waiting_by_tenant: Vec::new(),
+            vtime: 0.0,
         }
     }
 
@@ -285,6 +337,51 @@ impl FleetSim {
     /// The fleet's current service-time multiplier (1.0 unless configured).
     pub fn service_multiplier(&self) -> f64 {
         self.service_multiplier
+    }
+
+    /// Toggle the within-class deficit-weighted-fair pick. Off restores the
+    /// historical strict `(priority, arrival)` dispatch order exactly; the
+    /// deficit accounting keeps running either way so the flight recorder's
+    /// fairness arithmetic stays comparable across the toggle.
+    pub fn set_fair_dispatch(&mut self, on: bool) {
+        self.fair_dispatch = on;
+        self.version = self.version.wrapping_add(1);
+    }
+
+    /// Whether the fair pick is active (true unless configured off).
+    pub fn fair_dispatch(&self) -> bool {
+        self.fair_dispatch
+    }
+
+    /// Set per-tenant dispatch weights (indexed by tenant id; missing or
+    /// non-positive/non-finite entries fall back to 1.0). An empty slice —
+    /// the default — weighs every tenant equally, which with one tenant is
+    /// bitwise-identical to the pre-fairness scheduler.
+    pub fn set_tenant_weights(&mut self, weights: &[f64]) {
+        self.tenant_weights = weights.to_vec();
+        self.version = self.version.wrapping_add(1);
+    }
+
+    /// The dispatch weight of `tenant` (1.0 unless configured).
+    fn weight(&self, tenant: usize) -> f64 {
+        match self.tenant_weights.get(tenant) {
+            Some(&w) if w.is_finite() && w > 0.0 => w,
+            _ => 1.0,
+        }
+    }
+
+    /// The weight-normalized virtual service-seconds charged to `tenant`
+    /// so far (0.0 for a tenant the fleet has never seen).
+    pub fn tenant_deficit_s(&self, tenant: usize) -> f64 {
+        self.deficit.get(tenant).copied().unwrap_or(0.0)
+    }
+
+    /// Grow the per-tenant columns to cover `tenant`.
+    fn ensure_tenant(&mut self, tenant: usize) {
+        if tenant >= self.deficit.len() {
+            self.deficit.resize(tenant + 1, 0.0);
+            self.waiting_by_tenant.resize(tenant + 1, 0);
+        }
     }
 
     /// Mutation stamp: changes whenever [`FleetSim::next_event`] may have
@@ -330,6 +427,15 @@ impl FleetSim {
             "single-flight: a duplicate would have been joined"
         );
         let key = (flight.priority, flight.leader_seq);
+        self.ensure_tenant(flight.tenant);
+        // Idle → backlogged: clamp the tenant's deficit up to the virtual
+        // clock (start-time fairness, as in SFQ). Without this a tenant
+        // that sat idle — or just showed up — would carry a tiny lifetime
+        // deficit and monopolize the workers until it "caught up".
+        if self.waiting_by_tenant[flight.tenant] == 0 {
+            self.deficit[flight.tenant] = self.deficit[flight.tenant].max(self.vtime);
+        }
+        self.waiting_by_tenant[flight.tenant] += 1;
         self.waiting_by_fp.insert(flight.fingerprint, key);
         self.arrivals.insert((flight.arrival_s.to_bits(), flight.leader_seq));
         let idx = match self.free_slots.pop() {
@@ -425,6 +531,41 @@ impl FleetSim {
         }
     }
 
+    /// The deficit-weighted-fair pick: among flights that have arrived by
+    /// `start`, take the one minimizing `(priority, tenant deficit, tenant,
+    /// leader_seq)`. Keys iterate in (priority, seq) order, so the scan
+    /// early-breaks as soon as a later priority class is reached with a
+    /// candidate already in hand — priority classes strictly dominate, the
+    /// deficit only arbitrates *within* a class. With one tenant every
+    /// candidate shares (deficit, tenant), so the strict `<` comparison
+    /// keeps the first (lowest-seq) eligible entry — exactly the historical
+    /// strict-order pick, bit for bit.
+    fn fair_pick(&self, start: f64) -> (Priority, u64) {
+        let mut best: Option<((Priority, u64), f64, usize)> = None;
+        for (&key, &idx) in self.waiting.iter() {
+            if let Some((bkey, _, _)) = best {
+                if key.0 > bkey.0 {
+                    break;
+                }
+            }
+            let f = &self.flights[idx as usize];
+            if f.arrival_s > start {
+                continue;
+            }
+            let d = self.deficit.get(f.tenant).copied().unwrap_or(0.0);
+            let better = match best {
+                None => true,
+                // Same priority class here (the break above guarantees it):
+                // smallest deficit wins, ties by tenant index then seq.
+                Some((bkey, bd, bt)) => (d, f.tenant, key.1) < (bd, bt, bkey.1),
+            };
+            if better {
+                best = Some((key, d, f.tenant));
+            }
+        }
+        best.expect("a flight has arrived by the start instant").0
+    }
+
     /// Process the single next event if it is due by `now`. Returns whether
     /// one fired.
     pub fn step(&mut self, now: f64, hooks: &mut dyn FleetHooks) -> bool {
@@ -447,29 +588,53 @@ impl FleetSim {
                 true
             }
             Some(PendingEvent::Start(start)) if start <= now => {
-                // Worst-case O(waiting), but early-exits at the first
-                // eligible key; under backlog (`free >= every arrival`) that
-                // is the head of the map, so the common overload case
-                // selects in O(log n).
-                let key = *self
-                    .waiting
-                    .iter()
-                    .find(|(_, &idx)| self.flights[idx as usize].arrival_s <= start)
-                    .expect("a flight has arrived by the start instant")
-                    .0;
+                let key = if self.fair_dispatch {
+                    self.fair_pick(start)
+                } else {
+                    // The historical strict (priority, arrival) scan.
+                    // Worst-case O(waiting), but early-exits at the first
+                    // eligible key; under backlog (`free >= every arrival`)
+                    // that is the head of the map, so the common overload
+                    // case selects in O(log n).
+                    *self
+                        .waiting
+                        .iter()
+                        .find(|(_, &idx)| self.flights[idx as usize].arrival_s <= start)
+                        .expect("a flight has arrived by the start instant")
+                        .0
+                };
                 let idx = self.waiting.remove(&key).expect("key taken from the map") as usize;
-                let (fp, arrival_s, leader_seq) = {
+                let (fp, arrival_s, leader_seq, tenant) = {
                     let f = &self.flights[idx];
-                    (f.fingerprint, f.arrival_s, f.leader_seq)
+                    (f.fingerprint, f.arrival_s, f.leader_seq, f.tenant)
                 };
                 self.waiting_by_fp.remove(&fp);
                 self.arrivals.remove(&(arrival_s.to_bits(), leader_seq));
                 self.free_at.pop();
-                let service_s = hooks.on_start(&self.flights[idx], start) * self.service_multiplier;
+                self.ensure_tenant(tenant);
+                self.waiting_by_tenant[tenant] =
+                    self.waiting_by_tenant[tenant].saturating_sub(1);
+                // The fairness arithmetic at pick time, surfaced to the
+                // hooks (and so the flight recorder) before the charge.
+                let weight = self.weight(tenant);
+                let deficit_before = self.deficit[tenant];
+                let fair = DispatchSnapshot {
+                    deficit_s: deficit_before,
+                    vtime_s: self.vtime.max(deficit_before),
+                    weight,
+                };
+                let service_s =
+                    hooks.on_start(&self.flights[idx], start, fair) * self.service_multiplier;
                 debug_assert!(
                     service_s.is_finite() && service_s >= 0.0,
                     "service time must be finite and non-negative, got {service_s}"
                 );
+                // Advance the virtual clock to the picked tenant's
+                // pre-charge deficit and charge the actual service,
+                // normalized by weight — a weight-2 tenant accrues deficit
+                // half as fast, so it wins the pick twice as often.
+                self.vtime = self.vtime.max(deficit_before);
+                self.deficit[tenant] = deficit_before + service_s / weight;
                 let completion = start + service_s;
                 self.free_at.push(Reverse(completion.to_bits()));
                 self.queue_wait_s += start - arrival_s;
@@ -566,10 +731,12 @@ mod tests {
     }
 
     /// Test hooks: a fixed service time per leader seq, with every start,
-    /// completion, and member list recorded in firing order.
+    /// completion, member list, and dispatch snapshot recorded in firing
+    /// order.
     struct Script {
         service: BTreeMap<u64, f64>,
         starts: Vec<(u64, f64)>,
+        snapshots: Vec<(u64, DispatchSnapshot)>,
         completions: Vec<(u64, SimCompletion)>,
         members: Vec<Vec<u64>>,
     }
@@ -579,6 +746,7 @@ mod tests {
             Script {
                 service: service.iter().copied().collect(),
                 starts: Vec::new(),
+                snapshots: Vec::new(),
                 completions: Vec::new(),
                 members: Vec::new(),
             }
@@ -586,8 +754,9 @@ mod tests {
     }
 
     impl FleetHooks for Script {
-        fn on_start(&mut self, f: &SimFlight, start_s: f64) -> f64 {
+        fn on_start(&mut self, f: &SimFlight, start_s: f64, fair: DispatchSnapshot) -> f64 {
             self.starts.push((f.leader_seq, start_s));
+            self.snapshots.push((f.leader_seq, fair));
             self.service[&f.leader_seq]
         }
         fn on_complete(&mut self, f: &SimFlight, done: SimCompletion) {
@@ -767,6 +936,114 @@ mod tests {
         assert_eq!(hooks.members[1], vec![1, 3], "follower rides the escalated flight");
         let order: Vec<u64> = hooks.starts.iter().map(|(s, _)| *s).collect();
         assert_eq!(order, vec![0, 1, 2], "escalated flight starts before seq 2");
+    }
+
+    fn tflight(fp: u64, seq: u64, tenant: usize, arrival_s: f64, p: Priority) -> SimFlight {
+        SimFlight { tenant, ..flight(fp, seq, arrival_s, p) }
+    }
+
+    #[test]
+    fn fair_dispatch_interleaves_tenants_within_a_class() {
+        // Tenant 0 dumps four flights and tenant 1 two, all at t=0, equal
+        // weights, one worker. Strict order would drain the hog first; the
+        // deficit pick alternates until the light tenant's queue is empty.
+        let service: Vec<(u64, f64)> = (0..6).map(|s| (s, 10.0)).collect();
+        let submit_all = |sim: &mut FleetSim| {
+            for seq in 0..4u64 {
+                sim.submit(tflight(1 + seq, seq, 0, 0.0, Priority::Standard));
+            }
+            sim.submit(tflight(10, 4, 1, 0.0, Priority::Standard));
+            sim.submit(tflight(11, 5, 1, 0.0, Priority::Standard));
+        };
+        let mut sim = FleetSim::new(1);
+        let mut hooks = Script::new(&service);
+        submit_all(&mut sim);
+        sim.advance(f64::INFINITY, &mut hooks);
+        let order: Vec<u64> = hooks.starts.iter().map(|(s, _)| *s).collect();
+        assert_eq!(order, vec![0, 4, 1, 5, 2, 3], "tenants alternate under equal weights");
+        // The snapshots carry the deficit arithmetic: tenant 1's first pick
+        // won on a zero deficit while tenant 0 already owed 10s.
+        assert_eq!(hooks.snapshots[1].0, 4);
+        assert_eq!(hooks.snapshots[1].1.deficit_s, 0.0);
+        assert_eq!(hooks.snapshots[1].1.weight, 1.0);
+
+        // Fair dispatch off: the historical strict (priority, seq) order.
+        let mut sim = FleetSim::new(1);
+        sim.set_fair_dispatch(false);
+        let mut hooks = Script::new(&service);
+        submit_all(&mut sim);
+        sim.advance(f64::INFINITY, &mut hooks);
+        let order: Vec<u64> = hooks.starts.iter().map(|(s, _)| *s).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4, 5], "strict order drains the hog first");
+    }
+
+    #[test]
+    fn weights_bias_the_fair_share() {
+        // Weight 3 vs 1: the heavy tenant accrues deficit a third as fast,
+        // so it wins three starts for each of the light tenant's.
+        let service: Vec<(u64, f64)> = (0..6).map(|s| (s, 10.0)).collect();
+        let mut sim = FleetSim::new(1);
+        sim.set_tenant_weights(&[3.0, 1.0]);
+        let mut hooks = Script::new(&service);
+        for seq in 0..3u64 {
+            sim.submit(tflight(1 + seq, seq, 0, 0.0, Priority::Standard));
+        }
+        for seq in 3..6u64 {
+            sim.submit(tflight(10 + seq, seq, 1, 0.0, Priority::Standard));
+        }
+        sim.advance(f64::INFINITY, &mut hooks);
+        let order: Vec<u64> = hooks.starts.iter().map(|(s, _)| *s).collect();
+        assert_eq!(order, vec![0, 3, 1, 2, 4, 5]);
+        assert_eq!(hooks.snapshots[0].1.weight, 3.0);
+        // Deficit is normalized: tenant 0's second start owed 10/3 seconds.
+        let (seq, snap) = hooks.snapshots[2];
+        assert_eq!(seq, 1);
+        assert!((snap.deficit_s - 10.0 / 3.0).abs() < 1e-12, "{snap:?}");
+    }
+
+    #[test]
+    fn priority_still_dominates_fair_dispatch() {
+        // The hog tenant owes plenty of deficit, but its *interactive*
+        // flight still beats the light tenant's standard one: the deficit
+        // only arbitrates within a priority class.
+        let mut sim = FleetSim::new(1);
+        let mut hooks = Script::new(&[(0, 50.0), (1, 10.0), (2, 10.0)]);
+        sim.submit(tflight(1, 0, 0, 0.0, Priority::Standard));
+        sim.advance(0.0, &mut hooks); // hog starts; deficit 50 charged
+        sim.submit(tflight(2, 1, 0, 10.0, Priority::Interactive));
+        sim.submit(tflight(3, 2, 1, 10.0, Priority::Standard));
+        sim.advance(f64::INFINITY, &mut hooks);
+        let order: Vec<u64> = hooks.starts.iter().map(|(s, _)| *s).collect();
+        assert_eq!(order, vec![0, 1, 2], "interactive wins regardless of deficit");
+    }
+
+    #[test]
+    fn idle_tenant_rejoins_at_the_virtual_clock_not_zero() {
+        // Tenant 0 runs alone, advancing the virtual clock to 20s. When
+        // tenant 1 shows up late its deficit clamps up to the clock — it
+        // gets a fair share from now on, not a make-up monopoly.
+        let service: Vec<(u64, f64)> = (0..7).map(|s| (s, 10.0)).collect();
+        let mut sim = FleetSim::new(1);
+        let mut hooks = Script::new(&service);
+        for seq in 0..3u64 {
+            sim.submit(tflight(1 + seq, seq, 0, 0.0, Priority::Standard));
+        }
+        sim.advance(f64::INFINITY, &mut hooks);
+        assert_eq!(sim.tenant_deficit_s(0), 30.0);
+        sim.submit(tflight(10, 3, 1, 100.0, Priority::Standard));
+        sim.submit(tflight(11, 4, 1, 100.0, Priority::Standard));
+        sim.submit(tflight(12, 5, 0, 100.0, Priority::Standard));
+        sim.submit(tflight(13, 6, 0, 100.0, Priority::Standard));
+        sim.advance(f64::INFINITY, &mut hooks);
+        // Tenant 1's first pick was measured at the clamped deficit (the
+        // virtual clock had reached 20), not at zero.
+        let (seq, snap) = hooks.snapshots[3];
+        assert_eq!(seq, 3);
+        assert_eq!(snap.deficit_s, 20.0, "clamped to vtime, not the lifetime sum");
+        // After its clamped start (20 → 30) it ties tenant 0's 30: the
+        // lower tenant index breaks the tie, then they alternate.
+        let tail: Vec<u64> = hooks.starts[3..].iter().map(|(s, _)| *s).collect();
+        assert_eq!(tail, vec![3, 5, 4, 6]);
     }
 
     #[test]

@@ -12,10 +12,16 @@
 //! is the vocabulary both layers share: the priority classes and their
 //! drain order.
 //!
-//! Flights drain most-urgent-first, ties by leader arrival order — and a
-//! flight's priority is the most urgent priority among its members, so a
-//! batch request that later attracts an interactive follower jumps the
-//! line.
+//! Flights drain most-urgent-first; *within* a priority class the default
+//! order is tenant-fair — a deficit-weighted-fair queue on
+//! [`crate::service::pool::FleetSim`] picks the eligible flight whose
+//! leader tenant has the smallest weight-normalized service deficit (ties
+//! by tenant index, then leader arrival order), so one tenant's admitted
+//! backlog cannot starve another's. With a single tenant, or with fair
+//! dispatch configured off, the order degenerates to the historical strict
+//! leader-arrival tie-break. A flight's priority is the most urgent
+//! priority among its members, so a batch request that later attracts an
+//! interactive follower jumps the line.
 
 /// Request urgency classes (lower = more urgent).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]

@@ -103,6 +103,12 @@ fn narrate(kind: &str, ev: &Json) -> String {
                         int(ev, "quota")
                     ),
                     "routing" => format!("{head} → SHED: no alive node owns this key"),
+                    "rate" => format!(
+                        "{head} → SHED: tenant over rate limit ({:.2} tokens; retry \
+                         admitted at t={:.1}s)",
+                        num(ev, "tokens"),
+                        num(ev, "retry_at_s"),
+                    ),
                     r => format!("{head} → SHED ({r})"),
                 },
                 o => format!("{head} → {o}"),
@@ -147,16 +153,32 @@ fn narrate(kind: &str, ev: &Json) -> String {
             }
             p => format!("warm lookup: {p}"),
         },
-        "flight.start" => format!(
-            "flight starts (leader #{}): service {:.1}s{}",
-            int(ev, "leader_seq"),
-            num(ev, "service_s"),
-            if ev.get("warm").and_then(|v| v.as_bool()).unwrap_or(false) {
-                ", warm-seeded"
+        "flight.start" => {
+            // Traces recorded before fair dispatch carry no deficit math;
+            // narrate it only when the fields are present.
+            let fair = if ev.get("deficit").is_some() {
+                format!(
+                    " — picked by fair dispatch: tenant {} deficit {:.3}s ≥ \
+                     vclock {:.3}s at weight {:.1}",
+                    int(ev, "tenant"),
+                    num(ev, "deficit"),
+                    num(ev, "vtime"),
+                    num(ev, "weight"),
+                )
             } else {
-                ", cold"
-            },
-        ),
+                String::new()
+            };
+            format!(
+                "flight starts (leader #{}): service {:.1}s{}{fair}",
+                int(ev, "leader_seq"),
+                num(ev, "service_s"),
+                if ev.get("warm").and_then(|v| v.as_bool()).unwrap_or(false) {
+                    ", warm-seeded"
+                } else {
+                    ", cold"
+                },
+            )
+        }
         "flight.complete" => {
             let members =
                 ev.get("members").and_then(|v| v.as_arr()).map(|m| m.len()).unwrap_or(0);
@@ -216,5 +238,50 @@ mod tests {
         assert!(story.contains("new flight enqueued"), "{story}");
         assert!(story.contains("1.800x > own 1.520x × (1 + 0.100) = 1.672x"), "{story}");
         assert!(explain_events(&lines, "ffffffffffffffff").contains("no recorded events"));
+    }
+
+    #[test]
+    fn rate_sheds_and_deficit_math_are_narrated() {
+        let fp = "00000000cafef00d";
+        let lines = vec![
+            TraceEvent::new(5.0, "request.admit", 0)
+                .field("seq", Json::num(9.0))
+                .field("fp", Json::str(fp))
+                .field("priority", Json::str("interactive"))
+                .field("task", Json::str("L1-3"))
+                .field("gpu", Json::str("a100"))
+                .field("outcome", Json::str("shed"))
+                .field("reason", Json::str("rate"))
+                .field("tokens", Json::num(0.0))
+                .field("retry_at_s", Json::num(12.5))
+                .to_json(),
+            TraceEvent::new(6.0, "flight.start", 0)
+                .field("fp", Json::str(fp))
+                .field("leader_seq", Json::num(3.0))
+                .field("service_s", Json::num(40.0))
+                .field("tenant", Json::num(1.0))
+                .field("deficit", Json::num(2.5))
+                .field("vtime", Json::num(2.0))
+                .field("weight", Json::num(3.0))
+                .to_json(),
+        ];
+        let story = explain_events(&lines, fp);
+        assert!(
+            story.contains("over rate limit (0.00 tokens; retry admitted at t=12.5s)"),
+            "{story}"
+        );
+        assert!(
+            story.contains("tenant 1 deficit 2.500s ≥ vclock 2.000s at weight 3.0"),
+            "{story}"
+        );
+        // Pre-fair-dispatch traces (no deficit field) still narrate.
+        let old = vec![TraceEvent::new(6.0, "flight.start", 0)
+            .field("fp", Json::str(fp))
+            .field("leader_seq", Json::num(3.0))
+            .field("service_s", Json::num(40.0))
+            .to_json()];
+        let story = explain_events(&old, fp);
+        assert!(story.contains("flight starts (leader #3): service 40.0s, cold"), "{story}");
+        assert!(!story.contains("fair dispatch"), "{story}");
     }
 }

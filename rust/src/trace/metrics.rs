@@ -133,6 +133,7 @@ pub fn time_series(meta: &TraceMeta, events: &[TraceEvent]) -> String {
         "shed_depth".to_string(),
         "shed_quota".to_string(),
         "shed_routing".to_string(),
+        "shed_rate".to_string(),
         "completions".to_string(),
         "busy_s".to_string(),
         "utilization".to_string(),
@@ -163,6 +164,7 @@ pub fn time_series(meta: &TraceMeta, events: &[TraceEvent]) -> String {
             m.counter("shed_depth").to_string(),
             m.counter("shed_quota").to_string(),
             m.counter("shed_routing").to_string(),
+            m.counter("shed_rate").to_string(),
             m.counter("completions").to_string(),
             format!("{busy:.3}"),
             format!("{:.4}", busy / (slots * tick_s)),
@@ -211,6 +213,7 @@ pub fn time_series(meta: &TraceMeta, events: &[TraceEvent]) -> String {
                             "depth" => m.inc("shed_depth", 1),
                             "quota" => m.inc("shed_quota", 1),
                             "routing" => m.inc("shed_routing", 1),
+                            "rate" => m.inc("shed_rate", 1),
                             _ => {}
                         }
                         if let Some(t) = tenant_name(tenant) {
@@ -313,14 +316,14 @@ mod tests {
         assert_eq!(t1[2], "1");
         assert_eq!(t1[4], "1");
         assert_eq!(t1[7], "1", "shed_quota");
-        assert_eq!(t1[14], "1", "served_alpha");
-        assert_eq!(t1[17], "1", "shed_beta");
+        assert_eq!(t1[15], "1", "served_alpha");
+        assert_eq!(t1[18], "1", "shed_beta");
         // Tick 2 is quiet.
         assert!(lines[2].starts_with("20,0,0,"));
         // Tick 3: the completion serves beta's queued request.
         let t3: Vec<&str> = lines[3].split(',').collect();
-        assert_eq!(t3[9], "1", "completions");
-        assert_eq!(t3[10], "5.000", "busy_s");
-        assert_eq!(t3[16], "1", "served_beta");
+        assert_eq!(t3[10], "1", "completions");
+        assert_eq!(t3[11], "5.000", "busy_s");
+        assert_eq!(t3[17], "1", "served_beta");
     }
 }

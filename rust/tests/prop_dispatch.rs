@@ -1,0 +1,249 @@
+//! Property tests over the deficit-weighted-fair dispatcher (the
+//! proptest role, via util::prop): random flight populations driven
+//! straight through [`FleetSim`], checking the three contracts the
+//! scheduler ships with — it is work-conserving (a free worker never
+//! idles past an arrived flight), no tenant runs more than one
+//! weight-normalized service ahead of its entitlement while a competitor
+//! is backlogged, and the schedule is a pure function of the flight
+//! *set*: permuting the submission order of same-instant arrivals (or
+//! turning the fair pick off for a single tenant) replays bit for bit.
+
+use std::collections::BTreeMap;
+
+use cudaforge::service::fingerprint::Fingerprint;
+use cudaforge::service::pool::{
+    DispatchSnapshot, FleetHooks, FleetSim, MemberList, SimCompletion, SimFlight,
+};
+use cudaforge::service::queue::Priority;
+use cudaforge::util::prop::{check_with, ensure, ensure_close};
+use cudaforge::util::rng::Rng;
+
+/// One scripted flight: everything needed to submit it and to predict
+/// its service charge afterwards.
+#[derive(Clone, Copy, Debug)]
+struct Job {
+    seq: u64,
+    tenant: usize,
+    arrival_s: f64,
+    service_s: f64,
+}
+
+fn to_flight(j: &Job) -> SimFlight {
+    SimFlight {
+        // Distinct per seq, so single-flight dedup never merges jobs.
+        fingerprint: Fingerprint(0x1000 + j.seq),
+        priority: Priority::Standard,
+        leader_seq: j.seq,
+        tenant: j.tenant,
+        arrival_s: j.arrival_s,
+        members: MemberList::one(j.seq, j.arrival_s),
+    }
+}
+
+/// Test hooks: fixed service time per leader seq; starts (with their
+/// dispatch snapshots) and completions recorded in firing order.
+struct Script {
+    service: BTreeMap<u64, f64>,
+    starts: Vec<(u64, f64, DispatchSnapshot)>,
+    completions: Vec<(u64, SimCompletion)>,
+}
+
+impl Script {
+    fn new(jobs: &[Job]) -> Script {
+        Script {
+            service: jobs.iter().map(|j| (j.seq, j.service_s)).collect(),
+            starts: Vec::new(),
+            completions: Vec::new(),
+        }
+    }
+}
+
+impl FleetHooks for Script {
+    fn on_start(&mut self, f: &SimFlight, start_s: f64, fair: DispatchSnapshot) -> f64 {
+        self.starts.push((f.leader_seq, start_s, fair));
+        self.service[&f.leader_seq]
+    }
+    fn on_complete(&mut self, f: &SimFlight, done: SimCompletion) {
+        self.completions.push((f.leader_seq, done));
+    }
+}
+
+/// Submit every job to a fresh fleet and drain it.
+fn run(jobs: &[Job], order: &[usize], workers: usize, fair: bool, weights: &[f64]) -> Script {
+    let mut sim = FleetSim::new(workers);
+    sim.set_fair_dispatch(fair);
+    sim.set_tenant_weights(weights);
+    let mut hooks = Script::new(jobs);
+    for &i in order {
+        sim.submit(to_flight(&jobs[i]));
+    }
+    sim.advance(f64::INFINITY, &mut hooks);
+    assert_eq!(hooks.completions.len(), jobs.len(), "the fleet must drain");
+    hooks
+}
+
+#[test]
+fn prop_fair_dispatch_is_work_conserving() {
+    // With one worker the work-conservation law is exact: every start
+    // instant is max(worker frees, earliest arrival still waiting) — the
+    // fair pick may reorder *which* flight runs, never *when* the worker
+    // picks one up.
+    check_with("dispatch-work-conserving", 0xD15B, 80, |rng| {
+        let n = rng.range_usize(3, 24);
+        let jobs: Vec<Job> = (0..n)
+            .map(|i| Job {
+                seq: i as u64,
+                tenant: rng.below(3),
+                arrival_s: rng.range_f64(0.0, 500.0),
+                service_s: rng.range_f64(0.5, 60.0),
+            })
+            .collect();
+        let order: Vec<usize> = (0..n).collect();
+        let hooks = run(&jobs, &order, 1, true, &[1.0, 2.0, 0.5]);
+
+        let mut remaining: Vec<bool> = vec![true; n];
+        let mut free_at = 0.0f64;
+        let mut total_service = 0.0f64;
+        for (k, &(seq, start_s, _)) in hooks.starts.iter().enumerate() {
+            let earliest = jobs
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| remaining[*i])
+                .map(|(_, j)| j.arrival_s)
+                .fold(f64::INFINITY, f64::min);
+            ensure(
+                start_s == free_at.max(earliest),
+                format!(
+                    "start #{k} at {start_s}, but the worker was free at {free_at} \
+                     and the earliest waiting arrival was {earliest}"
+                ),
+            )?;
+            let job = &jobs[seq as usize];
+            ensure(job.arrival_s <= start_s, "a flight cannot start before it arrives")?;
+            remaining[seq as usize] = false;
+            free_at = start_s + job.service_s;
+            total_service += job.service_s;
+        }
+        ensure(hooks.starts.len() == n, "every job starts exactly once")?;
+        // Completions carry the same schedule the starts predict.
+        for &(seq, done) in &hooks.completions {
+            let svc = jobs[seq as usize].service_s;
+            ensure_close(done.completion_s - done.start_s, svc, 1e-9, "service charged")?;
+        }
+        ensure(total_service > 0.0, "nonempty workload")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_no_tenant_outruns_its_entitlement() {
+    // Two tenants, both backlogged from t=0 on one worker: at every pick
+    // the scheduler must take the tenant with the smaller normalized
+    // deficit (ties to the lower index), the snapshot handed to the hooks
+    // must equal the deficit recomputed from first principles, and the
+    // deficit gap can never exceed one worst-case normalized service —
+    // the discrete analogue of "never more than one quantum ahead".
+    check_with("dispatch-entitlement-bound", 0xFA1, 80, |rng| {
+        let weights = [
+            *rng.choice(&[0.5, 1.0, 2.0, 3.0]),
+            *rng.choice(&[0.5, 1.0, 2.0, 3.0]),
+        ];
+        let n0 = rng.range_usize(5, 12);
+        let n1 = rng.range_usize(5, 12);
+        let jobs: Vec<Job> = (0..n0 + n1)
+            .map(|i| Job {
+                seq: i as u64,
+                tenant: usize::from(i >= n0),
+                arrival_s: 0.0,
+                service_s: rng.range_f64(1.0, 50.0),
+            })
+            .collect();
+        let max_norm_service = jobs
+            .iter()
+            .map(|j| j.service_s / weights[j.tenant])
+            .fold(0.0f64, f64::max);
+        let order: Vec<usize> = (0..jobs.len()).collect();
+        let hooks = run(&jobs, &order, 1, true, &weights);
+
+        let mut deficit = [0.0f64; 2];
+        let mut remaining = [n0, n1];
+        for &(seq, _, fair) in &hooks.starts {
+            let job = &jobs[seq as usize];
+            let t = job.tenant;
+            let other = 1 - t;
+            ensure(
+                fair.deficit_s == deficit[t],
+                format!(
+                    "snapshot deficit {} disagrees with recomputation {} for tenant {t}",
+                    fair.deficit_s, deficit[t]
+                ),
+            )?;
+            ensure(fair.weight == weights[t], "snapshot carries the configured weight")?;
+            if remaining[other] > 0 {
+                ensure(
+                    (deficit[t], t) <= (deficit[other], other),
+                    format!(
+                        "picked tenant {t} at deficit {} over backlogged tenant \
+                         {other} at deficit {}",
+                        deficit[t], deficit[other]
+                    ),
+                )?;
+            }
+            deficit[t] += job.service_s / weights[t];
+            remaining[t] -= 1;
+            if remaining[0] > 0 && remaining[1] > 0 {
+                ensure(
+                    (deficit[0] - deficit[1]).abs() <= max_norm_service + 1e-9,
+                    format!(
+                        "deficit gap {} exceeds one normalized service {}",
+                        (deficit[0] - deficit[1]).abs(),
+                        max_norm_service
+                    ),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_schedule_is_a_function_of_the_flight_set() {
+    // Same-instant arrivals submitted in a permuted order — same seqs,
+    // same flights, shuffled submission — must replay bit-identically:
+    // the schedule depends on the flight *set*, not on host-side
+    // iteration order. And with a single tenant, the fair pick must
+    // degenerate to the historical strict order, bit for bit.
+    check_with("dispatch-permutation-identity", 0x5EED, 80, |rng| {
+        let n = rng.range_usize(2, 20);
+        let workers = rng.range_usize(1, 3);
+        let jobs: Vec<Job> = (0..n)
+            .map(|i| Job {
+                seq: i as u64,
+                tenant: rng.below(3),
+                arrival_s: 0.0,
+                service_s: rng.range_f64(0.5, 40.0),
+            })
+            .collect();
+        let weights = [1.0, 3.0, 0.5];
+        let sorted: Vec<usize> = (0..n).collect();
+        let mut shuffled = sorted.clone();
+        rng.shuffle(&mut shuffled);
+
+        let a = run(&jobs, &sorted, workers, true, &weights);
+        let b = run(&jobs, &shuffled, workers, true, &weights);
+        ensure(a.starts == b.starts, "starts must not depend on submission order")?;
+        ensure(
+            a.completions == b.completions,
+            "completions must not depend on submission order",
+        )?;
+
+        // Single tenant: fair on == fair off, including the snapshots'
+        // deficit bookkeeping (maintained either way for the traces).
+        let solo: Vec<Job> = jobs.iter().map(|j| Job { tenant: 0, ..*j }).collect();
+        let fair = run(&solo, &sorted, workers, true, &weights);
+        let strict = run(&solo, &sorted, workers, false, &weights);
+        ensure(fair.starts == strict.starts, "single tenant: fair == strict")?;
+        ensure(fair.completions == strict.completions, "single tenant: fair == strict")?;
+        Ok(())
+    });
+}
